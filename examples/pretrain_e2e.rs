@@ -1,0 +1,80 @@
+//! End-to-end pre-training driver (the DESIGN.md validation workload):
+//! trains the e2e-scale transformer (≈14M params full-rank / ≈7M CoLA — the
+//! largest this single-CPU image pushes through hundreds of steps; see
+//! DESIGN.md §6 for the scale substitution) for several hundred steps on the
+//! streamed synthetic corpus, logging the loss curve, validation perplexity,
+//! throughput and memory — for BOTH full-rank and CoLA so the headline
+//! claim (on-par quality at ~half compute, higher throughput) is exercised
+//! end to end through all three layers.
+//!
+//!     cargo run --release --example pretrain_e2e [steps] [variant...]
+//!
+//! Results land in EXPERIMENTS.md §E2E.
+
+use cola::config::TrainConfig;
+use cola::coordinator::Trainer;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(300);
+    let variants: Vec<String> = if args.len() > 1 {
+        args[1..].to_vec()
+    } else {
+        vec!["e2e_full".into(), "e2e_cola".into()]
+    };
+
+    let mut results = Vec::new();
+    for artifact in &variants {
+        println!("=== {artifact}: {steps} steps ===");
+        let cfg = TrainConfig {
+            artifact: artifact.clone(),
+            steps,
+            eval_every: (steps / 6).max(1),
+            eval_batches: 4,
+            log_every: (steps / 20).max(1),
+            out_dir: "runs/e2e".into(),
+            rank_probe_every: if artifact.contains("full") { steps / 2 } else { 0 },
+            ..TrainConfig::default()
+        };
+        let mut tr = Trainer::new(cfg)?;
+        let rep = tr.run()?;
+
+        println!("\nloss curve ({artifact}):");
+        for (s, l) in &rep.loss_curve {
+            let bar = "#".repeat(((l - 3.0).max(0.0) * 12.0) as usize);
+            println!("  step {s:>4}: {l:.3} {bar}");
+        }
+        println!("val ppl curve: {:?}", rep.val_curve);
+        println!(
+            "summary: loss {:.3} | val ppl {:.2} | {:.0} tok/s | peak RSS {:.2} GB\n",
+            rep.final_loss,
+            rep.val_ppl,
+            rep.tokens_per_sec,
+            rep.peak_rss_bytes as f64 / 1e9
+        );
+
+        // final checkpoint for the serving example
+        let ckpt = std::path::PathBuf::from(format!("runs/e2e/{artifact}_final.npz"));
+        tr.save_checkpoint(&ckpt)?;
+        println!("checkpoint: {}", ckpt.display());
+        results.push((artifact.clone(), rep));
+    }
+
+    if results.len() >= 2 {
+        let (full, cola) = (&results[0].1, &results[1].1);
+        println!("=== headline comparison (paper: on-par PPL, 1.86x train throughput) ===");
+        println!(
+            "full-rank: ppl {:.2} @ {:.0} tok/s | CoLA: ppl {:.2} @ {:.0} tok/s ({:.2}x)",
+            full.val_ppl,
+            full.tokens_per_sec,
+            cola.val_ppl,
+            cola.tokens_per_sec,
+            cola.tokens_per_sec / full.tokens_per_sec
+        );
+        anyhow::ensure!(
+            full.val_ppl < 0.8 * (full.loss_curve.first().map(|x| x.1).unwrap_or(9.0)).exp(),
+            "training made no progress"
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Quickstart: train a tiny CoLA model for a handful of steps, evaluate
+//! perplexity, checkpoint, and probe activation ranks — the whole public API
+//! in ~40 lines.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use cola::config::TrainConfig;
+use cola::coordinator::Trainer;
+
+fn main() -> anyhow::Result<()> {
+    // 1. point at an AOT artifact (built by `make artifacts`)
+    let cfg = TrainConfig {
+        artifact: "tiny_cola".into(),
+        steps: 40,
+        eval_every: 20,
+        eval_batches: 4,
+        log_every: 10,
+        out_dir: "runs/quickstart".into(),
+        ..TrainConfig::default()
+    };
+
+    // 2. the trainer owns the PJRT state; python never runs here
+    let mut trainer = Trainer::new(cfg)?;
+    println!(
+        "model: {} ({} params, variant={}, r={})",
+        trainer.manifest().name,
+        trainer.manifest().n_total_params,
+        trainer.manifest().variant,
+        trainer.manifest().rank,
+    );
+
+    // 3. train
+    let report = trainer.run()?;
+    println!(
+        "trained {} steps: loss {:.3}, val ppl {:.2}, {:.0} tokens/s",
+        report.steps, report.final_loss, report.val_ppl, report.tokens_per_sec
+    );
+
+    // 4. checkpoint + restore roundtrip
+    let ckpt = std::path::Path::new("runs/quickstart/tiny_cola.npz");
+    trainer.save_checkpoint(ckpt)?;
+    trainer.load_checkpoint(ckpt)?;
+    let ppl = trainer.evaluate(4)?;
+    println!("after checkpoint roundtrip: val ppl {ppl:.2}");
+
+    // 5. the paper's Fig. 2 analytics: effective rank of live activations
+    for (tap, r, d) in trainer.rank_probe(0.95)? {
+        println!("  effective rank r(0.95) @ {tap}: {r}/{d}");
+    }
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! Activation-rank analysis (the paper's motivating §3.1 / Fig 2 / App A):
+//! train a model briefly, then dump per-block singular-value spectra,
+//! effective ranks at several α, and the cumulative-energy curves.
+//!
+//!     cargo run --release --example rank_analysis [artifact] [steps]
+
+use cola::config::TrainConfig;
+use cola::coordinator::{RankProbe, Trainer};
+use cola::data::BatchIter;
+use cola::linalg::spectrum_energy;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let artifact = args.first().cloned().unwrap_or_else(|| "p60m_full".into());
+    let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(150);
+
+    let cfg = TrainConfig {
+        artifact: artifact.clone(),
+        steps,
+        log_every: 50,
+        ..TrainConfig::default()
+    };
+    let mut tr = Trainer::new(cfg)?;
+    let rep = tr.run()?;
+    println!("trained {artifact} to loss {:.3}\n", rep.final_loss);
+
+    let man = tr.manifest().clone();
+    let probe = RankProbe::new(&tr.art)?;
+    let params = tr.params_literals()?;
+    let client = cola::runtime::client()?;
+    let bufs: Vec<xla::PjRtBuffer> = params
+        .iter()
+        .map(|l| client.buffer_from_host_literal(None, l))
+        .collect::<Result<_, _>>()?;
+
+    let bpe = cola::coordinator::trainer::shared_bpe(man.preset.vocab)?;
+    let mut it = BatchIter::new(bpe, 31337, man.preset.vocab);
+    let toks = it.next_eval(2, man.preset.seq_len + 1);
+    let spectra = probe.spectra(&bufs, &toks, 0.95)?;
+
+    println!("effective rank vs alpha (paper Eq. 1):");
+    println!(
+        "{:>10} {:>6} {:>8} {:>8} {:>8} {:>8}",
+        "tap", "dim", "r(0.80)", "r(0.90)", "r(0.95)", "r(0.99)"
+    );
+    for s in &spectra {
+        let r = |a: f64| cola::linalg::effective_rank(&s.singular_values, a);
+        println!(
+            "{:>10} {:>6} {:>8} {:>8} {:>8} {:>8}",
+            s.name,
+            s.full_dim,
+            r(0.80),
+            r(0.90),
+            r(0.95),
+            r(0.99)
+        );
+    }
+
+    println!("\ncumulative spectral energy (Fig 2a), per tap:");
+    for s in &spectra {
+        let e = spectrum_energy(&s.singular_values);
+        let marks: Vec<String> = [0.1, 0.25, 0.5, 0.75]
+            .iter()
+            .map(|&f| {
+                let k = ((s.singular_values.len() as f64 * f) as usize).max(1) - 1;
+                format!("top{:.0}%={:.0}%", f * 100.0, e[k] * 100.0)
+            })
+            .collect();
+        println!("  {:>10}: {}", s.name, marks.join("  "));
+    }
+    println!("\n(untrained-vs-trained comparison: rerun with steps=0)");
+    Ok(())
+}

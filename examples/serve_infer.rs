@@ -1,0 +1,78 @@
+//! Serving example: bring up the inference engine (dynamic batcher +
+//! KV-cache decode over the AOT artifacts) on a trained checkpoint and push
+//! a concurrent workload through it, reporting latency percentiles and
+//! throughput — the Table 11 measurement path as a library consumer sees it.
+//!
+//!     cargo run --release --example serve_infer [artifact] [n_requests]
+
+use cola::config::ServeConfig;
+use cola::data::{corpus::CorpusCfg, CorpusGen};
+use cola::serve::Engine;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let artifact = args.first().cloned().unwrap_or_else(|| "p350m_cola".into());
+    let n_requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(32);
+
+    let cfg = ServeConfig {
+        artifact: artifact.clone(),
+        max_new_tokens: 16,
+        max_wait_ms: 4,
+    };
+    let (engine, join) = Engine::spawn(cfg)?;
+
+    let man = cola::runtime::ArtifactDir::open_named(&artifact)?.manifest;
+    let bpe = cola::coordinator::trainer::shared_bpe(man.preset.vocab)?;
+    let mut gen = CorpusGen::new(CorpusCfg { seed: 123, ..CorpusCfg::default() });
+
+    // warmup: compiles prefill+decode once
+    let w = engine.generate(bpe.encode(&gen.text(50)), 4)?;
+    println!("warmup: {} tokens, decoded text: {:?}", w.tokens.len(), bpe.decode(&w.tokens));
+
+    // concurrent workload from 4 client threads
+    let t0 = Instant::now();
+    let mut clients = Vec::new();
+    for c in 0..4 {
+        let engine = engine.clone();
+        let bpe = bpe.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut gen =
+                CorpusGen::new(CorpusCfg { seed: 200 + c as u64, ..CorpusCfg::default() });
+            let mut lat = Vec::new();
+            let mut tokens = 0usize;
+            for _ in 0..n_requests / 4 {
+                let prompt = bpe.encode(&gen.text(50));
+                let resp = engine.generate(prompt, 16).expect("generate");
+                tokens += resp.tokens.len();
+                lat.push(resp.latency.as_secs_f64() * 1000.0);
+            }
+            (lat, tokens)
+        }));
+    }
+    let mut all_lat = Vec::new();
+    let mut total_tokens = 0;
+    for c in clients {
+        let (lat, tokens) = c.join().unwrap();
+        all_lat.extend(lat);
+        total_tokens += tokens;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    all_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| all_lat[((all_lat.len() as f64 * p) as usize).min(all_lat.len() - 1)];
+    println!(
+        "\n{} requests from 4 clients: {total_tokens} tokens in {secs:.2}s = {:.0} tok/s",
+        all_lat.len(),
+        total_tokens as f64 / secs
+    );
+    println!(
+        "latency p50 {:.0}ms | p90 {:.0}ms | p99 {:.0}ms | engine RSS {:.2} GB",
+        pct(0.5),
+        pct(0.9),
+        pct(0.99),
+        cola::metrics::peak_rss_bytes() as f64 / 1e9
+    );
+    drop(engine);
+    let _ = join.join();
+    Ok(())
+}

@@ -1,0 +1,481 @@
+"""AOT pipeline: lower every step function to HLO *text* + emit state0.npz
+and manifest.json per (preset, variant) artifact directory.
+
+HLO text — NOT ``lowered.compiler_ir("hlo")`` protos or ``.serialize()`` —
+is the interchange format: jax ≥ 0.5 emits HloModuleProtos with 64-bit
+instruction ids that the runtime's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifact contract with the rust runtime (rust/src/runtime/artifact.rs):
+
+  train_step.hlo.txt : (state..., step f32, tokens i32[M,B,T+1][, mask])
+                       -> (state'..., loss f32, grad_norm f32)
+  eval_step.hlo.txt  : (params..., tokens i32[B,T+1]) -> (sum_nll, count)
+  activations.hlo.txt: (params..., tokens i32[B,T+1]) -> (tap_0..tap_L)
+  prefill.hlo.txt    : (params..., prompt i32[B,Tp]) -> (next, kc, vc)
+  decode_step.hlo.txt: (params..., kc, vc, tok i32[B], pos i32) -> (next, kc', vc')
+  refresh_proj.hlo.txt (galore): (state..., seed i32) -> (state'...)
+  cls_train.hlo.txt / cls_eval.hlo.txt (encoder presets): GLUE-proxy head.
+
+`state` is opaque to rust: an ordered list of arrays (params sorted by name,
+then optimizer entries sorted by name). manifest.json records names, shapes,
+dtypes, and all geometry/hyper-parameters.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import optim
+from .cola_m import block_fn_for
+from .presets import PRESETS, Preset, paper_rank_for
+
+
+# ---------------------------------------------------------------------------
+# Lowering helpers
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, arg_specs, path: str) -> int:
+    """jit-lower fn at arg_specs, write HLO text, return #bytes.
+
+    keep_unused=True: the rust runtime passes the full state list to every
+    step function; without it XLA prunes unused params (e.g. head.W in the
+    activation-tap module) and the call arity no longer matches the manifest.
+    """
+    lowered = jax.jit(fn, keep_unused=True).lower(*arg_specs)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def spec_of(x) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# State flattening
+# ---------------------------------------------------------------------------
+
+class StateLayout:
+    """Fixed ordering of params + optimizer entries for the flat interface."""
+
+    def __init__(self, cfg: M.ModelCfg, params: dict, opt: dict):
+        self.cfg = cfg
+        self.param_names = sorted(params.keys())
+        self.opt_names = sorted(opt.keys())
+        self.n_params = len(self.param_names)
+        self.n_state = self.n_params + len(self.opt_names)
+        self._params = params
+        self._opt = opt
+
+    def flatten(self, params: dict, opt: dict) -> list:
+        return ([params[k] for k in self.param_names] +
+                [opt[k] for k in self.opt_names])
+
+    def unflatten(self, flat):
+        params = dict(zip(self.param_names, flat[:self.n_params]))
+        opt = dict(zip(self.opt_names, flat[self.n_params:self.n_state]))
+        return params, opt
+
+    def state0(self) -> list:
+        return self.flatten(self._params, self._opt)
+
+
+# ---------------------------------------------------------------------------
+# Step-function builders (flat-arg signatures)
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg: M.ModelCfg, layout: StateLayout):
+    block_fn = block_fn_for(cfg)
+    is_mlm = cfg.preset.is_encoder
+
+    def loss_of(trainable, frozen, tok, mask=None):
+        params = {**trainable, **frozen}
+        if is_mlm:
+            return M.mlm_loss(cfg, params, tok, mask, block_fn=block_fn)
+        return M.lm_loss(cfg, params, tok, block_fn=block_fn)
+
+    def train_step(*args):
+        flat = list(args[:layout.n_state])
+        step = args[layout.n_state]
+        tokens = args[layout.n_state + 1]            # [M, B, T(+1)]
+        mask = args[layout.n_state + 2] if is_mlm else None
+        params, opt = layout.unflatten(flat)
+        trainable = {k: v for k, v in params.items()
+                     if not M.is_frozen(cfg, k)}
+        frozen = {k: v for k, v in params.items() if M.is_frozen(cfg, k)}
+
+        n_micro = tokens.shape[0]
+        grad_fn = jax.value_and_grad(loss_of)
+
+        def body(carry, xs):
+            l_acc, g_acc = carry
+            if is_mlm:
+                tok, mk = xs
+                l, g = grad_fn(trainable, frozen, tok, mk)
+            else:
+                l, g = grad_fn(trainable, frozen, xs)
+            return (l_acc + l,
+                    jax.tree_util.tree_map(jnp.add, g_acc, g)), None
+
+        zeros = jax.tree_util.tree_map(jnp.zeros_like, trainable)
+        xs = (tokens, mask) if is_mlm else tokens
+        (l_sum, g_sum), _ = jax.lax.scan(body, (0.0, zeros), xs)
+        loss = l_sum / n_micro
+        grads = jax.tree_util.tree_map(lambda g: g / n_micro, g_sum)
+        grads, gnorm = optim.clip_by_global_norm(grads, cfg.preset.grad_clip)
+
+        new_tr, new_opt = optim.opt_update(cfg, trainable, opt, grads, step)
+        new_params = {**new_tr, **frozen}
+        out = layout.flatten(new_params, new_opt)
+        return tuple(out) + (loss, gnorm)
+
+    return train_step
+
+
+def build_eval_step(cfg: M.ModelCfg, layout: StateLayout):
+    def eval_step(*args):
+        params = dict(zip(layout.param_names, args[:layout.n_params]))
+        tokens = args[layout.n_params]
+        return M.lm_loss_sum(cfg, params, tokens)
+    return eval_step
+
+
+def build_activations(cfg: M.ModelCfg, layout: StateLayout):
+    def acts(*args):
+        params = dict(zip(layout.param_names, args[:layout.n_params]))
+        tokens = args[layout.n_params]
+        taps = []
+        M.forward_hidden(cfg, params, tokens[:, :-1], taps=taps)
+        return tuple(t for (_, t) in taps)
+    return acts
+
+
+def build_prefill(cfg: M.ModelCfg, layout: StateLayout, max_len: int):
+    def pf(*args):
+        params = dict(zip(layout.param_names, args[:layout.n_params]))
+        prompt = args[layout.n_params]
+        return M.prefill(cfg, params, prompt, max_len)
+    return pf
+
+
+def build_decode(cfg: M.ModelCfg, layout: StateLayout):
+    def dec(*args):
+        params = dict(zip(layout.param_names, args[:layout.n_params]))
+        kc, vc, tok, pos = args[layout.n_params:layout.n_params + 4]
+        return M.decode_step(cfg, params, kc, vc, tok, pos)
+    return dec
+
+
+def build_refresh(cfg: M.ModelCfg, layout: StateLayout):
+    def refresh(*args):
+        flat = list(args[:layout.n_state])
+        seed = args[layout.n_state]
+        params, opt = layout.unflatten(flat)
+        new_opt = optim.galore_refresh(cfg, opt, seed)
+        return tuple(layout.flatten(params, new_opt))
+    return refresh
+
+
+def build_cls(cfg: M.ModelCfg, layout: StateLayout, n_classes: int, lr: float):
+    """GLUE-proxy fine-tune/eval steps. Classifier weights + their Adam
+    moments ride at the end of the state list."""
+
+    def cls_loss(trainable, frozen, cls_w, tokens, labels):
+        params = {**trainable, **frozen}
+        lg = M.cls_logits(cfg, params, tokens, cls_w)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, labels[:, None], axis=-1)[:, 0]
+        return jnp.mean(lse - gold)
+
+    def cls_train(*args):
+        flat = list(args[:layout.n_state])
+        cls_w, cm, cv = args[layout.n_state:layout.n_state + 3]
+        step = args[layout.n_state + 3]
+        tokens = args[layout.n_state + 4]
+        labels = args[layout.n_state + 5]
+        params, opt = layout.unflatten(flat)
+        trainable = {k: v for k, v in params.items()
+                     if not M.is_frozen(cfg, k)}
+        frozen = {k: v for k, v in params.items() if M.is_frozen(cfg, k)}
+
+        (loss, (g_tr, g_cls)) = jax.value_and_grad(
+            cls_loss, argnums=(0, 2))(trainable, frozen, cls_w, tokens, labels)
+        (g_tr, g_cls), gnorm = optim.clip_by_global_norm(
+            (g_tr, g_cls), cfg.preset.grad_clip)
+
+        new_tr, new_opt = optim.opt_update(cfg, trainable, opt, g_tr, step)
+        # plain Adam on the classifier head at fine-tune lr
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        t = step + 1.0
+        cm2 = b1 * cm + (1 - b1) * g_cls
+        cv2 = b2 * cv + (1 - b2) * g_cls * g_cls
+        cls_w2 = cls_w - lr * (cm2 / (1 - b1 ** t)) / (
+            jnp.sqrt(cv2 / (1 - b2 ** t)) + eps)
+        out = layout.flatten({**new_tr, **frozen}, new_opt)
+        return tuple(out) + (cls_w2, cm2, cv2, loss)
+
+    def cls_eval(*args):
+        params = dict(zip(layout.param_names, args[:layout.n_params]))
+        cls_w = args[layout.n_params]
+        tokens = args[layout.n_params + 1]
+        labels = args[layout.n_params + 2]
+        lg = M.cls_logits(cfg, params, tokens, cls_w)
+        pred = jnp.argmax(lg, -1).astype(jnp.int32)
+        return (jnp.sum((pred == labels).astype(jnp.float32)),
+                jnp.asarray(labels.shape[0], jnp.float32))
+
+    return cls_train, cls_eval
+
+
+# ---------------------------------------------------------------------------
+# Artifact emission
+# ---------------------------------------------------------------------------
+
+def make_cfg(preset: str, variant: str, sigma_mode: str = "lowrank_only",
+             rank: int = 0, compute_frac: float = 0.0,
+             use_kernel: bool = True, block_n: int = 0) -> M.ModelCfg:
+    p = PRESETS[preset]
+    if compute_frac > 0:
+        rank = paper_rank_for(p.d, compute_frac)
+    if block_n == 0:
+        # COLA_AE_BLOCK=whole collapses the interpret-mode grid to one
+        # program (CPU perf; see EXPERIMENTS.md §Perf). Any integer works too.
+        env = os.environ.get("COLA_AE_BLOCK", "128")
+        block_n = p.batch // p.n_micro * p.seq_len if env == "whole" else int(env)
+    return M.ModelCfg(preset=p, variant=variant, sigma_mode=sigma_mode,
+                      use_kernel=use_kernel, rank=rank, block_n=block_n)
+
+
+def artifact_name(cfg: M.ModelCfg, tag: str = "") -> str:
+    name = f"{cfg.preset.name}_{cfg.variant}"
+    if cfg.variant in ("cola", "cola_m"):
+        if cfg.sigma_mode != "lowrank_only":
+            name += f"_{cfg.sigma_mode}"
+        if cfg.rank and cfg.rank != cfg.preset.rank:
+            name += f"_r{cfg.rank}"
+    if tag:
+        name += f"_{tag}"
+    return name
+
+
+def emit(cfg: M.ModelCfg, out_root: str, serve: bool = False,
+         cls_classes: int = 0, verbose: bool = True) -> str:
+    """Build every artifact for one (preset, variant). Returns the dir."""
+    p = cfg.preset
+    name = artifact_name(cfg)
+    adir = os.path.join(out_root, name)
+    os.makedirs(adir, exist_ok=True)
+
+    params = M.init_params(cfg, p.seed)
+    opt = optim.opt_init(cfg, params)
+    layout = StateLayout(cfg, params, opt)
+    state0 = layout.state0()
+    state_specs = [spec_of(x) for x in state0]
+    f32 = lambda: jax.ShapeDtypeStruct((), jnp.float32)
+    i32 = lambda s: jax.ShapeDtypeStruct(s, jnp.int32)
+
+    sizes = {}
+    mb = p.batch // p.n_micro
+    tok_shape = (p.n_micro, mb, p.seq_len + (0 if p.is_encoder else 1))
+
+    train_args = state_specs + [f32(), i32(tok_shape)]
+    if p.is_encoder:
+        train_args.append(i32(tok_shape))
+    sizes["train_step"] = lower_to_file(
+        build_train_step(cfg, layout), train_args,
+        os.path.join(adir, "train_step.hlo.txt"))
+
+    eval_bs = p.batch
+    param_specs = state_specs[:layout.n_params]
+    if not p.is_encoder:
+        sizes["eval_step"] = lower_to_file(
+            build_eval_step(cfg, layout),
+            param_specs + [i32((eval_bs, p.seq_len + 1))],
+            os.path.join(adir, "eval_step.hlo.txt"))
+        sizes["activations"] = lower_to_file(
+            build_activations(cfg, layout),
+            param_specs + [i32((2, p.seq_len + 1))],
+            os.path.join(adir, "activations.hlo.txt"))
+
+    if cfg.variant == "galore":
+        sizes["refresh_proj"] = lower_to_file(
+            build_refresh(cfg, layout), state_specs + [i32(())],
+            os.path.join(adir, "refresh_proj.hlo.txt"))
+
+    serve_geom = {}
+    if serve:
+        max_len = p.seq_len
+        prompt_len = max(8, p.seq_len // 4)
+        serve_bs = 4
+        sizes["prefill"] = lower_to_file(
+            build_prefill(cfg, layout, max_len),
+            param_specs + [i32((serve_bs, prompt_len))],
+            os.path.join(adir, "prefill.hlo.txt"))
+        kv = jax.ShapeDtypeStruct(
+            (p.n_layers, serve_bs, max_len, p.n_heads, p.head_dim),
+            jnp.float32)
+        sizes["decode_step"] = lower_to_file(
+            build_decode(cfg, layout),
+            param_specs + [kv, kv, i32((serve_bs,)), i32(())],
+            os.path.join(adir, "decode_step.hlo.txt"))
+        serve_geom = {"serve_batch": serve_bs, "prompt_len": prompt_len,
+                      "max_len": max_len}
+
+    cls_geom = {}
+    if cls_classes > 0:
+        assert p.is_encoder
+        cls_train, cls_eval = build_cls(cfg, layout, cls_classes, lr=1e-4)
+        d = p.d
+        cw = jax.ShapeDtypeStruct((d, cls_classes), jnp.float32)
+        sizes["cls_train"] = lower_to_file(
+            cls_train,
+            state_specs + [cw, cw, cw, f32(), i32((p.batch, p.seq_len)),
+                           i32((p.batch,))],
+            os.path.join(adir, "cls_train.hlo.txt"))
+        sizes["cls_eval"] = lower_to_file(
+            cls_eval,
+            param_specs + [cw, i32((p.batch, p.seq_len)), i32((p.batch,))],
+            os.path.join(adir, "cls_eval.hlo.txt"))
+        cls_geom = {"n_classes": cls_classes, "cls_dim": d}
+
+    # state0.npz — keys s000000.. preserve order through the npz round-trip.
+    np.savez(os.path.join(adir, "state0.npz"),
+             **{f"s{i:06d}": np.asarray(x) for i, x in enumerate(state0)})
+
+    counts = M.count_params(cfg)
+    manifest = {
+        "name": name,
+        "preset": p.to_dict(),
+        "variant": cfg.variant,
+        "sigma_mode": cfg.sigma_mode,
+        "rank": cfg.r,
+        "use_kernel": cfg.use_kernel,
+        "objective": "mlm" if p.is_encoder else "lm",
+        "n_state": layout.n_state,
+        "n_params": layout.n_params,
+        "param_names": layout.param_names,
+        "opt_names": layout.opt_names,
+        "state_shapes": [list(np.asarray(x).shape) for x in state0],
+        "tokens_shape": list(tok_shape),
+        "eval_batch": eval_bs,
+        "n_total_params": counts["total"],
+        "n_trainable_params": counts["trainable"],
+        "hlo_bytes": sizes,
+        **serve_geom,
+        **cls_geom,
+    }
+    with open(os.path.join(adir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+    if verbose:
+        kb = {k: v // 1024 for k, v in sizes.items()}
+        print(f"[aot] {name}: params={counts['total']:,} "
+              f"state={layout.n_state} hlo_kb={kb}", flush=True)
+    return adir
+
+
+# ---------------------------------------------------------------------------
+# Standard artifact sets
+# ---------------------------------------------------------------------------
+
+def standard_set() -> list[dict]:
+    """Everything `make artifacts` builds (see DESIGN.md experiment index)."""
+    jobs = []
+
+    def j(**kw):
+        jobs.append(kw)
+
+    # tiny: full matrix of variants (pytest + quickstart + integration tests)
+    for v in ("full", "gcp", "cola", "cola_m", "lora", "galore", "sltrain"):
+        j(preset="tiny", variant=v, serve=(v in ("full", "cola")))
+    for sm in ("both", "reduced", "fullrank_only"):
+        j(preset="tiny", variant="cola", sigma_mode=sm)
+
+    # p60m ladder: Tables 5/7/10 proxy runs
+    for v in ("full", "gcp", "cola", "cola_m", "lora", "galore", "sltrain"):
+        j(preset="p60m", variant=v)
+    for sm in ("both", "reduced", "fullrank_only"):
+        j(preset="p60m", variant="cola", sigma_mode=sm)
+    j(preset="p60m", variant="cola", compute_frac=0.7)      # Table 7 0.7×
+    j(preset="p60m_control", variant="full")
+
+    # p130m: Table 5/7 second scale
+    for v in ("full", "cola", "cola_m", "lora", "galore", "sltrain"):
+        j(preset="p130m", variant=v)
+    j(preset="p130m", variant="cola", compute_frac=0.7)
+    j(preset="p130m_control", variant="full")
+
+    # p350m: Table 7 third scale + over-train + serving (Table 11)
+    for v in ("full", "cola", "cola_m", "sltrain"):
+        j(preset="p350m", variant=v, serve=True)
+    j(preset="p350m", variant="cola", compute_frac=0.7)
+    j(preset="p350m_control", variant="full")
+
+    # throughput scale (Fig 8 / Table 9) + e2e driver
+    for v in ("full", "gcp", "cola", "cola_m"):
+        j(preset="e2e", variant=v, serve=(v in ("full", "cola")))
+
+    # BERT proxy (Table 8)
+    j(preset="bert", variant="full", cls_classes=4)
+    j(preset="bert", variant="cola", compute_frac=0.7, cls_classes=4)
+    return jobs
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--preset", default=None)
+    ap.add_argument("--variant", default="full")
+    ap.add_argument("--sigma-mode", default="lowrank_only")
+    ap.add_argument("--rank", type=int, default=0)
+    ap.add_argument("--compute-frac", type=float, default=0.0)
+    ap.add_argument("--serve", action="store_true")
+    ap.add_argument("--cls-classes", type=int, default=0)
+    ap.add_argument("--no-kernel", action="store_true",
+                    help="use the jnp oracle path instead of pallas")
+    ap.add_argument("--set", default=None, choices=(None, "standard", "tiny"),
+                    help="build a predefined artifact set")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    if args.set:
+        jobs = standard_set()
+        if args.set == "tiny":
+            jobs = [jb for jb in jobs if jb["preset"].startswith("tiny")]
+        for jb in jobs:
+            cfg = make_cfg(jb["preset"], jb["variant"],
+                           jb.get("sigma_mode", "lowrank_only"),
+                           jb.get("rank", 0), jb.get("compute_frac", 0.0))
+            emit(cfg, args.out, serve=jb.get("serve", False),
+                 cls_classes=jb.get("cls_classes", 0))
+        # mark set completion for the Makefile's no-op check
+        with open(os.path.join(args.out, f".stamp_{args.set}"), "w") as f:
+            f.write("ok\n")
+        return
+
+    if not args.preset:
+        ap.error("--preset or --set required")
+    cfg = make_cfg(args.preset, args.variant, args.sigma_mode, args.rank,
+                   args.compute_frac, use_kernel=not args.no_kernel)
+    emit(cfg, args.out, serve=args.serve, cls_classes=args.cls_classes)
+
+
+if __name__ == "__main__":
+    main()

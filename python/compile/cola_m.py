@@ -1,0 +1,60 @@
+"""CoLA-M (§4) and vanilla-GCP checkpointing as jax.checkpoint policies.
+
+The paper's CoLA-M saves *only the low-rank activations* (the red circles in
+Fig. 4 — each AE's r-dimensional σ(A·x)) plus block boundaries, and recomputes
+the up-projections B·z and the attention SDP during the backward pass
+(Table 4: memory 2nd+7nr, recompute ≈ C_CoLA/2 of the forward).
+
+Mapping to JAX:
+* every bottleneck tensor is tagged ``checkpoint_name(z, "lowrank")`` in
+  ``model.linear_tagged``;
+* each decoder block is wrapped in ``jax.checkpoint`` with
+  ``save_only_these_names("lowrank")`` — so the saved set is exactly {block
+  inputs} ∪ {low-rank activations}, and everything in the original width d
+  (B·z outputs, attention scores, softmax, residual sums) is recomputed.
+* vanilla GCP is the same wrapper with ``nothing_saveable`` (saves only block
+  boundaries, recomputes the whole block — Eq. 15/16).
+
+Note on the Pallas kernel: inside ``pl.pallas_call`` the bottleneck never
+leaves VMEM, so there is nothing to checkpoint at the JAX level; CoLA-M
+therefore uses the mathematically identical tagged jnp path (pytest verifies
+equality), and the kernel remains the lowering used for the plain ``cola``
+variant's forward/backward.
+"""
+
+import jax
+
+from . import model as M
+
+
+def _core(cfg, params, lname, x, pos, causal):
+    return M.block(cfg, params, lname, x, pos, causal, M.linear_tagged)[0]
+
+
+def _core_plain(cfg, params, lname, x, pos, causal):
+    return M.block(cfg, params, lname, x, pos, causal, M.linear)[0]
+
+
+def block_fn_for(cfg: M.ModelCfg):
+    """Return the block function matching cfg.variant's memory strategy."""
+    causal = not cfg.preset.is_encoder
+
+    if cfg.variant == "cola_m":
+        policy = jax.checkpoint_policies.save_only_these_names("lowrank")
+
+        def bf(cfg_, params, lname, x, pos):
+            fn = lambda pr, xx: _core(cfg_, pr, lname, xx, pos, causal)
+            return jax.checkpoint(fn, policy=policy)(params, x)
+        return bf
+
+    if cfg.variant == "gcp":
+        def bf(cfg_, params, lname, x, pos):
+            fn = lambda pr, xx: _core_plain(cfg_, pr, lname, xx, pos, causal)
+            return jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.nothing_saveable)(params, x)
+        return bf
+
+    # no remat: plain block with the variant's linear (kernel-backed for cola)
+    def bf(cfg_, params, lname, x, pos):
+        return M.block(cfg_, params, lname, x, pos, causal, M.linear)[0]
+    return bf

@@ -1,0 +1,212 @@
+"""Layer-1 Pallas kernels: the fused CoLA auto-encoder  y = B · σ(A · x).
+
+This is the paper's compute hot-spot — after the CoLA rewrite, *every* linear
+layer in the transformer is this auto-encoder, so one fused kernel covers the
+entire GEMM budget of the model.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the paper's CUDA view (cuBLAS
+GEMM pair + PyTorch checkpointing) becomes a Pallas kernel that tiles tokens
+into MXU-friendly blocks, keeps A and B resident in VMEM, computes the
+r-dimensional bottleneck u = x_blk·A into a VMEM scratch tile, applies σ
+in-register, and immediately consumes it for the up-projection — the
+full-width intermediate never exists, and the only tensor worth saving for
+the backward pass is the r-dimensional pre-activation. That *is* the CoLA-M
+insight, expressed at kernel level.
+
+Autodiff: `pl.pallas_call` has no reverse-mode rule, so `cola_ae` carries a
+`jax.custom_vjp` whose residuals are exactly (x, A, B, u) with u ∈ R^{N×r} —
+the paper's "save only the low-rank activations". The backward pass fuses
+ds = (g·Bᵀ)·σ'(u) in a second Pallas kernel (token-parallel), while the two
+weight-gradient reductions dA = xᵀ·ds and dB = σ(u)ᵀ·g stay in XLA (they are
+plain GEMM reductions the MXU/compiler already handles optimally).
+
+On this CPU-only image kernels run `interpret=True` (Mosaic custom-calls
+cannot execute on the CPU PJRT plugin); numerics are identical and the kernel
+lowers into the same HLO module the rust runtime loads.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import cola_ae_ref, sigma
+
+#: Token-block size. 128 matches the MXU systolic tile; shapes smaller than
+#: one block fall back to a single-program grid.
+DEFAULT_BLOCK_N = 128
+
+
+def _pad_tokens(x2, blk):
+    n = x2.shape[0]
+    pad = (-n) % blk
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    return x2, n, n + pad
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel
+# ---------------------------------------------------------------------------
+
+def _ae_fwd_kernel(x_ref, a_ref, b_ref, o_ref, u_ref, *, act: str):
+    """One grid step: u = x_blk·A (VMEM), o = σ(u)·B."""
+    x = x_ref[...]
+    u = jnp.dot(x, a_ref[...], preferred_element_type=jnp.float32)
+    u_ref[...] = u
+    o_ref[...] = jnp.dot(sigma(act)(u), b_ref[...],
+                         preferred_element_type=jnp.float32)
+
+
+def _ae_forward(x2, a, b, act: str, block_n: int, interpret: bool):
+    """Flattened forward returning (y, u) — u is the saved low-rank tensor."""
+    d_in, r = a.shape
+    _, d_out = b.shape
+    blk = min(block_n, x2.shape[0])
+    x2p, n, n_pad = _pad_tokens(x2, blk)
+
+    y, u = pl.pallas_call(
+        functools.partial(_ae_fwd_kernel, act=act),
+        grid=(n_pad // blk,),
+        in_specs=[
+            pl.BlockSpec((blk, d_in), lambda i: (i, 0)),
+            pl.BlockSpec((d_in, r), lambda i: (0, 0)),
+            pl.BlockSpec((r, d_out), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((blk, d_out), lambda i: (i, 0)),
+            pl.BlockSpec((blk, r), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad, d_out), x2.dtype),
+            jax.ShapeDtypeStruct((n_pad, r), x2.dtype),
+        ],
+        interpret=interpret,
+    )(x2p, a, b)
+    return y[:n], u[:n]
+
+
+# ---------------------------------------------------------------------------
+# Backward kernel: token-parallel part of the VJP
+# ---------------------------------------------------------------------------
+
+def _ae_bwd_kernel(g_ref, u_ref, a_ref, b_ref, dx_ref, ds_ref, *, act: str):
+    """ds = (g·Bᵀ) ⊙ σ'(u);  dx = ds·Aᵀ  — both per token block."""
+    g = g_ref[...]
+    u = u_ref[...]
+    dz = jnp.dot(g, b_ref[...].T, preferred_element_type=jnp.float32)
+    # elementwise σ' via jvp of the scalar nonlinearity (exact, traced once)
+    _, ds = jax.jvp(sigma(act), (u,), (dz,))
+    ds_ref[...] = ds
+    dx_ref[...] = jnp.dot(ds, a_ref[...].T, preferred_element_type=jnp.float32)
+
+
+def _ae_backward(g2, u2, x2, a, b, act: str, block_n: int, interpret: bool):
+    d_in, r = a.shape
+    _, d_out = b.shape
+    blk = min(block_n, g2.shape[0])
+    g2p, n, n_pad = _pad_tokens(g2, blk)
+    u2p, _, _ = _pad_tokens(u2, blk)
+
+    dx, ds = pl.pallas_call(
+        functools.partial(_ae_bwd_kernel, act=act),
+        grid=(n_pad // blk,),
+        in_specs=[
+            pl.BlockSpec((blk, d_out), lambda i: (i, 0)),
+            pl.BlockSpec((blk, r), lambda i: (i, 0)),
+            pl.BlockSpec((d_in, r), lambda i: (0, 0)),
+            pl.BlockSpec((r, d_out), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((blk, d_in), lambda i: (i, 0)),
+            pl.BlockSpec((blk, r), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad, d_in), g2.dtype),
+            jax.ShapeDtypeStruct((n_pad, r), g2.dtype),
+        ],
+        interpret=interpret,
+    )(g2p, u2p, a, b)
+    dx, ds = dx[:n], ds[:n]
+    # weight-gradient GEMM reductions: best left to XLA (MXU-native).
+    da = x2.T @ ds
+    db = sigma(act)(u2).T @ g2
+    return dx, da, db
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wrapper
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _make_ae(act: str, block_n: int, interpret: bool):
+    @jax.custom_vjp
+    def ae(x2, a, b):
+        y, _ = _ae_forward(x2, a, b, act, block_n, interpret)
+        return y
+
+    def fwd(x2, a, b):
+        y, u = _ae_forward(x2, a, b, act, block_n, interpret)
+        # residuals: inputs + the r-dim pre-activation (low-rank only)
+        return y, (x2, a, b, u)
+
+    def bwd(res, g):
+        x2, a, b, u = res
+        dx, da, db = _ae_backward(g, u, x2, a, b, act, block_n, interpret)
+        return dx, da, db
+
+    ae.defvjp(fwd, bwd)
+    return ae
+
+
+def cola_ae(x: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
+            act: str = "silu", block_n: int = DEFAULT_BLOCK_N,
+            interpret: bool = True) -> jnp.ndarray:
+    """Fused auto-encoder over arbitrary leading dims.
+
+    x: [..., d_in] → [..., d_out];  a: [d_in, r];  b: [r, d_out].
+    Differentiable (custom VJP, low-rank residuals — see module docstring).
+    """
+    d_in, r = a.shape
+    r2, d_out = b.shape
+    assert r == r2, f"rank mismatch: A gives {r}, B takes {r2}"
+    assert x.shape[-1] == d_in, (x.shape, a.shape)
+
+    lead = x.shape[:-1]
+    n = 1
+    for s in lead:
+        n *= s
+    x2 = x.reshape(n, d_in)
+    y = _make_ae(act, block_n, interpret)(x2, a, b)
+    return y.reshape(*lead, d_out)
+
+
+def cola_ae_dispatch(x, a, b, act: str = "silu", use_kernel: bool = True,
+                     block_n: int = DEFAULT_BLOCK_N):
+    """Kernel/oracle dispatch used by the L2 model.
+
+    ``use_kernel=False`` selects the pure-jnp oracle path (identical numerics,
+    verified by pytest); sweep configs may use it to keep interpret-mode HLO
+    small when many grid steps would be unrolled.
+    """
+    if use_kernel:
+        return cola_ae(x, a, b, act=act, block_n=block_n)
+    return cola_ae_ref(x, a, b, act)
+
+
+def vmem_plan(d_in: int, r: int, d_out: int, block_n: int = DEFAULT_BLOCK_N,
+              bytes_per_el: int = 2) -> dict:
+    """Estimate the kernel's VMEM footprint per grid step (real-TPU planning;
+    mirrored by ``rust/src/costmodel`` for DESIGN.md §7)."""
+    a_tile = d_in * r * bytes_per_el
+    b_tile = r * d_out * bytes_per_el
+    x_tile = block_n * d_in * bytes_per_el
+    u_tile = block_n * r * bytes_per_el
+    o_tile = block_n * d_out * bytes_per_el
+    total = a_tile + b_tile + x_tile + u_tile + o_tile
+    return {
+        "a_tile": a_tile, "b_tile": b_tile, "x_tile": x_tile,
+        "u_tile": u_tile, "o_tile": o_tile, "total": total,
+        "fits_16mib": total <= 16 * 1024 * 1024,
+    }

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function here is the mathematical definition; `cola_ae.py` must match it
+under f32 (pytest + hypothesis enforce allclose with tight tolerances).
+"""
+
+import jax
+import jax.numpy as jnp
+
+_SIGMAS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+    "identity": lambda x: x,
+}
+
+
+def sigma(name: str):
+    """Look up a nonlinearity by name (shared with the kernel side)."""
+    return _SIGMAS[name]
+
+
+def cola_ae_ref(x: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
+                act: str = "silu") -> jnp.ndarray:
+    """CoLA auto-encoder, Eq. (3) of the paper:  h' = B · σ(A · x).
+
+    x: [..., d_in]; a: [d_in, r]; b: [r, d_out]  (row-major, x @ A @ B).
+    The r-dimensional intermediate is the low-rank activation CoLA-M
+    checkpoints.
+    """
+    z = sigma(act)(x @ a)
+    return z @ b
+
+
+def cola_ae_bottleneck_ref(x: jnp.ndarray, a: jnp.ndarray,
+                           act: str = "silu") -> jnp.ndarray:
+    """Just the encoder half σ(A·x) — the saved activation in CoLA-M."""
+    return sigma(act)(x @ a)
+
+
+def cola_swiglu_mlp_ref(x, a_gate, b_gate, a_up, b_up, a_down, b_down,
+                        act: str = "silu"):
+    """CoLA LLaMA MLP: gate/up/down projections each replaced by an AE;
+    the element-wise product stays in the original d_ff dimension (Fig. 4)."""
+    g = cola_ae_ref(x, a_gate, b_gate, act)
+    u = cola_ae_ref(x, a_up, b_up, act)
+    h = g * u
+    return cola_ae_ref(h, a_down, b_down, act)
+
+
+def full_linear_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Full-rank baseline linear: x @ W  (W: [d_in, d_out])."""
+    return x @ w

@@ -1,0 +1,446 @@
+"""Layer-2: LLaMA-family model in JAX with CoLA variants.
+
+Every linear layer goes through `linear()`, which dispatches on the variant:
+
+* ``full`` / ``gcp`` / ``control`` — ordinary full-rank weight.
+* ``cola`` / ``cola_m``            — bottleneck auto-encoder  B·σ(A·x)
+  (Eq. 3), σ placement per Table 10's four modes.
+* ``lora``                         — frozen W0 + trainable B·A (ReLoRA's pure
+  low-rank stage, the paper's compute baseline Eq. 8).
+* ``sltrain``                      — B·A + fixed-support sparse residual
+  (Eq. 10; support is a frozen random mask — see DESIGN.md §6).
+* ``galore``                       — full-rank architecture (GaLore changes
+  the optimizer, not the model — see optim.py).
+
+Params are a flat ``dict[str, jnp.ndarray]``; ``param_order()`` fixes the
+deterministic flattening the rust runtime relies on (manifest.json).
+"""
+
+from dataclasses import dataclass, replace
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from .kernels.cola_ae import cola_ae_dispatch
+from .kernels.ref import sigma
+from .presets import Preset
+
+
+@dataclass(frozen=True)
+class ModelCfg:
+    """Architecture-level configuration (preset geometry + variant knobs)."""
+    preset: Preset
+    variant: str = "full"            # see presets.VARIANTS
+    sigma_mode: str = "lowrank_only" # Table 10 ablation knob (cola only)
+    use_kernel: bool = True          # pallas kernel vs jnp oracle for AEs
+    rank: int = 0                    # 0 -> preset.rank
+    sparse_density: float = 0.03     # sltrain sparse fraction
+    # AE kernel token-block. 128 = MXU tile (the real-TPU plan, DESIGN.md §7).
+    # On the CPU interpret path a block covering the whole token batch
+    # collapses the pallas grid to 1 and removes per-block while-loop +
+    # dynamic-slice overhead from the lowered HLO (§Perf L1).
+    block_n: int = 128
+
+    @property
+    def r(self) -> int:
+        return self.rank or self.preset.rank
+
+    def with_rank(self, r: int) -> "ModelCfg":
+        return replace(self, rank=r)
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+def _lin_names(cfg: ModelCfg, name: str):
+    """Parameter names created by `linear` for layer `name`."""
+    v = cfg.variant
+    if v in ("cola", "cola_m"):
+        return [f"{name}.A", f"{name}.B"]
+    if v == "lora":
+        return [f"{name}.W0", f"{name}.A", f"{name}.B"]
+    if v == "sltrain":
+        return [f"{name}.A", f"{name}.B", f"{name}.Sval", f"{name}.Smask"]
+    return [f"{name}.W"]
+
+
+#: params frozen during training (no grads / no optimizer state).
+def is_frozen(cfg: ModelCfg, name: str) -> bool:
+    if cfg.variant == "lora" and name.endswith(".W0"):
+        return True
+    if cfg.variant == "sltrain" and name.endswith(".Smask"):
+        return True
+    return False
+
+
+def _init_lin(cfg: ModelCfg, key, name: str, d_in: int, d_out: int, params):
+    """Initialize one logical linear layer into `params`."""
+    r = cfg.r
+    v = cfg.variant
+    k1, k2, k3 = jax.random.split(key, 3)
+    if v in ("cola", "cola_m"):
+        # Spectral-ish init (Khodak et al. 2021): keep ‖BσA‖ comparable to a
+        # 1/sqrt(d_in) full-rank init.
+        params[f"{name}.A"] = jax.random.normal(k1, (d_in, r)) / jnp.sqrt(d_in)
+        params[f"{name}.B"] = jax.random.normal(k2, (r, d_out)) / jnp.sqrt(r)
+    elif v == "lora":
+        params[f"{name}.W0"] = jax.random.normal(k1, (d_in, d_out)) / jnp.sqrt(d_in)
+        params[f"{name}.A"] = jax.random.normal(k2, (d_in, r)) / jnp.sqrt(d_in)
+        params[f"{name}.B"] = jnp.zeros((r, d_out))  # LoRA-style zero start
+    elif v == "sltrain":
+        params[f"{name}.A"] = jax.random.normal(k1, (d_in, r)) / jnp.sqrt(d_in)
+        params[f"{name}.B"] = jax.random.normal(k2, (r, d_out)) / jnp.sqrt(r)
+        mask = (jax.random.uniform(k3, (d_in, d_out)) < cfg.sparse_density)
+        params[f"{name}.Sval"] = (
+            jax.random.normal(k1, (d_in, d_out)) / jnp.sqrt(d_in))
+        params[f"{name}.Smask"] = mask.astype(jnp.float32)
+    else:
+        params[f"{name}.W"] = jax.random.normal(k1, (d_in, d_out)) / jnp.sqrt(d_in)
+
+
+def linear(cfg: ModelCfg, params, name: str, x, orig_act: str | None = None):
+    """Apply the logical linear layer `name` to x under cfg.variant.
+
+    orig_act: the nonlinearity the *original* architecture applies after this
+    layer (e.g. silu on the SwiGLU gate), or None. CoLA's sigma_mode decides
+    where σ actually lands (Table 10):
+
+      lowrank_only  — σ inside the AE for every layer, original σ dropped.
+      both          — σ inside every AE *and* the original σ kept.
+      reduced       — σ inside the AE only where the original had one.
+      fullrank_only — plain B·A factorization, only the original σ applied.
+    """
+    v = cfg.variant
+    if v in ("cola", "cola_m"):
+        mode = cfg.sigma_mode
+        if mode == "lowrank_only":
+            inner, outer = "silu", None
+        elif mode == "both":
+            inner, outer = "silu", orig_act
+        elif mode == "reduced":
+            inner = "silu" if orig_act else "identity"
+            outer = None
+        elif mode == "fullrank_only":
+            inner, outer = "identity", orig_act
+        else:
+            raise ValueError(f"bad sigma_mode {mode}")
+        y = cola_ae_dispatch(x, params[f"{name}.A"], params[f"{name}.B"],
+                             act=inner, use_kernel=cfg.use_kernel,
+                             block_n=cfg.block_n)
+        # Tag the bottleneck output for CoLA-M's save-only-low-rank policy.
+        # (The tag lands on the AE output here; the true r-dim tensor is
+        # inside the kernel — cola_m.py documents the equivalence.)
+        if outer:
+            y = sigma(outer)(y)
+        return y
+
+    if v == "lora":
+        y = x @ params[f"{name}.W0"]
+        y = y + (x @ params[f"{name}.A"]) @ params[f"{name}.B"]
+    elif v == "sltrain":
+        w = params[f"{name}.A"] @ params[f"{name}.B"]
+        w = w + params[f"{name}.Smask"] * params[f"{name}.Sval"]
+        y = x @ w
+    else:
+        y = x @ params[f"{name}.W"]
+    if orig_act:
+        y = sigma(orig_act)(y)
+    return y
+
+
+# For CoLA-M we additionally need the *bottleneck* activations as named
+# checkpoints. We re-derive them via a tagged wrapper around `linear` for the
+# cola variants: tag the encoder output σ(A·x).
+def linear_tagged(cfg: ModelCfg, params, name: str, x, orig_act=None):
+    if cfg.variant not in ("cola", "cola_m"):
+        return linear(cfg, params, name, x, orig_act)
+    mode = cfg.sigma_mode
+    inner = "silu"
+    if mode == "reduced" and not orig_act:
+        inner = "identity"
+    if mode == "fullrank_only":
+        inner = "identity"
+    a, b = params[f"{name}.A"], params[f"{name}.B"]
+    z = sigma(inner)(x @ a)
+    z = checkpoint_name(z, "lowrank")          # <- the saved r-dim activation
+    y = z @ b
+    if mode == "both" and orig_act:
+        y = sigma(orig_act)(y)
+    if mode == "fullrank_only" and orig_act:
+        y = sigma(orig_act)(y)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Model blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(params, name, x, eps=1e-6):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * params[f"{name}.g"]
+
+
+def _rope(x, pos):
+    """Rotary embedding. x: [B, T, H, hd]; pos: [T] (or scalar broadcast)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = pos[..., None].astype(jnp.float32) * freqs      # [T, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[None, :, None, :]
+    sin = sin[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+def attention(cfg: ModelCfg, params, lname: str, x, pos, causal: bool,
+              lin_fn, kv_cache=None, cache_pos=None):
+    """Multi-head attention with RoPE.
+
+    kv_cache: optional (k, v) of shape [B, maxT, H, hd] for decode;
+    cache_pos: scalar index where the new token(s) land.
+    Returns (out, new_kv_cache).
+    """
+    p = cfg.preset
+    B, T, _ = x.shape
+    H, hd = p.n_heads, p.head_dim
+
+    q = lin_fn(cfg, params, f"{lname}.q", x).reshape(B, T, H, hd)
+    k = lin_fn(cfg, params, f"{lname}.k", x).reshape(B, T, H, hd)
+    v = lin_fn(cfg, params, f"{lname}.v", x).reshape(B, T, H, hd)
+
+    q = _rope(q, pos)
+    k = _rope(k, pos)
+
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        ck = jax.lax.dynamic_update_slice(ck, k, (0, cache_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v, (0, cache_pos, 0, 0))
+        k_all, v_all = ck, cv
+        new_cache = (ck, cv)
+        kv_len = ck.shape[1]
+    else:
+        k_all, v_all = k, v
+        new_cache = None
+        kv_len = T
+
+    att = jnp.einsum("bqhd,bkhd->bhqk", q, k_all) / jnp.sqrt(float(hd))
+    if kv_cache is not None:
+        # Causal within the new block AND bounded by what the cache holds:
+        # query at absolute position cache_pos+q may attend keys j <= that.
+        qpos = cache_pos + jnp.arange(T)
+        valid = jnp.arange(kv_len)[None, :] <= qpos[:, None]
+        att = jnp.where(valid[None, None, :, :], att, -1e30)
+    elif causal:
+        mask = jnp.tril(jnp.ones((T, T), bool))
+        att = jnp.where(mask[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", att, v_all).reshape(B, T, H * hd)
+    out = lin_fn(cfg, params, f"{lname}.o", out)
+    return out, new_cache
+
+
+def mlp(cfg: ModelCfg, params, lname: str, x, lin_fn):
+    """SwiGLU MLP: down( silu(gate(x)) ⊙ up(x) ). Under CoLA each projection
+    is an auto-encoder; the ⊙ stays in d_ff (Fig. 4)."""
+    g = lin_fn(cfg, params, f"{lname}.gate", x, "silu")
+    u = lin_fn(cfg, params, f"{lname}.up", x)
+    return lin_fn(cfg, params, f"{lname}.down", g * u)
+
+
+def block(cfg: ModelCfg, params, lname: str, x, pos, causal, lin_fn,
+          kv_cache=None, cache_pos=None):
+    h, new_cache = attention(cfg, params, f"{lname}.attn",
+                             rmsnorm(params, f"{lname}.norm1", x),
+                             pos, causal, lin_fn, kv_cache, cache_pos)
+    x = x + h
+    x = x + mlp(cfg, params, f"{lname}.mlp",
+                rmsnorm(params, f"{lname}.norm2", x), lin_fn)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Init + ordering
+# ---------------------------------------------------------------------------
+
+def layer_shapes(cfg: ModelCfg):
+    """(logical linear name, d_in, d_out) for every linear in the model."""
+    p = cfg.preset
+    out = []
+    for i in range(p.n_layers):
+        l = f"l{i}"
+        out += [(f"{l}.attn.q", p.d, p.d), (f"{l}.attn.k", p.d, p.d),
+                (f"{l}.attn.v", p.d, p.d), (f"{l}.attn.o", p.d, p.d),
+                (f"{l}.mlp.gate", p.d, p.d_ff), (f"{l}.mlp.up", p.d, p.d_ff),
+                (f"{l}.mlp.down", p.d_ff, p.d)]
+    return out
+
+
+def init_params(cfg: ModelCfg, seed: int = 0) -> dict:
+    p = cfg.preset
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    key, k_emb, k_head = jax.random.split(key, 3)
+    params["emb.tok"] = jax.random.normal(k_emb, (p.vocab, p.d)) * 0.02
+    for i in range(p.n_layers):
+        params[f"l{i}.norm1.g"] = jnp.ones(p.d)
+        params[f"l{i}.norm2.g"] = jnp.ones(p.d)
+    params["normf.g"] = jnp.ones(p.d)
+    params["head.W"] = jax.random.normal(k_head, (p.d, p.vocab)) * 0.02
+    for (name, d_in, d_out) in layer_shapes(cfg):
+        key, k = jax.random.split(key)
+        _init_lin(cfg, k, name, d_in, d_out, params)
+    if cfg.preset.is_encoder:
+        # MLM head reuses head.W; add a pooler for classification fine-tuning.
+        key, k = jax.random.split(key)
+        params["pool.W"] = jax.random.normal(k, (p.d, p.d)) * 0.02
+    return params
+
+
+def param_order(params: dict) -> list[str]:
+    """Deterministic flattening order shared with the rust runtime."""
+    return sorted(params.keys())
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def forward_hidden(cfg: ModelCfg, params, tokens, lin_fn=linear,
+                   block_fn=None, taps=None):
+    """tokens [B, T] int32 → final hidden [B, T, d].
+
+    `block_fn` lets the AOT layer wrap blocks in remat (gcp / cola_m).
+    `taps`: optional list collecting (name, activation) for spectrum probes.
+    """
+    p = cfg.preset
+    B, T = tokens.shape
+    x = params["emb.tok"][tokens]
+    pos = jnp.arange(T)
+    causal = not p.is_encoder
+    for i in range(p.n_layers):
+        if taps is not None:
+            taps.append((f"l{i}.input", x.reshape(B * T, p.d)))
+        bf = block_fn or (lambda c, pr, ln, xx, po: block(
+            c, pr, ln, xx, po, causal, lin_fn)[0])
+        x = bf(cfg, params, f"l{i}", x, pos)
+    x = rmsnorm(params, "normf", x)
+    if taps is not None:
+        taps.append(("final", x.reshape(B * T, p.d)))
+    return x
+
+
+def logits_fn(cfg: ModelCfg, params, tokens, **kw):
+    h = forward_hidden(cfg, params, tokens, **kw)
+    return h @ params["head.W"]
+
+
+def lm_loss(cfg: ModelCfg, params, tokens, block_fn=None):
+    """tokens [B, T+1] → mean next-token NLL over all positions."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    lg = logits_fn(cfg, params, inp, block_fn=block_fn)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def lm_loss_sum(cfg: ModelCfg, params, tokens):
+    """Eval objective: (sum NLL, token count) for exact PPL aggregation."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    lg = logits_fn(cfg, params, inp)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, tgt[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    return jnp.sum(nll), jnp.asarray(nll.size, jnp.float32)
+
+
+def mlm_loss(cfg: ModelCfg, params, tokens, mask, block_fn=None):
+    """BERT-proxy MLM: tokens [B,T] with `mask` [B,T] ∈ {0,1} marking
+    positions to predict; masked positions were replaced by token 3 upstream
+    (the rust data pipeline does the corruption)."""
+    lg = logits_fn(cfg, params, tokens, block_fn=block_fn)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    # labels travel in a second channel: the pipeline sends original ids in
+    # `mask`'s payload — here mask>=1 marks a target and (mask-1) is the id.
+    tgt = jnp.maximum(mask - 1, 0)
+    gold = jnp.take_along_axis(lg, tgt[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * (mask > 0)
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask > 0), 1)
+
+
+def cls_logits(cfg: ModelCfg, params, tokens, n_classes_w):
+    """Sequence classification head for the GLUE-proxy: mean-pool final
+    hidden → tanh pooler → class logits (weights passed separately so the
+    backbone artifact is shared across tasks)."""
+    h = forward_hidden(cfg, params, tokens)
+    pooled = jnp.tanh(jnp.mean(h, axis=1) @ params["pool.W"])
+    return pooled @ n_classes_w
+
+
+# ---------------------------------------------------------------------------
+# KV-cache serving path
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ModelCfg, params, tokens, max_len: int):
+    """tokens [B, Tp] → (next_token [B] i32, k_caches, v_caches [L,B,maxT,H,hd])."""
+    p = cfg.preset
+    B, T = tokens.shape
+    x = params["emb.tok"][tokens]
+    pos = jnp.arange(T)
+    ks, vs = [], []
+    for i in range(p.n_layers):
+        ck = jnp.zeros((B, max_len, p.n_heads, p.head_dim))
+        cv = jnp.zeros((B, max_len, p.n_heads, p.head_dim))
+        h, (ck, cv) = attention(cfg, params, f"l{i}.attn",
+                                rmsnorm(params, f"l{i}.norm1", x), pos, True,
+                                linear, (ck, cv), 0)
+        x = x + h
+        x = x + mlp(cfg, params, f"l{i}.mlp",
+                    rmsnorm(params, f"l{i}.norm2", x), linear)
+        ks.append(ck)
+        vs.append(cv)
+    x = rmsnorm(params, "normf", x)
+    lg = x[:, -1] @ params["head.W"]
+    nxt = jnp.argmax(lg, -1).astype(jnp.int32)
+    return nxt, jnp.stack(ks), jnp.stack(vs)
+
+
+def decode_step(cfg: ModelCfg, params, kc, vc, tok, pos):
+    """One greedy decode step with device-resident KV cache.
+
+    kc, vc: [L, B, maxT, H, hd]; tok: [B] i32; pos: scalar i32 (index of the
+    token being fed). Returns (next_tok, kc', vc')."""
+    p = cfg.preset
+    B = tok.shape[0]
+    x = params["emb.tok"][tok][:, None, :]          # [B, 1, d]
+    posv = jnp.asarray(pos)[None]
+    nk, nv = [], []
+    for i in range(p.n_layers):
+        h, (ck, cv) = attention(cfg, params, f"l{i}.attn",
+                                rmsnorm(params, f"l{i}.norm1", x), posv, True,
+                                linear, (kc[i], vc[i]), pos)
+        x = x + h
+        x = x + mlp(cfg, params, f"l{i}.mlp",
+                    rmsnorm(params, f"l{i}.norm2", x), linear)
+        nk.append(ck)
+        nv.append(cv)
+    x = rmsnorm(params, "normf", x)
+    lg = x[:, 0] @ params["head.W"]
+    nxt = jnp.argmax(lg, -1).astype(jnp.int32)
+    return nxt, jnp.stack(nk), jnp.stack(nv)
+
+
+def count_params(cfg: ModelCfg) -> dict:
+    """Total / trainable parameter counts (Table 5's Param column)."""
+    params = init_params(cfg, 0)
+    total = sum(int(v.size) for v in params.values())
+    trainable = sum(int(v.size) for k, v in params.items()
+                    if not is_frozen(cfg, k))
+    if cfg.variant == "sltrain":
+        # only the sampled support of S is real parameters
+        dense = sum(int(params[k].size) for k in params if k.endswith(".Sval"))
+        total -= int(dense * (1 - cfg.sparse_density) * 2)  # Sval + Smask
+        trainable -= int(dense * (1 - cfg.sparse_density))
+    return {"total": total, "trainable": trainable}

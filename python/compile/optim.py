@@ -1,0 +1,191 @@
+"""In-graph optimizers. The whole update (schedule, clipping, AdamW/GaLore)
+lowers into train_step.hlo.txt so the rust hot path never computes math.
+
+State layout contract with the rust runtime (see aot.py):
+  train_step(state..., step, tokens) -> (state'..., loss, grad_norm)
+with `state` an opaque ordered list; rust swaps outputs into inputs.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .model import ModelCfg, is_frozen
+
+
+def cosine_lr(cfg: ModelCfg, step):
+    """Warmup + cosine annealing (Loshchilov & Hutter), as the paper App. D."""
+    p = cfg.preset
+    warm = max(1.0, p.warmup_frac * p.total_steps)
+    total = float(p.total_steps)
+    lr_warm = p.lr * (step + 1.0) / warm
+    prog = jnp.clip((step - warm) / jnp.maximum(total - warm, 1.0), 0.0, 1.0)
+    lr_cos = 0.1 * p.lr + 0.9 * p.lr * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warm, lr_warm, lr_cos)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-6))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gn
+
+
+# ---------------------------------------------------------------------------
+# AdamW (used by every variant except galore)
+# ---------------------------------------------------------------------------
+
+def adamw_init(cfg: ModelCfg, params: dict) -> dict:
+    """m/v zeros for every trainable param."""
+    st = {}
+    for k, v in params.items():
+        if is_frozen(cfg, k):
+            continue
+        st[f"m::{k}"] = jnp.zeros_like(v)
+        st[f"v::{k}"] = jnp.zeros_like(v)
+    return st
+
+
+def adamw_update(cfg: ModelCfg, params, opt, grads, step,
+                 b1=0.9, b2=0.999, eps=1e-8):
+    lr = cosine_lr(cfg, step)
+    t = step + 1.0
+    new_p, new_o = {}, {}
+    for k, p in params.items():
+        if is_frozen(cfg, k):
+            new_p[k] = p
+            continue
+        g = grads[k]
+        m = b1 * opt[f"m::{k}"] + (1 - b1) * g
+        v = b2 * opt[f"v::{k}"] + (1 - b2) * g * g
+        mh = m / (1 - b1 ** t)
+        vh = v / (1 - b2 ** t)
+        upd = mh / (jnp.sqrt(vh) + eps)
+        # decoupled weight decay on matrices only (not norms/embeddings-bias)
+        if p.ndim >= 2:
+            upd = upd + cfg.preset.weight_decay * p
+        new_p[k] = p - lr * upd
+        new_o[f"m::{k}"] = m
+        new_o[f"v::{k}"] = v
+    return new_p, new_o
+
+
+# ---------------------------------------------------------------------------
+# GaLore-style projected AdamW (Eq. 12)
+# ---------------------------------------------------------------------------
+
+def _galore_target(k: str, p) -> bool:
+    """GaLore projects 2-D transformer weights; embeddings/head/norms use
+    plain AdamW (as in the reference implementation)."""
+    return p.ndim == 2 and (".attn." in k or ".mlp." in k)
+
+
+def _orthonormalize(g):
+    """Newton–Schulz orthogonalization (pure GEMMs — AOT-portable).
+
+    jnp.linalg.qr lowers to a typed-FFI LAPACK custom-call that the runtime's
+    xla_extension 0.5.1 cannot compile, so refresh_proj.hlo.txt must avoid it.
+    Column-normalize, then iterate  P ← P·(3I − PᵀP)/2, which converges to an
+    orthonormal basis of the same column space.
+    """
+    g = g / (jnp.linalg.norm(g, axis=0, keepdims=True) + 1e-6)
+    g = g / jnp.sqrt(jnp.asarray(g.shape[1], g.dtype))  # spectral pre-scale
+    eye = jnp.eye(g.shape[1], dtype=g.dtype)
+    for _ in range(12):
+        g = g @ (1.5 * eye - 0.5 * (g.T @ g))
+    return g
+
+
+def galore_init(cfg: ModelCfg, params: dict, seed: int = 0) -> dict:
+    """Optimizer state: low-rank m/v plus the projection P per target.
+
+    P is initialized as a random orthonormal basis and refreshed periodically
+    by the separate `refresh_proj` artifact (the paper recomputes P via SVD of
+    the gradient every ~200 steps; we use a random orthogonal refresh, the
+    APOLLO variant — see DESIGN.md §6, same cost/memory class).
+    """
+    st = {}
+    key = jax.random.PRNGKey(seed + 17)
+    r = cfg.r
+    for k, p in params.items():
+        if is_frozen(cfg, k):
+            continue
+        if _galore_target(k, p):
+            d_in, d_out = p.shape
+            rr = min(r, d_in)
+            key, kk = jax.random.split(key)
+            q = _orthonormalize(jax.random.normal(kk, (d_in, rr)))
+            st[f"P::{k}"] = q                       # [d_in, rr]
+            st[f"m::{k}"] = jnp.zeros((rr, d_out))
+            st[f"v::{k}"] = jnp.zeros((rr, d_out))
+        else:
+            st[f"m::{k}"] = jnp.zeros_like(p)
+            st[f"v::{k}"] = jnp.zeros_like(p)
+    return st
+
+
+def galore_update(cfg: ModelCfg, params, opt, grads, step,
+                  b1=0.9, b2=0.999, eps=1e-8, scale=0.25):
+    lr = cosine_lr(cfg, step)
+    t = step + 1.0
+    new_p, new_o = {}, {}
+    for k, p in params.items():
+        if is_frozen(cfg, k):
+            new_p[k] = p
+            continue
+        g = grads[k]
+        if _galore_target(k, p):
+            P = opt[f"P::{k}"]
+            rg = P.T @ g                             # R_t = P^T G_t
+            m = b1 * opt[f"m::{k}"] + (1 - b1) * rg
+            v = b2 * opt[f"v::{k}"] + (1 - b2) * rg * rg
+            mh = m / (1 - b1 ** t)
+            vh = v / (1 - b2 ** t)
+            upd = P @ (mh / (jnp.sqrt(vh) + eps)) / scale  # back-projection
+            upd = upd + cfg.preset.weight_decay * p
+            new_o[f"P::{k}"] = P
+        else:
+            m = b1 * opt[f"m::{k}"] + (1 - b1) * g
+            v = b2 * opt[f"v::{k}"] + (1 - b2) * g * g
+            mh = m / (1 - b1 ** t)
+            vh = v / (1 - b2 ** t)
+            upd = mh / (jnp.sqrt(vh) + eps)
+            if p.ndim >= 2:
+                upd = upd + cfg.preset.weight_decay * p
+        new_p[k] = p - lr * upd
+        new_o[f"m::{k}"] = m
+        new_o[f"v::{k}"] = v
+    return new_p, new_o
+
+
+def galore_refresh(cfg: ModelCfg, opt: dict, seed) -> dict:
+    """Re-draw the projection bases (in-graph, seeded by a scalar input) and
+    reset the projected moments — lowered to refresh_proj.hlo.txt so the rust
+    coordinator can refresh without python."""
+    new = dict(opt)
+    key = jax.random.PRNGKey(0)
+    key = jax.random.fold_in(key, seed)
+    for k in sorted(opt.keys()):
+        if not k.startswith("P::"):
+            continue
+        key, kk = jax.random.split(key)
+        d_in, rr = opt[k].shape
+        new[k] = _orthonormalize(jax.random.normal(kk, (d_in, rr)))
+        base = k[3:]
+        new[f"m::{base}"] = jnp.zeros_like(opt[f"m::{base}"])
+        new[f"v::{base}"] = jnp.zeros_like(opt[f"v::{base}"])
+    return new
+
+
+def opt_init(cfg: ModelCfg, params: dict) -> dict:
+    if cfg.variant == "galore":
+        return galore_init(cfg, params, cfg.preset.seed)
+    return adamw_init(cfg, params)
+
+
+def opt_update(cfg: ModelCfg, params, opt, grads, step):
+    if cfg.variant == "galore":
+        return galore_update(cfg, params, opt, grads, step)
+    return adamw_update(cfg, params, opt, grads, step)

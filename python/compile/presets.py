@@ -1,0 +1,138 @@
+"""Model/training presets — the single source of truth for artifact geometry.
+
+Two families:
+
+* paper-scale presets (``llama60m`` .. ``llama7b``) — used only by the
+  analytic cost model (mirrored in ``rust/src/costmodel/presets.rs``); we never
+  lower artifacts for them on this single-CPU image.
+* proxy presets (``tiny`` .. ``p1b``, ``e2e``, ``bert``) — the models we
+  actually AOT-lower and train end-to-end.  They keep the paper's geometry
+  ratios (d_ff = 8/3·d rounded to a multiple of 16, r = d/4 by default,
+  head_dim = d / n_heads) so every FLOPs/memory *ratio* from the paper's
+  analysis carries over.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+def _ffw(d: int) -> int:
+    """LLaMA-style d_ff = 8/3 * d, rounded up to a multiple of 16."""
+    raw = (8 * d) // 3
+    return ((raw + 15) // 16) * 16
+
+
+@dataclass
+class Preset:
+    name: str
+    d: int                      # model width
+    n_layers: int
+    n_heads: int
+    vocab: int
+    seq_len: int
+    d_ff: int = 0               # 0 -> 8/3 * d
+    rank: int = 0               # 0 -> d // 4 (the paper's default r = d/4)
+    batch: int = 8              # sequences per train step
+    n_micro: int = 1            # in-graph microbatches (grad accumulation)
+    # training hyper-parameters (paper App. D: lr 3e-3 class, wd 0.01 class)
+    lr: float = 3e-3
+    warmup_frac: float = 0.1
+    total_steps: int = 400
+    weight_decay: float = 0.01
+    grad_clip: float = 0.5
+    seed: int = 0
+    is_encoder: bool = False    # BERT-proxy (MLM objective, no causal mask)
+
+    def __post_init__(self):
+        if self.d_ff == 0:
+            self.d_ff = _ffw(self.d)
+        if self.rank == 0:
+            self.rank = max(8, self.d // 4)
+        assert self.d % self.n_heads == 0, "head_dim must divide d"
+
+    @property
+    def head_dim(self) -> int:
+        return self.d // self.n_heads
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["d_ff"] = self.d_ff
+        d["rank"] = self.rank
+        d["head_dim"] = self.head_dim
+        return d
+
+
+# ---------------------------------------------------------------------------
+# Proxy presets actually lowered + trained on this image (1 CPU core).
+# ---------------------------------------------------------------------------
+PRESETS: dict[str, Preset] = {}
+
+
+def _reg(p: Preset) -> Preset:
+    PRESETS[p.name] = p
+    return p
+
+
+# Smoke/test scale: sub-second artifacts, used by pytest + quickstart.
+_reg(Preset("tiny", d=64, n_layers=2, n_heads=4, vocab=512, seq_len=64,
+            batch=4, total_steps=60, lr=6e-3))
+
+# Proxy ladder mirroring the paper's 60M/130M/350M/1B (Tables 5 & 7).
+_reg(Preset("p60m", d=128, n_layers=4, n_heads=4, vocab=1024, seq_len=128,
+            batch=8, total_steps=400, lr=6e-3))
+_reg(Preset("p130m", d=192, n_layers=6, n_heads=6, vocab=2048, seq_len=128,
+            batch=8, total_steps=400, lr=3e-3))
+_reg(Preset("p350m", d=256, n_layers=8, n_heads=8, vocab=2048, seq_len=128,
+            batch=8, total_steps=400, lr=3e-3))
+_reg(Preset("p1b", d=384, n_layers=10, n_heads=8, vocab=4096, seq_len=128,
+            batch=8, total_steps=300, lr=2e-3))
+
+# End-to-end driver scale (examples/pretrain_e2e.rs): the largest model this
+# single core can push through a few hundred steps.
+_reg(Preset("e2e", d=384, n_layers=6, n_heads=8, vocab=4096, seq_len=256,
+            batch=4, total_steps=300, lr=2e-3))
+
+# BERT-Large proxy (Table 8): encoder + MLM.
+_reg(Preset("bert", d=192, n_layers=6, n_heads=6, vocab=2048, seq_len=128,
+            batch=8, total_steps=400, lr=3e-3, is_encoder=True))
+
+
+# ---------------------------------------------------------------------------
+# Control presets (Table 7): full-rank scaled down to ~CoLA's FLOPs by
+# shrinking width/depth, exactly as the paper's "Control" row.
+# ---------------------------------------------------------------------------
+_reg(Preset("p60m_control", d=96, n_layers=3, n_heads=4, vocab=1024,
+            seq_len=128, batch=8, total_steps=400, lr=6e-3))
+_reg(Preset("p130m_control", d=144, n_layers=4, n_heads=6, vocab=2048,
+            seq_len=128, batch=8, total_steps=400, lr=3e-3))
+_reg(Preset("p350m_control", d=192, n_layers=5, n_heads=8, vocab=2048,
+            seq_len=128, batch=8, total_steps=400, lr=3e-3))
+
+
+# Variant knobs --------------------------------------------------------------
+
+#: Table 10 sigma-placement modes.
+SIGMA_MODES = ("lowrank_only", "both", "reduced", "fullrank_only")
+
+#: All supported architecture/training variants.
+VARIANTS = (
+    "full",        # full-rank LLaMA baseline
+    "gcp",         # full-rank + vanilla block-level gradient checkpointing
+    "cola",        # CoLA auto-encoders everywhere, sigma per sigma_mode
+    "cola_m",      # CoLA + save-only-low-rank remat (CoLA-M)
+    "lora",        # frozen W0 + trainable BA (ReLoRA's pure low-rank stage)
+    "galore",      # full-rank arch, low-rank-projected Adam states
+    "sltrain",     # low-rank BA + fixed-support sparse residual
+)
+
+
+def paper_rank_for(d: int, compute_frac: float) -> int:
+    """Invert the paper's compute model to pick r for a target compute ratio.
+
+    C_CoLA/C_full ≈ (48dr + 18r(d+dff)) / (24d² + 18d·dff) for the GEMM terms
+    (attention SDP cancels).  Default r=d/4 gives ≈0.4–0.5×; Table 7's 0.7×
+    rows bump r accordingly.
+    """
+    dff = _ffw(d)
+    denom = 24 * d * d + 18 * d * dff
+    r = compute_frac * denom / (48 * d + 18 * (d + dff))
+    return max(8, int(r / 8) * 8)

@@ -1,0 +1,138 @@
+"""L1 correctness: Pallas kernel vs pure-jnp oracle, forward and VJP.
+
+Hypothesis sweeps shapes/activations; tolerances are tight because both paths
+compute in f32.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.cola_ae import cola_ae, vmem_plan, DEFAULT_BLOCK_N
+from compile.kernels.ref import (cola_ae_ref, cola_ae_bottleneck_ref,
+                                 cola_swiglu_mlp_ref, sigma)
+
+ACTS = ["silu", "gelu", "relu", "identity"]
+
+
+def _mats(key, n, d_in, r, d_out):
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (n, d_in))
+    a = jax.random.normal(k2, (d_in, r)) / np.sqrt(d_in)
+    b = jax.random.normal(k3, (r, d_out)) / np.sqrt(r)
+    return x, a, b
+
+
+@pytest.mark.parametrize("act", ACTS)
+def test_forward_matches_ref(act):
+    x, a, b = _mats(jax.random.PRNGKey(0), 200, 64, 16, 96)
+    got = cola_ae(x, a, b, act=act)
+    want = cola_ae_ref(x, a, b, act)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("act", ACTS)
+def test_vjp_matches_ref(act):
+    x, a, b = _mats(jax.random.PRNGKey(1), 100, 32, 8, 48)
+    f_k = lambda x, a, b: jnp.sum(jnp.sin(cola_ae(x, a, b, act=act)))
+    f_r = lambda x, a, b: jnp.sum(jnp.sin(cola_ae_ref(x, a, b, act)))
+    gk = jax.grad(f_k, argnums=(0, 1, 2))(x, a, b)
+    gr = jax.grad(f_r, argnums=(0, 1, 2))(x, a, b)
+    for u, v in zip(gk, gr):
+        np.testing.assert_allclose(u, v, rtol=2e-4, atol=2e-5)
+
+
+def test_leading_dims_flattened():
+    x = jax.random.normal(jax.random.PRNGKey(2), (3, 5, 7, 32))
+    _, a, b = _mats(jax.random.PRNGKey(3), 1, 32, 8, 20)
+    got = cola_ae(x, a, b)
+    want = cola_ae_ref(x, a, b)
+    assert got.shape == (3, 5, 7, 20)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_rank_mismatch_raises():
+    x = jnp.zeros((4, 8))
+    a = jnp.zeros((8, 3))
+    b = jnp.zeros((4, 8))  # expects rank 3
+    with pytest.raises(AssertionError):
+        cola_ae(x, a, b)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 300),
+    d_in=st.sampled_from([8, 16, 32, 64, 128]),
+    r=st.sampled_from([4, 8, 16, 32]),
+    d_out=st.sampled_from([8, 24, 64, 160]),
+    act=st.sampled_from(ACTS),
+    block=st.sampled_from([32, 128, 256]),
+)
+def test_hypothesis_shape_sweep(n, d_in, r, d_out, act, block):
+    """Any token count (incl. non-multiples of the block) and any geometry
+    must agree with the oracle — this exercises the padding path."""
+    x, a, b = _mats(jax.random.PRNGKey(n), n, d_in, r, d_out)
+    got = cola_ae(x, a, b, act=act, block_n=block)
+    want = cola_ae_ref(x, a, b, act)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(2, 120),
+    d_in=st.sampled_from([16, 48]),
+    r=st.sampled_from([4, 12]),
+    act=st.sampled_from(ACTS),
+)
+def test_hypothesis_grad_sweep(n, d_in, r, act):
+    x, a, b = _mats(jax.random.PRNGKey(n + 999), n, d_in, r, d_in)
+    f_k = lambda a: jnp.sum(cola_ae(x, a, b, act=act, block_n=32) ** 2)
+    f_r = lambda a: jnp.sum(cola_ae_ref(x, a, b, act) ** 2)
+    np.testing.assert_allclose(jax.grad(f_k)(a), jax.grad(f_r)(a),
+                               rtol=5e-4, atol=5e-5)
+
+
+def test_dtype_f32_preserved():
+    x, a, b = _mats(jax.random.PRNGKey(4), 10, 16, 4, 16)
+    assert cola_ae(x, a, b).dtype == jnp.float32
+
+
+def test_swiglu_composition_matches():
+    """The MLP composition of three AEs (as the model uses it)."""
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 7)
+    d, dff, r, n = 32, 88, 8, 50
+    x = jax.random.normal(ks[0], (n, d))
+    mk = lambda k, i, o: jax.random.normal(k, (i, o)) / np.sqrt(i)
+    ag, bg = mk(ks[1], d, r), mk(ks[2], r, dff)
+    au, bu = mk(ks[3], d, r), mk(ks[4], r, dff)
+    ad, bd = mk(ks[5], dff, r), mk(ks[6], r, d)
+    want = cola_swiglu_mlp_ref(x, ag, bg, au, bu, ad, bd)
+    g = cola_ae(x, ag, bg)
+    u = cola_ae(x, au, bu)
+    got = cola_ae(g * u, ad, bd)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_bottleneck_ref_is_encoder_half():
+    x, a, b = _mats(jax.random.PRNGKey(8), 20, 16, 4, 16)
+    z = cola_ae_bottleneck_ref(x, a)
+    np.testing.assert_allclose(z @ b, cola_ae_ref(x, a, b), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# VMEM planning (the TPU-side performance contract, DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("d,r", [(512, 128), (1024, 256), (2048, 512)])
+def test_vmem_fits_paper_scales(d, r):
+    plan = vmem_plan(d, r, d, block_n=DEFAULT_BLOCK_N)
+    assert plan["fits_16mib"], plan
+
+
+def test_vmem_7b_needs_split():
+    plan = vmem_plan(4096, 1024, 4096, block_n=DEFAULT_BLOCK_N)
+    # the 7B AE tile exceeds VMEM only via the weight tiles — documented split
+    assert plan["a_tile"] + plan["b_tile"] > 8 * 1024 * 1024

@@ -1,0 +1,269 @@
+"""L2 correctness: model shapes, variant equivalences, losses, KV-cache
+decode consistency, and optimizer behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M, optim
+from compile.aot import make_cfg, StateLayout, build_train_step
+from compile.cola_m import block_fn_for
+from compile.presets import PRESETS, SIGMA_MODES, paper_rank_for
+
+
+def _toks(cfg, bs=2, extra=1, seed=0):
+    p = cfg.preset
+    return jax.random.randint(jax.random.PRNGKey(seed), (bs, p.seq_len + extra),
+                              0, p.vocab)
+
+
+# ---------------------------------------------------------------------------
+# Shapes & parameter accounting
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant", ["full", "cola", "lora", "sltrain"])
+def test_logits_shape(variant):
+    cfg = make_cfg("tiny", variant)
+    params = M.init_params(cfg, 0)
+    toks = _toks(cfg, extra=0)
+    lg = M.logits_fn(cfg, params, toks)
+    assert lg.shape == (2, cfg.preset.seq_len, cfg.preset.vocab)
+
+
+def test_cola_param_reduction():
+    """CoLA must cut linear-layer parameters roughly in half at r=d/4
+    (2dr + r(d+dff) vs d² + d·dff per attention+mlp pair)."""
+    full = M.count_params(make_cfg("p60m", "full"))["total"]
+    cola = M.count_params(make_cfg("p60m", "cola"))["total"]
+    assert cola < full
+    p = PRESETS["p60m"]
+    emb = 2 * p.vocab * p.d
+    assert (cola - emb) < 0.55 * (full - emb)
+
+
+def test_lora_frozen_partition():
+    cfg = make_cfg("tiny", "lora")
+    params = M.init_params(cfg, 0)
+    frozen = [k for k in params if M.is_frozen(cfg, k)]
+    assert frozen and all(k.endswith(".W0") for k in frozen)
+    counts = M.count_params(cfg)
+    assert counts["trainable"] < counts["total"]
+
+
+def test_sltrain_mask_frozen():
+    cfg = make_cfg("tiny", "sltrain")
+    params = M.init_params(cfg, 0)
+    assert any(M.is_frozen(cfg, k) for k in params if k.endswith(".Smask"))
+
+
+def test_param_order_deterministic():
+    cfg = make_cfg("tiny", "cola")
+    p1 = M.init_params(cfg, 0)
+    p2 = M.init_params(cfg, 0)
+    assert M.param_order(p1) == M.param_order(p2)
+    for k in p1:
+        np.testing.assert_array_equal(p1[k], p2[k])
+
+
+# ---------------------------------------------------------------------------
+# Variant equivalences
+# ---------------------------------------------------------------------------
+
+def test_cola_m_identical_to_cola():
+    """Remat must not change numerics — loss and grads bit-comparable."""
+    c1, c2 = make_cfg("tiny", "cola"), make_cfg("tiny", "cola_m")
+    p = M.init_params(c1, 0)
+    toks = _toks(c1)
+    l1 = M.lm_loss(c1, p, toks, block_fn=block_fn_for(c1))
+    l2 = M.lm_loss(c2, p, toks, block_fn=block_fn_for(c2))
+    np.testing.assert_allclose(l1, l2, rtol=1e-6)
+    g1 = jax.grad(lambda q: M.lm_loss(c1, q, toks, block_fn=block_fn_for(c1)))(p)
+    g2 = jax.grad(lambda q: M.lm_loss(c2, q, toks, block_fn=block_fn_for(c2)))(p)
+    for k in g1:
+        np.testing.assert_allclose(g1[k], g2[k], rtol=2e-4, atol=2e-5)
+
+
+def test_gcp_identical_to_full():
+    c1, c2 = make_cfg("tiny", "full"), make_cfg("tiny", "gcp")
+    p = M.init_params(c1, 0)
+    toks = _toks(c1)
+    l1 = M.lm_loss(c1, p, toks, block_fn=block_fn_for(c1))
+    l2 = M.lm_loss(c2, p, toks, block_fn=block_fn_for(c2))
+    np.testing.assert_allclose(l1, l2, rtol=1e-6)
+
+
+def test_kernel_and_oracle_paths_agree():
+    cfg_k = make_cfg("tiny", "cola")
+    cfg_o = M.ModelCfg(preset=cfg_k.preset, variant="cola", use_kernel=False)
+    p = M.init_params(cfg_k, 0)
+    toks = _toks(cfg_k)
+    np.testing.assert_allclose(M.lm_loss(cfg_k, p, toks),
+                               M.lm_loss(cfg_o, p, toks), rtol=1e-5)
+
+
+@pytest.mark.parametrize("mode", SIGMA_MODES)
+def test_sigma_modes_forward(mode):
+    cfg = make_cfg("tiny", "cola", sigma_mode=mode)
+    p = M.init_params(cfg, 0)
+    lg = M.logits_fn(cfg, p, _toks(cfg, extra=0))
+    assert np.isfinite(np.asarray(lg)).all()
+
+
+def test_sigma_modes_differ():
+    """The four Table-10 placements are genuinely different functions."""
+    outs = []
+    for mode in SIGMA_MODES:
+        cfg = make_cfg("tiny", "cola", sigma_mode=mode)
+        p = M.init_params(cfg, 0)
+        outs.append(np.asarray(M.logits_fn(cfg, p, _toks(cfg, extra=0))))
+    for i in range(len(outs)):
+        for j in range(i + 1, len(outs)):
+            assert not np.allclose(outs[i], outs[j])
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def test_lm_loss_near_uniform_at_init():
+    cfg = make_cfg("tiny", "full")
+    p = M.init_params(cfg, 0)
+    l = float(M.lm_loss(cfg, p, _toks(cfg)))
+    assert abs(l - np.log(cfg.preset.vocab)) < 0.5
+
+
+def test_eval_sum_matches_mean_loss():
+    cfg = make_cfg("tiny", "cola")
+    p = M.init_params(cfg, 0)
+    toks = _toks(cfg)
+    s, n = M.lm_loss_sum(cfg, p, toks)
+    np.testing.assert_allclose(float(s) / float(n),
+                               float(M.lm_loss(cfg, p, toks)), rtol=1e-5)
+
+
+def test_mlm_loss_finite():
+    cfg = make_cfg("bert", "cola")
+    p = M.init_params(cfg, 0)
+    pr = cfg.preset
+    toks = jax.random.randint(jax.random.PRNGKey(0), (2, pr.seq_len), 4, pr.vocab)
+    mask = jnp.zeros_like(toks).at[:, ::7].set(toks[:, ::7] + 1)
+    l = float(M.mlm_loss(cfg, p, toks, mask))
+    assert np.isfinite(l) and l > 0
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode vs full forward
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant", ["full", "cola"])
+def test_decode_matches_full_forward(variant):
+    """Greedy decode through (prefill + decode_step) must reproduce the
+    argmax chain of repeated full forwards."""
+    cfg = make_cfg("tiny", variant)
+    p = M.init_params(cfg, 0)
+    pr = cfg.preset
+    B, Tp, steps, max_len = 2, 8, 4, 16
+    prompt = jax.random.randint(jax.random.PRNGKey(3), (B, Tp), 0, pr.vocab)
+
+    nxt, kc, vc = M.prefill(cfg, p, prompt, max_len)
+    got = [np.asarray(nxt)]
+    cur = prompt
+    for s in range(steps):
+        cur = jnp.concatenate([cur, nxt[:, None]], axis=1)
+        nxt, kc, vc = M.decode_step(cfg, p, kc, vc, cur[:, -1], Tp + s)
+        got.append(np.asarray(nxt))
+
+    # oracle: argmax of the full forward at each length
+    cur = prompt
+    for s in range(steps + 1):
+        lg = M.logits_fn(cfg, p, cur)
+        want = np.asarray(jnp.argmax(lg[:, -1], -1))
+        np.testing.assert_array_equal(got[s], want, err_msg=f"step {s}")
+        cur = jnp.concatenate([cur, jnp.asarray(got[s])[:, None]], 1)
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+
+def test_cosine_schedule_shape():
+    cfg = make_cfg("tiny", "full")
+    p = cfg.preset
+    warm = p.warmup_frac * p.total_steps
+    lrs = [float(optim.cosine_lr(cfg, jnp.float32(s)))
+           for s in range(p.total_steps)]
+    peak = max(lrs)
+    assert abs(peak - p.lr) / p.lr < 0.05
+    assert lrs[0] < 0.3 * peak                       # warmup starts low
+    assert lrs[-1] < 0.2 * peak                      # annealed at the end
+    assert np.argmax(lrs) <= warm + 1
+
+
+def test_adamw_decreases_loss():
+    cfg = make_cfg("tiny", "cola")
+    params = M.init_params(cfg, 0)
+    opt = optim.opt_init(cfg, params)
+    layout = StateLayout(cfg, params, opt)
+    ts = jax.jit(build_train_step(cfg, layout))
+    state = layout.state0()
+    toks = _toks(cfg, bs=4)[None]
+    first = last = None
+    for i in range(6):
+        out = ts(*state, jnp.float32(i), toks)
+        state = list(out[:layout.n_state])
+        loss = float(out[layout.n_state])
+        first = first if first is not None else loss
+        last = loss
+    assert last < first - 0.1
+
+
+def test_galore_state_is_lowrank():
+    cfg = make_cfg("tiny", "galore")
+    params = M.init_params(cfg, 0)
+    opt = optim.opt_init(cfg, params)
+    r = cfg.r
+    mkeys = [k for k in opt if k.startswith("m::") and ".attn." in k]
+    assert mkeys
+    for k in mkeys:
+        assert opt[k].shape[0] <= r
+    # projections orthonormal
+    pk = [k for k in opt if k.startswith("P::")][0]
+    P = np.asarray(opt[pk])
+    np.testing.assert_allclose(P.T @ P, np.eye(P.shape[1]), atol=1e-5)
+
+
+def test_galore_refresh_changes_projection():
+    cfg = make_cfg("tiny", "galore")
+    params = M.init_params(cfg, 0)
+    opt = optim.opt_init(cfg, params)
+    new = optim.galore_refresh(cfg, opt, jnp.int32(42))
+    pk = [k for k in opt if k.startswith("P::")][0]
+    assert not np.allclose(np.asarray(opt[pk]), np.asarray(new[pk]))
+    mk = "m::" + pk[3:]
+    assert np.allclose(np.asarray(new[mk]), 0)
+
+
+def test_frozen_params_not_updated():
+    cfg = make_cfg("tiny", "lora")
+    params = M.init_params(cfg, 0)
+    opt = optim.opt_init(cfg, params)
+    layout = StateLayout(cfg, params, opt)
+    ts = jax.jit(build_train_step(cfg, layout))
+    out = ts(*layout.state0(), jnp.float32(0), _toks(cfg, bs=4)[None])
+    new_params = dict(zip(layout.param_names, out[:layout.n_params]))
+    for k, v in params.items():
+        if M.is_frozen(cfg, k):
+            np.testing.assert_array_equal(np.asarray(v),
+                                          np.asarray(new_params[k]))
+
+
+def test_paper_rank_for_targets():
+    """paper_rank_for must land near the requested compute fraction."""
+    from compile.presets import _ffw
+    for d in (128, 256, 512):
+        for frac in (0.4, 0.7):
+            r = paper_rank_for(d, frac)
+            dff = _ffw(d)
+            got = (48 * d * r + 18 * r * (d + dff)) / (24 * d * d + 18 * d * dff)
+            assert abs(got - frac) < 0.15, (d, frac, r, got)

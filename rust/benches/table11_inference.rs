@@ -1,0 +1,93 @@
+//! Table 11 — inference memory and throughput: full-rank vs SLTrain vs CoLA
+//! through the serving engine (prefill + KV-cache decode, dynamic batching).
+//! Paper shape (A100, 1B/7B): CoLA ~1.6x tokens/s of full-rank at lower
+//! memory; SLTrain slightly below full-rank throughput.
+
+use cola::bench::{banner, proxy_note, require_artifacts};
+use cola::config::ServeConfig;
+use cola::data::{corpus::CorpusCfg, CorpusGen};
+use cola::serve::Engine;
+use std::time::Instant;
+
+fn measure(artifact: &str, n_requests: usize, max_new: usize) -> (f64, f64, f64) {
+    let cfg = ServeConfig {
+        artifact: artifact.into(),
+        max_new_tokens: max_new,
+        max_wait_ms: 3,
+    };
+    let (handle, join) = Engine::spawn(cfg).expect(artifact);
+    let man = cola::runtime::ArtifactDir::open_named(artifact).unwrap().manifest;
+    let bpe = cola::coordinator::trainer::shared_bpe(man.preset.vocab).unwrap();
+    let mut gen = CorpusGen::new(CorpusCfg { seed: 5, ..CorpusCfg::default() });
+
+    // warmup (compile + first batch)
+    handle.generate(bpe.encode(&gen.text(40)), 4).unwrap();
+
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    for _ in 0..n_requests {
+        pending.push(handle.submit(bpe.encode(&gen.text(40)), max_new));
+    }
+    let mut total_tokens = 0usize;
+    let mut lat = Vec::new();
+    for rx in pending {
+        let r = rx.recv().unwrap();
+        total_tokens += r.tokens.len();
+        lat.push(r.latency.as_secs_f64() * 1000.0);
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50 = lat[lat.len() / 2];
+    drop(handle);
+    let _ = join.join();
+    let rss = cola::metrics::peak_rss_bytes() as f64 / 1e9;
+    (total_tokens as f64 / secs, p50, rss)
+}
+
+fn main() {
+    let arts = ["p350m_full", "p350m_sltrain", "p350m_cola"];
+    if !require_artifacts(&arts) {
+        return;
+    }
+    banner("Table 11", "inference memory + throughput through the serving engine");
+    proxy_note();
+
+    // paper @1B BZ=32: full 5.74GB/21109 t/s; sltrain 4.18/20096; cola 3.84/34697
+    let paper = [(5.74, 21109.0), (4.18, 20096.0), (3.84, 34697.0)];
+    println!(
+        "{:>14} {:>10} {:>10} {:>10}   {:>22}",
+        "variant", "tok/s", "p50 ms", "proc RSS", "paper @1B (GB, tok/s)"
+    );
+    let mut tput = Vec::new();
+    for (a, (pm, pt)) in arts.iter().zip(paper) {
+        let (tps, p50, rss) = measure(a, 24, 16);
+        println!(
+            "{:>14} {:>10.0} {:>10.1} {:>7.2} GB   {pm:>8.2}, {pt:>8.0}",
+            a.strip_prefix("p350m_").unwrap(),
+            tps,
+            p50,
+            rss
+        );
+        tput.push(tps);
+    }
+    // model sizes (memory column at paper scale comes from the manifests)
+    for a in arts {
+        let m = cola::runtime::ArtifactDir::open_named(a).unwrap().manifest;
+        println!(
+            "  {a}: {:.2}M params ({} state tensors)",
+            m.n_total_params as f64 / 1e6,
+            m.n_state
+        );
+    }
+    let ratio = tput[2] / tput[0];
+    println!("\nCoLA / full inference throughput: {ratio:.2}x (paper: 1.64x)");
+    if ratio > 1.0 {
+        println!("ordering (CoLA > full) — OK");
+    } else {
+        println!(
+            "ordering DEVIATION: at proxy width the per-token decode is \
+             dispatch-bound, not GEMM-bound; the paper's gap is at 1B/7B widths"
+        );
+    }
+    assert!(ratio > 0.8, "CoLA inference should never be materially slower");
+}

@@ -1,0 +1,45 @@
+//! Table 2 — breakdown compute of a single LLaMA decoder layer (full-rank).
+//! Also verifies the measured wall-clock of our full-rank train step scales
+//! with the analytic FLOPs across proxy widths.
+
+use cola::bench::{banner, require_artifacts};
+use cola::costmodel::{table2_breakdown, Geometry, PaperPreset};
+use cola::util::si;
+
+fn main() {
+    banner("Table 2", "per-layer FLOPs breakdown, full-rank training");
+
+    for scale in ["llama60m", "llama350m", "llama1b", "llama7b"] {
+        let p = PaperPreset::by_name(scale).unwrap();
+        println!("-- {scale} (n = 1 seq × {} tokens) --", p.seq_len);
+        println!("{}", cola::costmodel::tables::render_table2(p, 1));
+    }
+
+    // verify: the ratio fwd:bwd is 1:2 and totals match the closed forms
+    let p = PaperPreset::by_name("llama1b").unwrap();
+    let g = Geometry::from_paper(p, p.seq_len);
+    let b = table2_breakdown(&g);
+    assert!((b.total_backward() - 2.0 * b.total_forward()).abs() < 1.0);
+    println!(
+        "check: fwd {} + bwd {} = 3x fwd (paper's 2x rule) OK",
+        si(b.total_forward()),
+        si(b.total_backward())
+    );
+
+    // measured scaling sanity on proxies if artifacts exist
+    if require_artifacts(&["p60m_full", "p130m_full"]) {
+        use cola::coordinator::cached_or_train;
+        let steps = 30;
+        let a = cached_or_train("p60m_full", steps, 0).unwrap();
+        let b2 = cached_or_train("p130m_full", steps, 0).unwrap();
+        let meas = b2.secs_per_step / a.secs_per_step;
+        // analytic FLOPs ratio between the two proxy geometries
+        let ga = Geometry::new(128, 352, 32, 8 * 128, 4, 4);
+        let gb = Geometry::new(192, 512, 48, 8 * 128, 6, 6);
+        let flops_ratio = cola::costmodel::compute_total(cola::costmodel::Method::FullRank, &gb)
+            / cola::costmodel::compute_total(cola::costmodel::Method::FullRank, &ga);
+        println!(
+            "measured step-time ratio p130m/p60m = {meas:.2}, analytic FLOPs ratio = {flops_ratio:.2}"
+        );
+    }
+}

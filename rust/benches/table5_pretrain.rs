@@ -1,0 +1,111 @@
+//! Table 5 — validation perplexity / parameters / memory across efficient
+//! pre-training methods, on the proxy ladder (p60m, p130m; p350m with
+//! COLA_BENCH_FULL=1). Memory column is the analytic model+grad+opt estimate
+//! in BF16 (the paper's convention); PPL and params are measured.
+
+use cola::bench::{banner, bench_steps, proxy_note, require_artifacts};
+use cola::coordinator::cached_or_train;
+use cola::costmodel::memory::{memory_breakdown, BF16};
+use cola::costmodel::{Geometry, Method, PaperPreset};
+use cola::runtime::ArtifactDir;
+use cola::util::si;
+
+fn method_of(variant: &str) -> Method {
+    match variant {
+        "cola" | "cola_m" => Method::Cola,
+        "lora" => Method::ReLora,
+        "galore" => Method::GaLore,
+        "sltrain" => Method::SlTrain,
+        _ => Method::FullRank,
+    }
+}
+
+fn main() {
+    banner("Table 5", "PPL / params / memory across methods (proxy ladder)");
+    proxy_note();
+
+    // paper's Table 5 values for reference printing (60M / 130M columns)
+    let paper: &[(&str, [f64; 2])] = &[
+        ("full", [34.06, 24.36]),
+        ("lora", [37.04, 29.37]),   // ReLoRA row
+        ("galore", [34.88, 25.36]),
+        ("sltrain", [34.15, 26.04]),
+        ("cola", [34.04, 24.48]),
+    ];
+
+    let mut scales = vec![("p60m", "llama60m", 0usize)];
+    if std::env::var("COLA_BENCH_FULL").is_ok() {
+        // the full ladder: ~30 extra minutes of proxy training on one core
+        scales.push(("p130m", "llama130m", 1));
+        scales.push(("p350m", "llama350m", 2));
+    }
+    let steps = bench_steps();
+
+    for (proxy, paper_scale, col) in &scales {
+        let arts: Vec<String> = ["full", "lora", "galore", "sltrain", "cola"]
+            .iter()
+            .map(|v| format!("{proxy}_{v}"))
+            .collect();
+        let art_refs: Vec<&str> = arts.iter().map(String::as_str).collect();
+        if !require_artifacts(&art_refs) {
+            continue;
+        }
+        println!("-- {proxy} (paper column: {paper_scale}), {steps} steps --");
+        println!(
+            "{:>9} {:>9} {:>10} {:>10} {:>14}",
+            "method", "val PPL", "params", "mem est", "paper PPL"
+        );
+        let pp = PaperPreset::by_name(paper_scale).unwrap();
+        let mut rows = Vec::new();
+        for (v, art) in ["full", "lora", "galore", "sltrain", "cola"].iter().zip(&arts) {
+            let r = cached_or_train(art, steps, 0).expect(art);
+            // analytic memory at the *paper* scale for this method (Table 5 Mem)
+            let g = Geometry::from_paper(pp, 1);
+            let mem = memory_breakdown(method_of(v), &g, pp.vocab, BF16).states_only() / 1e9;
+            let paper_v = paper
+                .iter()
+                .find(|(n, _)| n == v)
+                .map(|(_, x)| x[*col])
+                .unwrap_or(f64::NAN);
+            println!(
+                "{v:>9} {:>9.2} {:>10} {:>8.2}GB {:>14.2}",
+                r.val_ppl,
+                si(r.n_total_params as f64),
+                mem,
+                paper_v
+            );
+            rows.push((v.to_string(), r));
+        }
+        // shape checks mirroring the paper's table. Note: at this proxy
+        // scale + short budget, LoRA's frozen-W0 gives it 2.4x CoLA's
+        // parameters — its raw PPL can lead early; the paper's ordering is
+        // at compute-optimal budgets. The substrate-robust claims are
+        // Pareto ones: nothing at <= CoLA's size matches its PPL, and CoLA
+        // is on par with full-rank at ~half the parameters.
+        let ppl = |name: &str| rows.iter().find(|(n, _)| n == name).unwrap().1.val_ppl;
+        let par = |name: &str| rows.iter().find(|(n, _)| n == name).unwrap().1.n_total_params;
+        assert!(ppl("cola") < ppl("full") * 1.10, "CoLA ~on-par with full-rank");
+        assert!(ppl("cola") < ppl("galore") && ppl("cola") < ppl("sltrain"),
+                "CoLA beats the equal-or-smaller efficient baselines");
+        assert!(par("cola") < par("full"), "CoLA smallest model");
+        assert!(par("cola") <= par("sltrain"), "CoLA <= SLTrain params");
+        for (n, r) in &rows {
+            if r.n_total_params <= par("cola") && n != "cola" {
+                assert!(r.val_ppl >= ppl("cola"), "{n} pareto-dominates CoLA");
+            }
+        }
+        println!("shape checks (CoLA on-par with full, pareto-undominated) — OK\n");
+    }
+
+    // artifact-level param truth for the table footer
+    if require_artifacts(&["p60m_full", "p60m_cola"]) {
+        let f = ArtifactDir::open_named("p60m_full").unwrap();
+        let c = ArtifactDir::open_named("p60m_cola").unwrap();
+        println!(
+            "proxy param counts from manifests: full={} cola={} (ratio {:.2})",
+            si(f.manifest.n_total_params as f64),
+            si(c.manifest.n_total_params as f64),
+            c.manifest.n_total_params as f64 / f.manifest.n_total_params as f64
+        );
+    }
+}

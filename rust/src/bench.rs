@@ -1,0 +1,69 @@
+//! Shared support for the paper-table benches (rust/benches/*): header
+//! printing, paper-row references, and simple wall-clock measurement (the
+//! offline vendor set has no criterion; each bench is a harness=false binary
+//! that times with std::time and prints the paper's values next to ours).
+
+use std::time::Instant;
+
+/// Print a bench banner.
+pub fn banner(id: &str, what: &str) {
+    println!("\n================================================================");
+    println!("  {id} — {what}");
+    println!("================================================================");
+}
+
+/// Print the paper-vs-ours framing note for trained proxies.
+pub fn proxy_note() {
+    println!(
+        "note: trained numbers come from proxy-scale models on the synthetic\n\
+         corpus (single-CPU substrate; see DESIGN.md §6). Compare ORDERINGS\n\
+         and RATIOS against the paper, not absolute values.\n"
+    );
+}
+
+/// Measure a closure's wall-clock seconds, with one warmup call.
+pub fn timed<F: FnMut()>(mut f: F, iters: usize) -> f64 {
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+/// Median-of-n measurement for noisy steps.
+pub fn timed_median<F: FnMut()>(mut f: F, iters: usize) -> f64 {
+    f();
+    let mut xs: Vec<f64> = (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+/// Check artifacts exist, otherwise print a skip message and exit 0 (benches
+/// must not hard-fail on a fresh checkout before `make artifacts`).
+pub fn require_artifacts(names: &[&str]) -> bool {
+    let root = std::env::var("COLA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    for n in names {
+        let p = std::path::Path::new(&root).join(n).join("manifest.json");
+        if !p.exists() {
+            println!("SKIP: artifact `{n}` missing — run `make artifacts` first");
+            return false;
+        }
+    }
+    true
+}
+
+/// Standard steps used for proxy training runs in benches (kept moderate so
+/// `cargo bench` completes on one core; run-results are cached in runs/cache).
+pub fn bench_steps() -> usize {
+    std::env::var("COLA_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300)
+}

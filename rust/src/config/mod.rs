@@ -1,0 +1,152 @@
+//! Run configuration: what to train/serve and how. Parsed from simple
+//! `key=value` CLI overrides and/or JSON config files (the offline vendor
+//! set has no serde/toml; see util::json).
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Training-run configuration (everything the coordinator needs beyond the
+/// artifact's own manifest).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// artifact directory name under `artifacts/`, e.g. "p60m_cola"
+    pub artifact: String,
+    /// steps to run; 0 = the preset's total_steps from the manifest
+    pub steps: usize,
+    /// evaluate validation PPL every N steps (0 = only at the end)
+    pub eval_every: usize,
+    /// number of validation batches per evaluation
+    pub eval_batches: usize,
+    /// data-stream seed (val stream uses seed+1_000_003)
+    pub seed: u64,
+    /// save a checkpoint every N steps (0 = never)
+    pub checkpoint_every: usize,
+    /// output directory for checkpoints + run log
+    pub out_dir: PathBuf,
+    /// galore: refresh projections every N steps (0 = never)
+    pub galore_refresh_every: usize,
+    /// probe activation spectra every N steps (0 = never)
+    pub rank_probe_every: usize,
+    /// print a progress line every N steps
+    pub log_every: usize,
+    /// cache of trained results for benches (see coordinator::runcache)
+    pub use_run_cache: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            artifact: "tiny_cola".into(),
+            steps: 0,
+            eval_every: 0,
+            eval_batches: 8,
+            seed: 0,
+            checkpoint_every: 0,
+            out_dir: PathBuf::from("runs"),
+            galore_refresh_every: 100,
+            rank_probe_every: 0,
+            log_every: 25,
+            use_run_cache: true,
+        }
+    }
+}
+
+/// Serving-engine configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub artifact: String,
+    /// max tokens generated per request
+    pub max_new_tokens: usize,
+    /// batcher window: flush a partial batch after this many ms
+    pub max_wait_ms: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { artifact: "tiny_cola".into(), max_new_tokens: 16, max_wait_ms: 5 }
+    }
+}
+
+/// Apply `key=value` overrides (CLI) onto a TrainConfig.
+pub fn apply_train_overrides(cfg: &mut TrainConfig, kvs: &[(String, String)]) -> Result<()> {
+    for (k, v) in kvs {
+        match k.as_str() {
+            "artifact" => cfg.artifact = v.clone(),
+            "steps" => cfg.steps = v.parse().context("steps")?,
+            "eval_every" => cfg.eval_every = v.parse().context("eval_every")?,
+            "eval_batches" => cfg.eval_batches = v.parse().context("eval_batches")?,
+            "seed" => cfg.seed = v.parse().context("seed")?,
+            "checkpoint_every" => cfg.checkpoint_every = v.parse().context("checkpoint_every")?,
+            "out_dir" => cfg.out_dir = PathBuf::from(v),
+            "galore_refresh_every" => {
+                cfg.galore_refresh_every = v.parse().context("galore_refresh_every")?
+            }
+            "rank_probe_every" => cfg.rank_probe_every = v.parse().context("rank_probe_every")?,
+            "log_every" => cfg.log_every = v.parse().context("log_every")?,
+            "use_run_cache" => cfg.use_run_cache = v == "1" || v == "true",
+            _ => anyhow::bail!("unknown train config key `{k}`"),
+        }
+    }
+    Ok(())
+}
+
+/// Load a TrainConfig from a JSON file then apply overrides.
+pub fn load_train_config(path: Option<&Path>, kvs: &[(String, String)]) -> Result<TrainConfig> {
+    let mut cfg = TrainConfig::default();
+    if let Some(p) = path {
+        let j = Json::parse(&std::fs::read_to_string(p)?)
+            .with_context(|| format!("parsing {}", p.display()))?;
+        let mut file_kvs = Vec::new();
+        if let Json::Obj(m) = &j {
+            for (k, v) in m {
+                let vs = match v {
+                    Json::Str(s) => s.clone(),
+                    other => other.to_string(),
+                };
+                file_kvs.push((k.clone(), vs));
+            }
+        }
+        apply_train_overrides(&mut cfg, &file_kvs)?;
+    }
+    apply_train_overrides(&mut cfg, kvs)?;
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overrides_apply() {
+        let mut cfg = TrainConfig::default();
+        apply_train_overrides(
+            &mut cfg,
+            &[
+                ("artifact".into(), "p60m_full".into()),
+                ("steps".into(), "123".into()),
+                ("seed".into(), "9".into()),
+            ],
+        )
+        .unwrap();
+        assert_eq!(cfg.artifact, "p60m_full");
+        assert_eq!(cfg.steps, 123);
+        assert_eq!(cfg.seed, 9);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut cfg = TrainConfig::default();
+        assert!(apply_train_overrides(&mut cfg, &[("nope".into(), "1".into())]).is_err());
+    }
+
+    #[test]
+    fn json_config_file() {
+        let tmp = std::env::temp_dir().join("cola_cfg_test.json");
+        std::fs::write(&tmp, r#"{"artifact": "tiny_full", "steps": 7}"#).unwrap();
+        let cfg = load_train_config(Some(&tmp), &[("steps".into(), "9".into())]).unwrap();
+        assert_eq!(cfg.artifact, "tiny_full");
+        assert_eq!(cfg.steps, 9, "cli overrides file");
+        std::fs::remove_file(&tmp).ok();
+    }
+}

@@ -1,0 +1,62 @@
+//! Checkpointing: full training state (params + optimizer) as npz, using the
+//! same `s%06d` key convention as state0.npz so checkpoints and initial
+//! states are interchangeable.
+
+use crate::runtime::Manifest;
+use anyhow::{Context, Result};
+use std::path::Path;
+use xla::FromRawBytes;
+
+pub fn save(man: &Manifest, state: &[xla::PjRtBuffer], path: &Path) -> Result<()> {
+    anyhow::ensure!(state.len() >= man.n_state, "state too short");
+    if let Some(p) = path.parent() {
+        std::fs::create_dir_all(p)?;
+    }
+    let lits: Vec<xla::Literal> = state[..man.n_state]
+        .iter()
+        .map(|b| Ok(b.to_literal_sync()?))
+        .collect::<Result<_>>()?;
+    let named: Vec<(String, &xla::Literal)> = lits
+        .iter()
+        .enumerate()
+        .map(|(i, l)| (format!("s{i:06}"), l))
+        .collect();
+    xla::Literal::write_npz(&named, path)
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+pub fn load(man: &Manifest, path: &Path) -> Result<Vec<xla::PjRtBuffer>> {
+    let mut entries = xla::Literal::read_npz(path, &())
+        .with_context(|| format!("reading {}", path.display()))?;
+    entries.sort_by(|a, b| a.0.cmp(&b.0));
+    anyhow::ensure!(
+        entries.len() == man.n_state,
+        "checkpoint has {} arrays, manifest wants {}",
+        entries.len(),
+        man.n_state
+    );
+    let client = crate::runtime::client()?;
+    entries
+        .into_iter()
+        .map(|(_, l)| Ok(client.buffer_from_host_literal(None, &l)?))
+        .collect()
+}
+
+/// Extract just the parameter literals from a checkpoint, keyed by name —
+/// used to splice a pre-trained backbone into a fine-tuning artifact
+/// (Table 8 GLUE-proxy flow).
+pub fn load_params_by_name(
+    man: &Manifest,
+    path: &Path,
+) -> Result<std::collections::HashMap<String, xla::Literal>> {
+    let mut entries = xla::Literal::read_npz(path, &())?;
+    entries.sort_by(|a, b| a.0.cmp(&b.0));
+    anyhow::ensure!(entries.len() >= man.n_params, "not enough arrays");
+    Ok(entries
+        .into_iter()
+        .take(man.n_params)
+        .enumerate()
+        .map(|(i, (_, l))| (man.param_names[i].clone(), l))
+        .collect())
+}

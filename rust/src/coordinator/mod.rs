@@ -1,0 +1,14 @@
+//! Coordinator: the training-side runtime (the paper's system contribution
+//! lives in the architecture + CoLA-M checkpointing baked into the AOT
+//! artifacts; this layer owns everything around the compiled step functions:
+//! data streaming, the functional state loop, schedules, evaluation,
+//! checkpointing, rank probes, and run-result caching for the benches).
+
+pub mod checkpoint;
+pub mod rank_probe;
+pub mod runcache;
+pub mod trainer;
+
+pub use rank_probe::RankProbe;
+pub use runcache::{cached_or_train, cached_or_train_fresh, RunResult};
+pub use trainer::{Trainer, TrainReport};

@@ -1,0 +1,90 @@
+//! Rank probe: runs the `activations` artifact, SVDs each tap and reports
+//! the paper's effective rank r(α) (Fig. 2 / Appendix A analytics).
+
+use crate::linalg::{effective_rank, singular_values, Mat};
+use crate::runtime::executor::{buf_f32_vec, lit_i32, to_device};
+use crate::runtime::{ArtifactDir, StepFn};
+use anyhow::Result;
+
+pub struct RankProbe {
+    acts_fn: StepFn,
+    n_layers: usize,
+    d: usize,
+    seq_len: usize,
+}
+
+/// Full spectrum of one tap (for Fig. 2a curves).
+#[derive(Clone, Debug)]
+pub struct TapSpectrum {
+    pub name: String,
+    pub singular_values: Vec<f64>,
+    pub effective_rank: usize,
+    pub full_dim: usize,
+}
+
+impl RankProbe {
+    pub fn new(art: &ArtifactDir) -> Result<Self> {
+        let man = &art.manifest;
+        Ok(Self {
+            acts_fn: art.step("activations")?,
+            n_layers: man.preset.n_layers,
+            d: man.preset.d,
+            seq_len: man.preset.seq_len,
+        })
+    }
+
+    fn tap_name(&self, i: usize) -> String {
+        if i < self.n_layers {
+            format!("l{i}.input")
+        } else {
+            "final".into()
+        }
+    }
+
+    /// Run taps for `tokens` ([2, seq+1] flat) and return
+    /// (tap name, r(alpha), full dim) per tap.
+    pub fn run(
+        &self,
+        params: &[xla::PjRtBuffer],
+        tokens: &[i32],
+        alpha: f64,
+    ) -> Result<Vec<(String, usize, usize)>> {
+        Ok(self
+            .spectra(params, tokens, alpha)?
+            .into_iter()
+            .map(|t| (t.name, t.effective_rank, t.full_dim))
+            .collect())
+    }
+
+    /// Full spectra per tap.
+    pub fn spectra(
+        &self,
+        params: &[xla::PjRtBuffer],
+        tokens: &[i32],
+        alpha: f64,
+    ) -> Result<Vec<TapSpectrum>> {
+        let seq1 = self.seq_len + 1;
+        anyhow::ensure!(tokens.len() == 2 * seq1, "probe batch must be [2, seq+1]");
+        let tok = to_device(&lit_i32(tokens, &[2, seq1 as i64])?)?;
+        let mut refs: Vec<&xla::PjRtBuffer> = params.iter().collect();
+        refs.push(&tok);
+        let out = self.acts_fn.run_b(&refs)?;
+        anyhow::ensure!(out.len() == self.n_layers + 1, "tap count");
+
+        let n_rows = 2 * self.seq_len;
+        let mut result = Vec::with_capacity(out.len());
+        for (i, buf) in out.iter().enumerate() {
+            let data = buf_f32_vec(buf)?;
+            let m = Mat::from_f32(n_rows, self.d, &data);
+            let sv = singular_values(&m);
+            let er = effective_rank(&sv, alpha);
+            result.push(TapSpectrum {
+                name: self.tap_name(i),
+                singular_values: sv,
+                effective_rank: er,
+                full_dim: self.d,
+            });
+        }
+        Ok(result)
+    }
+}

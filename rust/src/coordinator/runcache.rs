@@ -1,0 +1,183 @@
+//! Run-result cache: benches share training runs (Table 5 and Table 7 both
+//! need p60m_full, etc.), so completed runs are memoized on disk keyed by
+//! (artifact, steps, seed).
+
+use crate::config::TrainConfig;
+use crate::coordinator::trainer::{TrainReport, Trainer};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+
+/// The cached subset of a TrainReport.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub artifact: String,
+    pub steps: usize,
+    pub val_ppl: f64,
+    pub final_loss: f64,
+    pub tokens_per_sec: f64,
+    pub secs_per_step: f64,
+    pub peak_rss_bytes: usize,
+    pub n_total_params: usize,
+    pub val_curve: Vec<(usize, f64)>,
+}
+
+impl From<&TrainReport> for RunResult {
+    fn from(r: &TrainReport) -> Self {
+        Self {
+            artifact: r.artifact.clone(),
+            steps: r.steps,
+            val_ppl: r.val_ppl,
+            final_loss: r.final_loss,
+            tokens_per_sec: r.tokens_per_sec,
+            secs_per_step: r.secs_per_step,
+            peak_rss_bytes: r.peak_rss_bytes,
+            n_total_params: r.n_total_params,
+            val_curve: r.val_curve.clone(),
+        }
+    }
+}
+
+fn cache_path(artifact: &str, steps: usize, seed: u64) -> PathBuf {
+    let root = std::env::var("COLA_RUN_CACHE").unwrap_or_else(|_| "runs/cache".into());
+    PathBuf::from(root).join(format!("{artifact}_s{steps}_seed{seed}.json"))
+}
+
+fn to_json(r: &RunResult) -> Json {
+    Json::obj(vec![
+        ("artifact", Json::s(&r.artifact)),
+        ("steps", Json::num(r.steps as f64)),
+        ("val_ppl", Json::num(r.val_ppl)),
+        ("final_loss", Json::num(r.final_loss)),
+        ("tokens_per_sec", Json::num(r.tokens_per_sec)),
+        ("secs_per_step", Json::num(r.secs_per_step)),
+        ("peak_rss_bytes", Json::num(r.peak_rss_bytes as f64)),
+        ("n_total_params", Json::num(r.n_total_params as f64)),
+        (
+            "val_curve",
+            Json::Arr(
+                r.val_curve
+                    .iter()
+                    .map(|(s, p)| Json::Arr(vec![Json::num(*s as f64), Json::num(*p)]))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn from_json(j: &Json) -> Result<RunResult> {
+    Ok(RunResult {
+        artifact: j.req("artifact")?.as_str().unwrap_or("").into(),
+        steps: j.req("steps")?.as_usize().context("steps")?,
+        val_ppl: j.req("val_ppl")?.as_f64().context("val_ppl")?,
+        final_loss: j.req("final_loss")?.as_f64().context("final_loss")?,
+        tokens_per_sec: j.req("tokens_per_sec")?.as_f64().context("tps")?,
+        secs_per_step: j.req("secs_per_step")?.as_f64().context("sps")?,
+        peak_rss_bytes: j.req("peak_rss_bytes")?.as_usize().unwrap_or(0),
+        n_total_params: j.req("n_total_params")?.as_usize().unwrap_or(0),
+        val_curve: j
+            .req("val_curve")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|row| {
+                let v = row.as_arr().unwrap_or(&[]);
+                (
+                    v.first().and_then(Json::as_usize).unwrap_or(0),
+                    v.get(1).and_then(Json::as_f64).unwrap_or(f64::NAN),
+                )
+            })
+            .collect(),
+    })
+}
+
+/// Return a cached result for (artifact, steps, seed), or train and cache.
+pub fn cached_or_train(artifact: &str, steps: usize, seed: u64) -> Result<RunResult> {
+    let path = cache_path(artifact, steps, seed);
+    if path.exists() {
+        let j = Json::parse(&std::fs::read_to_string(&path)?)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        if let Ok(r) = from_json(&j) {
+            crate::metrics::log_info(&format!(
+                "runcache hit: {artifact} steps={steps} val_ppl={:.3}",
+                r.val_ppl
+            ));
+            return Ok(r);
+        }
+    }
+    let cfg = TrainConfig {
+        artifact: artifact.to_string(),
+        steps,
+        seed,
+        eval_every: 0,
+        eval_batches: 8,
+        ..TrainConfig::default()
+    };
+    let mut tr = Trainer::new(cfg)?;
+    let report = tr.run()?;
+    let result = RunResult::from(&report);
+    if let Some(p) = path.parent() {
+        std::fs::create_dir_all(p)?;
+    }
+    std::fs::write(&path, to_json(&result).to_string())?;
+    Ok(result)
+}
+
+/// Like `cached_or_train`, but runs the training in a fresh subprocess (via
+/// the `cola train-cached` subcommand) so peak-RSS measurements are not
+/// contaminated by earlier variants in the same bench process. Falls back to
+/// in-process training when the binary is unavailable.
+pub fn cached_or_train_fresh(artifact: &str, steps: usize, seed: u64) -> Result<RunResult> {
+    let path = cache_path(artifact, steps, seed);
+    if path.exists() {
+        if let Ok(j) = Json::parse(&std::fs::read_to_string(&path)?) {
+            if let Ok(r) = from_json(&j) {
+                return Ok(r);
+            }
+        }
+    }
+    let bin = std::env::var("COLA_BIN").unwrap_or_else(|_| "target/release/cola".into());
+    if std::path::Path::new(&bin).exists() {
+        let status = std::process::Command::new(&bin)
+            .args([
+                "train-cached",
+                "--artifact",
+                artifact,
+                "--steps",
+                &steps.to_string(),
+                "--seed",
+                &seed.to_string(),
+            ])
+            .status()
+            .context("spawning cola train-cached")?;
+        anyhow::ensure!(status.success(), "train-cached {artifact} failed");
+        let j = Json::parse(&std::fs::read_to_string(&path)?)?;
+        return from_json(&j);
+    }
+    cached_or_train(artifact, steps, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let r = RunResult {
+            artifact: "x".into(),
+            steps: 10,
+            val_ppl: 12.5,
+            final_loss: 2.5,
+            tokens_per_sec: 1000.0,
+            secs_per_step: 0.5,
+            peak_rss_bytes: 1 << 30,
+            n_total_params: 123,
+            val_curve: vec![(5, 20.0), (10, 12.5)],
+        };
+        let j = to_json(&r);
+        let r2 = from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(r2.steps, 10);
+        assert_eq!(r2.val_curve.len(), 2);
+        assert!((r2.val_ppl - 12.5).abs() < 1e-12);
+    }
+}

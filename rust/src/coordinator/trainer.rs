@@ -1,0 +1,326 @@
+//! The training loop: device-resident functional state, streaming batches,
+//! periodic eval / checkpoint / galore-refresh / rank probes.
+
+use crate::config::TrainConfig;
+use crate::coordinator::checkpoint;
+use crate::coordinator::rank_probe::RankProbe;
+use crate::data::{corpus::CorpusCfg, Bpe, BatchIter, CorpusGen, MlmBatchIter};
+use crate::metrics::{self, Ema, Throughput};
+use crate::runtime::executor::{buf_f32, lit_f32, lit_i32, to_device};
+use crate::runtime::{ArtifactDir, StepFn};
+use crate::util::json::Json;
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// Final report of a training run (what the benches consume).
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub artifact: String,
+    pub steps: usize,
+    pub final_loss: f64,
+    pub val_ppl: f64,
+    pub tokens_per_sec: f64,
+    pub secs_per_step: f64,
+    pub peak_rss_bytes: usize,
+    pub loss_curve: Vec<(usize, f64)>,
+    pub val_curve: Vec<(usize, f64)>,
+    pub n_total_params: usize,
+}
+
+/// Trainer owns the artifact, the device-resident state and the data stream.
+pub struct Trainer {
+    pub art: ArtifactDir,
+    cfg: TrainConfig,
+    train_fn: StepFn,
+    eval_fn: Option<StepFn>,
+    refresh_fn: Option<StepFn>,
+    state: Vec<xla::PjRtBuffer>,
+    lm_iter: Option<BatchIter>,
+    mlm_iter: Option<MlmBatchIter>,
+    val_iter: Option<BatchIter>,
+    pub bpe: Bpe,
+    step: usize,
+}
+
+/// Train (or load) the shared BPE tokenizer for a vocab size, cached on disk.
+pub fn shared_bpe(vocab: usize) -> Result<Bpe> {
+    let cache = PathBuf::from(
+        std::env::var("COLA_DATA_CACHE").unwrap_or_else(|_| "data_cache".into()),
+    )
+    .join(format!("bpe_{vocab}.json"));
+    if cache.exists() {
+        return Bpe::load(&cache);
+    }
+    metrics::log_info(&format!("training BPE vocab={vocab} (cached at {})", cache.display()));
+    let text = CorpusGen::new(CorpusCfg { seed: 42, ..CorpusCfg::default() }).text(400_000);
+    let bpe = Bpe::train(&text, vocab);
+    bpe.save(&cache)?;
+    Ok(bpe)
+}
+
+impl Trainer {
+    pub fn new(cfg: TrainConfig) -> Result<Self> {
+        let art = ArtifactDir::open_named(&cfg.artifact)?;
+        let man = art.manifest.clone();
+        let train_fn = art.step("train_step")?;
+        let eval_fn = if art.has_step("eval_step") { Some(art.step("eval_step")?) } else { None };
+        let refresh_fn = if man.variant == "galore" && art.has_step("refresh_proj") {
+            Some(art.step("refresh_proj")?)
+        } else {
+            None
+        };
+        let state = art.load_state0_buffers()?;
+        let bpe = shared_bpe(man.preset.vocab)?;
+
+        let (lm_iter, mlm_iter) = if man.objective == "mlm" {
+            (None, Some(MlmBatchIter::new(bpe.clone(), cfg.seed, man.preset.vocab)))
+        } else {
+            (Some(BatchIter::new(bpe.clone(), cfg.seed, man.preset.vocab)), None)
+        };
+        let val_iter = if man.objective == "lm" {
+            Some(BatchIter::new(bpe.clone(), cfg.seed + 1_000_003, man.preset.vocab))
+        } else {
+            None
+        };
+
+        Ok(Self {
+            art,
+            cfg,
+            train_fn,
+            eval_fn,
+            refresh_fn,
+            state,
+            lm_iter,
+            mlm_iter,
+            val_iter,
+            bpe,
+            step: 0,
+        })
+    }
+
+    pub fn manifest(&self) -> &crate::runtime::Manifest {
+        &self.art.manifest
+    }
+
+    fn tokens_per_step(&self) -> u64 {
+        self.art.manifest.tokens_shape.iter().product::<usize>() as u64
+    }
+
+    /// One optimizer step. Returns (loss, grad_norm).
+    pub fn train_step(&mut self) -> Result<(f32, f32)> {
+        Ok(self.train_step_opt(true)?.expect("read_loss=true"))
+    }
+
+    /// One optimizer step. When `read_loss` is false the loss/grad-norm
+    /// buffers are left on device (no host sync — the hot-loop mode; §Perf
+    /// L3) and `None` is returned.
+    pub fn train_step_opt(&mut self, read_loss: bool) -> Result<Option<(f32, f32)>> {
+        let man = &self.art.manifest;
+        let shape = &man.tokens_shape;
+        let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+
+        let step_buf = to_device(&lit_f32(self.step as f32))?;
+        let mut extra: Vec<xla::PjRtBuffer> = vec![step_buf];
+        if let Some(it) = self.mlm_iter.as_mut() {
+            let (toks, mask) = it.next_batch(shape);
+            extra.push(to_device(&lit_i32(&toks, &dims)?)?);
+            extra.push(to_device(&lit_i32(&mask, &dims)?)?);
+        } else {
+            let toks = self.lm_iter.as_mut().unwrap().next_batch(shape);
+            extra.push(to_device(&lit_i32(&toks, &dims)?)?);
+        }
+
+        let mut refs: Vec<&xla::PjRtBuffer> = self.state.iter().collect();
+        refs.extend(extra.iter());
+        let out = self.train_fn.run_b(&refs)?;
+        anyhow::ensure!(
+            out.len() == man.n_state + 2,
+            "train_step returned {} buffers, want {}",
+            out.len(),
+            man.n_state + 2
+        );
+        let loss_gnorm = if read_loss {
+            let loss = buf_f32(&out[man.n_state])?;
+            let gnorm = buf_f32(&out[man.n_state + 1])?;
+            anyhow::ensure!(loss.is_finite(), "loss diverged at step {}: {loss}", self.step);
+            Some((loss, gnorm))
+        } else {
+            None
+        };
+        self.state = out;
+        self.state.truncate(man.n_state);
+        self.step += 1;
+
+        // galore projection refresh (in-graph; seeded by the step index)
+        if let Some(refresh) = &self.refresh_fn {
+            if self.cfg.galore_refresh_every > 0 && self.step % self.cfg.galore_refresh_every == 0
+            {
+                let seed = to_device(&xla::Literal::scalar(self.step as i32))?;
+                let mut refs: Vec<&xla::PjRtBuffer> = self.state.iter().collect();
+                refs.push(&seed);
+                let out = refresh.run_b(&refs)?;
+                anyhow::ensure!(out.len() == man.n_state, "refresh arity");
+                self.state = out;
+            }
+        }
+        Ok(loss_gnorm)
+    }
+
+    /// Validation perplexity over `n_batches` held-out batches.
+    pub fn evaluate(&mut self, n_batches: usize) -> Result<f64> {
+        let man = &self.art.manifest;
+        let Some(eval) = &self.eval_fn else {
+            anyhow::bail!("artifact has no eval_step");
+        };
+        let bs = man.eval_batch;
+        let seq1 = man.preset.seq_len + 1;
+        let mut sum = 0.0f64;
+        let mut count = 0.0f64;
+        for _ in 0..n_batches {
+            let toks = self.val_iter.as_mut().unwrap().next_eval(bs, seq1);
+            let lit = lit_i32(&toks, &[bs as i64, seq1 as i64])?;
+            let tok_buf = to_device(&lit)?;
+            let mut refs: Vec<&xla::PjRtBuffer> =
+                self.state[..man.n_params].iter().collect();
+            refs.push(&tok_buf);
+            let out = eval.run_b(&refs)?;
+            sum += buf_f32(&out[0])? as f64;
+            count += buf_f32(&out[1])? as f64;
+        }
+        Ok((sum / count).exp())
+    }
+
+    /// Spectrum probe on current params (Fig. 2): per-tap effective ranks.
+    pub fn rank_probe(&mut self, alpha: f64) -> Result<Vec<(String, usize, usize)>> {
+        let probe = RankProbe::new(&self.art)?;
+        let toks = self
+            .val_iter
+            .as_mut()
+            .map(|it| it.next_eval(2, self.art.manifest.preset.seq_len + 1))
+            .unwrap_or_default();
+        probe.run(&self.state[..self.art.manifest.n_params], &toks, alpha)
+    }
+
+    /// Save a checkpoint of the full state.
+    pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
+        checkpoint::save(&self.art.manifest, &self.state, path)
+    }
+
+    /// Restore state from a checkpoint.
+    pub fn load_checkpoint(&mut self, path: &std::path::Path) -> Result<()> {
+        self.state = checkpoint::load(&self.art.manifest, path)?;
+        Ok(())
+    }
+
+    /// Current params as host literals (for the serve engine / fine-tuning).
+    pub fn params_literals(&self) -> Result<Vec<xla::Literal>> {
+        self.state[..self.art.manifest.n_params]
+            .iter()
+            .map(|b| Ok(b.to_literal_sync()?))
+            .collect()
+    }
+
+    /// The full training loop per the config.
+    pub fn run(&mut self) -> Result<TrainReport> {
+        let total = if self.cfg.steps > 0 {
+            self.cfg.steps
+        } else {
+            self.art.manifest.preset.total_steps
+        };
+        let mut thr = Throughput::new();
+        let mut ema = Ema::new(0.05);
+        let mut loss_curve = Vec::new();
+        let mut val_curve = Vec::new();
+        let log_path = self.cfg.out_dir.join(format!("{}.jsonl", self.art.manifest.name));
+
+        let mut last_loss = f64::NAN;
+        while self.step < total {
+            // host-sync (loss read) only at observation points — the hot
+            // loop otherwise chains device buffers without blocking (§Perf L3)
+            let observe = total - self.step <= 1
+                || (self.cfg.log_every > 0 && (self.step + 1) % self.cfg.log_every == 0)
+                || (self.cfg.eval_every > 0 && (self.step + 1) % self.cfg.eval_every == 0);
+            let Some((loss, gnorm)) = self.train_step_opt(observe)? else {
+                thr.record(self.tokens_per_step());
+                continue;
+            };
+            last_loss = ema.update(loss as f64);
+            thr.record(self.tokens_per_step());
+
+            if self.cfg.log_every > 0 && self.step % self.cfg.log_every == 0 {
+                metrics::log_info(&format!(
+                    "{} step {}/{} loss {:.4} (ema {:.4}) gnorm {:.3} {:.0} tok/s",
+                    self.art.manifest.name,
+                    self.step,
+                    total,
+                    loss,
+                    last_loss,
+                    gnorm,
+                    thr.tokens_per_sec()
+                ));
+                loss_curve.push((self.step, last_loss));
+                metrics::append_jsonl(
+                    &log_path,
+                    &Json::obj(vec![
+                        ("step", Json::num(self.step as f64)),
+                        ("loss", Json::num(loss as f64)),
+                        ("gnorm", Json::num(gnorm as f64)),
+                        ("tok_s", Json::num(thr.tokens_per_sec())),
+                    ]),
+                )?;
+            }
+            if self.cfg.eval_every > 0 && self.step % self.cfg.eval_every == 0 {
+                if self.eval_fn.is_some() {
+                    let ppl = self.evaluate(self.cfg.eval_batches)?;
+                    val_curve.push((self.step, ppl));
+                    metrics::log_info(&format!(
+                        "{} step {} val_ppl {:.3}",
+                        self.art.manifest.name, self.step, ppl
+                    ));
+                }
+            }
+            if self.cfg.checkpoint_every > 0 && self.step % self.cfg.checkpoint_every == 0 {
+                let p = self
+                    .cfg
+                    .out_dir
+                    .join(format!("{}_step{}.npz", self.art.manifest.name, self.step));
+                self.save_checkpoint(&p)?;
+            }
+            if self.cfg.rank_probe_every > 0 && self.step % self.cfg.rank_probe_every == 0 {
+                if self.art.has_step("activations") {
+                    let ranks = self.rank_probe(0.95)?;
+                    let s: Vec<String> = ranks
+                        .iter()
+                        .map(|(n, r, d)| format!("{n}:{r}/{d}"))
+                        .collect();
+                    metrics::log_info(&format!(
+                        "{} step {} r(0.95): {}",
+                        self.art.manifest.name,
+                        self.step,
+                        s.join(" ")
+                    ));
+                }
+            }
+        }
+
+        let val_ppl = if self.eval_fn.is_some() {
+            self.evaluate(self.cfg.eval_batches)?
+        } else {
+            last_loss.exp()
+        };
+        val_curve.push((self.step, val_ppl));
+
+        Ok(TrainReport {
+            artifact: self.art.manifest.name.clone(),
+            steps: self.step,
+            final_loss: last_loss,
+            val_ppl,
+            tokens_per_sec: thr.tokens_per_sec(),
+            secs_per_step: thr.secs_per_step(),
+            peak_rss_bytes: metrics::peak_rss_bytes(),
+            loss_curve,
+            val_curve,
+            n_total_params: self.art.manifest.n_total_params,
+        })
+    }
+}

@@ -1,0 +1,295 @@
+//! Analytic cost model — the paper's §3.3/§4 formulas, exactly.
+//!
+//! Everything here is hardware-independent arithmetic on the architecture
+//! geometry, so it reproduces the paper's Tables 2–4 and Figures 1/5/6/7 at
+//! the *paper's* scales (60M–7B) even though this image can only train proxy
+//! scales. Formula references:
+//!
+//! * Table 2 — per-layer full-rank FLOPs breakdown
+//! * Eq. (5)  C_full   = 24nd² + 12n²d + 18nd·dff
+//! * Eq. (6)  C_CoLA   = 48ndr + 12n²d + 18nr(d+dff)
+//! * Eq. (9)  C_LoRA   = 16nd² + 12n²d + 12nd·dff + (48ndr + 18nr(d+dff))
+//! * Eq. (11) C_SLTrain = C_full + 24d²r + 18d·dff·r
+//! * Eq. (13) C_GaLore  = C_full + 16d²r + 12d·dff·r
+//! * Eq. (14) M_full   = 20nd + 2n²h      (activation memory / layer)
+//! * Eq. (15) M_GCP    = nd
+//! * Eq. (16) C_GCP    = C_full + 23nd² + 4n²d
+//! * Eq. (17) M_CoLA   = M_full + 14nr − 2.5nd
+//! * Eq. (18) C_CoLA-M = C_CoLA + 18.5ndr + 4n²d
+//! * Eq. (19) M_CoLA-M = 2nd + 7nr
+
+pub mod memory;
+pub mod presets;
+pub mod tables;
+
+pub use presets::{PaperPreset, PAPER_PRESETS};
+
+/// Geometry of one decoder layer + token batch for cost evaluation.
+#[derive(Clone, Copy, Debug)]
+pub struct Geometry {
+    /// model width d
+    pub d: f64,
+    /// feed-forward width (≈ 2.5·d for LLaMA per the paper's simplification)
+    pub d_ff: f64,
+    /// CoLA rank r
+    pub r: f64,
+    /// tokens per sequence-batch (n in the paper: batch · seq_len)
+    pub n: f64,
+    /// attention heads h
+    pub h: f64,
+    /// decoder layers
+    pub n_layers: f64,
+    /// tokens per individual sequence (attention-quadratic terms scale with
+    /// n·seq, not n²: the paper's per-layer analysis is per-sequence and the
+    /// batch multiplies linearly)
+    pub seq: f64,
+}
+
+impl Geometry {
+    pub fn new(d: usize, d_ff: usize, r: usize, n: usize, h: usize, layers: usize) -> Self {
+        Self {
+            d: d as f64,
+            d_ff: d_ff as f64,
+            r: r as f64,
+            n: n as f64,
+            h: h as f64,
+            n_layers: layers as f64,
+            seq: n as f64, // single-sequence view by default (paper §3.3)
+        }
+    }
+
+    pub fn from_paper(p: &PaperPreset, n_tokens: usize) -> Self {
+        let mut g = Self::new(p.d, p.d_ff, p.r, n_tokens, p.n_heads, p.n_layers);
+        g.seq = p.seq_len.min(n_tokens) as f64;
+        g
+    }
+}
+
+/// Training method, matching python/compile variants + the paper's baselines.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    FullRank,
+    VanillaGcp,
+    Cola,
+    ColaM,
+    ReLora,
+    SlTrain,
+    GaLore,
+}
+
+impl Method {
+    pub const ALL: [Method; 7] = [
+        Method::FullRank,
+        Method::VanillaGcp,
+        Method::Cola,
+        Method::ColaM,
+        Method::ReLora,
+        Method::SlTrain,
+        Method::GaLore,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::FullRank => "Full-Rank",
+            Method::VanillaGcp => "Vanilla GCP",
+            Method::Cola => "CoLA",
+            Method::ColaM => "CoLA-M",
+            Method::ReLora => "(Re)LoRA",
+            Method::SlTrain => "SLTrain",
+            Method::GaLore => "GaLore",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Table 2: per-layer full-rank FLOPs breakdown
+// ---------------------------------------------------------------------------
+
+/// One row of Table 2 (forward FLOPs of a single decoder layer).
+#[derive(Clone, Copy, Debug)]
+pub struct FwdBreakdown {
+    pub qkv: f64,
+    pub sdp: f64,
+    pub proj: f64,
+    pub ffw: f64,
+}
+
+impl FwdBreakdown {
+    pub fn total_forward(&self) -> f64 {
+        self.qkv + self.sdp + self.proj + self.ffw
+    }
+
+    /// 2× rule (Eq. 4): backward = two GEMMs per forward GEMM.
+    pub fn total_backward(&self) -> f64 {
+        2.0 * self.total_forward()
+    }
+}
+
+/// Table 2 — forward FLOPs of one full-rank decoder layer.
+pub fn table2_breakdown(g: &Geometry) -> FwdBreakdown {
+    FwdBreakdown {
+        qkv: 6.0 * g.n * g.d * g.d,
+        sdp: 4.0 * g.n * g.seq * g.d,
+        proj: 2.0 * g.n * g.d * g.d,
+        ffw: 6.0 * g.n * g.d * g.d_ff,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Table 3: per-method training compute (fwd + bwd + optimizer extras)
+// ---------------------------------------------------------------------------
+
+/// Eq. (5): full-rank training compute of one decoder layer.
+pub fn c_full_rank(g: &Geometry) -> f64 {
+    24.0 * g.n * g.d * g.d + 12.0 * g.n * g.seq * g.d + 18.0 * g.n * g.d * g.d_ff
+}
+
+/// Eq. (6): CoLA training compute of one decoder layer.
+pub fn c_cola(g: &Geometry) -> f64 {
+    48.0 * g.n * g.d * g.r + 12.0 * g.n * g.seq * g.d + 18.0 * g.n * g.r * (g.d + g.d_ff)
+}
+
+/// Eq. (9): LoRA/ReLoRA (pure low-rank stage).
+pub fn c_lora(g: &Geometry) -> f64 {
+    16.0 * g.n * g.d * g.d
+        + 12.0 * g.n * g.seq * g.d
+        + 12.0 * g.n * g.d * g.d_ff
+        + 48.0 * g.n * g.d * g.r
+        + 18.0 * g.n * g.r * (g.d + g.d_ff)
+}
+
+/// Eq. (11): SLTrain = full-rank + BA reconstruction (+2× in backward).
+pub fn c_sltrain(g: &Geometry) -> f64 {
+    c_full_rank(g) + 24.0 * g.d * g.d * g.r + 18.0 * g.d * g.d_ff * g.r
+}
+
+/// Eq. (13): GaLore = full-rank + gradient up/down projection.
+pub fn c_galore(g: &Geometry) -> f64 {
+    c_full_rank(g) + 16.0 * g.d * g.d * g.r + 12.0 * g.d * g.d_ff * g.r
+}
+
+/// Eq. (16): vanilla gradient checkpointing recompute overhead.
+pub fn c_vanilla_gcp(g: &Geometry) -> f64 {
+    c_full_rank(g) + 23.0 * g.n * g.d * g.d + 4.0 * g.n * g.seq * g.d
+}
+
+/// Eq. (18): CoLA-M = CoLA + low-rank recompute.
+pub fn c_cola_m(g: &Geometry) -> f64 {
+    c_cola(g) + 18.5 * g.n * g.d * g.r + 4.0 * g.n * g.seq * g.d
+}
+
+/// Per-layer training compute for any method (Table 3).
+pub fn compute_per_layer(m: Method, g: &Geometry) -> f64 {
+    match m {
+        Method::FullRank => c_full_rank(g),
+        Method::VanillaGcp => c_vanilla_gcp(g),
+        Method::Cola => c_cola(g),
+        Method::ColaM => c_cola_m(g),
+        Method::ReLora => c_lora(g),
+        Method::SlTrain => c_sltrain(g),
+        Method::GaLore => c_galore(g),
+    }
+}
+
+/// Whole-model training compute (× n_layers; embeddings excluded, as the
+/// paper's "non-embedding" convention).
+pub fn compute_total(m: Method, g: &Geometry) -> f64 {
+    g.n_layers * compute_per_layer(m, g)
+}
+
+/// The paper's r < 0.62d break-even claim (§3.3): the rank below which CoLA
+/// beats full-rank compute, for this geometry's d_ff/d ratio.
+pub fn cola_breakeven_rank(g: &Geometry) -> f64 {
+    // 48dr + 18r(d+dff) < 24d² + 18d·dff  (SDP term cancels)
+    (24.0 * g.d * g.d + 18.0 * g.d * g.d_ff) / (48.0 * g.d + 18.0 * (g.d + g.d_ff))
+}
+
+// ---------------------------------------------------------------------------
+// Parameter counts (Table 5's Param column, Fig 1 scatter x-axis)
+// ---------------------------------------------------------------------------
+
+/// Non-embedding parameter count per layer for a method.
+pub fn params_per_layer(m: Method, g: &Geometry) -> f64 {
+    let (d, dff, r) = (g.d, g.d_ff, g.r);
+    let full = 4.0 * d * d + 3.0 * d * dff;
+    match m {
+        Method::FullRank | Method::VanillaGcp | Method::GaLore => full,
+        Method::Cola | Method::ColaM => 4.0 * 2.0 * d * r + 3.0 * r * (d + dff),
+        // ReLoRA trains BA over a frozen W0 (total stored = full + BA)
+        Method::ReLora => full + 4.0 * 2.0 * d * r + 3.0 * r * (d + dff),
+        // SLTrain stores BA + δ-dense sparse values (δ = 3%)
+        Method::SlTrain => 4.0 * 2.0 * d * r + 3.0 * r * (d + dff) + 0.03 * full,
+    }
+}
+
+pub fn params_total(m: Method, g: &Geometry, vocab: usize) -> f64 {
+    // untied embedding + head, as in the GaLore/SLTrain experimental setup
+    g.n_layers * params_per_layer(m, g) + 2.0 * vocab as f64 * g.d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn g1b() -> Geometry {
+        // LLaMA-1B in the paper: d=2048, r=512, dff≈5461; n = 256·2048 tokens
+        Geometry::new(2048, 5461, 512, 256 * 2048 / 256, 32, 24)
+    }
+
+    #[test]
+    fn cola_halves_compute_at_default_rank() {
+        // Paper: r = d/4 ⇒ ~0.4–0.5× of full-rank.
+        let g = g1b();
+        let ratio = c_cola(&g) / c_full_rank(&g);
+        assert!(ratio > 0.3 && ratio < 0.55, "ratio={ratio}");
+    }
+
+    #[test]
+    fn breakeven_near_062d() {
+        // With dff = 2.5d the paper reports r < 0.62d.
+        let g = Geometry::new(1000, 2500, 250, 4096, 16, 1);
+        let be = cola_breakeven_rank(&g) / g.d;
+        assert!((be - 0.62).abs() < 0.02, "breakeven={be}");
+    }
+
+    #[test]
+    fn lora_exceeds_cola_always() {
+        for r in [64usize, 128, 256, 512] {
+            let mut g = g1b();
+            g.r = r as f64;
+            assert!(c_lora(&g) > c_cola(&g));
+        }
+    }
+
+    #[test]
+    fn sltrain_galore_lower_bounded_by_full() {
+        let g = g1b();
+        assert!(c_sltrain(&g) > c_full_rank(&g));
+        assert!(c_galore(&g) > c_full_rank(&g));
+        assert!(c_galore(&g) < c_sltrain(&g), "paper: galore cheaper than sltrain");
+    }
+
+    #[test]
+    fn backward_is_twice_forward() {
+        let g = g1b();
+        let b = table2_breakdown(&g);
+        assert_eq!(b.total_backward(), 2.0 * b.total_forward());
+        // Table 2 totals: fwd = 8nd² + 4n²d + 6nd·dff
+        let want = 8.0 * g.n * g.d * g.d + 4.0 * g.n * g.n * g.d + 6.0 * g.n * g.d * g.d_ff;
+        assert!((b.total_forward() - want).abs() < 1.0);
+    }
+
+    #[test]
+    fn full_training_is_3x_forward() {
+        let g = g1b();
+        let b = table2_breakdown(&g);
+        assert!((c_full_rank(&g) - 3.0 * b.total_forward()).abs() / c_full_rank(&g) < 1e-12);
+    }
+
+    #[test]
+    fn cola_param_reduction_about_half() {
+        let g = g1b();
+        let ratio = params_per_layer(Method::Cola, &g) / params_per_layer(Method::FullRank, &g);
+        assert!(ratio > 0.35 && ratio < 0.55, "ratio={ratio}");
+    }
+}

@@ -1,0 +1,183 @@
+//! Paper-table renderers over the cost model (consumed by rust/benches/*).
+
+use super::memory::{activation_elems_per_layer, memory_breakdown, recompute_per_layer, BF16};
+use super::{compute_total, Geometry, Method, PaperPreset};
+use crate::util::si;
+
+/// Simple fixed-width table printer.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = width[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = String::new();
+        out.push_str(&line(&self.header));
+        out.push('\n');
+        out.push_str(&"-".repeat(width.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Table 2: per-layer full-rank FLOPs breakdown at a paper scale.
+pub fn render_table2(p: &PaperPreset, batch: usize) -> String {
+    let g = Geometry::from_paper(p, p.tokens_per_batch(batch));
+    let b = super::table2_breakdown(&g);
+    let mut t = Table::new(&["Operation", "FLOPs (formula)", "FLOPs @ this config"]);
+    t.row(vec!["Attention: Q,K,V".into(), "6nd^2".into(), si(b.qkv)]);
+    t.row(vec!["Attention: SDP".into(), "4n^2d".into(), si(b.sdp)]);
+    t.row(vec!["Attention: Project".into(), "2nd^2".into(), si(b.proj)]);
+    t.row(vec!["Feed-forward".into(), "6nd*dff".into(), si(b.ffw)]);
+    t.row(vec![
+        "Total Forward".into(),
+        "8nd^2+4n^2d+6nd*dff".into(),
+        si(b.total_forward()),
+    ]);
+    t.row(vec![
+        "Total Backward".into(),
+        "16nd^2+8n^2d+12nd*dff".into(),
+        si(b.total_backward()),
+    ]);
+    t.render()
+}
+
+/// Table 3: per-method training compute, absolute and vs full-rank.
+pub fn render_table3(p: &PaperPreset, batch: usize) -> String {
+    let g = Geometry::from_paper(p, p.tokens_per_batch(batch));
+    let base = compute_total(Method::FullRank, &g);
+    let mut t = Table::new(&["Method", "FLOPs/step", "vs Full-Rank"]);
+    for m in [Method::FullRank, Method::Cola, Method::ReLora, Method::SlTrain, Method::GaLore] {
+        let c = compute_total(m, &g);
+        t.row(vec![m.name().into(), si(c), format!("{:.2}x", c / base)]);
+    }
+    t.render()
+}
+
+/// Table 4: memory & recompute of checkpointing strategies (per layer).
+pub fn render_table4(p: &PaperPreset, batch: usize) -> String {
+    let g = Geometry::from_paper(p, p.tokens_per_batch(batch));
+    let mut t = Table::new(&["Method", "Act. memory (elems/layer)", "Re-Compute (FLOPs/layer)"]);
+    for m in [Method::FullRank, Method::VanillaGcp, Method::Cola, Method::ColaM] {
+        t.row(vec![
+            m.name().into(),
+            si(activation_elems_per_layer(m, &g)),
+            if recompute_per_layer(m, &g) > 0.0 {
+                si(recompute_per_layer(m, &g))
+            } else {
+                "N/A".into()
+            },
+        ]);
+    }
+    t.render()
+}
+
+/// Fig 5/6: memory breakdown (GB) per method at a paper scale + batch.
+pub fn render_membreakdown(p: &PaperPreset, batch: usize) -> String {
+    let g = Geometry::from_paper(p, p.tokens_per_batch(batch));
+    let mut t = Table::new(&["Method", "Model", "Grads", "Optimizer", "Activations", "Total (GB)"]);
+    for m in Method::ALL {
+        let mb = memory_breakdown(m, &g, p.vocab, BF16);
+        let gbs = |x: f64| format!("{:.2}", x / 1e9);
+        t.row(vec![
+            m.name().into(),
+            gbs(mb.model),
+            gbs(mb.grads),
+            gbs(mb.opt),
+            gbs(mb.activations),
+            gbs(mb.total()),
+        ]);
+    }
+    t.render()
+}
+
+/// Fig 1-style scatter rows: (method, params, flops/token-batch, at 1B).
+pub fn fig1_rows(p: &PaperPreset, batch: usize) -> Vec<(String, f64, f64)> {
+    let g = Geometry::from_paper(p, p.tokens_per_batch(batch));
+    [Method::FullRank, Method::Cola, Method::ReLora, Method::SlTrain, Method::GaLore]
+        .iter()
+        .map(|&m| {
+            (
+                m.name().to_string(),
+                super::params_total(m, &g, p.vocab),
+                compute_total(m, &g),
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::PAPER_PRESETS;
+
+    #[test]
+    fn tables_render_nonempty() {
+        let p = PaperPreset::by_name("llama1b").unwrap();
+        for s in [
+            render_table2(p, 16),
+            render_table3(p, 16),
+            render_table4(p, 16),
+            render_membreakdown(p, 32),
+        ] {
+            assert!(s.lines().count() >= 5, "{s}");
+        }
+    }
+
+    #[test]
+    fn fig1_cola_is_pareto_winner() {
+        // Fig 1: CoLA is the only method cutting BOTH params and FLOPs.
+        let p = PaperPreset::by_name("llama1b").unwrap();
+        let rows = fig1_rows(p, 256);
+        let full = rows.iter().find(|r| r.0 == "Full-Rank").unwrap().clone();
+        let cola = rows.iter().find(|r| r.0 == "CoLA").unwrap().clone();
+        assert!(cola.1 < full.1 && cola.2 < full.2);
+        for r in &rows {
+            if r.0 != "CoLA" && r.0 != "Full-Rank" {
+                assert!(
+                    r.1 >= 0.99 * full.1 || r.2 >= 0.99 * full.2,
+                    "{} unexpectedly pareto-dominates",
+                    r.0
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn render_all_paper_scales() {
+        for p in &PAPER_PRESETS {
+            assert!(!render_table3(p, 16).is_empty());
+        }
+    }
+}

@@ -1,0 +1,228 @@
+//! Streaming batch iterators: corpus text → BPE ids → fixed-shape i32
+//! token tensors matching the artifact's `tokens_shape`.
+//!
+//! The iterator is epoch-free (fresh corpus text forever — the paper's
+//! "C4 without data repetition" regime) and deterministic given a seed.
+//! A held-out validation stream uses a disjoint seed.
+
+use super::corpus::{CorpusCfg, CorpusGen};
+use super::tokenizer::Bpe;
+use crate::util::rng::Rng;
+
+/// Produces LM train batches shaped [n_micro, mb, seq+1] (flattened row-major).
+pub struct BatchIter {
+    gen: CorpusGen,
+    bpe: Bpe,
+    buf: Vec<i32>,
+    /// clamp ids into the model vocab (tokenizer may be bigger in tests)
+    vocab_clamp: i32,
+}
+
+impl BatchIter {
+    pub fn new(bpe: Bpe, seed: u64, vocab_clamp: usize) -> Self {
+        let gen = CorpusGen::new(CorpusCfg { seed, ..CorpusCfg::default() });
+        Self { gen, bpe, buf: Vec::new(), vocab_clamp: vocab_clamp as i32 }
+    }
+
+    fn refill(&mut self, need: usize) {
+        while self.buf.len() < need {
+            let text = self.gen.text(need.max(4096) * 4);
+            let ids = self.bpe.encode(&text);
+            self.buf.extend(ids.into_iter().map(|t| t.min(self.vocab_clamp - 1)));
+        }
+    }
+
+    /// Next batch of `shape` = [n_micro, mb, seq(+1)]; returns flat i32 vec.
+    pub fn next_batch(&mut self, shape: &[usize]) -> Vec<i32> {
+        let total: usize = shape.iter().product();
+        self.refill(total);
+        self.buf.drain(..total).collect()
+    }
+
+    /// Next eval batch of [bs, seq+1].
+    pub fn next_eval(&mut self, bs: usize, seq_plus1: usize) -> Vec<i32> {
+        self.next_batch(&[bs, seq_plus1])
+    }
+}
+
+/// MLM batches for the BERT-proxy: (tokens, labels-in-mask channel).
+///
+/// 15% of positions are selected; selected tokens are replaced by `<mask>`
+/// (id 3) in the token tensor; the mask channel carries `orig_id + 1` at
+/// selected positions and 0 elsewhere (the +1 lets 0 mean "not a target" —
+/// see model.mlm_loss).
+pub struct MlmBatchIter {
+    inner: BatchIter,
+    rng: Rng,
+    mask_prob: f64,
+}
+
+impl MlmBatchIter {
+    pub fn new(bpe: Bpe, seed: u64, vocab_clamp: usize) -> Self {
+        Self {
+            inner: BatchIter::new(bpe, seed, vocab_clamp),
+            rng: Rng::new(seed ^ 0xBE27),
+            mask_prob: 0.15,
+        }
+    }
+
+    /// Returns (tokens, mask) both shaped `shape` = [n_micro, mb, seq].
+    pub fn next_batch(&mut self, shape: &[usize]) -> (Vec<i32>, Vec<i32>) {
+        let toks = self.inner.next_batch(shape);
+        let mut masked = toks.clone();
+        let mut mask = vec![0i32; toks.len()];
+        for i in 0..toks.len() {
+            if self.rng.f64() < self.mask_prob {
+                mask[i] = toks[i] + 1;
+                masked[i] = super::tokenizer::MASK;
+            }
+        }
+        (masked, mask)
+    }
+}
+
+/// Synthetic classification tasks for the GLUE proxy (Table 8). Each task t
+/// labels a sequence by a simple latent rule over its tokens, with varying
+/// difficulty — the fine-tuning analogue of GLUE's task diversity.
+pub struct ClsTaskGen {
+    bpe: Bpe,
+    gen: CorpusGen,
+    rng: Rng,
+    pub n_classes: usize,
+    task: usize,
+    vocab_clamp: i32,
+}
+
+impl ClsTaskGen {
+    pub fn new(bpe: Bpe, task: usize, seed: u64, n_classes: usize, vocab_clamp: usize) -> Self {
+        let gen = CorpusGen::new(CorpusCfg {
+            seed: seed ^ (task as u64 * 977),
+            ..CorpusCfg::default()
+        });
+        Self {
+            bpe,
+            gen,
+            rng: Rng::new(seed ^ 0x61ea ^ task as u64),
+            n_classes,
+            task,
+            vocab_clamp: vocab_clamp as i32,
+        }
+    }
+
+    /// Latent labeling rule per task family. All rules are functions of the
+    /// token sequence that a transformer encoder can learn but that require
+    /// different features (counts, positions, co-occurrence) — mimicking the
+    /// spread of GLUE tasks.
+    fn label(&self, toks: &[i32]) -> i32 {
+        let k = self.n_classes as i64;
+        let t = self.task % 4;
+        match t {
+            // token-sum parity-class (bag-of-words feature)
+            0 => (toks.iter().map(|&x| x as i64).sum::<i64>() % k).unsigned_abs() as i32,
+            // leading-token bucket (positional feature)
+            1 => ((toks[0] as i64 + toks[1] as i64) % k) as i32,
+            // max-token bucket (content feature)
+            2 => ((toks.iter().copied().max().unwrap_or(0) as i64) % k) as i32,
+            // windowed co-occurrence hash (interaction feature)
+            _ => {
+                let mut h: i64 = 0;
+                for w in toks.windows(2).step_by(7) {
+                    h = (h * 31 + w[0] as i64 * 7 + w[1] as i64) % 1_000_003;
+                }
+                (h % k) as i32
+            }
+        }
+    }
+
+    /// Generate a balanced-ish batch: (tokens [bs, seq], labels [bs]).
+    pub fn next_batch(&mut self, bs: usize, seq: usize) -> (Vec<i32>, Vec<i32>) {
+        let mut toks = Vec::with_capacity(bs * seq);
+        let mut labels = Vec::with_capacity(bs);
+        for _ in 0..bs {
+            let text = self.gen.text(seq * 6);
+            let mut ids: Vec<i32> = self
+                .bpe
+                .encode(&text)
+                .into_iter()
+                .map(|t| t.min(self.vocab_clamp - 1))
+                .collect();
+            ids.resize(seq, super::tokenizer::PAD);
+            let lbl = self.label(&ids);
+            toks.extend_from_slice(&ids);
+            labels.push(lbl);
+            let _ = &self.rng;
+        }
+        (toks, labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{CorpusCfg, CorpusGen};
+
+    fn bpe() -> Bpe {
+        let text = CorpusGen::new(CorpusCfg::default()).text(40_000);
+        Bpe::train(&text, 512)
+    }
+
+    #[test]
+    fn batch_shape_and_range() {
+        let mut it = BatchIter::new(bpe(), 0, 512);
+        let b = it.next_batch(&[2, 4, 65]);
+        assert_eq!(b.len(), 2 * 4 * 65);
+        assert!(b.iter().all(|&t| (0..512).contains(&t)));
+    }
+
+    #[test]
+    fn deterministic_stream() {
+        let mut a = BatchIter::new(bpe(), 7, 512);
+        let mut b = BatchIter::new(bpe(), 7, 512);
+        assert_eq!(a.next_batch(&[1, 2, 10]), b.next_batch(&[1, 2, 10]));
+        // and streams do not repeat themselves
+        let x = a.next_batch(&[1, 2, 10]);
+        let y = a.next_batch(&[1, 2, 10]);
+        assert_ne!(x, y);
+    }
+
+    #[test]
+    fn disjoint_seeds_disjoint_batches() {
+        let mut a = BatchIter::new(bpe(), 1, 512);
+        let mut b = BatchIter::new(bpe(), 2, 512);
+        assert_ne!(a.next_batch(&[1, 2, 32]), b.next_batch(&[1, 2, 32]));
+    }
+
+    #[test]
+    fn vocab_clamp_applies() {
+        let mut it = BatchIter::new(bpe(), 0, 300);
+        let b = it.next_batch(&[1, 2, 50]);
+        assert!(b.iter().all(|&t| t < 300));
+    }
+
+    #[test]
+    fn mlm_masks_about_15pct() {
+        let mut it = MlmBatchIter::new(bpe(), 0, 512);
+        let (toks, mask) = it.next_batch(&[1, 8, 128]);
+        let n = toks.len() as f64;
+        let n_masked = mask.iter().filter(|&&m| m > 0).count() as f64;
+        assert!((n_masked / n - 0.15).abs() < 0.05);
+        for i in 0..toks.len() {
+            if mask[i] > 0 {
+                assert_eq!(toks[i], crate::data::tokenizer::MASK);
+                assert!(mask[i] - 1 < 512);
+            }
+        }
+    }
+
+    #[test]
+    fn cls_labels_in_range_and_learnable() {
+        let mut g = ClsTaskGen::new(bpe(), 0, 0, 4, 512);
+        let (toks, labels) = g.next_batch(16, 32);
+        assert_eq!(toks.len(), 16 * 32);
+        assert!(labels.iter().all(|&l| (0..4).contains(&l)));
+        // the rule is a function of tokens: same tokens => same label
+        let g2 = ClsTaskGen::new(bpe(), 0, 0, 4, 512);
+        let row: Vec<i32> = toks[..32].to_vec();
+        assert_eq!(g2.label(&row), labels[0]);
+    }
+}

@@ -1,0 +1,213 @@
+//! Synthetic corpus generator: a two-level Markov "grammar" over a Zipfian
+//! word inventory.
+//!
+//! Design goals (what pre-training dynamics actually need from data):
+//! * heavy-tailed unigram distribution (Zipf s≈1.1, like natural text);
+//! * local syntactic structure (word-level Markov chains per "topic", so
+//!   models with more capacity keep improving);
+//! * long-range mixing (topic switches with sticky transitions) so context
+//!   beyond a few tokens carries signal;
+//! * unbounded, deterministic streaming (seeded) — C4's no-repetition regime.
+
+use crate::util::rng::Rng;
+
+/// Corpus hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct CorpusCfg {
+    pub n_words: usize,
+    pub n_topics: usize,
+    /// successors per word within a topic (grammar branching factor)
+    pub branching: usize,
+    /// probability of staying in the current topic per word
+    pub topic_stickiness: f64,
+    /// Zipf exponent for word frequencies
+    pub zipf_s: f64,
+    /// mean sentence length in words
+    pub mean_sentence: usize,
+    pub seed: u64,
+}
+
+impl Default for CorpusCfg {
+    fn default() -> Self {
+        Self {
+            n_words: 4096,
+            n_topics: 16,
+            branching: 12,
+            topic_stickiness: 0.98,
+            zipf_s: 1.1,
+            mean_sentence: 14,
+            seed: 0,
+        }
+    }
+}
+
+/// Streaming text generator.
+pub struct CorpusGen {
+    cfg: CorpusCfg,
+    rng: Rng,
+    /// word id → surface form
+    words: Vec<String>,
+    /// zipfian sampling weights
+    weights: Vec<f64>,
+    /// topic → word → successor word ids
+    grammar: Vec<Vec<Vec<u32>>>,
+    topic: usize,
+    cur_word: usize,
+}
+
+/// Letters used to synthesize pronounceable word surfaces.
+const CONS: &[u8] = b"bcdfghjklmnprstvwz";
+const VOWL: &[u8] = b"aeiou";
+
+fn surface(id: usize, rng: &mut Rng) -> String {
+    // deterministic-ish pronounceable word: alternating consonant/vowel
+    let syllables = 1 + (id % 3) + if rng.f64() < 0.3 { 1 } else { 0 };
+    let mut s = String::new();
+    for _ in 0..syllables {
+        s.push(CONS[rng.below(CONS.len())] as char);
+        s.push(VOWL[rng.below(VOWL.len())] as char);
+        if rng.f64() < 0.25 {
+            s.push(CONS[rng.below(CONS.len())] as char);
+        }
+    }
+    s
+}
+
+impl CorpusGen {
+    pub fn new(cfg: CorpusCfg) -> Self {
+        let mut rng = Rng::new(cfg.seed ^ 0xC01A);
+        // unique surfaces
+        let mut words = Vec::with_capacity(cfg.n_words);
+        let mut seen = std::collections::HashSet::new();
+        while words.len() < cfg.n_words {
+            let w = surface(words.len(), &mut rng);
+            if seen.insert(w.clone()) {
+                words.push(w);
+            }
+        }
+        // zipf weights over a random permutation (rank != id)
+        let mut ranks: Vec<usize> = (0..cfg.n_words).collect();
+        rng.shuffle(&mut ranks);
+        let mut weights = vec![0.0; cfg.n_words];
+        for (id, rank) in ranks.iter().enumerate() {
+            weights[id] = 1.0 / ((rank + 1) as f64).powf(cfg.zipf_s);
+        }
+        // per-topic grammar: each word gets `branching` candidate successors
+        let grammar = (0..cfg.n_topics)
+            .map(|_| {
+                (0..cfg.n_words)
+                    .map(|_| {
+                        (0..cfg.branching)
+                            .map(|_| rng.categorical(&weights) as u32)
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        let topic = rng.below(cfg.n_topics);
+        let cur_word = rng.categorical(&weights);
+        Self { cfg, rng, words, weights, grammar, topic, cur_word }
+    }
+
+    /// Next word id under the grammar walk.
+    fn next_word(&mut self) -> usize {
+        if self.rng.f64() > self.cfg.topic_stickiness {
+            self.topic = self.rng.below(self.cfg.n_topics);
+        }
+        let succ = &self.grammar[self.topic][self.cur_word];
+        // mostly grammar-driven, occasionally a fresh zipf draw (noise floor)
+        let next = if self.rng.f64() < 0.9 {
+            succ[self.rng.below(succ.len())] as usize
+        } else {
+            self.rng.categorical(&self.weights)
+        };
+        self.cur_word = next;
+        next
+    }
+
+    /// Generate roughly `n_bytes` of text (sentences with punctuation).
+    pub fn text(&mut self, n_bytes: usize) -> String {
+        let mut out = String::with_capacity(n_bytes + 64);
+        while out.len() < n_bytes {
+            let len = 3 + self.rng.below(2 * self.cfg.mean_sentence);
+            for i in 0..len {
+                let w = self.next_word();
+                if i > 0 {
+                    out.push(' ');
+                }
+                out.push_str(&self.words[w]);
+            }
+            out.push_str(". ");
+        }
+        out
+    }
+
+    pub fn vocab_surfaces(&self) -> &[String] {
+        &self.words
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = CorpusGen::new(CorpusCfg::default());
+        let mut b = CorpusGen::new(CorpusCfg::default());
+        assert_eq!(a.text(1000), b.text(1000));
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = CorpusGen::new(CorpusCfg::default());
+        let mut b = CorpusGen::new(CorpusCfg { seed: 1, ..CorpusCfg::default() });
+        assert_ne!(a.text(1000), b.text(1000));
+    }
+
+    #[test]
+    fn zipf_head_dominates() {
+        // the most frequent word should be far more common than the median
+        let mut g = CorpusGen::new(CorpusCfg::default());
+        let text = g.text(200_000);
+        let mut counts = std::collections::HashMap::new();
+        for w in text.split([' ', '.']) {
+            if !w.is_empty() {
+                *counts.entry(w).or_insert(0usize) += 1;
+            }
+        }
+        let mut freqs: Vec<usize> = counts.values().copied().collect();
+        freqs.sort_unstable_by(|a, b| b.cmp(a));
+        assert!(freqs[0] > 20 * freqs[freqs.len() / 2]);
+    }
+
+    #[test]
+    fn text_is_sentences() {
+        let mut g = CorpusGen::new(CorpusCfg::default());
+        let t = g.text(5000);
+        assert!(t.contains(". "));
+        assert!(t.split(". ").count() > 10);
+    }
+
+    #[test]
+    fn bigram_structure_exists() {
+        // grammar ⇒ conditional entropy < unigram entropy by a clear margin
+        let mut g = CorpusGen::new(CorpusCfg::default());
+        let text = g.text(400_000);
+        let words: Vec<&str> = text.split([' ', '.']).filter(|w| !w.is_empty()).collect();
+        let mut uni = std::collections::HashMap::new();
+        let mut bi = std::collections::HashMap::new();
+        for w in words.windows(2) {
+            *uni.entry(w[0]).or_insert(0f64) += 1.0;
+            *bi.entry((w[0], w[1])).or_insert(0f64) += 1.0;
+        }
+        let n = (words.len() - 1) as f64;
+        let h_uni: f64 = uni.values().map(|c| -(c / n) * (c / n).log2()).sum();
+        let h_joint: f64 = bi.values().map(|c| -(c / n) * (c / n).log2()).sum();
+        let h_cond = h_joint - h_uni;
+        assert!(
+            h_cond < h_uni - 1.0,
+            "no structure: H(X2|X1)={h_cond:.2} vs H(X)={h_uni:.2}"
+        );
+    }
+}

@@ -1,0 +1,17 @@
+//! Data pipeline: the C4 stand-in.
+//!
+//! The paper pre-trains on C4 streamed without repetition. This image has no
+//! network and no C4, so we build the closest synthetic equivalent that
+//! exercises the identical code path (DESIGN.md §6): a hierarchical-Markov
+//! "grammar" corpus with Zipfian vocabulary (so there is real, learnable
+//! structure and a heavy-tailed token distribution), a byte-pair-encoding
+//! tokenizer trained on that corpus, sharded token storage, and an
+//! epoch-free streaming batch iterator.
+
+pub mod batcher;
+pub mod corpus;
+pub mod tokenizer;
+
+pub use batcher::{BatchIter, ClsTaskGen, MlmBatchIter};
+pub use corpus::CorpusGen;
+pub use tokenizer::Bpe;

@@ -1,0 +1,254 @@
+//! Byte-pair-encoding tokenizer: train / encode / decode / save / load.
+//!
+//! Classic BPE over bytes with a word-boundary marker, trained on the
+//! synthetic corpus. Special tokens: 0=<pad> 1=<bos> 2=<eos> 3=<mask>.
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const MASK: i32 = 3;
+pub const N_SPECIAL: usize = 4;
+
+/// A trained BPE vocabulary.
+#[derive(Clone, Debug)]
+pub struct Bpe {
+    /// token id → byte string (ids < N_SPECIAL are specials)
+    pub vocab: Vec<Vec<u8>>,
+    /// merge ranks: (left id, right id) → merged id
+    merges: HashMap<(u32, u32), u32>,
+}
+
+impl Bpe {
+    /// Train a BPE of `vocab_size` total tokens on `text`.
+    pub fn train(text: &str, vocab_size: usize) -> Self {
+        assert!(vocab_size >= N_SPECIAL + 256 + 1, "vocab too small for bytes");
+        // base vocabulary: specials + 256 bytes
+        let mut vocab: Vec<Vec<u8>> = Vec::with_capacity(vocab_size);
+        for name in ["<pad>", "<bos>", "<eos>", "<mask>"] {
+            vocab.push(name.as_bytes().to_vec());
+        }
+        for b in 0..=255u8 {
+            vocab.push(vec![b]);
+        }
+        let byte_id = |b: u8| (N_SPECIAL + b as usize) as u32;
+
+        // word frequency table ("word" = whitespace chunk + trailing space)
+        let mut word_freq: HashMap<Vec<u32>, usize> = HashMap::new();
+        for w in text.split_whitespace() {
+            let mut ids: Vec<u32> = w.bytes().map(byte_id).collect();
+            ids.push(byte_id(b' ')); // boundary marker byte
+            *word_freq.entry(ids).or_insert(0) += 1;
+        }
+        let mut words: Vec<(Vec<u32>, usize)> = word_freq.into_iter().collect();
+        words.sort(); // determinism
+
+        let mut merges = HashMap::new();
+        while vocab.len() < vocab_size {
+            // count adjacent pairs
+            let mut pair_counts: HashMap<(u32, u32), usize> = HashMap::new();
+            for (w, f) in &words {
+                for p in w.windows(2) {
+                    *pair_counts.entry((p[0], p[1])).or_insert(0) += f;
+                }
+            }
+            // best pair (ties broken by id order for determinism)
+            let Some((&best, &cnt)) = pair_counts
+                .iter()
+                .max_by_key(|(pair, c)| (**c, std::cmp::Reverse(**pair)))
+            else {
+                break;
+            };
+            if cnt < 2 {
+                break;
+            }
+            let new_id = vocab.len() as u32;
+            let mut bytes = vocab[best.0 as usize].clone();
+            bytes.extend_from_slice(&vocab[best.1 as usize]);
+            vocab.push(bytes);
+            merges.insert(best, new_id);
+            // apply merge to all words
+            for (w, _) in words.iter_mut() {
+                let mut out = Vec::with_capacity(w.len());
+                let mut i = 0;
+                while i < w.len() {
+                    if i + 1 < w.len() && (w[i], w[i + 1]) == best {
+                        out.push(new_id);
+                        i += 2;
+                    } else {
+                        out.push(w[i]);
+                        i += 1;
+                    }
+                }
+                *w = out;
+            }
+        }
+        Self { vocab, merges }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab.len()
+    }
+
+    /// Encode text to token ids (no BOS/EOS added).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut out = Vec::with_capacity(text.len() / 3);
+        for w in text.split_whitespace() {
+            let mut ids: Vec<u32> = w
+                .bytes()
+                .map(|b| (N_SPECIAL + b as usize) as u32)
+                .collect();
+            ids.push((N_SPECIAL + b' ' as usize) as u32);
+            // iteratively apply the lowest-id merge available (id order ==
+            // training order == rank order)
+            loop {
+                let mut best: Option<(usize, u32)> = None;
+                for (i, p) in ids.windows(2).enumerate() {
+                    if let Some(&m) = self.merges.get(&(p[0], p[1])) {
+                        if best.map_or(true, |(_, bm)| m < bm) {
+                            best = Some((i, m));
+                        }
+                    }
+                }
+                match best {
+                    Some((i, m)) => {
+                        ids[i] = m;
+                        ids.remove(i + 1);
+                    }
+                    None => break,
+                }
+            }
+            out.extend(ids.iter().map(|&x| x as i32));
+        }
+        out
+    }
+
+    /// Decode ids back to text (boundary bytes become spaces).
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            let id = id as usize;
+            if id < N_SPECIAL || id >= self.vocab.len() {
+                continue;
+            }
+            bytes.extend_from_slice(&self.vocab[id]);
+        }
+        String::from_utf8_lossy(&bytes).trim_end().to_string()
+    }
+
+    // -- persistence ---------------------------------------------------------
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let vocab = Json::Arr(
+            self.vocab
+                .iter()
+                .map(|v| Json::Arr(v.iter().map(|&b| Json::num(b as f64)).collect()))
+                .collect(),
+        );
+        let merges = Json::Arr(
+            self.merges
+                .iter()
+                .map(|(&(a, b), &m)| {
+                    Json::Arr(vec![Json::num(a as f64), Json::num(b as f64), Json::num(m as f64)])
+                })
+                .collect(),
+        );
+        let j = Json::obj(vec![("vocab", vocab), ("merges", merges)]);
+        if let Some(p) = path.parent() {
+            std::fs::create_dir_all(p)?;
+        }
+        std::fs::write(path, j.to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text)?;
+        let vocab = j
+            .req("vocab")?
+            .as_arr()
+            .context("vocab")?
+            .iter()
+            .map(|v| v.usize_vec().into_iter().map(|b| b as u8).collect())
+            .collect();
+        let mut merges = HashMap::new();
+        for m in j.req("merges")?.as_arr().context("merges")? {
+            let v = m.usize_vec();
+            anyhow::ensure!(v.len() == 3, "bad merge row");
+            merges.insert((v[0] as u32, v[1] as u32), v[2] as u32);
+        }
+        Ok(Self { vocab, merges })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{CorpusCfg, CorpusGen};
+
+    fn sample() -> String {
+        CorpusGen::new(CorpusCfg::default()).text(60_000)
+    }
+
+    #[test]
+    fn roundtrip_identity() {
+        let text = sample();
+        let bpe = Bpe::train(&text, 512);
+        let probe = "the quick zipa fox rela bani";
+        let ids = bpe.encode(probe);
+        assert_eq!(bpe.decode(&ids), probe);
+    }
+
+    #[test]
+    fn merges_compress() {
+        let text = sample();
+        let bpe = Bpe::train(&text, 1024);
+        let probe: String = text.chars().take(4000).collect();
+        let n_ids = bpe.encode(&probe).len();
+        // BPE on in-distribution text must beat raw bytes clearly
+        assert!(
+            (n_ids as f64) < 0.6 * probe.len() as f64,
+            "{n_ids} ids for {} bytes",
+            probe.len()
+        );
+    }
+
+    #[test]
+    fn vocab_size_respected() {
+        let bpe = Bpe::train(&sample(), 700);
+        assert_eq!(bpe.vocab_size(), 700);
+    }
+
+    #[test]
+    fn ids_in_range_and_not_special() {
+        let bpe = Bpe::train(&sample(), 512);
+        for id in bpe.encode("zalu bani koto") {
+            assert!((N_SPECIAL as i32..512).contains(&id));
+        }
+    }
+
+    #[test]
+    fn save_load_identical_encoding() {
+        let text = sample();
+        let bpe = Bpe::train(&text, 512);
+        let tmp = std::env::temp_dir().join("cola_bpe_test.json");
+        bpe.save(&tmp).unwrap();
+        let loaded = Bpe::load(&tmp).unwrap();
+        let probe: String = text.chars().take(1000).collect();
+        assert_eq!(bpe.encode(&probe), loaded.encode(&probe));
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn training_deterministic() {
+        let text = sample();
+        let a = Bpe::train(&text, 400);
+        let b = Bpe::train(&text, 400);
+        assert_eq!(a.encode("zalu bani"), b.encode("zalu bani"));
+    }
+}

@@ -1,0 +1,20 @@
+//! CoLA — Compute-Efficient Pre-Training of LLMs via Low-Rank Activation.
+//!
+//! Rust coordinator (Layer 3) for the three-layer CoLA stack:
+//! Pallas kernels (L1) and the JAX model (L2) are AOT-lowered to HLO text by
+//! `python/compile/aot.py`; this crate loads the artifacts via PJRT and owns
+//! everything at runtime: data pipeline, training orchestration, serving,
+//! analytics, and the paper's cost model.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod costmodel;
+pub mod data;
+pub mod linalg;
+pub mod metrics;
+pub mod runtime;
+pub mod serve;
+pub mod util;
+
+pub use anyhow::{Context, Result};

@@ -1,0 +1,98 @@
+//! Dense linear algebra for the activation-spectrum analytics (Fig. 2 and
+//! Appendix A): matrices, one-sided Jacobi SVD, effective rank r(α) (Eq. 1).
+//!
+//! Implemented in-tree (the offline vendor set has no LAPACK bindings); the
+//! activation matrices we decompose are at most a few thousand × a few
+//! hundred, well within one-sided Jacobi's comfort zone.
+
+pub mod svd;
+
+pub use svd::{effective_rank, singular_values, spectrum_energy};
+
+/// Row-major dense f64 matrix.
+#[derive(Clone, Debug)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_rows(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data }
+    }
+
+    /// Build from an f32 activation dump (what the runtime hands us).
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data: data.iter().map(|&x| x as f64).collect() }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+
+    /// AᵀA — the Gram matrix whose eigenvalues are σᵢ² of A.
+    pub fn gram(&self) -> Mat {
+        let (n, c) = (self.rows, self.cols);
+        let mut g = Mat::zeros(c, c);
+        for i in 0..c {
+            for j in i..c {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += self.data[k * c + i] * self.data[k * c + j];
+                }
+                *g.at_mut(i, j) = s;
+                *g.at_mut(j, i) = s;
+            }
+        }
+        g
+    }
+
+    pub fn frobenius_sq(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                *t.at_mut(j, i) = self.at(i, j);
+            }
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gram_symmetric_psd_diag() {
+        let m = Mat::from_rows(3, 2, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let g = m.gram();
+        assert_eq!(g.rows, 2);
+        assert_eq!(g.at(0, 1), g.at(1, 0));
+        // trace(G) = ||A||_F^2
+        assert!((g.at(0, 0) + g.at(1, 1) - m.frobenius_sq()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = Mat::from_rows(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let t = m.transpose().transpose();
+        assert_eq!(m.data, t.data);
+    }
+}

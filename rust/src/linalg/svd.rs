@@ -1,0 +1,216 @@
+//! Singular values via cyclic one-sided Jacobi, plus the paper's effective
+//! rank r(α) (Eq. 1).
+//!
+//! One-sided Jacobi rotates column pairs of A until all columns are mutually
+//! orthogonal; the column norms are then the singular values. Numerically
+//! robust for the tall-thin activation matrices we analyze, with quadratic
+//! convergence once nearly orthogonal.
+
+use super::Mat;
+
+/// Singular values of `a` in descending order.
+///
+/// For speed on tall matrices we first reduce to the Gram matrix
+/// G = AᵀA (cols × cols) and run two-sided Jacobi eigen-iteration on G —
+/// eigenvalues of G are σᵢ². This preserves the spectrum exactly and costs
+/// O(n·c²) + O(c³) instead of O(n·c·sweeps).
+pub fn singular_values(a: &Mat) -> Vec<f64> {
+    let g = if a.rows >= a.cols { a.gram() } else { a.transpose().gram() };
+    let mut ev = jacobi_eigenvalues(g);
+    // clamp tiny negatives from roundoff
+    for v in ev.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+    let mut sv: Vec<f64> = ev.into_iter().map(f64::sqrt).collect();
+    sv.sort_by(|x, y| y.partial_cmp(x).unwrap());
+    sv
+}
+
+/// Eigenvalues of a symmetric matrix by cyclic Jacobi rotations.
+fn jacobi_eigenvalues(mut g: Mat) -> Vec<f64> {
+    let n = g.rows;
+    assert_eq!(n, g.cols);
+    if n == 0 {
+        return vec![];
+    }
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += g.at(i, j) * g.at(i, j);
+            }
+        }
+        let scale: f64 = (0..n).map(|i| g.at(i, i).abs()).sum::<f64>().max(1e-300);
+        if off.sqrt() <= 1e-14 * scale {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = g.at(p, q);
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = g.at(p, p);
+                let aqq = g.at(q, q);
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p, q
+                for k in 0..n {
+                    let gkp = g.at(k, p);
+                    let gkq = g.at(k, q);
+                    *g.at_mut(k, p) = c * gkp - s * gkq;
+                    *g.at_mut(k, q) = s * gkp + c * gkq;
+                }
+                for k in 0..n {
+                    let gpk = g.at(p, k);
+                    let gqk = g.at(q, k);
+                    *g.at_mut(p, k) = c * gpk - s * gqk;
+                    *g.at_mut(q, k) = s * gpk + c * gqk;
+                }
+            }
+        }
+    }
+    (0..n).map(|i| g.at(i, i)).collect()
+}
+
+/// Eq. (1): minimal k with Σ_{i≤k} σᵢ² / Σ σᵢ² ≥ α.
+pub fn effective_rank(singular_values: &[f64], alpha: f64) -> usize {
+    let total: f64 = singular_values.iter().map(|s| s * s).sum();
+    if total <= 0.0 {
+        return 0;
+    }
+    let mut acc = 0.0;
+    for (k, s) in singular_values.iter().enumerate() {
+        acc += s * s;
+        if acc / total >= alpha {
+            return k + 1;
+        }
+    }
+    singular_values.len()
+}
+
+/// Cumulative spectral-energy curve (Fig. 2a's y-axis after normalizing).
+pub fn spectrum_energy(singular_values: &[f64]) -> Vec<f64> {
+    let total: f64 = singular_values.iter().map(|s| s * s).sum();
+    let mut acc = 0.0;
+    singular_values
+        .iter()
+        .map(|s| {
+            acc += s * s;
+            if total > 0.0 {
+                acc / total
+            } else {
+                0.0
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn diagonal_matrix_exact() {
+        let mut m = Mat::zeros(4, 4);
+        for (i, v) in [5.0, 3.0, 2.0, 1.0].iter().enumerate() {
+            *m.at_mut(i, i) = *v;
+        }
+        let sv = singular_values(&m);
+        for (got, want) in sv.iter().zip([5.0, 3.0, 2.0, 1.0]) {
+            assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn rank_one_matrix() {
+        // outer product u·vᵀ has a single nonzero singular value ‖u‖‖v‖
+        let u = [1.0, 2.0, 3.0];
+        let v = [4.0, 5.0];
+        let mut m = Mat::zeros(3, 2);
+        for i in 0..3 {
+            for j in 0..2 {
+                *m.at_mut(i, j) = u[i] * v[j];
+            }
+        }
+        let sv = singular_values(&m);
+        let un: f64 = u.iter().map(|x| x * x).sum::<f64>().sqrt();
+        let vn: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+        assert!((sv[0] - un * vn).abs() < 1e-9);
+        assert!(sv[1] < 1e-6 * sv[0]);
+        assert_eq!(effective_rank(&sv, 0.95), 1);
+    }
+
+    #[test]
+    fn frobenius_identity_random() {
+        // Σσ² = ‖A‖_F² — a strong global check on the eigen-iteration.
+        let mut rng = Rng::new(9);
+        let (n, c) = (60, 24);
+        let data: Vec<f64> = (0..n * c).map(|_| rng.normal()).collect();
+        let m = Mat::from_rows(n, c, data);
+        let sv = singular_values(&m);
+        let sum_sq: f64 = sv.iter().map(|s| s * s).sum();
+        assert!((sum_sq - m.frobenius_sq()).abs() / m.frobenius_sq() < 1e-10);
+        assert_eq!(sv.len(), c);
+        assert!(sv.windows(2).all(|w| w[0] >= w[1]));
+    }
+
+    #[test]
+    fn low_rank_plus_noise_effective_rank() {
+        // A = (rank 4 structure) + tiny noise ⇒ r(0.95) ≈ 4 ≪ 32.
+        let mut rng = Rng::new(3);
+        let (n, c, k) = (400, 32, 4);
+        let u: Vec<f64> = (0..n * k).map(|_| rng.normal()).collect();
+        let v: Vec<f64> = (0..k * c).map(|_| rng.normal()).collect();
+        let mut m = Mat::zeros(n, c);
+        for i in 0..n {
+            for j in 0..c {
+                let mut s = 0.0;
+                for l in 0..k {
+                    s += u[i * k + l] * v[l * c + j];
+                }
+                *m.at_mut(i, j) = s + 0.01 * rng.normal();
+            }
+        }
+        let sv = singular_values(&m);
+        let r = effective_rank(&sv, 0.95);
+        assert!(r <= k + 1, "effective rank {r} > {k}+1");
+    }
+
+    #[test]
+    fn energy_curve_monotone_to_one() {
+        let sv = [3.0, 2.0, 1.0, 0.5];
+        let e = spectrum_energy(&sv);
+        assert!(e.windows(2).all(|w| w[1] >= w[0]));
+        assert!((e.last().unwrap() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wide_matrix_same_spectrum_as_transpose() {
+        let mut rng = Rng::new(11);
+        let data: Vec<f64> = (0..8 * 20).map(|_| rng.normal()).collect();
+        let m = Mat::from_rows(8, 20, data);
+        let s1 = singular_values(&m);
+        let s2 = singular_values(&m.transpose());
+        for (a, b) in s1.iter().zip(&s2) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn effective_rank_alpha_monotone() {
+        let sv = [10.0, 5.0, 2.0, 1.0, 0.1];
+        let mut prev = 0;
+        for alpha in [0.5, 0.8, 0.9, 0.99, 0.9999] {
+            let r = effective_rank(&sv, alpha);
+            assert!(r >= prev);
+            prev = r;
+        }
+    }
+}

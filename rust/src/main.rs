@@ -1,0 +1,226 @@
+//! `cola` — the launcher CLI for the CoLA training/serving runtime.
+//!
+//! Subcommands:
+//!   train     train an artifact (e.g. --artifact p60m_cola steps=400)
+//!   eval      evaluate validation perplexity of a checkpoint
+//!   serve     bring up the inference engine and run a demo workload
+//!   rank      activation-spectrum analysis (Fig. 2) on an artifact
+//!   cost      print the analytic paper tables (2/3/4, Fig 5/6/7 data)
+//!   data-gen  pre-build the corpus + BPE tokenizer caches
+//!
+//! Config values are `key=value` pairs after flags (see config::TrainConfig).
+
+use anyhow::{Context, Result};
+use cola::config::{apply_train_overrides, ServeConfig, TrainConfig};
+use cola::coordinator::Trainer;
+use cola::costmodel::{tables, PaperPreset, PAPER_PRESETS};
+use cola::data::{corpus::CorpusCfg, CorpusGen};
+use cola::metrics;
+use cola::serve::Engine;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: cola <train|eval|serve|rank|cost|data-gen> [--artifact NAME] [key=value ...]\n\
+         run `cola cost` for the analytic paper tables; `make artifacts` first for the rest."
+    );
+    std::process::exit(2);
+}
+
+/// Split argv into (flags map, key=value overrides).
+fn parse_args(
+    args: &[String],
+) -> (std::collections::HashMap<String, String>, Vec<(String, String)>) {
+    let mut flags = std::collections::HashMap::new();
+    let mut kvs = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") && !args[i + 1].contains('=') {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+                continue;
+            }
+            flags.insert(name.to_string(), "true".to_string());
+        } else if let Some((k, v)) = a.split_once('=') {
+            kvs.push((k.to_string(), v.to_string()));
+        } else {
+            eprintln!("unrecognized argument `{a}`");
+            usage();
+        }
+        i += 1;
+    }
+    (flags, kvs)
+}
+
+fn train_cfg(
+    flags: &std::collections::HashMap<String, String>,
+    kvs: &[(String, String)],
+) -> Result<TrainConfig> {
+    let mut cfg = TrainConfig::default();
+    if let Some(a) = flags.get("artifact") {
+        cfg.artifact = a.clone();
+    }
+    apply_train_overrides(&mut cfg, kvs)?;
+    Ok(cfg)
+}
+
+fn cmd_train(
+    flags: std::collections::HashMap<String, String>,
+    kvs: Vec<(String, String)>,
+) -> Result<()> {
+    let cfg = train_cfg(&flags, &kvs)?;
+    let mut tr = Trainer::new(cfg)?;
+    let report = tr.run()?;
+    println!(
+        "done: {} steps={} loss={:.4} val_ppl={:.3} {:.0} tok/s peak_rss={:.2} GB",
+        report.artifact,
+        report.steps,
+        report.final_loss,
+        report.val_ppl,
+        report.tokens_per_sec,
+        report.peak_rss_bytes as f64 / 1e9
+    );
+    Ok(())
+}
+
+fn cmd_eval(
+    flags: std::collections::HashMap<String, String>,
+    kvs: Vec<(String, String)>,
+) -> Result<()> {
+    let cfg = train_cfg(&flags, &kvs)?;
+    let mut tr = Trainer::new(cfg)?;
+    if let Some(ckpt) = flags.get("checkpoint") {
+        tr.load_checkpoint(std::path::Path::new(ckpt))?;
+    }
+    let ppl = tr.evaluate(16)?;
+    println!("val_ppl={ppl:.3}");
+    Ok(())
+}
+
+fn cmd_serve(flags: std::collections::HashMap<String, String>) -> Result<()> {
+    let mut cfg = ServeConfig::default();
+    if let Some(a) = flags.get("artifact") {
+        cfg.artifact = a.clone();
+    }
+    if let Some(n) = flags.get("max-new") {
+        cfg.max_new_tokens = n.parse().context("max-new")?;
+    }
+    let n_requests: usize = flags.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(16);
+
+    let (handle, join) = Engine::spawn(cfg.clone())?;
+    let bpe = cola::coordinator::trainer::shared_bpe(
+        cola::runtime::ArtifactDir::open_named(&cfg.artifact)?.manifest.preset.vocab,
+    )?;
+    let mut gen = CorpusGen::new(CorpusCfg::default());
+    let mut latencies = Vec::new();
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for _ in 0..n_requests {
+        let prompt = bpe.encode(&gen.text(60));
+        pending.push(handle.submit(prompt, cfg.max_new_tokens));
+    }
+    let mut total_tokens = 0;
+    for rx in pending {
+        let resp = rx.recv()?;
+        total_tokens += resp.tokens.len();
+        latencies.push(resp.latency.as_secs_f64() * 1000.0);
+    }
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50 = latencies[latencies.len() / 2];
+    let p95 = latencies[(latencies.len() * 95 / 100).min(latencies.len() - 1)];
+    println!(
+        "served {n_requests} requests, {total_tokens} tokens in {:.2}s ({:.0} tok/s) p50={p50:.0}ms p95={p95:.0}ms",
+        t0.elapsed().as_secs_f64(),
+        total_tokens as f64 / t0.elapsed().as_secs_f64()
+    );
+    drop(handle);
+    let _ = join.join();
+    Ok(())
+}
+
+fn cmd_rank(
+    flags: std::collections::HashMap<String, String>,
+    kvs: Vec<(String, String)>,
+) -> Result<()> {
+    let cfg = train_cfg(&flags, &kvs)?;
+    let alpha: f64 = flags.get("alpha").map(|s| s.parse()).transpose()?.unwrap_or(0.95);
+    let mut tr = Trainer::new(cfg)?;
+    if let Some(ckpt) = flags.get("checkpoint") {
+        tr.load_checkpoint(std::path::Path::new(ckpt))?;
+    }
+    let ranks = tr.rank_probe(alpha)?;
+    println!("effective rank r({alpha}) per tap:");
+    for (name, r, d) in ranks {
+        println!("  {name:>12}: {r:>4} / {d}");
+    }
+    Ok(())
+}
+
+fn cmd_cost(flags: std::collections::HashMap<String, String>) -> Result<()> {
+    let scale = flags.get("scale").map(String::as_str).unwrap_or("llama1b");
+    let batch: usize = flags.get("batch").map(|s| s.parse()).transpose()?.unwrap_or(16);
+    let p = PaperPreset::by_name(scale)
+        .with_context(|| format!("unknown scale `{scale}` (try llama60m..llama7b)"))?;
+    println!("== Table 2: full-rank per-layer FLOPs ({scale}, batch {batch}) ==");
+    println!("{}", tables::render_table2(p, batch));
+    println!("== Table 3: per-method training compute ==");
+    println!("{}", tables::render_table3(p, batch));
+    println!("== Table 4: checkpointing memory/recompute ==");
+    println!("{}", tables::render_table4(p, batch));
+    println!("== Fig 5/6: memory breakdown ==");
+    println!("{}", tables::render_membreakdown(p, 32));
+    println!("== all paper scales (Table 3 ratios at batch {batch}) ==");
+    for p in &PAPER_PRESETS {
+        let g = cola::costmodel::Geometry::from_paper(p, p.tokens_per_batch(batch));
+        let full = cola::costmodel::compute_total(cola::costmodel::Method::FullRank, &g);
+        let cola_c = cola::costmodel::compute_total(cola::costmodel::Method::Cola, &g);
+        println!("  {:>10}: C_CoLA/C_full = {:.2}", p.name, cola_c / full);
+    }
+    Ok(())
+}
+
+fn cmd_data_gen(flags: std::collections::HashMap<String, String>) -> Result<()> {
+    let out = flags.get("out").map(String::as_str).unwrap_or("data_cache");
+    // SAFETY: single-threaded at this point in main.
+    unsafe { std::env::set_var("COLA_DATA_CACHE", out) };
+    for vocab in [512usize, 1024, 2048, 4096] {
+        let bpe = cola::coordinator::trainer::shared_bpe(vocab)?;
+        println!("bpe vocab={} ready ({} merges applied)", vocab, bpe.vocab_size() - 260);
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        usage();
+    }
+    metrics::set_verbose(std::env::var("COLA_VERBOSE").is_ok());
+    let (flags, kvs) = parse_args(&args[1..]);
+    match args[0].as_str() {
+        "train" => cmd_train(flags, kvs),
+        // internal: benches spawn this to get per-variant peak-RSS in a
+        // fresh process; results land in the shared run cache.
+        "train-cached" => {
+            let artifact = flags.get("artifact").context("--artifact required")?;
+            let steps: usize = flags.get("steps").context("--steps")?.parse()?;
+            let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(0);
+            let r = cola::coordinator::cached_or_train(artifact, steps, seed)?;
+            println!(
+                "cached: {} val_ppl={:.3} tok/s={:.0} rss={:.2}GB",
+                r.artifact,
+                r.val_ppl,
+                r.tokens_per_sec,
+                r.peak_rss_bytes as f64 / 1e9
+            );
+            Ok(())
+        }
+        "eval" => cmd_eval(flags, kvs),
+        "serve" => cmd_serve(flags),
+        "rank" => cmd_rank(flags, kvs),
+        "cost" => cmd_cost(flags),
+        "data-gen" => cmd_data_gen(flags),
+        _ => usage(),
+    }
+}

@@ -1,0 +1,159 @@
+//! Metrics: throughput meters, RSS probing, and structured run logs.
+
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+static VERBOSE: AtomicBool = AtomicBool::new(false);
+
+pub fn set_verbose(v: bool) {
+    VERBOSE.store(v, Ordering::Relaxed);
+}
+
+pub fn log_debug(msg: &str) {
+    if VERBOSE.load(Ordering::Relaxed) {
+        eprintln!("[cola] {msg}");
+    }
+}
+
+pub fn log_info(msg: &str) {
+    eprintln!("[cola] {msg}");
+}
+
+/// Resident set size in bytes (Linux /proc/self/statm), our measured-memory
+/// probe for Tables 6/9/11. Returns 0 on failure.
+pub fn rss_bytes() -> usize {
+    let Ok(s) = std::fs::read_to_string("/proc/self/statm") else {
+        return 0;
+    };
+    let pages: usize = s
+        .split_whitespace()
+        .nth(1)
+        .and_then(|x| x.parse().ok())
+        .unwrap_or(0);
+    pages * 4096
+}
+
+/// Peak RSS (VmHWM) in bytes — what a GPU-memory high-water mark maps to on
+/// this CPU substrate.
+pub fn peak_rss_bytes() -> usize {
+    let Ok(s) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    for line in s.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: usize = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0);
+            return kb * 1024;
+        }
+    }
+    0
+}
+
+/// Tokens/sec meter over a training or serving run.
+pub struct Throughput {
+    start: Instant,
+    tokens: u64,
+    steps: u64,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        Self { start: Instant::now(), tokens: 0, steps: 0 }
+    }
+
+    pub fn record(&mut self, tokens: u64) {
+        self.tokens += tokens;
+        self.steps += 1;
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.tokens as f64 / self.start.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    pub fn secs_per_step(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() / self.steps.max(1) as f64
+    }
+
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+}
+
+/// Exponential moving average (loss smoothing in the train log).
+#[derive(Clone, Copy)]
+pub struct Ema {
+    pub value: f64,
+    alpha: f64,
+    init: bool,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Self {
+        Self { value: 0.0, alpha, init: false }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        if !self.init {
+            self.value = x;
+            self.init = true;
+        } else {
+            self.value = self.alpha * x + (1.0 - self.alpha) * self.value;
+        }
+        self.value
+    }
+}
+
+/// Append one JSON line to a run log (creates parents).
+pub fn append_jsonl(path: &Path, line: &crate::util::json::Json) -> anyhow::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    writeln!(f, "{line}")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rss_positive() {
+        assert!(rss_bytes() > 0);
+        assert!(peak_rss_bytes() >= rss_bytes() / 2);
+    }
+
+    #[test]
+    fn ema_converges() {
+        let mut e = Ema::new(0.5);
+        for _ in 0..20 {
+            e.update(2.0);
+        }
+        assert!((e.value - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn throughput_counts() {
+        let mut t = Throughput::new();
+        t.record(100);
+        t.record(100);
+        assert_eq!(t.steps(), 2);
+        assert!(t.tokens_per_sec() > 0.0);
+    }
+}

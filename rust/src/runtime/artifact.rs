@@ -1,0 +1,80 @@
+//! Artifact directory: lazily compiles the HLO step functions it contains
+//! and loads the initial state.
+
+use super::{client, Executor, Manifest};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use xla::FromRawBytes;
+
+/// One `(preset, variant)` artifact directory under `artifacts/`.
+pub struct ArtifactDir {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    compiled: Mutex<HashMap<String, std::rc::Rc<Executor>>>,
+}
+
+impl ArtifactDir {
+    /// Open and validate an artifact directory.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        manifest.validate()?;
+        Ok(Self { dir, manifest, compiled: Mutex::new(HashMap::new()) })
+    }
+
+    /// Resolve `artifacts/<name>` relative to the repo root (or $COLA_ARTIFACTS).
+    pub fn open_named(name: &str) -> Result<Self> {
+        let root = std::env::var("COLA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        let dir = PathBuf::from(root).join(name);
+        Self::open(&dir).with_context(|| {
+            format!(
+                "artifact `{name}` not found under {} — run `make artifacts`",
+                dir.display()
+            )
+        })
+    }
+
+    pub fn has_step(&self, step: &str) -> bool {
+        self.dir.join(format!("{step}.hlo.txt")).exists()
+    }
+
+    /// Compile (once) and return a step function by name, e.g. "train_step".
+    pub fn step(&self, step: &str) -> Result<std::rc::Rc<Executor>> {
+        let mut cache = self.compiled.lock().unwrap();
+        if let Some(e) = cache.get(step) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(format!("{step}.hlo.txt"));
+        let exe = Executor::compile_file(&path)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        let arc = std::rc::Rc::new(exe);
+        cache.insert(step.to_string(), arc.clone());
+        Ok(arc)
+    }
+
+    /// Load `state0.npz` as host literals in layout order (keys s000000..).
+    pub fn load_state0(&self) -> Result<Vec<xla::Literal>> {
+        let path = self.dir.join("state0.npz");
+        let mut entries = xla::Literal::read_npz(&path, &())
+            .with_context(|| format!("reading {}", path.display()))?;
+        entries.sort_by(|a, b| a.0.cmp(&b.0));
+        anyhow::ensure!(
+            entries.len() == self.manifest.n_state,
+            "state0.npz has {} arrays, manifest says {}",
+            entries.len(),
+            self.manifest.n_state
+        );
+        Ok(entries.into_iter().map(|(_, l)| l).collect())
+    }
+
+    /// Upload the initial state to device buffers.
+    pub fn load_state0_buffers(&self) -> Result<Vec<xla::PjRtBuffer>> {
+        let c = client()?;
+        let lits = self.load_state0()?;
+        lits.iter()
+            .map(|l| Ok(c.buffer_from_host_literal(None, l)?))
+            .collect()
+    }
+}

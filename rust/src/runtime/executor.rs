@@ -1,0 +1,118 @@
+//! Executor: one compiled HLO module + execution helpers and timing.
+
+use super::client;
+use anyhow::Result;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// A compiled step function. All step functions return a single tuple
+/// (lowered with `return_tuple=True`), which `run`/`run_b` decompose.
+pub struct Executor {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+    calls: AtomicU64,
+    nanos: AtomicU64,
+}
+
+/// Convenience alias used by coordinator code.
+pub type StepFn = std::rc::Rc<Executor>;
+
+impl Executor {
+    /// Load HLO text, reassign ids via the text parser, compile on PJRT CPU.
+    pub fn compile_file(path: &Path) -> Result<Self> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client()?.compile(&comp)?;
+        let name = path
+            .file_name()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        crate::metrics::log_debug(&format!(
+            "compiled {name} in {:.2}s",
+            t0.elapsed().as_secs_f64()
+        ));
+        Ok(Self { exe, name, calls: AtomicU64::new(0), nanos: AtomicU64::new(0) })
+    }
+
+    /// Execute with host literals; returns the decomposed output tuple as
+    /// device buffers.
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::PjRtBuffer>> {
+        let t0 = Instant::now();
+        let out = self.exe.execute::<xla::Literal>(args)?;
+        self.note(t0);
+        Self::untuple(out)
+    }
+
+    /// Execute with device buffers (the hot path — state stays on device).
+    pub fn run_b(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        let t0 = Instant::now();
+        let out = self.exe.execute_b::<&xla::PjRtBuffer>(args)?;
+        self.note(t0);
+        Self::untuple(out)
+    }
+
+    /// The PJRT output is `Vec<Vec<PjRtBuffer>>` (replicas × outputs). With
+    /// `return_tuple=True` lowering, CPU PJRT untuples to N buffers already;
+    /// handle both the 1-tuple-buffer and N-buffer conventions.
+    fn untuple(mut out: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<xla::PjRtBuffer>> {
+        anyhow::ensure!(!out.is_empty(), "executable produced no replica output");
+        let bufs = out.swap_remove(0);
+        Ok(bufs)
+    }
+
+    fn note(&self, t0: Instant) {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// (calls, total seconds) since construction.
+    pub fn stats(&self) -> (u64, f64) {
+        (
+            self.calls.load(Ordering::Relaxed),
+            self.nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal construction helpers
+// ---------------------------------------------------------------------------
+
+/// i32 tensor literal from a flat slice + dims.
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// f32 scalar literal.
+pub fn lit_f32(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// i32 scalar literal.
+pub fn lit_i32_scalar(x: i32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Read an f32 scalar (or first element) back from a device buffer.
+pub fn buf_f32(buf: &xla::PjRtBuffer) -> Result<f32> {
+    let lit = buf.to_literal_sync()?;
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+/// Read a whole f32 buffer back to host.
+pub fn buf_f32_vec(buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+    Ok(buf.to_literal_sync()?.to_vec::<f32>()?)
+}
+
+/// Read a whole i32 buffer back to host.
+pub fn buf_i32_vec(buf: &xla::PjRtBuffer) -> Result<Vec<i32>> {
+    Ok(buf.to_literal_sync()?.to_vec::<i32>()?)
+}
+
+/// Upload a literal to the device.
+pub fn to_device(lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+    Ok(client()?.buffer_from_host_literal(None, lit)?)
+}

@@ -1,0 +1,137 @@
+//! Typed view of an artifact's `manifest.json` (written by aot.py).
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Geometry of the preset the artifact was lowered for.
+#[derive(Clone, Debug)]
+pub struct PresetInfo {
+    pub name: String,
+    pub d: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub d_ff: usize,
+    pub rank: usize,
+    pub batch: usize,
+    pub n_micro: usize,
+    pub lr: f64,
+    pub warmup_frac: f64,
+    pub total_steps: usize,
+    pub is_encoder: bool,
+}
+
+/// Everything the coordinator needs to know about one artifact directory.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    pub variant: String,
+    pub sigma_mode: String,
+    pub rank: usize,
+    pub objective: String, // "lm" | "mlm"
+    pub n_state: usize,
+    pub n_params: usize,
+    pub param_names: Vec<String>,
+    pub opt_names: Vec<String>,
+    pub state_shapes: Vec<Vec<usize>>,
+    pub tokens_shape: Vec<usize>, // [n_micro, mb, T(+1)]
+    pub eval_batch: usize,
+    pub n_total_params: usize,
+    pub n_trainable_params: usize,
+    pub preset: PresetInfo,
+    // serving geometry (present when the artifact was built with --serve)
+    pub serve_batch: Option<usize>,
+    pub prompt_len: Option<usize>,
+    pub max_len: Option<usize>,
+    // GLUE-proxy head (encoder presets)
+    pub n_classes: Option<usize>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+
+        let p = j.req("preset")?;
+        let preset = PresetInfo {
+            name: p.req("name")?.as_str().unwrap_or("").to_string(),
+            d: p.req("d")?.as_usize().context("d")?,
+            n_layers: p.req("n_layers")?.as_usize().context("n_layers")?,
+            n_heads: p.req("n_heads")?.as_usize().context("n_heads")?,
+            vocab: p.req("vocab")?.as_usize().context("vocab")?,
+            seq_len: p.req("seq_len")?.as_usize().context("seq_len")?,
+            d_ff: p.req("d_ff")?.as_usize().context("d_ff")?,
+            rank: p.req("rank")?.as_usize().context("rank")?,
+            batch: p.req("batch")?.as_usize().context("batch")?,
+            n_micro: p.req("n_micro")?.as_usize().context("n_micro")?,
+            lr: p.req("lr")?.as_f64().context("lr")?,
+            warmup_frac: p.req("warmup_frac")?.as_f64().context("warmup_frac")?,
+            total_steps: p.req("total_steps")?.as_usize().context("total_steps")?,
+            is_encoder: p.req("is_encoder")?.as_bool().unwrap_or(false),
+        };
+
+        let state_shapes = j
+            .req("state_shapes")?
+            .as_arr()
+            .context("state_shapes")?
+            .iter()
+            .map(|s| s.usize_vec())
+            .collect();
+
+        Ok(Manifest {
+            name: j.req("name")?.as_str().unwrap_or("").to_string(),
+            variant: j.req("variant")?.as_str().unwrap_or("").to_string(),
+            sigma_mode: j.req("sigma_mode")?.as_str().unwrap_or("").to_string(),
+            rank: j.req("rank")?.as_usize().context("rank")?,
+            objective: j.req("objective")?.as_str().unwrap_or("lm").to_string(),
+            n_state: j.req("n_state")?.as_usize().context("n_state")?,
+            n_params: j.req("n_params")?.as_usize().context("n_params")?,
+            param_names: j.req("param_names")?.str_vec(),
+            opt_names: j.req("opt_names")?.str_vec(),
+            state_shapes,
+            tokens_shape: j.req("tokens_shape")?.usize_vec(),
+            eval_batch: j.req("eval_batch")?.as_usize().unwrap_or(0),
+            n_total_params: j.req("n_total_params")?.as_usize().unwrap_or(0),
+            n_trainable_params: j.req("n_trainable_params")?.as_usize().unwrap_or(0),
+            preset,
+            serve_batch: j.get("serve_batch").and_then(Json::as_usize),
+            prompt_len: j.get("prompt_len").and_then(Json::as_usize),
+            max_len: j.get("max_len").and_then(Json::as_usize),
+            n_classes: j.get("n_classes").and_then(Json::as_usize),
+        })
+    }
+
+    /// Model-state bytes at f32: params + optimizer entries (Table 5 Mem column
+    /// is re-derived analytically in costmodel; this is the artifact's truth).
+    pub fn state_bytes(&self) -> usize {
+        self.state_shapes
+            .iter()
+            .map(|s| 4 * s.iter().product::<usize>().max(1))
+            .sum()
+    }
+
+    /// Sanity checks shared by every loader path.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.n_state == self.n_params + self.opt_names.len(),
+            "state layout mismatch: {} != {} + {}",
+            self.n_state,
+            self.n_params,
+            self.opt_names.len()
+        );
+        anyhow::ensure!(self.param_names.len() == self.n_params, "param name count");
+        anyhow::ensure!(self.state_shapes.len() == self.n_state, "shape count");
+        anyhow::ensure!(
+            self.tokens_shape.len() == 3,
+            "tokens_shape must be [n_micro, mb, T]"
+        );
+        let mut sorted = self.param_names.clone();
+        sorted.sort();
+        anyhow::ensure!(sorted == self.param_names, "param_names must be sorted");
+        Ok(())
+    }
+}

@@ -1,0 +1,37 @@
+//! Runtime: loads AOT artifacts (HLO text + state0.npz + manifest.json)
+//! produced by `python/compile/aot.py` and executes them on the PJRT CPU
+//! client. Python never runs on this path.
+//!
+//! The interchange contract is documented in aot.py; in short every step
+//! function takes `(state..., scalars/tokens...)` and returns
+//! `(state'..., outputs...)` as one tuple, with `state` an opaque ordered
+//! buffer list the coordinator swaps functionally between steps.
+
+pub mod artifact;
+pub mod executor;
+pub mod manifest;
+
+pub use artifact::ArtifactDir;
+pub use executor::{Executor, StepFn};
+pub use manifest::Manifest;
+
+use std::cell::RefCell;
+
+thread_local! {
+    static CLIENT: RefCell<Option<xla::PjRtClient>> = const { RefCell::new(None) };
+}
+
+/// Thread-local PJRT CPU client. The `xla` crate's PJRT wrappers are
+/// `Rc`-based (not `Send`), so all XLA objects — client, executables,
+/// buffers — live on the thread that created them. The coordinator and the
+/// serving engine therefore own a single "device thread" each and talk to
+/// the rest of the process over channels (see `serve::engine`).
+pub fn client() -> anyhow::Result<xla::PjRtClient> {
+    CLIENT.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(xla::PjRtClient::cpu()?);
+        }
+        Ok(slot.as_ref().unwrap().clone())
+    })
+}

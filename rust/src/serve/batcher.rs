@@ -1,0 +1,87 @@
+//! Dynamic batcher: groups requests into fixed-size decode batches within a
+//! latency window (max_wait), the standard continuous-serving tradeoff.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Collects up to `batch_size` items from `rx`, waiting at most `max_wait`
+/// after the first item arrives. Returns an empty vec if the channel closed
+/// with nothing pending.
+pub struct DynamicBatcher {
+    pub batch_size: usize,
+    pub max_wait: Duration,
+}
+
+impl DynamicBatcher {
+    pub fn new(batch_size: usize, max_wait: Duration) -> Self {
+        Self { batch_size, max_wait }
+    }
+
+    /// Blocking collect. `None` = channel closed and drained.
+    pub fn collect<T>(&self, rx: &Receiver<T>) -> Option<Vec<T>> {
+        // block for the first item
+        let first = rx.recv().ok()?;
+        let mut batch = vec![first];
+        let deadline = Instant::now() + self.max_wait;
+        while batch.len() < self.batch_size {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(item) => batch.push(item),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn collects_full_batch_immediately() {
+        let (tx, rx) = channel();
+        for i in 0..4 {
+            tx.send(i).unwrap();
+        }
+        let b = DynamicBatcher::new(4, Duration::from_millis(100));
+        let got = b.collect(&rx).unwrap();
+        assert_eq!(got, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn flushes_partial_after_window() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        let b = DynamicBatcher::new(8, Duration::from_millis(20));
+        let t0 = Instant::now();
+        let got = b.collect(&rx).unwrap();
+        assert_eq!(got, vec![1]);
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+    }
+
+    #[test]
+    fn none_when_closed_empty() {
+        let (tx, rx) = channel::<i32>();
+        drop(tx);
+        let b = DynamicBatcher::new(4, Duration::from_millis(5));
+        assert!(b.collect(&rx).is_none());
+    }
+
+    #[test]
+    fn caps_at_batch_size() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let b = DynamicBatcher::new(4, Duration::from_millis(50));
+        assert_eq!(b.collect(&rx).unwrap().len(), 4);
+        assert_eq!(b.collect(&rx).unwrap().len(), 4);
+        assert_eq!(b.collect(&rx).unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,188 @@
+//! The serving engine thread: prefill + greedy decode over batched requests.
+//!
+//! Geometry comes from the artifact's manifest (`serve_batch`, `prompt_len`,
+//! `max_len`); prompts are right-padded/truncated to `prompt_len` and
+//! batches are padded with dummy rows so every PJRT call sees the static
+//! shapes the artifact was lowered for (dummy rows decode into the void).
+
+use crate::config::ServeConfig;
+use crate::data::tokenizer;
+use crate::metrics;
+use crate::runtime::executor::{buf_i32_vec, lit_i32, to_device};
+use crate::runtime::ArtifactDir;
+use crate::serve::DynamicBatcher;
+use anyhow::{Context, Result};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::{Duration, Instant};
+
+/// One generation request.
+pub struct Request {
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub resp: Sender<Response>,
+}
+
+/// Completion for one request.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub tokens: Vec<i32>,
+    /// end-to-end latency including queueing
+    pub latency: Duration,
+    /// decode throughput of the batch that served this request
+    pub batch_tokens_per_sec: f64,
+}
+
+/// Cloneable submit-side handle.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: Sender<Request>,
+}
+
+impl EngineHandle {
+    /// Submit a prompt; returns a receiver for the completion.
+    pub fn submit(&self, prompt: Vec<i32>, max_new: usize) -> Receiver<Response> {
+        let (tx, rx) = channel();
+        let _ = self.tx.send(Request { prompt, max_new_tokens: max_new, resp: tx });
+        rx
+    }
+
+    /// Blocking convenience call.
+    pub fn generate(&self, prompt: Vec<i32>, max_new: usize) -> Result<Response> {
+        self.submit(prompt, max_new)
+            .recv()
+            .context("engine thread dropped the request")
+    }
+}
+
+/// Engine configuration + spawn.
+pub struct Engine;
+
+impl Engine {
+    /// Spawn the engine thread. Returns (handle, join guard).
+    pub fn spawn(cfg: ServeConfig) -> Result<(EngineHandle, std::thread::JoinHandle<()>)> {
+        let (tx, rx) = channel::<Request>();
+        let artifact = cfg.artifact.clone();
+        // Fail fast on a missing artifact before spawning.
+        ArtifactDir::open_named(&artifact)?;
+        let join = std::thread::Builder::new()
+            .name("cola-serve-engine".into())
+            .spawn(move || {
+                if let Err(e) = Self::engine_main(&cfg, rx) {
+                    metrics::log_info(&format!("engine exited with error: {e:#}"));
+                }
+            })?;
+        Ok((EngineHandle { tx }, join))
+    }
+
+    fn engine_main(cfg: &ServeConfig, rx: Receiver<Request>) -> Result<()> {
+        let art = ArtifactDir::open_named(&cfg.artifact)?;
+        let man = art.manifest.clone();
+        let (serve_bs, prompt_len, max_len) = (
+            man.serve_batch.context("artifact not built with --serve")?,
+            man.prompt_len.unwrap_or(8),
+            man.max_len.unwrap_or(man.preset.seq_len),
+        );
+        let prefill = art.step("prefill")?;
+        let decode = art.step("decode_step")?;
+        // params stay on device for the engine's lifetime
+        let params = art.load_state0_buffers()?;
+        let params = &params[..man.n_params];
+
+        let batcher = DynamicBatcher::new(serve_bs, Duration::from_millis(cfg.max_wait_ms));
+        metrics::log_info(&format!(
+            "serve engine up: {} bs={} prompt_len={} max_len={}",
+            man.name, serve_bs, prompt_len, max_len
+        ));
+
+        while let Some(batch) = batcher.collect(&rx) {
+            let t0 = Instant::now();
+            let starts: Vec<Instant> = batch.iter().map(|_| t0).collect();
+            if let Err(e) = Self::serve_batch(
+                &man, prefill.as_ref(), decode.as_ref(), params, &batch, serve_bs,
+                prompt_len, max_len, &starts,
+            ) {
+                metrics::log_info(&format!("batch failed: {e:#}"));
+            }
+        }
+        Ok(())
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn serve_batch(
+        man: &crate::runtime::Manifest,
+        prefill: &crate::runtime::Executor,
+        decode: &crate::runtime::Executor,
+        params: &[xla::PjRtBuffer],
+        batch: &[Request],
+        serve_bs: usize,
+        prompt_len: usize,
+        max_len: usize,
+        starts: &[Instant],
+    ) -> Result<()> {
+        // assemble fixed-shape prompt tensor [serve_bs, prompt_len]
+        let mut toks = vec![tokenizer::PAD; serve_bs * prompt_len];
+        for (i, req) in batch.iter().enumerate() {
+            let p = &req.prompt;
+            let take = p.len().min(prompt_len);
+            // right-align so the last prompt token is at prompt_len-1
+            let dst = &mut toks[i * prompt_len..(i + 1) * prompt_len];
+            dst[prompt_len - take..].copy_from_slice(&p[p.len() - take..]);
+        }
+        let tok_buf = to_device(&lit_i32(&toks, &[serve_bs as i64, prompt_len as i64])?)?;
+
+        let mut refs: Vec<&xla::PjRtBuffer> = params.iter().collect();
+        refs.push(&tok_buf);
+        let mut out = prefill.run_b(&refs)?;
+        anyhow::ensure!(out.len() == 3, "prefill returns (next, kc, vc)");
+        let mut vcb = out.pop().unwrap();
+        let mut kcb = out.pop().unwrap();
+        let mut next = buf_i32_vec(&out[0])?;
+
+        let max_new = batch
+            .iter()
+            .map(|r| r.max_new_tokens)
+            .max()
+            .unwrap_or(1)
+            .min(max_len - prompt_len);
+
+        let mut generated: Vec<Vec<i32>> = vec![Vec::new(); batch.len()];
+        for (i, g) in generated.iter_mut().enumerate() {
+            g.push(next[i]);
+        }
+
+        let t_decode = Instant::now();
+        let mut decoded_tokens = 0usize;
+        for s in 0..max_new.saturating_sub(1) {
+            let pos = (prompt_len + s) as i32;
+            let tok_b = to_device(&lit_i32(&next, &[serve_bs as i64])?)?;
+            let pos_b = to_device(&xla::Literal::scalar(pos))?;
+            let mut refs: Vec<&xla::PjRtBuffer> = params.iter().collect();
+            refs.push(&kcb);
+            refs.push(&vcb);
+            refs.push(&tok_b);
+            refs.push(&pos_b);
+            let mut out = decode.run_b(&refs)?;
+            anyhow::ensure!(out.len() == 3, "decode returns (next, kc, vc)");
+            vcb = out.pop().unwrap();
+            kcb = out.pop().unwrap();
+            next = buf_i32_vec(&out[0])?;
+            for (i, g) in generated.iter_mut().enumerate() {
+                if g.len() < batch[i].max_new_tokens {
+                    g.push(next[i]);
+                }
+            }
+            decoded_tokens += serve_bs;
+        }
+        let tps = (decoded_tokens + serve_bs) as f64 / t_decode.elapsed().as_secs_f64().max(1e-9);
+
+        for (i, req) in batch.iter().enumerate() {
+            let _ = req.resp.send(Response {
+                tokens: generated[i].clone(),
+                latency: starts[i].elapsed(),
+                batch_tokens_per_sec: tps,
+            });
+        }
+        let _ = man;
+        Ok(())
+    }
+}

@@ -1,0 +1,14 @@
+//! Inference engine (Table 11's serving path): a dynamic batcher in front of
+//! the AOT prefill/decode artifacts with a device-resident KV cache.
+//!
+//! Threading model: PJRT objects are not `Send`, so a dedicated engine
+//! thread owns the client, executables, params and KV caches; callers submit
+//! `Request`s over an mpsc channel and receive completions over per-request
+//! channels. This is the same leader/worker shape a vLLM-style router uses,
+//! scaled to one CPU device.
+
+pub mod batcher;
+pub mod engine;
+
+pub use batcher::DynamicBatcher;
+pub use engine::{Engine, EngineHandle, Request, Response};

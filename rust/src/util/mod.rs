@@ -1,0 +1,24 @@
+//! Small in-tree substrates that replace crates absent from the offline
+//! vendor set: RNG, JSON, table printing, timing.
+
+pub mod json;
+pub mod rng;
+
+/// Format a float with engineering-style SI suffix (k/M/G/T/P).
+pub fn si(x: f64) -> String {
+    let ax = x.abs();
+    let (v, s) = if ax >= 1e15 {
+        (x / 1e15, "P")
+    } else if ax >= 1e12 {
+        (x / 1e12, "T")
+    } else if ax >= 1e9 {
+        (x / 1e9, "G")
+    } else if ax >= 1e6 {
+        (x / 1e6, "M")
+    } else if ax >= 1e3 {
+        (x / 1e3, "k")
+    } else {
+        (x, "")
+    };
+    format!("{v:.2}{s}")
+}

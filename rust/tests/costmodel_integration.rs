@@ -1,0 +1,102 @@
+//! Cost-model integration: the analytic formulas must agree with the real
+//! artifacts' parameter counts and with each other across scales, and the
+//! paper's headline constants must fall out.
+
+use cola::costmodel::memory::{activation_elems_per_layer, memory_breakdown, BF16};
+use cola::costmodel::{
+    c_cola, c_full_rank, cola_breakeven_rank, compute_total, params_total, Geometry, Method,
+    PaperPreset, PAPER_PRESETS,
+};
+use cola::runtime::ArtifactDir;
+
+#[test]
+fn analytic_params_match_artifact_manifests() {
+    // the python side counts parameters exactly; the analytic model must
+    // agree within 3% for full-rank and CoLA at every proxy scale.
+    for (preset, d, dff, r, layers, heads, vocab) in [
+        ("p60m", 128usize, 352usize, 32usize, 4usize, 4usize, 1024usize),
+        ("p130m", 192, 512, 48, 6, 6, 2048),
+        ("p350m", 256, 688, 64, 8, 8, 2048),
+    ] {
+        for (variant, method) in [("full", Method::FullRank), ("cola", Method::Cola)] {
+            let name = format!("{preset}_{variant}");
+            let Ok(art) = ArtifactDir::open_named(&name) else {
+                eprintln!("skipping {name} (run `make artifacts`)");
+                return;
+            };
+            let g = Geometry::new(d, dff, r, 1, heads, layers);
+            let analytic = params_total(method, &g, vocab)
+                // + norms (2 per layer + final) the closed form omits
+                + (2 * layers + 1) as f64 * d as f64;
+            let actual = art.manifest.n_total_params as f64;
+            let rel = (analytic - actual).abs() / actual;
+            assert!(rel < 0.03, "{name}: analytic {analytic:.0} vs manifest {actual:.0}");
+        }
+    }
+}
+
+#[test]
+fn paper_headline_constants() {
+    // 2x compute reduction at the paper's default ranks, 1B scale
+    let p = PaperPreset::by_name("llama1b").unwrap();
+    let g = Geometry::from_paper(p, p.seq_len);
+    let ratio = c_cola(&g) / c_full_rank(&g);
+    assert!((0.35..0.50).contains(&ratio), "CoLA-1B compute ratio {ratio}");
+
+    // Eq. (7) gives C_CoLA-1B ≈ 16.5nd² + 12n²d + 1.8nd·dff. The 16.5nd²
+    // term follows exactly from Eq. (6) at r=d/4 (66ndr = 16.5nd²); the
+    // 1.8nd·dff term uses the paper's loose r≈dff/10 regrouping and
+    // underestimates the exact 18nr·dff at the true 1B geometry, so we
+    // check the exact-term identity and require Eq. 7 to be a lower bound
+    // of the same magnitude.
+    let exact = c_cola(&g);
+    let gemm_sq = (48.0 + 18.0) * g.n * g.d * g.r; // = 16.5nd² at r=d/4
+    assert!((gemm_sq - 16.5 * g.n * g.d * g.d).abs() / gemm_sq < 1e-9);
+    let eq7 = 16.5 * g.n * g.d * g.d + 12.0 * g.n * g.n * g.d + 1.8 * g.n * g.d * g.d_ff;
+    assert!(eq7 <= exact && exact < 1.35 * eq7, "Eq.7: {exact:.3e} vs {eq7:.3e}");
+
+    // breakeven 0.62d at dff=2.5d
+    let g25 = Geometry::new(1024, 2560, 256, 256, 16, 24);
+    assert!((cola_breakeven_rank(&g25) / g25.d - 0.62).abs() < 0.02);
+}
+
+#[test]
+fn memory_model_scales_monotonically() {
+    for p in &PAPER_PRESETS {
+        let g8 = Geometry::from_paper(p, p.tokens_per_batch(8));
+        let g32 = Geometry::from_paper(p, p.tokens_per_batch(32));
+        for m in Method::ALL {
+            // activations grow with batch; states don't
+            assert!(
+                activation_elems_per_layer(m, &g32) > activation_elems_per_layer(m, &g8),
+                "{:?}",
+                m
+            );
+            let s8 = memory_breakdown(m, &g8, p.vocab, BF16).states_only();
+            let s32 = memory_breakdown(m, &g32, p.vocab, BF16).states_only();
+            assert!((s8 - s32).abs() < 1.0, "{:?} states depend on batch", m);
+        }
+    }
+}
+
+#[test]
+fn compute_monotone_in_rank_for_lowrank_methods() {
+    let p = PaperPreset::by_name("llama350m").unwrap();
+    let mut prev = 0.0;
+    for r in [64usize, 128, 256, 512] {
+        let mut g = Geometry::from_paper(p, p.seq_len);
+        g.r = r as f64;
+        let c = compute_total(Method::Cola, &g);
+        assert!(c > prev);
+        prev = c;
+    }
+}
+
+#[test]
+fn vmem_plans_match_design_doc() {
+    // DESIGN.md §7 table is generated from this function — keep them honest.
+    for (name, fits) in [("llama60m", true), ("llama1b", true), ("llama7b", false)] {
+        let p = PaperPreset::by_name(name).unwrap();
+        assert_eq!(p.vmem_plan(128).3, fits, "{name}");
+    }
+}

@@ -1,0 +1,111 @@
+//! Data-pipeline integration: corpus → BPE → batches is deterministic,
+//! learnable, and produces tensors the artifacts accept.
+
+use cola::data::corpus::{CorpusCfg, CorpusGen};
+use cola::data::{BatchIter, Bpe, ClsTaskGen, MlmBatchIter};
+
+fn bpe(vocab: usize) -> Bpe {
+    let text = CorpusGen::new(CorpusCfg { seed: 42, ..CorpusCfg::default() }).text(150_000);
+    Bpe::train(&text, vocab)
+}
+
+#[test]
+fn end_to_end_token_stream_statistics() {
+    let bpe = bpe(1024);
+    let mut it = BatchIter::new(bpe, 0, 1024);
+    let batch = it.next_batch(&[1, 32, 129]);
+    // heavy-tailed: the top-32 tokens should cover most of the stream
+    let mut counts = std::collections::HashMap::new();
+    for &t in &batch {
+        *counts.entry(t).or_insert(0usize) += 1;
+    }
+    let mut freq: Vec<usize> = counts.values().copied().collect();
+    freq.sort_unstable_by(|a, b| b.cmp(a));
+    let top32: usize = freq.iter().take(32).sum();
+    assert!(
+        top32 as f64 > 0.35 * batch.len() as f64,
+        "token distribution not heavy-tailed"
+    );
+    // and non-degenerate: many distinct tokens in play
+    assert!(counts.len() > 100, "only {} distinct tokens", counts.len());
+}
+
+#[test]
+fn train_and_val_streams_differ() {
+    let b = bpe(1024);
+    let mut train = BatchIter::new(b.clone(), 0, 1024);
+    let mut val = BatchIter::new(b, 1_000_003, 1024);
+    assert_ne!(train.next_batch(&[1, 8, 64]), val.next_batch(&[1, 8, 64]));
+}
+
+#[test]
+fn bigram_predictability_survives_tokenization() {
+    // the LM signal the trainers learn: token bigrams carry information
+    let b = bpe(512);
+    let mut it = BatchIter::new(b, 3, 512);
+    let toks = it.next_batch(&[1, 1, 20_000]);
+    let mut uni = std::collections::HashMap::new();
+    let mut bi = std::collections::HashMap::new();
+    for w in toks.windows(2) {
+        *uni.entry(w[0]).or_insert(0f64) += 1.0;
+        *bi.entry((w[0], w[1])).or_insert(0f64) += 1.0;
+    }
+    let n = (toks.len() - 1) as f64;
+    let h_uni: f64 = uni.values().map(|c| -(c / n) * (c / n).log2()).sum();
+    let h_joint: f64 = bi.values().map(|c| -(c / n) * (c / n).log2()).sum();
+    let h_cond = h_joint - h_uni;
+    assert!(
+        h_cond < h_uni - 0.5,
+        "tokenized stream lost its structure: H={h_uni:.2}, H(cond)={h_cond:.2}"
+    );
+}
+
+#[test]
+fn mlm_labels_recover_original_tokens() {
+    let b = bpe(512);
+    let mut lm = BatchIter::new(b.clone(), 5, 512);
+    let mut mlm = MlmBatchIter::new(b, 5, 512);
+    let plain = lm.next_batch(&[1, 4, 64]);
+    let (masked, labels) = mlm.next_batch(&[1, 4, 64]);
+    // where not masked, tokens agree with the plain stream; where masked,
+    // the label channel carries the original token + 1
+    for i in 0..plain.len() {
+        if labels[i] > 0 {
+            assert_eq!(labels[i] - 1, plain[i]);
+            assert_eq!(masked[i], cola::data::tokenizer::MASK);
+        } else {
+            assert_eq!(masked[i], plain[i]);
+        }
+    }
+}
+
+#[test]
+fn cls_tasks_are_distinct_and_balancedish() {
+    let b = bpe(512);
+    let mut dists = Vec::new();
+    for task in 0..4 {
+        let mut g = ClsTaskGen::new(b.clone(), task, 1, 4, 512);
+        let (_, labels) = g.next_batch(128, 32);
+        let mut hist = [0usize; 4];
+        for &l in &labels {
+            hist[l as usize] += 1;
+        }
+        // no empty class in 128 samples (fully degenerate task would be)
+        assert!(hist.iter().filter(|&&c| c > 0).count() >= 2, "task {task}: {hist:?}");
+        dists.push(labels);
+    }
+    // different tasks label the same generator stream differently
+    assert!(dists.windows(2).any(|w| w[0] != w[1]));
+}
+
+#[test]
+fn bpe_cache_roundtrip_via_shared_helper() {
+    let tmp = std::env::temp_dir().join("cola_test_datacache");
+    std::fs::create_dir_all(&tmp).unwrap();
+    // SAFETY: test-local env var; tests in this binary run serially enough
+    unsafe { std::env::set_var("COLA_DATA_CACHE", &tmp) };
+    let a = cola::coordinator::trainer::shared_bpe(512).unwrap();
+    let b = cola::coordinator::trainer::shared_bpe(512).unwrap(); // cache hit
+    assert_eq!(a.encode("zalu bani koto"), b.encode("zalu bani koto"));
+    std::fs::remove_dir_all(&tmp).ok();
+}

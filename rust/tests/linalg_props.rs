@@ -1,0 +1,147 @@
+//! Property tests for the SVD/effective-rank substrate (in-tree harness —
+//! proptest is not in the offline vendor set; randomized cases are seeded
+//! and exhaustively checked against algebraic invariants).
+
+use cola::linalg::{effective_rank, singular_values, spectrum_energy, Mat};
+use cola::util::rng::Rng;
+
+fn random_mat(rng: &mut Rng, n: usize, c: usize, scale: f64) -> Mat {
+    Mat::from_rows(n, c, (0..n * c).map(|_| rng.normal() * scale).collect())
+}
+
+/// Property: Σσᵢ² == ‖A‖_F² (Frobenius identity) across 40 random shapes.
+#[test]
+fn prop_frobenius_identity() {
+    let mut rng = Rng::new(101);
+    for case in 0..40 {
+        let n = rng.range(1, 120);
+        let c = rng.range(1, 40);
+        let m = random_mat(&mut rng, n, c, 1.0 + (case % 5) as f64);
+        let sv = singular_values(&m);
+        let fro = m.frobenius_sq();
+        let sum: f64 = sv.iter().map(|s| s * s).sum();
+        assert!(
+            (sum - fro).abs() <= 1e-8 * fro.max(1.0),
+            "case {case} ({n}x{c}): {sum} vs {fro}"
+        );
+    }
+}
+
+/// Property: singular values are non-negative and sorted descending.
+#[test]
+fn prop_sorted_nonnegative() {
+    let mut rng = Rng::new(102);
+    for _ in 0..30 {
+        let (n, c) = (rng.range(2, 60), rng.range(2, 30));
+        let m = random_mat(&mut rng, n, c, 2.0);
+        let sv = singular_values(&m);
+        assert!(sv.iter().all(|&s| s >= 0.0));
+        assert!(sv.windows(2).all(|w| w[0] >= w[1] - 1e-12));
+    }
+}
+
+/// Property: scaling A by k scales every σ by |k|.
+#[test]
+fn prop_scaling_equivariance() {
+    let mut rng = Rng::new(103);
+    for _ in 0..20 {
+        let (n, c) = (rng.range(3, 50), rng.range(2, 20));
+        let m = random_mat(&mut rng, n, c, 1.0);
+        let k = 0.1 + rng.f64() * 5.0;
+        let scaled = Mat::from_rows(m.rows, m.cols, m.data.iter().map(|x| x * k).collect());
+        let s1 = singular_values(&m);
+        let s2 = singular_values(&scaled);
+        for (a, b) in s1.iter().zip(&s2) {
+            assert!((a * k - b).abs() < 1e-8 * (1.0 + b), "{a} * {k} != {b}");
+        }
+    }
+}
+
+/// Property: appending duplicate rows cannot increase the number of nonzero
+/// singular values (rank is invariant under row duplication).
+#[test]
+fn prop_rank_invariant_row_dup() {
+    let mut rng = Rng::new(104);
+    for _ in 0..15 {
+        let n = rng.range(4, 30);
+        let c = rng.range(2, 12);
+        let m = random_mat(&mut rng, n, c, 1.0);
+        let mut dup_data = m.data.clone();
+        dup_data.extend_from_slice(&m.data[..c]); // duplicate row 0
+        let dup = Mat::from_rows(n + 1, c, dup_data);
+        // numeric-rank threshold: zero eigenvalues of the Gram matrix come
+        // out around 1e-8·σ₀² after Jacobi roundoff, so count σ > 1e-6·σ₀.
+        let nz = |sv: &[f64]| sv.iter().filter(|&&s| s > 1e-6 * sv[0].max(1e-300)).count();
+        assert_eq!(nz(&singular_values(&m)), nz(&singular_values(&dup)));
+    }
+}
+
+/// Property: planting a rank-k structure bounds r(α) by ~k under low noise.
+#[test]
+fn prop_effective_rank_detects_planted_rank() {
+    let mut rng = Rng::new(105);
+    for k in [1usize, 2, 4, 8] {
+        let (n, c) = (300, 32);
+        let u: Vec<f64> = (0..n * k).map(|_| rng.normal()).collect();
+        let v: Vec<f64> = (0..k * c).map(|_| rng.normal()).collect();
+        let mut m = Mat::zeros(n, c);
+        for i in 0..n {
+            for j in 0..c {
+                let mut s = 0.0;
+                for l in 0..k {
+                    s += u[i * k + l] * v[l * c + j];
+                }
+                *m.at_mut(i, j) = s + 1e-3 * rng.normal();
+            }
+        }
+        let sv = singular_values(&m);
+        let r = effective_rank(&sv, 0.95);
+        assert!(r <= k + 1, "planted rank {k}, detected {r}");
+    }
+}
+
+/// Property: energy curve is a CDF (monotone, ends at 1), and r(α) is its
+/// generalized inverse.
+#[test]
+fn prop_energy_curve_vs_effective_rank() {
+    let mut rng = Rng::new(106);
+    for _ in 0..20 {
+        let (n, c) = (rng.range(5, 80), rng.range(2, 25));
+        let m = random_mat(&mut rng, n, c, 1.5);
+        let sv = singular_values(&m);
+        let e = spectrum_energy(&sv);
+        assert!(e.windows(2).all(|w| w[1] >= w[0] - 1e-12));
+        assert!((e.last().unwrap() - 1.0).abs() < 1e-9);
+        for alpha in [0.5, 0.9, 0.99] {
+            let r = effective_rank(&sv, alpha);
+            assert!(e[r - 1] >= alpha - 1e-12);
+            if r > 1 {
+                assert!(e[r - 2] < alpha);
+            }
+        }
+    }
+}
+
+/// Property: orthogonal-ish column rotation preserves the spectrum (tested
+/// via permutations, which are exactly orthogonal).
+#[test]
+fn prop_column_permutation_invariance() {
+    let mut rng = Rng::new(107);
+    for _ in 0..15 {
+        let (n, c) = (rng.range(4, 40), rng.range(2, 15));
+        let m = random_mat(&mut rng, n, c, 1.0);
+        let mut perm: Vec<usize> = (0..c).collect();
+        rng.shuffle(&mut perm);
+        let mut p = Mat::zeros(n, c);
+        for i in 0..n {
+            for (j2, &j) in perm.iter().enumerate() {
+                *p.at_mut(i, j2) = m.at(i, j);
+            }
+        }
+        let s1 = singular_values(&m);
+        let s2 = singular_values(&p);
+        for (a, b) in s1.iter().zip(&s2) {
+            assert!((a - b).abs() < 1e-8 * (1.0 + a));
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! Integration: python-AOT artifacts load, compile and execute through the
+//! rust PJRT runtime, and the training step makes progress.
+//!
+//! Requires `make artifacts` (or COLA_ARTIFACTS pointing at an artifact
+//! root containing the tiny_* set).
+
+use cola::runtime::executor::{lit_f32, lit_i32};
+use cola::runtime::ArtifactDir;
+use cola::util::rng::Rng;
+
+fn art(name: &str) -> ArtifactDir {
+    ArtifactDir::open_named(name).expect("run `make artifacts` first")
+}
+
+fn random_tokens(rng: &mut Rng, shape: &[usize], vocab: usize) -> Vec<i32> {
+    (0..shape.iter().product::<usize>())
+        .map(|_| rng.below(vocab) as i32)
+        .collect()
+}
+
+#[test]
+fn tiny_cola_train_step_runs_and_learns() {
+    let a = art("tiny_cola");
+    let m = &a.manifest;
+    assert_eq!(m.variant, "cola");
+    m.validate().unwrap();
+
+    let step = a.step("train_step").unwrap();
+    let state0 = a.load_state0().unwrap();
+    assert_eq!(state0.len(), m.n_state);
+
+    // fixed batch: loss must drop when repeatedly trained on it
+    let mut rng = Rng::new(1);
+    let toks = random_tokens(&mut rng, &m.tokens_shape, m.preset.vocab);
+    let dims: Vec<i64> = m.tokens_shape.iter().map(|&x| x as i64).collect();
+    let tok_lit = lit_i32(&toks, &dims).unwrap();
+
+    // step 0 from literals, then keep state on device
+    let mut args: Vec<xla::Literal> = state0;
+    args.push(lit_f32(0.0));
+    args.push(tok_lit.clone());
+    let out = step.run(&args).unwrap();
+    assert_eq!(out.len(), m.n_state + 2, "state' + (loss, gnorm)");
+
+    let first_loss = cola::runtime::executor::buf_f32(&out[m.n_state]).unwrap();
+    assert!(first_loss.is_finite());
+    // near-uniform at init: ln(vocab) ± 0.5
+    let uniform = (m.preset.vocab as f32).ln();
+    assert!(
+        (first_loss - uniform).abs() < 0.7,
+        "init loss {first_loss} vs ln(V)={uniform}"
+    );
+
+    let mut state: Vec<xla::PjRtBuffer> = out;
+    let mut last_loss = first_loss;
+    for i in 1..8 {
+        let step_lit = cola::runtime::executor::to_device(&lit_f32(i as f32)).unwrap();
+        let tok_buf = cola::runtime::executor::to_device(&tok_lit).unwrap();
+        let mut refs: Vec<&xla::PjRtBuffer> = state[..m.n_state].iter().collect();
+        refs.push(&step_lit);
+        refs.push(&tok_buf);
+        let out = step.run_b(&refs).unwrap();
+        last_loss = cola::runtime::executor::buf_f32(&out[m.n_state]).unwrap();
+        state = out;
+    }
+    assert!(
+        last_loss < first_loss - 0.3,
+        "no learning: {first_loss} -> {last_loss}"
+    );
+}
+
+#[test]
+fn eval_step_matches_train_loss_scale() {
+    let a = art("tiny_cola");
+    let m = &a.manifest;
+    let eval = a.step("eval_step").unwrap();
+    let state0 = a.load_state0().unwrap();
+
+    let mut rng = Rng::new(2);
+    let shape = [m.eval_batch, m.preset.seq_len + 1];
+    let toks = random_tokens(&mut rng, &shape, m.preset.vocab);
+    let lit = lit_i32(&toks, &[shape[0] as i64, shape[1] as i64]).unwrap();
+
+    let mut args: Vec<xla::Literal> = state0.into_iter().take(m.n_params).collect();
+    args.push(lit);
+    let out = eval.run(&args).unwrap();
+    assert_eq!(out.len(), 2);
+    let sum = cola::runtime::executor::buf_f32(&out[0]).unwrap();
+    let count = cola::runtime::executor::buf_f32(&out[1]).unwrap();
+    assert_eq!(count as usize, m.eval_batch * m.preset.seq_len);
+    let mean = sum / count;
+    let uniform = (m.preset.vocab as f32).ln();
+    assert!((mean - uniform).abs() < 0.7, "eval mean {mean}");
+}
+
+#[test]
+fn activations_tap_shapes() {
+    let a = art("tiny_cola");
+    let m = &a.manifest;
+    let acts = a.step("activations").unwrap();
+    let state0 = a.load_state0().unwrap();
+
+    let mut rng = Rng::new(3);
+    let shape = [2usize, m.preset.seq_len + 1];
+    let toks = random_tokens(&mut rng, &shape, m.preset.vocab);
+    let lit = lit_i32(&toks, &[2, shape[1] as i64]).unwrap();
+
+    let mut args: Vec<xla::Literal> = state0.into_iter().take(m.n_params).collect();
+    args.push(lit);
+    let out = acts.run(&args).unwrap();
+    // one tap per layer + final
+    assert_eq!(out.len(), m.preset.n_layers + 1);
+    let v = cola::runtime::executor::buf_f32_vec(&out[0]).unwrap();
+    assert_eq!(v.len(), 2 * m.preset.seq_len * m.preset.d);
+    assert!(v.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn full_and_gcp_agree() {
+    // vanilla GCP is a memory strategy: same math as full-rank.
+    let af = art("tiny_full");
+    let ag = art("tiny_gcp");
+    let mf = &af.manifest;
+
+    let mut rng = Rng::new(4);
+    let toks = random_tokens(&mut rng, &mf.tokens_shape, mf.preset.vocab);
+    let dims: Vec<i64> = mf.tokens_shape.iter().map(|&x| x as i64).collect();
+    let lit = lit_i32(&toks, &dims).unwrap();
+
+    let mut loss = Vec::new();
+    for a in [&af, &ag] {
+        let step = a.step("train_step").unwrap();
+        let mut args = a.load_state0().unwrap();
+        args.push(lit_f32(0.0));
+        args.push(lit.clone());
+        let out = step.run(&args).unwrap();
+        loss.push(cola::runtime::executor::buf_f32(&out[a.manifest.n_state]).unwrap());
+    }
+    assert!(
+        (loss[0] - loss[1]).abs() < 1e-4,
+        "full {} vs gcp {}",
+        loss[0],
+        loss[1]
+    );
+}
+
+#[test]
+fn galore_refresh_proj_is_loadable() {
+    let a = art("tiny_galore");
+    let m = &a.manifest;
+    assert!(a.has_step("refresh_proj"));
+    let refresh = a.step("refresh_proj").unwrap();
+    let state0 = a.load_state0().unwrap();
+    let mut args: Vec<xla::Literal> = state0;
+    args.push(xla::Literal::scalar(7i32));
+    let out = refresh.run(&args).unwrap();
+    assert_eq!(out.len(), m.n_state);
+}
+
+#[test]
+fn manifest_validation_catches_corruption() {
+    let a = art("tiny_cola");
+    let mut m = a.manifest.clone();
+    m.n_state += 1;
+    assert!(m.validate().is_err());
+}

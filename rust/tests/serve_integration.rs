@@ -1,0 +1,108 @@
+//! Serving-engine integration: spawn the engine on a real artifact, push
+//! concurrent requests through the dynamic batcher, check responses and
+//! engine lifecycle. Requires `make artifacts` (tiny_cola built with
+//! --serve).
+
+use cola::config::ServeConfig;
+use cola::serve::Engine;
+
+fn have(artifact: &str, step: &str) -> bool {
+    let root = std::env::var("COLA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    std::path::Path::new(&root)
+        .join(artifact)
+        .join(format!("{step}.hlo.txt"))
+        .exists()
+}
+
+fn spawn(artifact: &str) -> Option<(cola::serve::EngineHandle, std::thread::JoinHandle<()>)> {
+    if !have(artifact, "decode_step") {
+        eprintln!("skip: artifact {artifact} lacks serving steps (`make artifacts`)");
+        return None;
+    }
+    let cfg = ServeConfig {
+        artifact: artifact.into(),
+        max_new_tokens: 8,
+        max_wait_ms: 2,
+    };
+    Some(Engine::spawn(cfg).unwrap())
+}
+
+#[test]
+fn single_request_roundtrip() {
+    let Some((engine, join)) = spawn("tiny_cola") else { return };
+    let resp = engine.generate(vec![5, 6, 7, 8], 6).unwrap();
+    assert_eq!(resp.tokens.len(), 6);
+    let man = cola::runtime::ArtifactDir::open_named("tiny_cola").unwrap().manifest;
+    assert!(resp.tokens.iter().all(|&t| (0..man.preset.vocab as i32).contains(&t)));
+    assert!(resp.latency.as_secs_f64() > 0.0);
+    drop(engine);
+    let _ = join.join();
+}
+
+#[test]
+fn decode_is_deterministic_for_same_prompt() {
+    let Some((engine, join)) = spawn("tiny_cola") else { return };
+    let a = engine.generate(vec![10, 11, 12, 13, 14], 6).unwrap();
+    let b = engine.generate(vec![10, 11, 12, 13, 14], 6).unwrap();
+    assert_eq!(a.tokens, b.tokens, "greedy decode must be deterministic");
+    drop(engine);
+    let _ = join.join();
+}
+
+#[test]
+fn concurrent_clients_are_batched() {
+    let Some((engine, join)) = spawn("tiny_cola") else { return };
+    // warmup compile
+    engine.generate(vec![1, 2, 3], 2).unwrap();
+
+    let mut clients = Vec::new();
+    for c in 0..3 {
+        let engine = engine.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut out = Vec::new();
+            for i in 0..4 {
+                let prompt = vec![c * 37 + i + 4; 5];
+                out.push(engine.generate(prompt, 4).unwrap());
+            }
+            out
+        }));
+    }
+    let mut tps = Vec::new();
+    for c in clients {
+        for resp in c.join().unwrap() {
+            assert_eq!(resp.tokens.len(), 4);
+            tps.push(resp.batch_tokens_per_sec);
+        }
+    }
+    assert!(tps.iter().all(|&t| t > 0.0));
+    drop(engine);
+    let _ = join.join();
+}
+
+#[test]
+fn long_prompts_are_truncated_not_fatal() {
+    let Some((engine, join)) = spawn("tiny_cola") else { return };
+    let long: Vec<i32> = (4..200).collect(); // much longer than prompt_len
+    let resp = engine.generate(long, 4).unwrap();
+    assert_eq!(resp.tokens.len(), 4);
+    drop(engine);
+    let _ = join.join();
+}
+
+#[test]
+fn engine_shuts_down_cleanly_on_handle_drop() {
+    let Some((engine, join)) = spawn("tiny_cola") else { return };
+    engine.generate(vec![4, 5], 2).unwrap();
+    drop(engine);
+    // join must complete (channel closed -> engine loop exits)
+    join.join().unwrap();
+}
+
+#[test]
+fn spawn_fails_fast_on_missing_artifact() {
+    let cfg = ServeConfig {
+        artifact: "definitely_missing".into(),
+        ..ServeConfig::default()
+    };
+    assert!(Engine::spawn(cfg).is_err());
+}

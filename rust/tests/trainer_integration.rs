@@ -1,0 +1,161 @@
+//! Trainer integration: the full coordinator loop over real artifacts —
+//! learning progress, eval, checkpoint roundtrips, variant equivalences,
+//! and failure handling. Requires `make artifacts` (tiny_* set).
+
+use cola::config::TrainConfig;
+use cola::coordinator::Trainer;
+
+fn cfg(artifact: &str, steps: usize) -> TrainConfig {
+    TrainConfig {
+        artifact: artifact.into(),
+        steps,
+        eval_batches: 2,
+        log_every: 0,
+        out_dir: std::env::temp_dir().join("cola_trainer_test"),
+        ..TrainConfig::default()
+    }
+}
+
+fn have(artifact: &str) -> bool {
+    let root = std::env::var("COLA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    std::path::Path::new(&root).join(artifact).join("manifest.json").exists()
+}
+
+#[test]
+fn training_reduces_val_ppl() {
+    if !have("tiny_cola") {
+        eprintln!("skip: run `make artifacts`");
+        return;
+    }
+    let mut tr = Trainer::new(cfg("tiny_cola", 0)).unwrap(); // preset steps (60)
+    let before = tr.evaluate(2).unwrap();
+    let report = tr.run().unwrap();
+    assert!(report.val_ppl < before * 0.7, "{before} -> {}", report.val_ppl);
+    assert!(report.tokens_per_sec > 0.0);
+    assert_eq!(report.steps, 60);
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_eval() {
+    if !have("tiny_full") {
+        return;
+    }
+    let mut tr = Trainer::new(cfg("tiny_full", 10)).unwrap();
+    tr.run().unwrap();
+    let ppl1 = tr.evaluate(2).unwrap();
+    let path = std::env::temp_dir().join("cola_ckpt_test.npz");
+    tr.save_checkpoint(&path).unwrap();
+
+    // fresh trainer, restore, same eval
+    let mut tr2 = Trainer::new(cfg("tiny_full", 10)).unwrap();
+    let fresh = tr2.evaluate(2).unwrap();
+    assert!((fresh - ppl1).abs() > 1e-6, "fresh state should differ");
+    tr2.load_checkpoint(&path).unwrap();
+    let ppl2 = tr2.evaluate(2).unwrap();
+    assert!(
+        (ppl1 - ppl2).abs() < 1e-3 * ppl1,
+        "checkpoint not faithful: {ppl1} vs {ppl2}"
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn cola_and_cola_m_learn_identically() {
+    // same seed + same data stream => same loss trajectory (remat is
+    // numerics-preserving); this is the strongest CoLA-M correctness check
+    // at the integration level.
+    if !have("tiny_cola") || !have("tiny_cola_m") {
+        return;
+    }
+    let mut l1 = Vec::new();
+    let mut l2 = Vec::new();
+    for (art, sink) in [("tiny_cola", &mut l1), ("tiny_cola_m", &mut l2)] {
+        let mut tr = Trainer::new(cfg(art, 0)).unwrap();
+        for _ in 0..6 {
+            sink.push(tr.train_step().unwrap().0);
+        }
+    }
+    for (a, b) in l1.iter().zip(&l2) {
+        assert!((a - b).abs() < 2e-3 * a.abs().max(1.0), "{l1:?} vs {l2:?}");
+    }
+}
+
+#[test]
+fn galore_trains_with_refresh() {
+    if !have("tiny_galore") {
+        return;
+    }
+    let mut c = cfg("tiny_galore", 12);
+    c.galore_refresh_every = 5; // exercise the refresh path twice
+    let mut tr = Trainer::new(c).unwrap();
+    let report = tr.run().unwrap();
+    assert!(report.final_loss < 6.5, "galore diverged: {}", report.final_loss);
+}
+
+#[test]
+fn lora_and_sltrain_train() {
+    for art in ["tiny_lora", "tiny_sltrain"] {
+        if !have(art) {
+            continue;
+        }
+        let mut tr = Trainer::new(cfg(art, 10)).unwrap();
+        let report = tr.run().unwrap();
+        assert!(report.final_loss.is_finite(), "{art}");
+        assert!(report.final_loss < 6.5, "{art}: {}", report.final_loss);
+    }
+}
+
+#[test]
+fn bert_mlm_objective_trains() {
+    if !have("bert_full") {
+        return;
+    }
+    let mut tr = Trainer::new(cfg("bert_full", 8)).unwrap();
+    let mut losses = Vec::new();
+    for _ in 0..8 {
+        losses.push(tr.train_step().unwrap().0);
+    }
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "MLM not learning: {losses:?}"
+    );
+}
+
+#[test]
+fn missing_artifact_is_clear_error() {
+    let Err(err) = Trainer::new(cfg("no_such_artifact", 1)) else {
+        panic!("expected error for missing artifact");
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("no_such_artifact") && msg.contains("make artifacts"), "{msg}");
+}
+
+#[test]
+fn rank_probe_returns_all_taps() {
+    if !have("tiny_cola") {
+        return;
+    }
+    let mut tr = Trainer::new(cfg("tiny_cola", 2)).unwrap();
+    tr.run().unwrap();
+    let ranks = tr.rank_probe(0.95).unwrap();
+    assert_eq!(ranks.len(), tr.manifest().preset.n_layers + 1);
+    for (name, r, d) in &ranks {
+        assert!(*r >= 1 && r <= d, "{name}: {r}/{d}");
+    }
+}
+
+#[test]
+fn deterministic_given_seed() {
+    if !have("tiny_full") {
+        return;
+    }
+    let run = || {
+        let mut tr = Trainer::new(cfg("tiny_full", 5)).unwrap();
+        let mut v = Vec::new();
+        for _ in 0..5 {
+            v.push(tr.train_step().unwrap().0);
+        }
+        v
+    };
+    assert_eq!(run(), run());
+}
