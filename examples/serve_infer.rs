@@ -1,13 +1,15 @@
-//! Serving example: bring up the inference engine (dynamic batcher +
-//! KV-cache decode over the AOT artifacts) on a trained checkpoint and push
-//! a concurrent workload through it, reporting latency percentiles and
-//! throughput — the Table 11 measurement path as a library consumer sees it.
+//! Serving example: bring up a `ServicePool` (continuous batching + KV-cache
+//! decode over the AOT artifacts) on a trained checkpoint, stream one
+//! request token-by-token, then push a concurrent workload through the
+//! bounded admission queue — the Table 11 measurement path as a library
+//! consumer sees it.
 //!
 //!     cargo run --release --example serve_infer [artifact] [n_requests]
 
 use cola::config::ServeConfig;
 use cola::data::{corpus::CorpusCfg, CorpusGen};
-use cola::serve::Engine;
+use cola::metrics::{fmt_ms, percentile};
+use cola::serve::{InferenceService, ServicePool, StreamEvent, SubmitOptions};
 use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
@@ -18,61 +20,75 @@ fn main() -> anyhow::Result<()> {
     let cfg = ServeConfig {
         artifact: artifact.clone(),
         max_new_tokens: 16,
-        max_wait_ms: 4,
+        queue_depth: 16,
+        ..ServeConfig::default()
     };
-    let (engine, join) = Engine::spawn(cfg)?;
+    let pool = ServicePool::start(cfg)?;
 
     let man = cola::runtime::ArtifactDir::open_named(&artifact)?.manifest;
     let bpe = cola::coordinator::trainer::shared_bpe(man.preset.vocab)?;
     let mut gen = CorpusGen::new(CorpusCfg { seed: 123, ..CorpusCfg::default() });
 
-    // warmup: compiles prefill+decode once
-    let w = engine.generate(bpe.encode(&gen.text(50)), 4)?;
-    println!("warmup: {} tokens, decoded text: {:?}", w.tokens.len(), bpe.decode(&w.tokens));
-
-    // concurrent workload from 4 client threads
-    let t0 = Instant::now();
-    let mut clients = Vec::new();
-    for c in 0..4 {
-        let engine = engine.clone();
-        let bpe = bpe.clone();
-        clients.push(std::thread::spawn(move || {
-            let mut gen =
-                CorpusGen::new(CorpusCfg { seed: 200 + c as u64, ..CorpusCfg::default() });
-            let mut lat = Vec::new();
-            let mut tokens = 0usize;
-            for _ in 0..n_requests / 4 {
-                let prompt = bpe.encode(&gen.text(50));
-                let resp = engine.generate(prompt, 16).expect("generate");
-                tokens += resp.tokens.len();
-                lat.push(resp.latency.as_secs_f64() * 1000.0);
+    // Streaming: tokens arrive as they decode (this first request also
+    // compiles prefill+decode, so its time-to-first-token includes compile).
+    let mut stream = pool
+        .submit(bpe.encode(&gen.text(50)), SubmitOptions::default())
+        .map_err(|e| anyhow::anyhow!("submit: {e}"))?;
+    print!("streaming:");
+    let completion = loop {
+        match stream.recv() {
+            Some(StreamEvent::Token(t)) => {
+                // flush so the token-by-token arrival is actually visible
+                print!(" {t}");
+                std::io::Write::flush(&mut std::io::stdout())?;
             }
-            (lat, tokens)
-        }));
+            Some(StreamEvent::Done(c)) => break c,
+            None => anyhow::bail!("stream dropped"),
+        }
+    };
+    println!(
+        "\nwarmup: {} tokens ({:?}), text: {:?}",
+        completion.tokens.len(),
+        completion.finish_reason,
+        bpe.decode(&completion.tokens)
+    );
+
+    // Concurrent workload: submit everything up front; the bounded queue
+    // pushes back with QueueFull, which submit_wait rides out.
+    let t0 = Instant::now();
+    let mut streams = Vec::new();
+    for _ in 0..n_requests {
+        streams.push(pool.submit_wait(bpe.encode(&gen.text(50)), SubmitOptions::default())?);
     }
-    let mut all_lat = Vec::new();
-    let mut total_tokens = 0;
-    for c in clients {
-        let (lat, tokens) = c.join().unwrap();
-        all_lat.extend(lat);
-        total_tokens += tokens;
+    let (mut total_tokens, mut lat, mut ttft) = (0usize, Vec::new(), Vec::new());
+    for s in streams {
+        let c = s.wait()?;
+        total_tokens += c.tokens.len();
+        lat.push(c.timing.total.as_secs_f64() * 1000.0);
+        if let Some(t) = c.timing.first_token {
+            ttft.push(t.as_secs_f64() * 1000.0);
+        }
     }
     let secs = t0.elapsed().as_secs_f64();
-    all_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pct = |p: f64| all_lat[((all_lat.len() as f64 * p) as usize).min(all_lat.len() - 1)];
+    let stats = pool.stats();
     println!(
-        "\n{} requests from 4 clients: {total_tokens} tokens in {secs:.2}s = {:.0} tok/s",
-        all_lat.len(),
-        total_tokens as f64 / secs
+        "\n{n_requests} requests: {total_tokens} tokens in {secs:.2}s = {:.0} tok/s \
+         (decode {:.0} tok/s)",
+        total_tokens as f64 / secs.max(1e-9),
+        stats.decode_tokens_per_sec
     );
     println!(
-        "latency p50 {:.0}ms | p90 {:.0}ms | p99 {:.0}ms | engine RSS {:.2} GB",
-        pct(0.5),
-        pct(0.9),
-        pct(0.99),
+        "latency p50 {} | p90 {} | p99 {} | ttft p50 {} | engine RSS {:.2} GB",
+        fmt_ms(percentile(&lat, 50.0)),
+        fmt_ms(percentile(&lat, 90.0)),
+        fmt_ms(percentile(&lat, 99.0)),
+        fmt_ms(percentile(&ttft, 50.0)),
         cola::metrics::peak_rss_bytes() as f64 / 1e9
     );
-    drop(engine);
-    let _ = join.join();
+    println!(
+        "stats: submitted={} completed={} rejected={} active={}",
+        stats.submitted, stats.completed, stats.rejected, stats.active
+    );
+    pool.shutdown();
     Ok(())
 }

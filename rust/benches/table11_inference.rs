@@ -1,45 +1,48 @@
 //! Table 11 — inference memory and throughput: full-rank vs SLTrain vs CoLA
-//! through the serving engine (prefill + KV-cache decode, dynamic batching).
+//! through the serving pool (prefill + KV-cache decode, continuous batching).
 //! Paper shape (A100, 1B/7B): CoLA ~1.6x tokens/s of full-rank at lower
 //! memory; SLTrain slightly below full-rank throughput.
 
 use cola::bench::{banner, proxy_note, require_artifacts};
 use cola::config::ServeConfig;
 use cola::data::{corpus::CorpusCfg, CorpusGen};
-use cola::serve::Engine;
+use cola::metrics::percentile;
+use cola::serve::{InferenceService, ServicePool, SubmitOptions};
 use std::time::Instant;
 
 fn measure(artifact: &str, n_requests: usize, max_new: usize) -> (f64, f64, f64) {
     let cfg = ServeConfig {
         artifact: artifact.into(),
         max_new_tokens: max_new,
-        max_wait_ms: 3,
+        queue_depth: n_requests.max(1),
+        ..ServeConfig::default()
     };
-    let (handle, join) = Engine::spawn(cfg).expect(artifact);
+    let pool = ServicePool::start(cfg).expect(artifact);
     let man = cola::runtime::ArtifactDir::open_named(artifact).unwrap().manifest;
     let bpe = cola::coordinator::trainer::shared_bpe(man.preset.vocab).unwrap();
     let mut gen = CorpusGen::new(CorpusCfg { seed: 5, ..CorpusCfg::default() });
 
     // warmup (compile + first batch)
-    handle.generate(bpe.encode(&gen.text(40)), 4).unwrap();
+    let opts = SubmitOptions { max_new_tokens: Some(4), ..Default::default() };
+    pool.generate(bpe.encode(&gen.text(40)), opts).unwrap();
 
+    // submit everything up front: continuous batching keeps the slot table
+    // full as rows finish, instead of draining whole static batches
     let t0 = Instant::now();
-    let mut pending = Vec::new();
+    let mut streams = Vec::new();
     for _ in 0..n_requests {
-        pending.push(handle.submit(bpe.encode(&gen.text(40)), max_new));
+        streams.push(pool.submit_wait(bpe.encode(&gen.text(40)), SubmitOptions::default()).unwrap());
     }
     let mut total_tokens = 0usize;
     let mut lat = Vec::new();
-    for rx in pending {
-        let r = rx.recv().unwrap();
-        total_tokens += r.tokens.len();
-        lat.push(r.latency.as_secs_f64() * 1000.0);
+    for s in streams {
+        let c = s.wait().unwrap();
+        total_tokens += c.tokens.len();
+        lat.push(c.timing.total.as_secs_f64() * 1000.0);
     }
     let secs = t0.elapsed().as_secs_f64();
-    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let p50 = lat[lat.len() / 2];
-    drop(handle);
-    let _ = join.join();
+    let p50 = percentile(&lat, 50.0).unwrap_or(f64::NAN);
+    pool.shutdown();
     let rss = cola::metrics::peak_rss_bytes() as f64 / 1e9;
     (total_tokens as f64 / secs, p50, rss)
 }

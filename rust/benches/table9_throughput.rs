@@ -2,9 +2,88 @@
 //! vanilla GCP, CoLA, CoLA-M, each in a fresh process on the e2e proxy.
 //! Paper shape (H100, 1B/7B): CoLA > CoLA-M > full-rank > vanilla GCP on
 //! tokens/s; CoLA-M ~1/3 the memory of full-rank.
+//!
+//! A serving addendum compares decode throughput of the `ServicePool`'s
+//! continuous batching against a seed-style static flush-and-wait load
+//! pattern at equal `serve_bs` on the tiny artifact.
 
 use cola::bench::{banner, bench_steps, proxy_note, require_artifacts};
+use cola::config::ServeConfig;
 use cola::coordinator::cached_or_train_fresh;
+use cola::data::{corpus::CorpusCfg, CorpusGen};
+use cola::serve::{InferenceService, ServicePool, SubmitOptions};
+
+/// Drive one workload through a fresh pool. `static_groups` emulates the
+/// retired flush-and-wait engine: submit exactly one batch worth of
+/// requests, drain them all, then submit the next group — so finished rows
+/// idle until the whole group completes. Continuous mode submits everything
+/// up front and lets the slot table refill between decode steps.
+fn serve_tok_per_sec(artifact: &str, static_groups: bool) -> f64 {
+    let cfg = ServeConfig { artifact: artifact.into(), queue_depth: 64, ..Default::default() };
+    let pool = ServicePool::start(cfg).expect(artifact);
+    let man = cola::runtime::ArtifactDir::open_named(artifact).unwrap().manifest;
+    let serve_bs = man.serve_batch.expect("serve artifact");
+    let bpe = cola::coordinator::trainer::shared_bpe(man.preset.vocab).unwrap();
+    let mut gen = CorpusGen::new(CorpusCfg { seed: 7, ..CorpusCfg::default() });
+
+    let warm = SubmitOptions { max_new_tokens: Some(2), ..Default::default() };
+    pool.generate(bpe.encode(&gen.text(40)), warm).unwrap();
+
+    // heterogeneous budgets: static formation wastes void decodes on rows
+    // that finish early; continuous batching refills them
+    let reqs: Vec<(Vec<i32>, usize)> = (0..6 * serve_bs)
+        .map(|i| (bpe.encode(&gen.text(40)), if i % 2 == 0 { 4 } else { 20 }))
+        .collect();
+
+    let t0 = std::time::Instant::now();
+    let mut total_tokens = 0usize;
+    if static_groups {
+        for group in reqs.chunks(serve_bs) {
+            let streams: Vec<_> = group
+                .iter()
+                .map(|(p, max_new)| {
+                    let opts =
+                        SubmitOptions { max_new_tokens: Some(*max_new), ..Default::default() };
+                    pool.submit(p.clone(), opts).expect("static group fits the queue")
+                })
+                .collect();
+            for s in streams {
+                total_tokens += s.wait().unwrap().tokens.len();
+            }
+        }
+    } else {
+        let mut streams = Vec::new();
+        for (p, max_new) in &reqs {
+            let opts = SubmitOptions { max_new_tokens: Some(*max_new), ..Default::default() };
+            streams.push(pool.submit_wait(p.clone(), opts).unwrap());
+        }
+        for s in streams {
+            total_tokens += s.wait().unwrap().tokens.len();
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    pool.shutdown();
+    total_tokens as f64 / secs.max(1e-9)
+}
+
+fn serve_addendum() {
+    let artifact = "tiny_cola";
+    let root = std::env::var("COLA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&root).join(artifact).join("decode_step.hlo.txt").exists() {
+        println!("\nserving addendum SKIP: `{artifact}` lacks serving steps (`make artifacts`)");
+        return;
+    }
+    println!("\nserving addendum — decode throughput at equal serve_bs ({artifact}):");
+    let stat = serve_tok_per_sec(artifact, true);
+    let cont = serve_tok_per_sec(artifact, false);
+    println!("  static flush-and-wait load: {stat:>7.0} tok/s");
+    println!("  continuous batching:        {cont:>7.0} tok/s  ({:.2}x)", cont / stat);
+    assert!(
+        cont >= 0.9 * stat,
+        "continuous batching must not fall below the static-batch path \
+         ({cont:.0} vs {stat:.0} tok/s)"
+    );
+}
 
 fn main() {
     let arts = ["e2e_full", "e2e_gcp", "e2e_cola", "e2e_cola_m"];
@@ -70,4 +149,6 @@ fn main() {
             tok("e2e_gcp")
         );
     }
+
+    serve_addendum();
 }

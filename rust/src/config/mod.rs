@@ -52,19 +52,33 @@ impl Default for TrainConfig {
     }
 }
 
-/// Serving-engine configuration.
+/// Serving-pool configuration (see `serve::ServicePool`).
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
     pub artifact: String,
-    /// max tokens generated per request
+    /// default per-request token budget (`SubmitOptions::max_new_tokens`
+    /// overrides it per request)
     pub max_new_tokens: usize,
-    /// batcher window: flush a partial batch after this many ms
-    pub max_wait_ms: u64,
+    /// engine worker threads, each owning its own PJRT client + params;
+    /// 0 = admission-only (queue never drains — backpressure testing)
+    pub workers: usize,
+    /// bounded admission-queue capacity; submits beyond it fail with
+    /// `SubmitError::QueueFull`
+    pub queue_depth: usize,
+    /// default per-request deadline from submit time; 0 = unbounded
+    /// (`SubmitOptions::deadline` overrides it per request)
+    pub default_deadline_ms: u64,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        Self { artifact: "tiny_cola".into(), max_new_tokens: 16, max_wait_ms: 5 }
+        Self {
+            artifact: "tiny_cola".into(),
+            max_new_tokens: 16,
+            workers: 1,
+            queue_depth: 64,
+            default_deadline_ms: 0,
+        }
     }
 }
 
@@ -91,25 +105,60 @@ pub fn apply_train_overrides(cfg: &mut TrainConfig, kvs: &[(String, String)]) ->
     Ok(())
 }
 
+/// Apply `key=value` overrides (CLI) onto a ServeConfig — API parity with
+/// `apply_train_overrides`.
+pub fn apply_serve_overrides(cfg: &mut ServeConfig, kvs: &[(String, String)]) -> Result<()> {
+    for (k, v) in kvs {
+        match k.as_str() {
+            "artifact" => cfg.artifact = v.clone(),
+            "max_new_tokens" => cfg.max_new_tokens = v.parse().context("max_new_tokens")?,
+            "workers" => cfg.workers = v.parse().context("workers")?,
+            "queue_depth" => cfg.queue_depth = v.parse().context("queue_depth")?,
+            "default_deadline_ms" => {
+                cfg.default_deadline_ms = v.parse().context("default_deadline_ms")?
+            }
+            _ => anyhow::bail!("unknown serve config key `{k}`"),
+        }
+    }
+    Ok(())
+}
+
+/// Flatten a JSON config object into the `(key, value)` form the override
+/// appliers consume.
+fn json_kvs(path: &Path) -> Result<Vec<(String, String)>> {
+    let j = Json::parse(&std::fs::read_to_string(path)?)
+        .with_context(|| format!("parsing {}", path.display()))?;
+    let mut file_kvs = Vec::new();
+    if let Json::Obj(m) = &j {
+        for (k, v) in m {
+            let vs = match v {
+                Json::Str(s) => s.clone(),
+                other => other.to_string(),
+            };
+            file_kvs.push((k.clone(), vs));
+        }
+    }
+    Ok(file_kvs)
+}
+
 /// Load a TrainConfig from a JSON file then apply overrides.
 pub fn load_train_config(path: Option<&Path>, kvs: &[(String, String)]) -> Result<TrainConfig> {
     let mut cfg = TrainConfig::default();
     if let Some(p) = path {
-        let j = Json::parse(&std::fs::read_to_string(p)?)
-            .with_context(|| format!("parsing {}", p.display()))?;
-        let mut file_kvs = Vec::new();
-        if let Json::Obj(m) = &j {
-            for (k, v) in m {
-                let vs = match v {
-                    Json::Str(s) => s.clone(),
-                    other => other.to_string(),
-                };
-                file_kvs.push((k.clone(), vs));
-            }
-        }
-        apply_train_overrides(&mut cfg, &file_kvs)?;
+        apply_train_overrides(&mut cfg, &json_kvs(p)?)?;
     }
     apply_train_overrides(&mut cfg, kvs)?;
+    Ok(cfg)
+}
+
+/// Load a ServeConfig from a JSON file then apply overrides — `serve`
+/// accepts `--config file.json` and `key=value` exactly like `train`.
+pub fn load_serve_config(path: Option<&Path>, kvs: &[(String, String)]) -> Result<ServeConfig> {
+    let mut cfg = ServeConfig::default();
+    if let Some(p) = path {
+        apply_serve_overrides(&mut cfg, &json_kvs(p)?)?;
+    }
+    apply_serve_overrides(&mut cfg, kvs)?;
     Ok(cfg)
 }
 
@@ -147,6 +196,47 @@ mod tests {
         let cfg = load_train_config(Some(&tmp), &[("steps".into(), "9".into())]).unwrap();
         assert_eq!(cfg.artifact, "tiny_full");
         assert_eq!(cfg.steps, 9, "cli overrides file");
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn serve_overrides_apply() {
+        let mut cfg = ServeConfig::default();
+        apply_serve_overrides(
+            &mut cfg,
+            &[
+                ("artifact".into(), "p350m_cola".into()),
+                ("max_new_tokens".into(), "32".into()),
+                ("workers".into(), "2".into()),
+                ("queue_depth".into(), "128".into()),
+                ("default_deadline_ms".into(), "250".into()),
+            ],
+        )
+        .unwrap();
+        assert_eq!(cfg.artifact, "p350m_cola");
+        assert_eq!(cfg.max_new_tokens, 32);
+        assert_eq!(cfg.workers, 2);
+        assert_eq!(cfg.queue_depth, 128);
+        assert_eq!(cfg.default_deadline_ms, 250);
+    }
+
+    #[test]
+    fn serve_unknown_key_rejected() {
+        let mut cfg = ServeConfig::default();
+        assert!(apply_serve_overrides(&mut cfg, &[("max_wait_ms".into(), "5".into())]).is_err());
+        assert!(apply_serve_overrides(&mut cfg, &[("nope".into(), "1".into())]).is_err());
+    }
+
+    #[test]
+    fn serve_json_config_file() {
+        let tmp = std::env::temp_dir().join("cola_serve_cfg_test.json");
+        std::fs::write(&tmp, r#"{"artifact": "tiny_cola", "queue_depth": 8, "workers": 3}"#)
+            .unwrap();
+        let cfg =
+            load_serve_config(Some(&tmp), &[("workers".into(), "1".into())]).unwrap();
+        assert_eq!(cfg.artifact, "tiny_cola");
+        assert_eq!(cfg.queue_depth, 8);
+        assert_eq!(cfg.workers, 1, "cli overrides file");
         std::fs::remove_file(&tmp).ok();
     }
 }

@@ -3,24 +3,34 @@
 //! Subcommands:
 //!   train     train an artifact (e.g. --artifact p60m_cola steps=400)
 //!   eval      evaluate validation perplexity of a checkpoint
-//!   serve     bring up the inference engine and run a demo workload
+//!   serve     run a load generator against the serving pool
+//!             (`ServicePool`: continuous batching, streaming, bounded
+//!             admission queue). Flags: --requests N, --config file.json;
+//!             key=value overrides: artifact, max_new_tokens, workers,
+//!             queue_depth, default_deadline_ms. Prints p50/p95/p99
+//!             latency, time-to-first-token, and queue-depth stats.
 //!   rank      activation-spectrum analysis (Fig. 2) on an artifact
 //!   cost      print the analytic paper tables (2/3/4, Fig 5/6/7 data)
 //!   data-gen  pre-build the corpus + BPE tokenizer caches
 //!
-//! Config values are `key=value` pairs after flags (see config::TrainConfig).
+//! Config values are `key=value` pairs after flags; `train` and `serve`
+//! both accept `--config file.json` plus overrides (see config::TrainConfig
+//! / config::ServeConfig).
 
 use anyhow::{Context, Result};
-use cola::config::{apply_train_overrides, ServeConfig, TrainConfig};
+use cola::config::{apply_serve_overrides, apply_train_overrides, load_serve_config, TrainConfig};
 use cola::coordinator::Trainer;
 use cola::costmodel::{tables, PaperPreset, PAPER_PRESETS};
 use cola::data::{corpus::CorpusCfg, CorpusGen};
 use cola::metrics;
-use cola::serve::Engine;
+use cola::metrics::{fmt_ms, percentile};
+use cola::serve::{InferenceService, ServicePool, SubmitError, SubmitOptions};
 
 fn usage() -> ! {
     eprintln!(
         "usage: cola <train|eval|serve|rank|cost|data-gen> [--artifact NAME] [key=value ...]\n\
+         serve: cola serve [--artifact NAME] [--requests N] [--config f.json]\n\
+                [max_new_tokens=K] [workers=N] [queue_depth=D] [default_deadline_ms=MS]\n\
          run `cola cost` for the analytic paper tables; `make artifacts` first for the rest."
     );
     std::process::exit(2);
@@ -98,44 +108,88 @@ fn cmd_eval(
     Ok(())
 }
 
-fn cmd_serve(flags: std::collections::HashMap<String, String>) -> Result<()> {
-    let mut cfg = ServeConfig::default();
+/// Load generator against the serving pool: submits `--requests` prompts
+/// with queue backpressure (retrying on `QueueFull`), then reports latency
+/// percentiles, time-to-first-token, throughput, and queue/slot stats.
+fn cmd_serve(
+    flags: std::collections::HashMap<String, String>,
+    kvs: Vec<(String, String)>,
+) -> Result<()> {
+    // precedence (last wins): defaults < --config file < --artifact < key=value
+    let mut cfg = load_serve_config(flags.get("config").map(std::path::Path::new), &[])?;
     if let Some(a) = flags.get("artifact") {
         cfg.artifact = a.clone();
     }
-    if let Some(n) = flags.get("max-new") {
-        cfg.max_new_tokens = n.parse().context("max-new")?;
-    }
+    apply_serve_overrides(&mut cfg, &kvs)?;
     let n_requests: usize = flags.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(16);
+    anyhow::ensure!(cfg.workers > 0, "serve needs workers >= 1 (workers=0 is admission-only)");
 
-    let (handle, join) = Engine::spawn(cfg.clone())?;
+    let pool = ServicePool::start(cfg.clone())?;
     let bpe = cola::coordinator::trainer::shared_bpe(
         cola::runtime::ArtifactDir::open_named(&cfg.artifact)?.manifest.preset.vocab,
     )?;
     let mut gen = CorpusGen::new(CorpusCfg::default());
-    let mut latencies = Vec::new();
+
+    if n_requests > 0 {
+        // warmup: compiles prefill+decode on the worker before timing starts
+        let opts = SubmitOptions { max_new_tokens: Some(2), ..Default::default() };
+        pool.generate(bpe.encode(&gen.text(40)), opts)?;
+    }
+
     let t0 = std::time::Instant::now();
-    let mut pending = Vec::new();
+    let mut streams = Vec::new();
+    let (mut retries, mut max_queue) = (0u64, 0usize);
     for _ in 0..n_requests {
         let prompt = bpe.encode(&gen.text(60));
-        pending.push(handle.submit(prompt, cfg.max_new_tokens));
+        loop {
+            match pool.submit(prompt.clone(), SubmitOptions::default()) {
+                Ok(s) => break streams.push(s),
+                Err(SubmitError::QueueFull) => {
+                    // bounded queue pushed back: wait for capacity
+                    retries += 1;
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+                Err(e) => anyhow::bail!("submit failed: {e}"),
+            }
+        }
+        max_queue = max_queue.max(pool.stats().queue_depth);
     }
-    let mut total_tokens = 0;
-    for rx in pending {
-        let resp = rx.recv()?;
-        total_tokens += resp.tokens.len();
-        latencies.push(resp.latency.as_secs_f64() * 1000.0);
+    let (mut total_tokens, mut lat, mut ttft) = (0usize, Vec::new(), Vec::new());
+    for s in streams {
+        let c = s.wait()?;
+        total_tokens += c.tokens.len();
+        lat.push(c.timing.total.as_secs_f64() * 1000.0);
+        if let Some(t) = c.timing.first_token {
+            ttft.push(t.as_secs_f64() * 1000.0);
+        }
     }
-    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let p50 = latencies[latencies.len() / 2];
-    let p95 = latencies[(latencies.len() * 95 / 100).min(latencies.len() - 1)];
+    let secs = t0.elapsed().as_secs_f64();
+    let stats = pool.stats();
     println!(
-        "served {n_requests} requests, {total_tokens} tokens in {:.2}s ({:.0} tok/s) p50={p50:.0}ms p95={p95:.0}ms",
-        t0.elapsed().as_secs_f64(),
-        total_tokens as f64 / t0.elapsed().as_secs_f64()
+        "served {n_requests} requests, {total_tokens} tokens in {secs:.2}s \
+         ({:.0} tok/s wall, {:.0} tok/s decode)",
+        total_tokens as f64 / secs.max(1e-9),
+        stats.decode_tokens_per_sec
     );
-    drop(handle);
-    let _ = join.join();
+    println!(
+        "latency p50={} p95={} p99={} | ttft p50={} p99={}",
+        fmt_ms(percentile(&lat, 50.0)),
+        fmt_ms(percentile(&lat, 95.0)),
+        fmt_ms(percentile(&lat, 99.0)),
+        fmt_ms(percentile(&ttft, 50.0)),
+        fmt_ms(percentile(&ttft, 99.0)),
+    );
+    println!(
+        "queue: peak depth {max_queue}/{} full-retries {retries} | \
+         submitted={} completed={} cancelled={} expired={} rejected={}",
+        stats.queue_capacity,
+        stats.submitted,
+        stats.completed,
+        stats.cancelled,
+        stats.expired,
+        stats.rejected
+    );
+    pool.shutdown();
     Ok(())
 }
 
@@ -217,7 +271,7 @@ fn main() -> Result<()> {
             Ok(())
         }
         "eval" => cmd_eval(flags, kvs),
-        "serve" => cmd_serve(flags),
+        "serve" => cmd_serve(flags, kvs),
         "rank" => cmd_rank(flags, kvs),
         "cost" => cmd_cost(flags),
         "data-gen" => cmd_data_gen(flags),

@@ -55,6 +55,25 @@ pub fn peak_rss_bytes() -> usize {
     0
 }
 
+/// Nearest-rank percentile (`p` in 0..=100) of a sample; `None` when the
+/// sample is empty — latency reports must print "n/a" instead of panicking
+/// on an empty run.
+pub fn percentile(xs: &[f64], p: f64) -> Option<f64> {
+    if xs.is_empty() {
+        return None;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    Some(sorted[rank.clamp(1, sorted.len()) - 1])
+}
+
+/// Render an optional millisecond value for latency tables ("n/a" when the
+/// sample was empty).
+pub fn fmt_ms(x: Option<f64>) -> String {
+    x.map_or_else(|| "n/a".into(), |v| format!("{v:.1}ms"))
+}
+
 /// Tokens/sec meter over a training or serving run.
 pub struct Throughput {
     start: Instant,
@@ -146,6 +165,24 @@ mod tests {
             e.update(2.0);
         }
         assert!((e.value - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentile_empty_is_none() {
+        assert!(percentile(&[], 50.0).is_none());
+        assert_eq!(fmt_ms(None), "n/a");
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 50.0), Some(50.0));
+        assert_eq!(percentile(&xs, 95.0), Some(95.0));
+        assert_eq!(percentile(&xs, 99.0), Some(99.0));
+        assert_eq!(percentile(&xs, 0.0), Some(1.0));
+        assert_eq!(percentile(&xs, 100.0), Some(100.0));
+        assert_eq!(percentile(&[3.0, 1.0, 2.0], 50.0), Some(2.0), "sorts internally");
+        assert_eq!(percentile(&[7.5], 99.0), Some(7.5));
     }
 
     #[test]

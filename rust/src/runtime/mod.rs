@@ -23,9 +23,10 @@ thread_local! {
 
 /// Thread-local PJRT CPU client. The `xla` crate's PJRT wrappers are
 /// `Rc`-based (not `Send`), so all XLA objects — client, executables,
-/// buffers — live on the thread that created them. The coordinator and the
-/// serving engine therefore own a single "device thread" each and talk to
-/// the rest of the process over channels (see `serve::engine`).
+/// buffers — live on the thread that created them. The coordinator owns one
+/// device thread; each serving pool worker owns its own client, params and
+/// KV caches and talks to the rest of the process through the admission
+/// queue and per-request stream channels (see `serve::engine`).
 pub fn client() -> anyhow::Result<xla::PjRtClient> {
     CLIENT.with(|slot| {
         let mut slot = slot.borrow_mut();

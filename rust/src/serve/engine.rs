@@ -1,188 +1,275 @@
-//! The serving engine thread: prefill + greedy decode over batched requests.
+//! The engine worker: slot-based continuous batching over the AOT
+//! prefill/decode artifacts.
 //!
-//! Geometry comes from the artifact's manifest (`serve_batch`, `prompt_len`,
-//! `max_len`); prompts are right-padded/truncated to `prompt_len` and
-//! batches are padded with dummy rows so every PJRT call sees the static
-//! shapes the artifact was lowered for (dummy rows decode into the void).
+//! Each worker owns its PJRT client, compiled executables, device-resident
+//! params and KV caches (PJRT wrappers are `Rc`-based, so nothing XLA leaves
+//! this thread). The loop:
+//!
+//! 1. park on the admission queue while the slot table is idle;
+//! 2. top up free slots from the queue (expired/cancelled/zero-budget
+//!    requests resolve immediately without burning a slot);
+//! 3. **join prefill**: re-encode the merged batch — every occupied row's
+//!    right-aligned context window — in one `[serve_bs, prompt_len]` call,
+//!    producing fresh KV caches and one next-token per row. The decode
+//!    artifact shares a single `pos` scalar across the batch, so rows can
+//!    only join at a prefill boundary; re-encoding restarts positions at 0,
+//!    which RoPE's shift-equivariance makes attention-equivalent for the
+//!    tokens inside the window. Context older than the most recent
+//!    `prompt_len` tokens is dropped at a join — sliding-window semantics,
+//!    so a row's continuation can depend on whether neighbours joined
+//!    mid-flight (ROADMAP lists prefix caching / per-row positions as the
+//!    fix);
+//! 4. decode in lockstep, streaming each row's token as it lands, vacating
+//!    rows that finish/cancel/expire — and break back to (3) when an
+//!    admission into a vacated slot actually lands, or when the KV window
+//!    is exhausted (`pos == max_len`, a sliding-window rollover that lets
+//!    generations run past the artifact's static window).
+//!
+//! Rows that sit empty while the queue is dry still decode junk (the shapes
+//! are static), but unlike the retired flush-and-wait batcher they are
+//! refilled the instant work arrives instead of after the whole batch
+//! drains.
 
 use crate::config::ServeConfig;
 use crate::data::tokenizer;
 use crate::metrics;
 use crate::runtime::executor::{buf_i32_vec, lit_i32, to_device};
-use crate::runtime::ArtifactDir;
-use crate::serve::DynamicBatcher;
+use crate::runtime::{ArtifactDir, Executor};
+use crate::serve::service::{FinishReason, QueuedRequest, Shared};
+use crate::serve::slots::{self, SlotTable};
 use anyhow::{Context, Result};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::time::{Duration, Instant};
+use std::sync::atomic::Ordering;
+use std::time::Instant;
 
-/// One generation request.
-pub struct Request {
-    pub prompt: Vec<i32>,
-    pub max_new_tokens: usize,
-    pub resp: Sender<Response>,
-}
+/// Body of one `cola-serve-N` thread (spawned by `ServicePool::start`).
+pub(crate) fn worker_main(cfg: &ServeConfig, shared: &Shared) -> Result<()> {
+    let art = ArtifactDir::open_named(&cfg.artifact)?;
+    let man = art.manifest.clone();
+    let serve_bs = man.serve_batch.context("artifact not built with --serve")?;
+    let prompt_len = man.prompt_len.unwrap_or(8);
+    let max_len = man.max_len.unwrap_or(man.preset.seq_len);
+    let prefill = art.step("prefill")?;
+    let decode = art.step("decode_step")?;
+    // params stay on device for the worker's lifetime
+    let params_all = art.load_state0_buffers()?;
+    let params = &params_all[..man.n_params];
 
-/// Completion for one request.
-#[derive(Clone, Debug)]
-pub struct Response {
-    pub tokens: Vec<i32>,
-    /// end-to-end latency including queueing
-    pub latency: Duration,
-    /// decode throughput of the batch that served this request
-    pub batch_tokens_per_sec: f64,
-}
+    let mut table = SlotTable::new(serve_bs);
+    let mut gauge = 0usize; // this worker's contribution to stats.active
+    metrics::log_info(&format!(
+        "serve worker up: {} bs={serve_bs} prompt_len={prompt_len} max_len={max_len}",
+        man.name
+    ));
 
-/// Cloneable submit-side handle.
-#[derive(Clone)]
-pub struct EngineHandle {
-    tx: Sender<Request>,
-}
-
-impl EngineHandle {
-    /// Submit a prompt; returns a receiver for the completion.
-    pub fn submit(&self, prompt: Vec<i32>, max_new: usize) -> Receiver<Response> {
-        let (tx, rx) = channel();
-        let _ = self.tx.send(Request { prompt, max_new_tokens: max_new, resp: tx });
-        rx
-    }
-
-    /// Blocking convenience call.
-    pub fn generate(&self, prompt: Vec<i32>, max_new: usize) -> Result<Response> {
-        self.submit(prompt, max_new)
-            .recv()
-            .context("engine thread dropped the request")
-    }
-}
-
-/// Engine configuration + spawn.
-pub struct Engine;
-
-impl Engine {
-    /// Spawn the engine thread. Returns (handle, join guard).
-    pub fn spawn(cfg: ServeConfig) -> Result<(EngineHandle, std::thread::JoinHandle<()>)> {
-        let (tx, rx) = channel::<Request>();
-        let artifact = cfg.artifact.clone();
-        // Fail fast on a missing artifact before spawning.
-        ArtifactDir::open_named(&artifact)?;
-        let join = std::thread::Builder::new()
-            .name("cola-serve-engine".into())
-            .spawn(move || {
-                if let Err(e) = Self::engine_main(&cfg, rx) {
-                    metrics::log_info(&format!("engine exited with error: {e:#}"));
+    loop {
+        // Park while idle; `None` = queue closed and drained → exit.
+        if table.active() == 0 {
+            sync_gauge(shared, &mut gauge, 0);
+            match shared.queue.pop_blocking() {
+                Some(req) => {
+                    admit_one(&mut table, shared, req);
                 }
-            })?;
-        Ok((EngineHandle { tx }, join))
-    }
-
-    fn engine_main(cfg: &ServeConfig, rx: Receiver<Request>) -> Result<()> {
-        let art = ArtifactDir::open_named(&cfg.artifact)?;
-        let man = art.manifest.clone();
-        let (serve_bs, prompt_len, max_len) = (
-            man.serve_batch.context("artifact not built with --serve")?,
-            man.prompt_len.unwrap_or(8),
-            man.max_len.unwrap_or(man.preset.seq_len),
-        );
-        let prefill = art.step("prefill")?;
-        let decode = art.step("decode_step")?;
-        // params stay on device for the engine's lifetime
-        let params = art.load_state0_buffers()?;
-        let params = &params[..man.n_params];
-
-        let batcher = DynamicBatcher::new(serve_bs, Duration::from_millis(cfg.max_wait_ms));
-        metrics::log_info(&format!(
-            "serve engine up: {} bs={} prompt_len={} max_len={}",
-            man.name, serve_bs, prompt_len, max_len
-        ));
-
-        while let Some(batch) = batcher.collect(&rx) {
-            let t0 = Instant::now();
-            let starts: Vec<Instant> = batch.iter().map(|_| t0).collect();
-            if let Err(e) = Self::serve_batch(
-                &man, prefill.as_ref(), decode.as_ref(), params, &batch, serve_bs,
-                prompt_len, max_len, &starts,
-            ) {
-                metrics::log_info(&format!("batch failed: {e:#}"));
+                None => break,
             }
         }
-        Ok(())
-    }
-
-    #[allow(clippy::too_many_arguments)]
-    fn serve_batch(
-        man: &crate::runtime::Manifest,
-        prefill: &crate::runtime::Executor,
-        decode: &crate::runtime::Executor,
-        params: &[xla::PjRtBuffer],
-        batch: &[Request],
-        serve_bs: usize,
-        prompt_len: usize,
-        max_len: usize,
-        starts: &[Instant],
-    ) -> Result<()> {
-        // assemble fixed-shape prompt tensor [serve_bs, prompt_len]
-        let mut toks = vec![tokenizer::PAD; serve_bs * prompt_len];
-        for (i, req) in batch.iter().enumerate() {
-            let p = &req.prompt;
-            let take = p.len().min(prompt_len);
-            // right-align so the last prompt token is at prompt_len-1
-            let dst = &mut toks[i * prompt_len..(i + 1) * prompt_len];
-            dst[prompt_len - take..].copy_from_slice(&p[p.len() - take..]);
+        // Top up the remaining free slots without blocking.
+        while table.free() > 0 {
+            match shared.queue.try_pop() {
+                Some(req) => {
+                    admit_one(&mut table, shared, req);
+                }
+                None => break,
+            }
         }
-        let tok_buf = to_device(&lit_i32(&toks, &[serve_bs as i64, prompt_len as i64])?)?;
+        if table.active() == 0 {
+            continue; // everything popped had already expired/cancelled
+        }
+        sync_gauge(shared, &mut gauge, table.active());
 
+        if let Err(e) = decode_rounds(
+            shared, prefill.as_ref(), decode.as_ref(), params, &mut table, &mut gauge,
+            serve_bs, prompt_len, max_len,
+        ) {
+            let n = table.fail_all(Instant::now());
+            shared.counters.failed.fetch_add(n as u64, Ordering::Relaxed);
+            sync_gauge(shared, &mut gauge, 0);
+            metrics::log_info(&format!("serve batch failed ({n} requests): {e:#}"));
+        }
+    }
+    sync_gauge(shared, &mut gauge, 0);
+    Ok(())
+}
+
+/// Pop-side resolution: requests that should never occupy a slot complete
+/// immediately; the rest are admitted (the caller guarantees a free slot).
+/// Returns whether a slot was actually occupied.
+fn admit_one(table: &mut SlotTable, shared: &Shared, req: QueuedRequest) -> bool {
+    let now = Instant::now();
+    if req.cancel.load(Ordering::Relaxed) {
+        slots::complete_unstarted(req, FinishReason::Cancelled, now);
+        shared.counters.cancelled.fetch_add(1, Ordering::Relaxed);
+    } else if req.deadline.is_some_and(|d| now >= d) {
+        slots::complete_unstarted(req, FinishReason::DeadlineExpired, now);
+        shared.counters.expired.fetch_add(1, Ordering::Relaxed);
+    } else if req.max_new_tokens == 0 {
+        // zero generation budget: complete empty instead of emitting the
+        // prefill token
+        slots::complete_unstarted(req, FinishReason::Length, now);
+        shared.counters.completed.fetch_add(1, Ordering::Relaxed);
+    } else if table.admit(req, now).is_none() {
+        debug_assert!(false, "admit_one called with a full slot table");
+    } else {
+        return true;
+    }
+    false
+}
+
+/// Resolve cancelled/expired requests still sitting in the admission queue,
+/// freeing their capacity instead of letting dead entries block submits (and
+/// hang their clients) until a slot frees up to pop them.
+fn shed_dead_queued(shared: &Shared, now: Instant) {
+    let dead = shared
+        .queue
+        .drain_where(|r| r.cancel.load(Ordering::Relaxed) || r.deadline.is_some_and(|d| now >= d));
+    for req in dead {
+        if req.cancel.load(Ordering::Relaxed) {
+            slots::complete_unstarted(req, FinishReason::Cancelled, now);
+            shared.counters.cancelled.fetch_add(1, Ordering::Relaxed);
+        } else {
+            slots::complete_unstarted(req, FinishReason::DeadlineExpired, now);
+            shared.counters.expired.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// One join-prefill plus the lockstep decode rounds that follow it. Returns
+/// when the table drained, a refill opportunity appeared, or the KV window
+/// rolled over — the caller re-enters after topping up slots.
+#[allow(clippy::too_many_arguments)]
+fn decode_rounds(
+    shared: &Shared,
+    prefill: &Executor,
+    decode: &Executor,
+    params: &[xla::PjRtBuffer],
+    table: &mut SlotTable,
+    gauge: &mut usize,
+    serve_bs: usize,
+    prompt_len: usize,
+    max_len: usize,
+) -> Result<()> {
+    // --- join prefill over the merged batch ---------------------------------
+    let mut toks = Vec::with_capacity(serve_bs * prompt_len);
+    for i in 0..serve_bs {
+        toks.extend(table.window(i, prompt_len, tokenizer::PAD));
+    }
+    let tok_buf = to_device(&lit_i32(&toks, &[serve_bs as i64, prompt_len as i64])?)?;
+    let mut refs: Vec<&xla::PjRtBuffer> = params.iter().collect();
+    refs.push(&tok_buf);
+    let mut out = prefill.run_b(&refs)?;
+    anyhow::ensure!(out.len() == 3, "prefill returns (next, kc, vc)");
+    let mut vcb = out.pop().unwrap();
+    let mut kcb = out.pop().unwrap();
+    let mut next = buf_i32_vec(&out[0])?;
+
+    let mut now = Instant::now();
+    for i in table.occupied() {
+        if let Some(reason) = table.push_token(i, next[i], now) {
+            tally_finish(shared, reason);
+        }
+    }
+    sync_gauge(shared, gauge, table.active());
+
+    // --- lockstep decode ----------------------------------------------------
+    let mut pos = prompt_len;
+    let mut step = 0usize;
+    loop {
+        now = Instant::now();
+        let (cancelled, expired) = table.sweep(now);
+        shared.counters.cancelled.fetch_add(cancelled as u64, Ordering::Relaxed);
+        shared.counters.expired.fetch_add(expired as u64, Ordering::Relaxed);
+        // Periodically shed cancelled/expired entries still queued, so dead
+        // work frees admission capacity without waiting for a pop. Throttled:
+        // an O(queue) scan under the shared lock is not for every step.
+        if step % 16 == 0 {
+            shed_dead_queued(shared, now);
+        }
+        step += 1;
+        if table.active() == 0 {
+            sync_gauge(shared, gauge, 0);
+            return Ok(()); // drained → caller parks or admits
+        }
+        // Refill vacated slots eagerly — but only pay the join prefill when
+        // an admission actually lands (a dead queued request, or another
+        // worker winning the race for it, must not cost us a prefill).
+        if table.free() > 0 {
+            let mut admitted = false;
+            while table.free() > 0 {
+                match shared.queue.try_pop() {
+                    Some(req) => admitted |= admit_one(table, shared, req),
+                    None => break,
+                }
+            }
+            if admitted {
+                sync_gauge(shared, gauge, table.active());
+                return Ok(()); // caller re-enters via join prefill
+            }
+        }
+        sync_gauge(shared, gauge, table.active());
+        if pos >= max_len {
+            return Ok(()); // KV window exhausted → sliding-window rollover
+        }
+
+        let feed = table.feed_tokens(tokenizer::PAD);
+        let tok_b = to_device(&lit_i32(&feed, &[serve_bs as i64])?)?;
+        let pos_b = to_device(&xla::Literal::scalar(pos as i32))?;
         let mut refs: Vec<&xla::PjRtBuffer> = params.iter().collect();
-        refs.push(&tok_buf);
-        let mut out = prefill.run_b(&refs)?;
-        anyhow::ensure!(out.len() == 3, "prefill returns (next, kc, vc)");
-        let mut vcb = out.pop().unwrap();
-        let mut kcb = out.pop().unwrap();
-        let mut next = buf_i32_vec(&out[0])?;
+        refs.push(&kcb);
+        refs.push(&vcb);
+        refs.push(&tok_b);
+        refs.push(&pos_b);
+        let t_step = Instant::now();
+        let mut out = decode.run_b(&refs)?;
+        anyhow::ensure!(out.len() == 3, "decode returns (next, kc, vc)");
+        vcb = out.pop().unwrap();
+        kcb = out.pop().unwrap();
+        next = buf_i32_vec(&out[0])?;
+        pos += 1;
 
-        let max_new = batch
-            .iter()
-            .map(|r| r.max_new_tokens)
-            .max()
-            .unwrap_or(1)
-            .min(max_len - prompt_len);
-
-        let mut generated: Vec<Vec<i32>> = vec![Vec::new(); batch.len()];
-        for (i, g) in generated.iter_mut().enumerate() {
-            g.push(next[i]);
-        }
-
-        let t_decode = Instant::now();
-        let mut decoded_tokens = 0usize;
-        for s in 0..max_new.saturating_sub(1) {
-            let pos = (prompt_len + s) as i32;
-            let tok_b = to_device(&lit_i32(&next, &[serve_bs as i64])?)?;
-            let pos_b = to_device(&xla::Literal::scalar(pos))?;
-            let mut refs: Vec<&xla::PjRtBuffer> = params.iter().collect();
-            refs.push(&kcb);
-            refs.push(&vcb);
-            refs.push(&tok_b);
-            refs.push(&pos_b);
-            let mut out = decode.run_b(&refs)?;
-            anyhow::ensure!(out.len() == 3, "decode returns (next, kc, vc)");
-            vcb = out.pop().unwrap();
-            kcb = out.pop().unwrap();
-            next = buf_i32_vec(&out[0])?;
-            for (i, g) in generated.iter_mut().enumerate() {
-                if g.len() < batch[i].max_new_tokens {
-                    g.push(next[i]);
-                }
+        let occupied = table.occupied();
+        shared
+            .counters
+            .decoded_tokens
+            .fetch_add(occupied.len() as u64, Ordering::Relaxed);
+        shared
+            .counters
+            .decode_nanos
+            .fetch_add(t_step.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        now = Instant::now();
+        for i in occupied {
+            if let Some(reason) = table.push_token(i, next[i], now) {
+                tally_finish(shared, reason);
             }
-            decoded_tokens += serve_bs;
         }
-        let tps = (decoded_tokens + serve_bs) as f64 / t_decode.elapsed().as_secs_f64().max(1e-9);
-
-        for (i, req) in batch.iter().enumerate() {
-            let _ = req.resp.send(Response {
-                tokens: generated[i].clone(),
-                latency: starts[i].elapsed(),
-                batch_tokens_per_sec: tps,
-            });
-        }
-        let _ = man;
-        Ok(())
     }
+}
+
+fn tally_finish(shared: &Shared, reason: FinishReason) {
+    match reason {
+        FinishReason::Length | FinishReason::Stop => {
+            shared.counters.completed.fetch_add(1, Ordering::Relaxed);
+        }
+        // cancellations/expiries are tallied where they are detected
+        _ => {}
+    }
+}
+
+/// Publish this worker's slot occupancy into the pool-wide `active` gauge.
+fn sync_gauge(shared: &Shared, prev: &mut usize, cur: usize) {
+    use std::cmp::Ordering::*;
+    match cur.cmp(prev) {
+        Greater => shared.counters.active.fetch_add(cur - *prev, Ordering::Relaxed),
+        Less => shared.counters.active.fetch_sub(*prev - cur, Ordering::Relaxed),
+        Equal => cur,
+    };
+    *prev = cur;
 }

@@ -1,14 +1,50 @@
-//! Inference engine (Table 11's serving path): a dynamic batcher in front of
-//! the AOT prefill/decode artifacts with a device-resident KV cache.
+//! Serving (Table 11's inference path): a production-style service API over
+//! the AOT prefill/decode artifacts with device-resident KV caches.
 //!
-//! Threading model: PJRT objects are not `Send`, so a dedicated engine
-//! thread owns the client, executables, params and KV caches; callers submit
-//! `Request`s over an mpsc channel and receive completions over per-request
-//! channels. This is the same leader/worker shape a vLLM-style router uses,
-//! scaled to one CPU device.
+//! # Architecture
+//!
+//! ```text
+//!  submit(prompt, SubmitOptions) ──► BoundedQueue (priority bands,
+//!        │                           queue_depth cap → SubmitError::QueueFull)
+//!        ▼                                │ pop between decode steps
+//!   TokenStream ◄── stream events ── ServicePool workers (1..N threads)
+//!   .recv()/.cancel()                     │ each: own PJRT client + params
+//!   .wait() → Completion                  ▼
+//!                                    SlotTable[serve_bs] — continuous
+//!                                    batching: finished/cancelled/expired
+//!                                    rows refill from the queue at the next
+//!                                    join-prefill boundary
+//! ```
+//!
+//! - [`InferenceService`] is the public trait: `submit` / `stats` /
+//!   `shutdown`. [`ServicePool`] implements it over N single-artifact engine
+//!   workers; PJRT objects are `Rc`-based and stay thread-local per worker
+//!   (see `runtime::client()`).
+//! - Requests carry typed [`SubmitOptions`] (token budget, stop tokens,
+//!   deadline, priority) and resolve through a [`TokenStream`] that yields
+//!   tokens as they decode, supports mid-flight [`TokenStream::cancel`], and
+//!   ends in a typed [`Completion`] (`tokens`, [`FinishReason`], [`Timing`]).
+//! - Admission is explicitly backpressured: the bounded queue refuses
+//!   submits with [`SubmitError::QueueFull`] rather than hiding load in an
+//!   unbounded channel.
+//! - Inside a worker, a fixed `serve_bs` slot table decodes in lockstep and
+//!   refills vacated rows from the queue between decode steps (see
+//!   `engine` for why joins happen at prefill boundaries under the shared
+//!   `pos` scalar of the decode artifact).
+//!
+//! The flush-and-wait `DynamicBatcher` + `Engine::spawn`/`EngineHandle`
+//! design this replaces batched one static group at a time: a batch ran to
+//! its longest member while finished rows decoded into the void and newly
+//! arrived requests waited for the next flush.
 
-pub mod batcher;
 pub mod engine;
+pub mod queue;
+pub mod service;
+pub mod slots;
 
-pub use batcher::DynamicBatcher;
-pub use engine::{Engine, EngineHandle, Request, Response};
+pub use queue::BoundedQueue;
+pub use service::{
+    CancelHandle, Completion, FinishReason, InferenceService, Priority, ServicePool,
+    ServiceStats, StreamEvent, SubmitError, SubmitOptions, Timing, TokenStream,
+};
+pub use slots::SlotTable;

@@ -1,0 +1,254 @@
+//! Bounded admission queue for the serving pool: two priority bands (high
+//! drains before normal, FIFO within a band), a hard capacity that surfaces
+//! backpressure to callers instead of buffering unboundedly, and condvar
+//! parking so idle workers block instead of spinning.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// Why a non-blocking `push` did not enqueue. The item is handed back so the
+/// caller can resolve it (e.g. complete the request with an error).
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// Capacity reached — the caller should shed load or retry later.
+    Full(T),
+    /// `close()` was called; the queue accepts nothing more.
+    Closed(T),
+}
+
+struct Inner<T> {
+    high: VecDeque<T>,
+    normal: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> Inner<T> {
+    fn len(&self) -> usize {
+        self.high.len() + self.normal.len()
+    }
+
+    fn pop(&mut self) -> Option<T> {
+        self.high.pop_front().or_else(|| self.normal.pop_front())
+    }
+}
+
+/// MPMC bounded queue shared by the submit side and all engine workers.
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    cv: Condvar,
+    capacity: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            inner: Mutex::new(Inner {
+                high: VecDeque::new(),
+                normal: VecDeque::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Non-blocking enqueue; never waits for space (bounded = explicit
+    /// backpressure, not hidden latency).
+    pub fn push(&self, item: T, high_priority: bool) -> Result<(), PushError<T>> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return Err(PushError::Closed(item));
+        }
+        if inner.len() >= self.capacity {
+            return Err(PushError::Full(item));
+        }
+        if high_priority {
+            inner.high.push_back(item);
+        } else {
+            inner.normal.push_back(item);
+        }
+        drop(inner);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Pop without blocking (used by workers topping up free slots between
+    /// decode steps).
+    pub fn try_pop(&self) -> Option<T> {
+        self.inner.lock().unwrap().pop()
+    }
+
+    /// Block until an item is available. `None` means the queue was closed
+    /// and fully drained — the worker should exit.
+    pub fn pop_blocking(&self) -> Option<T> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = inner.pop() {
+                return Some(item);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.cv.wait(inner).unwrap();
+        }
+    }
+
+    /// Remove and return every queued item matching `pred`, freeing its
+    /// capacity immediately (cancelled/expired requests must not block
+    /// admission while they wait for a pop). Order within bands is kept.
+    pub fn drain_where(&self, mut pred: impl FnMut(&T) -> bool) -> Vec<T> {
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
+        // fast path: no matches → no band rebuild under the lock
+        if !inner.high.iter().any(|x| pred(x)) && !inner.normal.iter().any(|x| pred(x)) {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        for band in [&mut inner.high, &mut inner.normal] {
+            let mut keep = VecDeque::with_capacity(band.len());
+            for item in band.drain(..) {
+                if pred(&item) {
+                    out.push(item);
+                } else {
+                    keep.push_back(item);
+                }
+            }
+            *band = keep;
+        }
+        out
+    }
+
+    /// Close the queue, waking every parked worker, and hand back whatever
+    /// was still enqueued so the caller can resolve those requests.
+    pub fn close(&self) -> Vec<T> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.closed = true;
+        let mut left: Vec<T> = inner.high.drain(..).collect();
+        left.extend(inner.normal.drain(..));
+        drop(inner);
+        self.cv.notify_all();
+        left
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn full_is_surfaced_at_capacity() {
+        let q = BoundedQueue::new(2);
+        q.push(1, false).unwrap();
+        q.push(2, false).unwrap();
+        match q.push(3, false) {
+            Err(PushError::Full(3)) => {}
+            other => panic!("expected Full(3), got {other:?}"),
+        }
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn fifo_within_priority_band() {
+        let q = BoundedQueue::new(8);
+        for i in 0..4 {
+            q.push(i, false).unwrap();
+        }
+        assert_eq!(
+            (0..4).map(|_| q.try_pop().unwrap()).collect::<Vec<_>>(),
+            vec![0, 1, 2, 3]
+        );
+    }
+
+    #[test]
+    fn high_band_drains_before_normal() {
+        let q = BoundedQueue::new(8);
+        q.push("n1", false).unwrap();
+        q.push("h1", true).unwrap();
+        q.push("n2", false).unwrap();
+        q.push("h2", true).unwrap();
+        let order: Vec<_> = (0..4).map(|_| q.try_pop().unwrap()).collect();
+        assert_eq!(order, vec!["h1", "h2", "n1", "n2"]);
+    }
+
+    #[test]
+    fn close_drains_and_unblocks() {
+        let q = Arc::new(BoundedQueue::new(4));
+        q.push(7, false).unwrap();
+        q.push(8, true).unwrap();
+        let (ack_tx, ack_rx) = std::sync::mpsc::channel();
+        let waiter = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                // drain the two queued items, then park until close
+                let mut got = vec![q.pop_blocking().unwrap(), q.pop_blocking().unwrap()];
+                got.sort();
+                assert_eq!(got, vec![7, 8]);
+                ack_tx.send(()).unwrap();
+                q.pop_blocking()
+            })
+        };
+        ack_rx.recv().unwrap(); // queue is drained; waiter is parking
+        let left = q.close();
+        assert!(left.is_empty(), "waiter already drained the queue");
+        assert_eq!(waiter.join().unwrap(), None, "parked pop wakes as None on close");
+        match q.push(9, false) {
+            Err(PushError::Closed(9)) => {}
+            other => panic!("expected Closed(9), got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn close_returns_leftovers_high_first() {
+        let q = BoundedQueue::new(4);
+        q.push("n", false).unwrap();
+        q.push("h", true).unwrap();
+        assert_eq!(q.close(), vec!["h", "n"]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn drain_where_frees_capacity_and_keeps_order() {
+        let q = BoundedQueue::new(4);
+        q.push(1, false).unwrap();
+        q.push(2, false).unwrap();
+        q.push(3, true).unwrap();
+        q.push(4, false).unwrap();
+        match q.push(5, false) {
+            Err(PushError::Full(5)) => {}
+            other => panic!("expected Full(5), got {other:?}"),
+        }
+        let dead = q.drain_where(|&x| x % 2 == 0);
+        assert_eq!(dead, vec![2, 4]);
+        assert_eq!(q.len(), 2);
+        q.push(5, false).unwrap(); // capacity freed immediately
+        assert_eq!(q.try_pop(), Some(3), "high band survivor first");
+        assert_eq!(q.try_pop(), Some(1));
+        assert_eq!(q.try_pop(), Some(5));
+    }
+
+    #[test]
+    fn pop_blocking_wakes_on_push() {
+        let q = Arc::new(BoundedQueue::new(4));
+        let waiter = {
+            let q = q.clone();
+            std::thread::spawn(move || q.pop_blocking())
+        };
+        std::thread::sleep(Duration::from_millis(10));
+        q.push(42, false).unwrap();
+        assert_eq!(waiter.join().unwrap(), Some(42));
+    }
+}

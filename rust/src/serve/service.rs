@@ -1,0 +1,439 @@
+//! The public serving API: [`InferenceService`] implemented by
+//! [`ServicePool`], a pool of single-artifact engine workers behind a
+//! bounded admission queue.
+//!
+//! Callers [`submit`](InferenceService::submit) a prompt with typed
+//! [`SubmitOptions`] and get back a [`TokenStream`]: tokens arrive as they
+//! decode, the request can be cancelled mid-flight, and the stream resolves
+//! to a typed [`Completion`] with a finish reason and timing breakdown.
+//! Admission is explicitly backpressured — when the queue is at
+//! `queue_depth` the submit fails with [`SubmitError::QueueFull`] instead of
+//! buffering unboundedly.
+
+use crate::config::ServeConfig;
+use crate::metrics;
+use crate::runtime::ArtifactDir;
+use crate::serve::engine;
+use crate::serve::queue::{BoundedQueue, PushError};
+use crate::serve::slots;
+use anyhow::{Context, Result};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Request-side types
+// ---------------------------------------------------------------------------
+
+/// Scheduling class: `High` drains before `Normal`; FIFO within a class.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Priority {
+    High,
+    #[default]
+    Normal,
+}
+
+/// Per-request knobs. `None` fields fall back to the pool's [`ServeConfig`].
+#[derive(Clone, Debug, Default)]
+pub struct SubmitOptions {
+    /// Cap on generated tokens; `None` → `ServeConfig::max_new_tokens`.
+    pub max_new_tokens: Option<usize>,
+    /// Generation stops when one of these is produced (the stop token is
+    /// included in the output). Empty = run to the length cap.
+    pub stop_tokens: Vec<i32>,
+    /// Wall-clock budget from submit time; `None` →
+    /// `ServeConfig::default_deadline_ms` (0 there = unbounded).
+    pub deadline: Option<Duration>,
+    pub priority: Priority,
+}
+
+/// Why a submit was refused. Both cases are retryable by the caller.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The admission queue is at `queue_depth` — shed load or retry later.
+    QueueFull,
+    /// The pool is shutting down (or already shut down).
+    ShuttingDown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull => write!(f, "admission queue full"),
+            SubmitError::ShuttingDown => write!(f, "service shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// How a request ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Hit its `max_new_tokens` budget.
+    Length,
+    /// Produced a stop token.
+    Stop,
+    /// Cancelled via [`TokenStream::cancel`] / [`CancelHandle`], or shed at
+    /// shutdown before running.
+    Cancelled,
+    /// Its deadline passed (while queued or mid-decode; partial tokens are
+    /// still delivered).
+    DeadlineExpired,
+    /// The engine failed while this request was in flight.
+    Error,
+}
+
+/// Where the request's wall-clock went (all measured from submit).
+#[derive(Clone, Copy, Debug)]
+pub struct Timing {
+    /// Time spent in the admission queue before a slot picked it up.
+    pub queued: Duration,
+    /// Time to first streamed token (`None` if it never produced one).
+    pub first_token: Option<Duration>,
+    /// End-to-end latency.
+    pub total: Duration,
+}
+
+/// Final result of one request.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub tokens: Vec<i32>,
+    pub finish_reason: FinishReason,
+    pub timing: Timing,
+}
+
+/// One streamed event: a decoded token, or the terminal completion.
+#[derive(Clone, Debug)]
+pub enum StreamEvent {
+    Token(i32),
+    Done(Completion),
+}
+
+/// Clonable cancel switch detached from the stream (so one thread can wait
+/// while another cancels).
+#[derive(Clone)]
+pub struct CancelHandle(Arc<AtomicBool>);
+
+impl CancelHandle {
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+/// Receiving side of one request: yields tokens as the engine decodes them
+/// and resolves to a [`Completion`].
+pub struct TokenStream {
+    rx: Receiver<StreamEvent>,
+    cancel: Arc<AtomicBool>,
+    done: Option<Completion>,
+    disconnected: bool,
+}
+
+impl TokenStream {
+    /// Blocking receive of the next event. Returns `None` once the terminal
+    /// [`StreamEvent::Done`] has been consumed (or if the engine dropped the
+    /// request — see [`TokenStream::wait`] for the error-reporting variant).
+    pub fn recv(&mut self) -> Option<StreamEvent> {
+        if self.done.is_some() || self.disconnected {
+            return None;
+        }
+        match self.rx.recv() {
+            Ok(ev) => {
+                if let StreamEvent::Done(c) = &ev {
+                    self.done = Some(c.clone());
+                }
+                Some(ev)
+            }
+            Err(_) => {
+                self.disconnected = true;
+                None
+            }
+        }
+    }
+
+    /// Request cancellation; the engine vacates the row at the next decode
+    /// step and the stream resolves with [`FinishReason::Cancelled`].
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::SeqCst);
+    }
+
+    /// A clonable cancel switch for this request.
+    pub fn cancel_handle(&self) -> CancelHandle {
+        CancelHandle(self.cancel.clone())
+    }
+
+    /// Drain the stream to its terminal completion (blocking).
+    pub fn wait(mut self) -> Result<Completion> {
+        if let Some(c) = self.done.take() {
+            return Ok(c);
+        }
+        loop {
+            match self.rx.recv() {
+                Ok(StreamEvent::Token(_)) => continue,
+                Ok(StreamEvent::Done(c)) => return Ok(c),
+                Err(_) => anyhow::bail!("serve worker dropped the request stream"),
+            }
+        }
+    }
+}
+
+/// A submitted request as it crosses into the worker threads.
+pub(crate) struct QueuedRequest {
+    pub(crate) prompt: Vec<i32>,
+    pub(crate) max_new_tokens: usize,
+    pub(crate) stop_tokens: Vec<i32>,
+    pub(crate) deadline: Option<Instant>,
+    pub(crate) submitted_at: Instant,
+    pub(crate) tx: Sender<StreamEvent>,
+    pub(crate) cancel: Arc<AtomicBool>,
+}
+
+// ---------------------------------------------------------------------------
+// Service trait + pool
+// ---------------------------------------------------------------------------
+
+/// Counter/gauge snapshot of a pool (see [`InferenceService::stats`]).
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceStats {
+    pub workers: usize,
+    /// Requests currently waiting for a slot.
+    pub queue_depth: usize,
+    pub queue_capacity: usize,
+    /// Rows currently decoding across all workers.
+    pub active: usize,
+    pub submitted: u64,
+    /// Finished with `Length` or `Stop`.
+    pub completed: u64,
+    pub cancelled: u64,
+    pub expired: u64,
+    /// Submits refused with `QueueFull`.
+    pub rejected: u64,
+    /// Finished with `Error` (engine batch failure).
+    pub failed: u64,
+    /// Useful (non-dummy) tokens produced by decode steps.
+    pub decoded_tokens: u64,
+    /// Useful tokens per second of *aggregate worker busy time* — a
+    /// per-worker average, not wall-clock pool throughput (with N busy
+    /// workers, wall-clock throughput is up to N× this).
+    pub decode_tokens_per_sec: f64,
+}
+
+#[derive(Default)]
+pub(crate) struct Counters {
+    pub(crate) submitted: AtomicU64,
+    pub(crate) completed: AtomicU64,
+    pub(crate) cancelled: AtomicU64,
+    pub(crate) expired: AtomicU64,
+    pub(crate) rejected: AtomicU64,
+    pub(crate) failed: AtomicU64,
+    pub(crate) decoded_tokens: AtomicU64,
+    pub(crate) decode_nanos: AtomicU64,
+    pub(crate) active: AtomicUsize,
+    pub(crate) live_workers: AtomicUsize,
+}
+
+/// State shared between the submit side and every worker thread.
+pub(crate) struct Shared {
+    pub(crate) queue: BoundedQueue<QueuedRequest>,
+    pub(crate) counters: Counters,
+}
+
+/// A generation service: submit prompts, observe load, shut down.
+pub trait InferenceService {
+    /// Enqueue a prompt for generation. Non-blocking: backpressure surfaces
+    /// as [`SubmitError::QueueFull`].
+    fn submit(&self, prompt: Vec<i32>, opts: SubmitOptions) -> Result<TokenStream, SubmitError>;
+
+    /// Snapshot of queue/slot occupancy and lifetime counters.
+    fn stats(&self) -> ServiceStats;
+
+    /// Stop admissions, resolve queued requests as `Cancelled`, finish
+    /// in-flight rows, and join the workers. Idempotent.
+    fn shutdown(&self);
+}
+
+/// [`InferenceService`] over N engine worker threads sharing one admission
+/// queue. PJRT objects are `Rc`-based (not `Send`), so each worker owns its
+/// own client, compiled executables, params and KV caches (see
+/// `runtime::client()`); the pool only ever touches the queue and counters.
+pub struct ServicePool {
+    cfg: ServeConfig,
+    shared: Arc<Shared>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl ServicePool {
+    /// Validate the artifact and spawn `cfg.workers` engine threads.
+    ///
+    /// Fails fast (before any thread starts) when the artifact is missing or
+    /// was not built with `--serve`. `workers == 0` is allowed: the pool
+    /// only admits/queues, which is useful for exercising backpressure.
+    pub fn start(cfg: ServeConfig) -> Result<Self> {
+        let art = ArtifactDir::open_named(&cfg.artifact)?;
+        art.manifest
+            .serve_batch
+            .context("artifact not built with --serve (no serve_batch in manifest)")?;
+        let shared = Arc::new(Shared {
+            queue: BoundedQueue::new(cfg.queue_depth),
+            counters: Counters::default(),
+        });
+        shared.counters.live_workers.store(cfg.workers, Ordering::SeqCst);
+        let mut handles = Vec::new();
+        for w in 0..cfg.workers {
+            let cfg = cfg.clone();
+            let shared = shared.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("cola-serve-{w}"))
+                    .spawn(move || {
+                        if let Err(e) = engine::worker_main(&cfg, &shared) {
+                            metrics::log_info(&format!("serve worker {w} exited with error: {e:#}"));
+                        }
+                        // Last worker out closes the shop: otherwise a pool
+                        // whose workers all died (e.g. artifact compile
+                        // failure) would leave queued clients blocked forever
+                        // and submitters spinning on QueueFull.
+                        if shared.counters.live_workers.fetch_sub(1, Ordering::SeqCst) == 1 {
+                            let now = Instant::now();
+                            for req in shared.queue.close() {
+                                slots::complete_unstarted(req, FinishReason::Error, now);
+                                shared.counters.failed.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    })?,
+            );
+        }
+        Ok(Self { cfg, shared, workers: Mutex::new(handles) })
+    }
+
+    /// Blocking convenience: submit and wait for the completion.
+    pub fn generate(&self, prompt: Vec<i32>, opts: SubmitOptions) -> Result<Completion> {
+        self.submit(prompt, opts)
+            .map_err(|e| anyhow::anyhow!("submit failed: {e}"))?
+            .wait()
+    }
+
+    /// Blocking submit: rides out `QueueFull` backpressure (sleep + retry)
+    /// until the request is admitted; fails if the pool is shutting down.
+    /// Refused outright on an admission-only pool (`workers == 0`), where
+    /// the queue never drains and the retry loop could never return.
+    pub fn submit_wait(&self, prompt: Vec<i32>, opts: SubmitOptions) -> Result<TokenStream> {
+        anyhow::ensure!(
+            self.cfg.workers > 0,
+            "submit_wait on an admission-only pool (workers=0) would never return"
+        );
+        loop {
+            match self.submit(prompt.clone(), opts.clone()) {
+                Ok(s) => return Ok(s),
+                Err(SubmitError::QueueFull) => {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err(e) => anyhow::bail!("submit failed: {e}"),
+            }
+        }
+    }
+}
+
+impl InferenceService for ServicePool {
+    fn submit(&self, prompt: Vec<i32>, opts: SubmitOptions) -> Result<TokenStream, SubmitError> {
+        let now = Instant::now();
+        let (tx, rx) = channel();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let deadline = opts
+            .deadline
+            .or_else(|| {
+                (self.cfg.default_deadline_ms > 0)
+                    .then(|| Duration::from_millis(self.cfg.default_deadline_ms))
+            })
+            .map(|d| now + d);
+        let req = QueuedRequest {
+            prompt,
+            max_new_tokens: opts.max_new_tokens.unwrap_or(self.cfg.max_new_tokens),
+            stop_tokens: opts.stop_tokens,
+            deadline,
+            submitted_at: now,
+            tx,
+            cancel: cancel.clone(),
+        };
+        match self.shared.queue.push(req, opts.priority == Priority::High) {
+            Ok(()) => {
+                self.shared.counters.submitted.fetch_add(1, Ordering::Relaxed);
+                Ok(TokenStream { rx, cancel, done: None, disconnected: false })
+            }
+            Err(PushError::Full(_)) => {
+                self.shared.counters.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(SubmitError::QueueFull)
+            }
+            Err(PushError::Closed(_)) => Err(SubmitError::ShuttingDown),
+        }
+    }
+
+    fn stats(&self) -> ServiceStats {
+        let c = &self.shared.counters;
+        let decode_secs = c.decode_nanos.load(Ordering::Relaxed) as f64 * 1e-9;
+        let decoded = c.decoded_tokens.load(Ordering::Relaxed);
+        ServiceStats {
+            workers: self.cfg.workers,
+            queue_depth: self.shared.queue.len(),
+            queue_capacity: self.shared.queue.capacity(),
+            active: c.active.load(Ordering::Relaxed),
+            submitted: c.submitted.load(Ordering::Relaxed),
+            completed: c.completed.load(Ordering::Relaxed),
+            cancelled: c.cancelled.load(Ordering::Relaxed),
+            expired: c.expired.load(Ordering::Relaxed),
+            rejected: c.rejected.load(Ordering::Relaxed),
+            failed: c.failed.load(Ordering::Relaxed),
+            decoded_tokens: decoded,
+            decode_tokens_per_sec: if decode_secs > 0.0 {
+                decoded as f64 / decode_secs
+            } else {
+                0.0
+            },
+        }
+    }
+
+    fn shutdown(&self) {
+        let now = Instant::now();
+        let shed = self.shared.queue.close();
+        for req in shed {
+            slots::complete_unstarted(req, FinishReason::Cancelled, now);
+            self.shared.counters.cancelled.fetch_add(1, Ordering::Relaxed);
+        }
+        let handles: Vec<_> = self.workers.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServicePool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn submit_options_defaults_defer_to_config() {
+        let o = SubmitOptions::default();
+        assert!(o.max_new_tokens.is_none());
+        assert!(o.deadline.is_none());
+        assert!(o.stop_tokens.is_empty());
+        assert_eq!(o.priority, Priority::Normal);
+    }
+
+    #[test]
+    fn submit_error_displays() {
+        assert_eq!(SubmitError::QueueFull.to_string(), "admission queue full");
+        assert_eq!(SubmitError::ShuttingDown.to_string(), "service shutting down");
+    }
+}

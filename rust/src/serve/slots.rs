@@ -1,0 +1,332 @@
+//! Slot table for continuous batching: a fixed `serve_bs` grid of rows the
+//! worker decodes in lockstep. Finished / cancelled / expired rows are
+//! vacated and refilled from the admission queue between decode steps, so
+//! slots spend their time on real requests instead of dummy rows decoding
+//! into the void.
+//!
+//! The table is pure bookkeeping (no PJRT): the engine asks it for the
+//! right-aligned context window of each row (to rebuild a merged batch via a
+//! "join prefill") and for the per-row feed tokens of the next decode step,
+//! and reports decoded tokens back via [`SlotTable::push_token`]. Stream
+//! events go out on each request's channel as they happen.
+
+use crate::serve::service::{Completion, FinishReason, QueuedRequest, StreamEvent, Timing};
+use std::sync::atomic::Ordering;
+use std::time::Instant;
+
+/// A request occupying one slot.
+struct ActiveRequest {
+    req: QueuedRequest,
+    generated: Vec<i32>,
+    admitted_at: Instant,
+    first_token_at: Option<Instant>,
+}
+
+/// Fixed-capacity row table; one per engine worker.
+pub struct SlotTable {
+    slots: Vec<Option<ActiveRequest>>,
+}
+
+impl SlotTable {
+    pub fn new(n_slots: usize) -> Self {
+        Self { slots: (0..n_slots).map(|_| None).collect() }
+    }
+
+    pub fn size(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn free(&self) -> usize {
+        self.size() - self.active()
+    }
+
+    /// Indices of occupied rows (snapshot, so callers can mutate while
+    /// iterating).
+    pub fn occupied(&self) -> Vec<usize> {
+        (0..self.slots.len()).filter(|&i| self.slots[i].is_some()).collect()
+    }
+
+    /// Place a request into the lowest free slot. `None` when the table is
+    /// full (callers check `free()` first).
+    pub fn admit(&mut self, req: QueuedRequest, now: Instant) -> Option<usize> {
+        let i = self.slots.iter().position(|s| s.is_none())?;
+        self.slots[i] = Some(ActiveRequest {
+            req,
+            generated: Vec::new(),
+            admitted_at: now,
+            first_token_at: None,
+        });
+        Some(i)
+    }
+
+    /// Right-aligned context window for row `i`: the most recent
+    /// `prompt_len` tokens of `prompt ++ generated`, left-padded with `pad`.
+    /// This is what a join prefill re-encodes when the merged batch is
+    /// rebuilt; RoPE is shift-equivariant, so restarting positions at 0
+    /// preserves attention geometry *within* the window — anything older is
+    /// dropped (sliding-window truncation, same as the engine's rollover).
+    pub fn window(&self, i: usize, prompt_len: usize, pad: i32) -> Vec<i32> {
+        let mut w = vec![pad; prompt_len];
+        if let Some(ent) = self.slots[i].as_ref() {
+            let take = (ent.req.prompt.len() + ent.generated.len()).min(prompt_len);
+            let from_gen = take.min(ent.generated.len());
+            let from_prompt = take - from_gen;
+            let dst = &mut w[prompt_len - take..];
+            dst[..from_prompt]
+                .copy_from_slice(&ent.req.prompt[ent.req.prompt.len() - from_prompt..]);
+            dst[from_prompt..]
+                .copy_from_slice(&ent.generated[ent.generated.len() - from_gen..]);
+        }
+        w
+    }
+
+    /// Per-row input tokens for the next decode step: each active row feeds
+    /// its last generated token; free rows feed `pad` (their output is
+    /// ignored).
+    pub fn feed_tokens(&self, pad: i32) -> Vec<i32> {
+        self.slots
+            .iter()
+            .map(|s| s.as_ref().and_then(|e| e.generated.last().copied()).unwrap_or(pad))
+            .collect()
+    }
+
+    /// Record one decoded token for row `i`: stream it, then finish the row
+    /// if it hit a stop token or its `max_new_tokens` budget. Returns the
+    /// finish reason when the row was vacated.
+    pub fn push_token(&mut self, i: usize, tok: i32, now: Instant) -> Option<FinishReason> {
+        let ent = self.slots[i].as_mut()?;
+        ent.generated.push(tok);
+        if ent.first_token_at.is_none() {
+            ent.first_token_at = Some(now);
+        }
+        let _ = ent.req.tx.send(StreamEvent::Token(tok));
+        let reason = if ent.req.stop_tokens.contains(&tok) {
+            Some(FinishReason::Stop)
+        } else if ent.generated.len() >= ent.req.max_new_tokens {
+            Some(FinishReason::Length)
+        } else {
+            None
+        };
+        if let Some(r) = reason {
+            self.finish(i, r, now);
+        }
+        reason
+    }
+
+    /// Vacate rows whose cancel flag is set or whose deadline has passed.
+    /// Returns `(cancelled, expired)` counts.
+    pub fn sweep(&mut self, now: Instant) -> (usize, usize) {
+        let (mut cancelled, mut expired) = (0, 0);
+        for i in 0..self.slots.len() {
+            let Some(ent) = self.slots[i].as_ref() else { continue };
+            if ent.req.cancel.load(Ordering::Relaxed) {
+                self.finish(i, FinishReason::Cancelled, now);
+                cancelled += 1;
+            } else if ent.req.deadline.is_some_and(|d| now >= d) {
+                self.finish(i, FinishReason::DeadlineExpired, now);
+                expired += 1;
+            }
+        }
+        (cancelled, expired)
+    }
+
+    /// Vacate every row with `FinishReason::Error` (engine batch failure);
+    /// partial tokens are delivered. Returns how many rows were failed.
+    pub fn fail_all(&mut self, now: Instant) -> usize {
+        let mut n = 0;
+        for i in 0..self.slots.len() {
+            if self.slots[i].is_some() {
+                self.finish(i, FinishReason::Error, now);
+                n += 1;
+            }
+        }
+        n
+    }
+
+    fn finish(&mut self, i: usize, reason: FinishReason, now: Instant) {
+        let ent = self.slots[i].take().expect("finish() on an occupied slot");
+        let timing = Timing {
+            queued: ent.admitted_at.saturating_duration_since(ent.req.submitted_at),
+            first_token: ent
+                .first_token_at
+                .map(|t| t.saturating_duration_since(ent.req.submitted_at)),
+            total: now.saturating_duration_since(ent.req.submitted_at),
+        };
+        let _ = ent.req.tx.send(StreamEvent::Done(Completion {
+            tokens: ent.generated,
+            finish_reason: reason,
+            timing,
+        }));
+    }
+}
+
+/// Resolve a request that never reached a slot (expired/cancelled while
+/// queued, shed at shutdown, or admitted with `max_new_tokens == 0` — which
+/// completes with zero tokens rather than smuggling out the prefill token).
+pub fn complete_unstarted(req: QueuedRequest, reason: FinishReason, now: Instant) {
+    let timing = Timing {
+        queued: now.saturating_duration_since(req.submitted_at),
+        first_token: None,
+        total: now.saturating_duration_since(req.submitted_at),
+    };
+    let _ = req.tx.send(StreamEvent::Done(Completion {
+        tokens: Vec::new(),
+        finish_reason: reason,
+        timing,
+    }));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::mpsc::{channel, Receiver};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn mk_req(
+        prompt: Vec<i32>,
+        max_new: usize,
+        stop: Vec<i32>,
+        deadline: Option<Instant>,
+    ) -> (QueuedRequest, Receiver<StreamEvent>, Arc<AtomicBool>) {
+        let (tx, rx) = channel();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let req = QueuedRequest {
+            prompt,
+            max_new_tokens: max_new,
+            stop_tokens: stop,
+            deadline,
+            submitted_at: Instant::now(),
+            tx,
+            cancel: cancel.clone(),
+        };
+        (req, rx, cancel)
+    }
+
+    fn drain(rx: &Receiver<StreamEvent>) -> (Vec<i32>, Option<Completion>) {
+        let mut toks = Vec::new();
+        let mut done = None;
+        while let Ok(ev) = rx.try_recv() {
+            match ev {
+                StreamEvent::Token(t) => toks.push(t),
+                StreamEvent::Done(c) => done = Some(c),
+            }
+        }
+        (toks, done)
+    }
+
+    #[test]
+    fn refill_takes_lowest_free_slot() {
+        let now = Instant::now();
+        let mut tbl = SlotTable::new(3);
+        let mut rxs = Vec::new();
+        for p in 0..3 {
+            let (req, rx, _) = mk_req(vec![p], 1, vec![], None);
+            assert_eq!(tbl.admit(req, now), Some(p as usize));
+            rxs.push(rx);
+        }
+        assert_eq!(tbl.free(), 0);
+        let (req, _rx, _) = mk_req(vec![9], 4, vec![], None);
+        assert_eq!(tbl.admit(req, now), None, "full table rejects admission");
+        // finish the middle row (max_new = 1 → one token ends it)
+        assert_eq!(tbl.push_token(1, 42, now), Some(FinishReason::Length));
+        assert_eq!(tbl.free(), 1);
+        let (req, _rx2, _) = mk_req(vec![9], 4, vec![], None);
+        assert_eq!(tbl.admit(req, now), Some(1), "refill reuses the freed slot");
+        assert_eq!(tbl.occupied(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn stop_token_finishes_with_stop() {
+        let now = Instant::now();
+        let mut tbl = SlotTable::new(1);
+        let (req, rx, _) = mk_req(vec![1, 2], 10, vec![99], None);
+        tbl.admit(req, now).unwrap();
+        assert_eq!(tbl.push_token(0, 5, now), None);
+        assert_eq!(tbl.push_token(0, 99, now), Some(FinishReason::Stop));
+        let (toks, done) = drain(&rx);
+        assert_eq!(toks, vec![5, 99], "stop token is streamed and included");
+        let c = done.unwrap();
+        assert_eq!(c.tokens, vec![5, 99]);
+        assert_eq!(c.finish_reason, FinishReason::Stop);
+    }
+
+    #[test]
+    fn length_cap_streams_then_completes() {
+        let now = Instant::now();
+        let mut tbl = SlotTable::new(1);
+        let (req, rx, _) = mk_req(vec![1], 2, vec![], None);
+        tbl.admit(req, now).unwrap();
+        assert_eq!(tbl.push_token(0, 7, now), None);
+        assert_eq!(tbl.push_token(0, 8, now), Some(FinishReason::Length));
+        let (toks, done) = drain(&rx);
+        assert_eq!(toks, vec![7, 8]);
+        let c = done.unwrap();
+        assert_eq!(c.finish_reason, FinishReason::Length);
+        assert!(c.timing.first_token.is_some());
+    }
+
+    #[test]
+    fn cancellation_mid_decode_vacates_with_partial_tokens() {
+        let now = Instant::now();
+        let mut tbl = SlotTable::new(2);
+        let (req, rx, cancel) = mk_req(vec![1], 100, vec![], None);
+        tbl.admit(req, now).unwrap();
+        tbl.push_token(0, 3, now);
+        assert_eq!(tbl.sweep(now), (0, 0), "no flags set yet");
+        cancel.store(true, Ordering::Relaxed);
+        assert_eq!(tbl.sweep(now), (1, 0));
+        assert_eq!(tbl.active(), 0);
+        let (_, done) = drain(&rx);
+        let c = done.unwrap();
+        assert_eq!(c.finish_reason, FinishReason::Cancelled);
+        assert_eq!(c.tokens, vec![3], "partial output is delivered");
+    }
+
+    #[test]
+    fn deadline_expiry_vacates_row() {
+        let now = Instant::now();
+        let mut tbl = SlotTable::new(1);
+        let (req, rx, _) = mk_req(vec![1], 100, vec![], Some(now + Duration::from_millis(5)));
+        tbl.admit(req, now).unwrap();
+        assert_eq!(tbl.sweep(now), (0, 0), "deadline still in the future");
+        assert_eq!(tbl.sweep(now + Duration::from_millis(6)), (0, 1));
+        let (_, done) = drain(&rx);
+        assert_eq!(done.unwrap().finish_reason, FinishReason::DeadlineExpired);
+    }
+
+    #[test]
+    fn window_is_right_aligned_and_slides_over_generated() {
+        let now = Instant::now();
+        let mut tbl = SlotTable::new(1);
+        let (req, _rx, _) = mk_req(vec![1, 2, 3], 100, vec![], None);
+        tbl.admit(req, now).unwrap();
+        assert_eq!(tbl.window(0, 5, 0), vec![0, 0, 1, 2, 3], "left-padded");
+        for t in [4, 5, 6] {
+            tbl.push_token(0, t, now);
+        }
+        // context 1,2,3,4,5,6 → keep the most recent 5
+        assert_eq!(tbl.window(0, 5, 0), vec![2, 3, 4, 5, 6]);
+        assert_eq!(tbl.feed_tokens(0), vec![6]);
+        // free rows window/feed as pure padding
+        let tbl2 = SlotTable::new(2);
+        assert_eq!(tbl2.window(1, 3, 0), vec![0, 0, 0]);
+        assert_eq!(tbl2.feed_tokens(0), vec![0, 0]);
+    }
+
+    #[test]
+    fn complete_unstarted_delivers_empty_completion() {
+        let (req, rx, _) = mk_req(vec![1, 2], 0, vec![], None);
+        complete_unstarted(req, FinishReason::Length, Instant::now());
+        let (toks, done) = drain(&rx);
+        assert!(toks.is_empty());
+        let c = done.unwrap();
+        assert!(c.tokens.is_empty(), "max_new_tokens == 0 yields no prefill token");
+        assert_eq!(c.finish_reason, FinishReason::Length);
+    }
+}

@@ -1,10 +1,14 @@
-//! Serving-engine integration: spawn the engine on a real artifact, push
-//! concurrent requests through the dynamic batcher, check responses and
-//! engine lifecycle. Requires `make artifacts` (tiny_cola built with
-//! --serve).
+//! Serving integration: bring up a `ServicePool` on a real artifact and
+//! exercise the `InferenceService` surface end-to-end — streaming,
+//! cancellation, deadline expiry, and QueueFull backpressure through the
+//! continuous-batching engine. Requires `make artifacts` (tiny_cola built
+//! with --serve); every test skips cleanly when the artifact is missing.
 
 use cola::config::ServeConfig;
-use cola::serve::Engine;
+use cola::serve::{
+    FinishReason, InferenceService, ServicePool, StreamEvent, SubmitError, SubmitOptions,
+};
+use std::time::Duration;
 
 fn have(artifact: &str, step: &str) -> bool {
     let root = std::env::var("COLA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
@@ -14,95 +18,244 @@ fn have(artifact: &str, step: &str) -> bool {
         .exists()
 }
 
-fn spawn(artifact: &str) -> Option<(cola::serve::EngineHandle, std::thread::JoinHandle<()>)> {
+fn start(artifact: &str, tweak: impl FnOnce(&mut ServeConfig)) -> Option<ServicePool> {
     if !have(artifact, "decode_step") {
         eprintln!("skip: artifact {artifact} lacks serving steps (`make artifacts`)");
         return None;
     }
-    let cfg = ServeConfig {
-        artifact: artifact.into(),
-        max_new_tokens: 8,
-        max_wait_ms: 2,
-    };
-    Some(Engine::spawn(cfg).unwrap())
+    let mut cfg = ServeConfig { artifact: artifact.into(), ..ServeConfig::default() };
+    tweak(&mut cfg);
+    Some(ServicePool::start(cfg).unwrap())
+}
+
+fn opts(max_new: usize) -> SubmitOptions {
+    SubmitOptions { max_new_tokens: Some(max_new), ..Default::default() }
 }
 
 #[test]
 fn single_request_roundtrip() {
-    let Some((engine, join)) = spawn("tiny_cola") else { return };
-    let resp = engine.generate(vec![5, 6, 7, 8], 6).unwrap();
-    assert_eq!(resp.tokens.len(), 6);
+    let Some(pool) = start("tiny_cola", |_| {}) else { return };
+    let c = pool.generate(vec![5, 6, 7, 8], opts(6)).unwrap();
+    assert_eq!(c.tokens.len(), 6);
+    assert_eq!(c.finish_reason, FinishReason::Length);
     let man = cola::runtime::ArtifactDir::open_named("tiny_cola").unwrap().manifest;
-    assert!(resp.tokens.iter().all(|&t| (0..man.preset.vocab as i32).contains(&t)));
-    assert!(resp.latency.as_secs_f64() > 0.0);
-    drop(engine);
-    let _ = join.join();
+    assert!(c.tokens.iter().all(|&t| (0..man.preset.vocab as i32).contains(&t)));
+    assert!(c.timing.total.as_secs_f64() > 0.0);
+    assert!(c.timing.first_token.is_some());
+    assert!(c.timing.first_token.unwrap() <= c.timing.total);
+    pool.shutdown();
 }
 
 #[test]
 fn decode_is_deterministic_for_same_prompt() {
-    let Some((engine, join)) = spawn("tiny_cola") else { return };
-    let a = engine.generate(vec![10, 11, 12, 13, 14], 6).unwrap();
-    let b = engine.generate(vec![10, 11, 12, 13, 14], 6).unwrap();
+    let Some(pool) = start("tiny_cola", |_| {}) else { return };
+    let a = pool.generate(vec![10, 11, 12, 13, 14], opts(6)).unwrap();
+    let b = pool.generate(vec![10, 11, 12, 13, 14], opts(6)).unwrap();
     assert_eq!(a.tokens, b.tokens, "greedy decode must be deterministic");
-    drop(engine);
-    let _ = join.join();
+    pool.shutdown();
 }
 
 #[test]
-fn concurrent_clients_are_batched() {
-    let Some((engine, join)) = spawn("tiny_cola") else { return };
-    // warmup compile
-    engine.generate(vec![1, 2, 3], 2).unwrap();
-
-    let mut clients = Vec::new();
-    for c in 0..3 {
-        let engine = engine.clone();
-        clients.push(std::thread::spawn(move || {
-            let mut out = Vec::new();
-            for i in 0..4 {
-                let prompt = vec![c * 37 + i + 4; 5];
-                out.push(engine.generate(prompt, 4).unwrap());
-            }
-            out
-        }));
-    }
-    let mut tps = Vec::new();
-    for c in clients {
-        for resp in c.join().unwrap() {
-            assert_eq!(resp.tokens.len(), 4);
-            tps.push(resp.batch_tokens_per_sec);
+fn streaming_yields_tokens_incrementally() {
+    let Some(pool) = start("tiny_cola", |_| {}) else { return };
+    let mut stream = pool.submit(vec![3, 4, 5], opts(5)).unwrap();
+    let mut streamed = Vec::new();
+    let done = loop {
+        match stream.recv() {
+            Some(StreamEvent::Token(t)) => streamed.push(t),
+            Some(StreamEvent::Done(c)) => break c,
+            None => panic!("stream dropped before Done"),
         }
+    };
+    assert_eq!(streamed.len(), 5, "every decoded token is streamed");
+    assert_eq!(streamed, done.tokens, "stream and completion agree");
+    assert!(stream.recv().is_none(), "stream is exhausted after Done");
+    pool.shutdown();
+}
+
+#[test]
+fn stop_token_ends_generation_early() {
+    let Some(pool) = start("tiny_cola", |_| {}) else { return };
+    // learn what greedy decode emits, then re-run with that token as a stop
+    let probe = pool.generate(vec![20, 21, 22], opts(6)).unwrap();
+    assert_eq!(probe.tokens.len(), 6);
+    let stop = probe.tokens[2];
+    let o = SubmitOptions { stop_tokens: vec![stop], ..opts(6) };
+    let c = pool.generate(vec![20, 21, 22], o).unwrap();
+    assert_eq!(c.finish_reason, FinishReason::Stop);
+    // cut at the FIRST occurrence (an untrained model may repeat tokens)
+    let first = probe.tokens.iter().position(|&t| t == stop).unwrap();
+    assert_eq!(c.tokens, probe.tokens[..=first].to_vec(), "stops at and includes the stop token");
+    pool.shutdown();
+}
+
+#[test]
+fn concurrent_submits_all_complete_via_continuous_batching() {
+    let Some(pool) = start("tiny_cola", |c| c.queue_depth = 64) else { return };
+    // warmup compile so the workload below exercises steady-state decode
+    pool.generate(vec![1, 2, 3], opts(2)).unwrap();
+
+    // heterogeneous budgets force slot turnover (short rows vacate and
+    // refill while long rows keep decoding)
+    let mut streams = Vec::new();
+    for i in 0..12u32 {
+        let max_new = if i % 2 == 0 { 3 } else { 9 };
+        let prompt = vec![(i as i32) * 37 % 200 + 4; 5];
+        streams.push(pool.submit(prompt, opts(max_new)).unwrap());
     }
-    assert!(tps.iter().all(|&t| t > 0.0));
-    drop(engine);
-    let _ = join.join();
+    for (i, s) in streams.into_iter().enumerate() {
+        let c = s.wait().unwrap();
+        let want = if i % 2 == 0 { 3 } else { 9 };
+        assert_eq!(c.tokens.len(), want, "request {i}");
+        assert_eq!(c.finish_reason, FinishReason::Length);
+    }
+    let stats = pool.stats();
+    assert!(stats.completed >= 13, "12 requests + warmup completed");
+    assert!(stats.decoded_tokens > 0);
+    assert!(stats.decode_tokens_per_sec > 0.0);
+    pool.shutdown();
 }
 
 #[test]
 fn long_prompts_are_truncated_not_fatal() {
-    let Some((engine, join)) = spawn("tiny_cola") else { return };
+    let Some(pool) = start("tiny_cola", |_| {}) else { return };
     let long: Vec<i32> = (4..200).collect(); // much longer than prompt_len
-    let resp = engine.generate(long, 4).unwrap();
-    assert_eq!(resp.tokens.len(), 4);
-    drop(engine);
-    let _ = join.join();
+    let c = pool.generate(long, opts(4)).unwrap();
+    assert_eq!(c.tokens.len(), 4);
+    pool.shutdown();
 }
 
 #[test]
-fn engine_shuts_down_cleanly_on_handle_drop() {
-    let Some((engine, join)) = spawn("tiny_cola") else { return };
-    engine.generate(vec![4, 5], 2).unwrap();
-    drop(engine);
-    // join must complete (channel closed -> engine loop exits)
-    join.join().unwrap();
+fn generation_can_exceed_the_static_kv_window() {
+    let Some(pool) = start("tiny_cola", |_| {}) else { return };
+    let man = cola::runtime::ArtifactDir::open_named("tiny_cola").unwrap().manifest;
+    let max_len = man.max_len.unwrap_or(man.preset.seq_len);
+    // the retired engine capped max_new at max_len - prompt_len; the
+    // sliding-window rollover re-prefills instead
+    let c = pool.generate(vec![5, 6, 7], opts(max_len + 8)).unwrap();
+    assert_eq!(c.tokens.len(), max_len + 8);
+    pool.shutdown();
 }
 
 #[test]
-fn spawn_fails_fast_on_missing_artifact() {
-    let cfg = ServeConfig {
-        artifact: "definitely_missing".into(),
-        ..ServeConfig::default()
+fn cancellation_mid_decode() {
+    let Some(pool) = start("tiny_cola", |_| {}) else { return };
+    let mut stream = pool.submit(vec![4, 5, 6], opts(100_000)).unwrap();
+    // wait for the first streamed token so we know the row is decoding
+    match stream.recv() {
+        Some(StreamEvent::Token(_)) => {}
+        other => panic!("expected a first token, got {other:?}"),
+    }
+    stream.cancel();
+    let c = stream.wait().unwrap();
+    assert_eq!(c.finish_reason, FinishReason::Cancelled);
+    assert!(!c.tokens.is_empty(), "partial output is delivered");
+    assert!(c.tokens.len() < 100_000, "cancel actually cut generation short");
+    pool.shutdown();
+}
+
+#[test]
+fn deadline_expires_mid_decode() {
+    let Some(pool) = start("tiny_cola", |_| {}) else { return };
+    // warmup so compile time doesn't eat the deadline budget
+    pool.generate(vec![1, 2], opts(2)).unwrap();
+    let o = SubmitOptions { deadline: Some(Duration::from_millis(30)), ..opts(1_000_000) };
+    let c = pool.generate(vec![7, 8, 9], o).unwrap();
+    assert_eq!(c.finish_reason, FinishReason::DeadlineExpired);
+    assert!(c.tokens.len() < 1_000_000);
+    pool.shutdown();
+}
+
+#[test]
+fn default_deadline_comes_from_config() {
+    let Some(pool) = start("tiny_cola", |c| c.default_deadline_ms = 30) else { return };
+    pool.generate(vec![1, 2], opts(2)).ok(); // warmup may itself expire; ignore
+    let c = pool.generate(vec![7, 8, 9], opts(1_000_000)).unwrap();
+    assert_eq!(c.finish_reason, FinishReason::DeadlineExpired);
+    pool.shutdown();
+}
+
+#[test]
+fn queue_full_backpressure_and_shutdown_shedding() {
+    // workers = 0: admission-only pool, so the queue deterministically
+    // fills and QueueFull surfaces on the exact submit that exceeds it
+    let Some(pool) = start("tiny_cola", |c| {
+        c.workers = 0;
+        c.queue_depth = 2;
+    }) else {
+        return;
     };
-    assert!(Engine::spawn(cfg).is_err());
+    let s1 = pool.submit(vec![1], opts(4)).unwrap();
+    let s2 = pool.submit(vec![2], opts(4)).unwrap();
+    match pool.submit(vec![3], opts(4)) {
+        Err(SubmitError::QueueFull) => {}
+        other => panic!("expected QueueFull, got {:?}", other.map(|_| ())),
+    }
+    let stats = pool.stats();
+    assert_eq!(stats.queue_depth, 2);
+    assert_eq!(stats.queue_capacity, 2);
+    assert_eq!(stats.submitted, 2);
+    assert_eq!(stats.rejected, 1);
+
+    // shutdown sheds queued work as Cancelled rather than hanging clients
+    pool.shutdown();
+    let c1 = s1.wait().unwrap();
+    let c2 = s2.wait().unwrap();
+    assert_eq!(c1.finish_reason, FinishReason::Cancelled);
+    assert_eq!(c2.finish_reason, FinishReason::Cancelled);
+    assert!(c1.tokens.is_empty());
+
+    // and the pool refuses new work after shutdown
+    match pool.submit(vec![4], opts(4)) {
+        Err(SubmitError::ShuttingDown) => {}
+        other => panic!("expected ShuttingDown, got {:?}", other.map(|_| ())),
+    }
+}
+
+#[test]
+fn priority_submits_are_accepted_and_shed_cleanly() {
+    // NOTE: high-before-normal pop ordering is asserted deterministically in
+    // the `serve::queue` unit tests; end-to-end completion order through a
+    // live worker is timing-dependent, so here we only exercise the
+    // priority-carrying submit path and shutdown shedding.
+    let Some(pool) = start("tiny_cola", |c| {
+        c.workers = 0;
+        c.queue_depth = 8;
+    }) else {
+        return;
+    };
+    let normal = pool.submit(vec![1], opts(4)).unwrap();
+    let high = pool
+        .submit(vec![2], SubmitOptions { priority: cola::serve::Priority::High, ..opts(4) })
+        .unwrap();
+    assert_eq!(pool.stats().queue_depth, 2);
+    pool.shutdown();
+    assert_eq!(high.wait().unwrap().finish_reason, FinishReason::Cancelled);
+    assert_eq!(normal.wait().unwrap().finish_reason, FinishReason::Cancelled);
+}
+
+#[test]
+fn zero_token_budget_completes_empty() {
+    let Some(pool) = start("tiny_cola", |_| {}) else { return };
+    let c = pool.generate(vec![5, 6], opts(0)).unwrap();
+    assert!(c.tokens.is_empty(), "max_new_tokens=0 must not leak the prefill token");
+    assert_eq!(c.finish_reason, FinishReason::Length);
+    pool.shutdown();
+}
+
+#[test]
+fn shutdown_is_idempotent_and_drains_in_flight_work() {
+    let Some(pool) = start("tiny_cola", |_| {}) else { return };
+    let s = pool.submit(vec![4, 5], opts(2)).unwrap();
+    pool.shutdown();
+    // admitted-or-queued work resolves rather than hanging
+    let c = s.wait().unwrap();
+    assert!(matches!(c.finish_reason, FinishReason::Length | FinishReason::Cancelled));
+    pool.shutdown(); // second call is a no-op
+}
+
+#[test]
+fn start_fails_fast_on_missing_artifact() {
+    let cfg = ServeConfig { artifact: "definitely_missing".into(), ..ServeConfig::default() };
+    assert!(ServicePool::start(cfg).is_err());
 }

@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# One-entry verification for builders and CI: the tier-1 gate
+# (`cargo build --release && cargo test -q`) plus formatting.
+#
+#   scripts/verify.sh            # build + test + fmt-check
+#   SKIP_FMT=1 scripts/verify.sh # tier-1 only
+#
+# Runs from the rust/ crate root regardless of invocation directory.
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+if [ "${SKIP_FMT:-0}" != "1" ]; then
+    echo "== cargo fmt --check =="
+    cargo fmt --check
+fi
+
+echo "verify: OK"
