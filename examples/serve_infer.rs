@@ -1,40 +1,59 @@
-//! Serving example: bring up a `ServicePool` (continuous batching + KV-cache
-//! decode over the AOT artifacts) on a trained checkpoint, stream one
-//! request token-by-token, then push a concurrent workload through the
-//! bounded admission queue — the Table 11 measurement path as a library
-//! consumer sees it.
+//! Serving example: bring up a `ModelRouter` (named continuous-batching
+//! pools with KV-cache decode over the AOT artifacts) on one or more
+//! trained checkpoints, stream one request token-by-token, then push a
+//! concurrent workload round-robin across the models through their bounded
+//! admission queues — the Table 11 measurement path as a library consumer
+//! sees it.
 //!
-//!     cargo run --release --example serve_infer [artifact] [n_requests]
+//!     cargo run --release --example serve_infer [artifact[,artifact...]] [n_requests]
 
-use cola::config::ServeConfig;
+use cola::config::RouterConfig;
 use cola::data::{corpus::CorpusCfg, CorpusGen};
-use cola::metrics::{fmt_ms, percentile};
-use cola::serve::{InferenceService, ServicePool, StreamEvent, SubmitOptions};
+use cola::metrics::{fmt_labels, fmt_ms, percentile};
+use cola::serve::{ModelRouter, StreamEvent, SubmitOptions};
 use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let artifact = args.first().cloned().unwrap_or_else(|| "p350m_cola".into());
+    let mut artifacts: Vec<String> = args
+        .first()
+        .map(|s| s.split(',').filter(|p| !p.is_empty()).map(String::from).collect())
+        .unwrap_or_default();
+    if artifacts.is_empty() {
+        artifacts.push("p350m_cola".into());
+    }
     let n_requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(32);
 
-    let cfg = ServeConfig {
-        artifact: artifact.clone(),
+    // one pool per artifact, model name = artifact name
+    let defaults = cola::config::ServeConfig {
         max_new_tokens: 16,
         queue_depth: 16,
-        ..ServeConfig::default()
+        ..Default::default()
     };
-    let pool = ServicePool::start(cfg)?;
+    let models = artifacts
+        .iter()
+        .map(|a| {
+            let cfg = cola::config::ServeConfig { artifact: a.clone(), ..defaults.clone() };
+            (a.clone(), cfg)
+        })
+        .collect();
+    let rcfg = RouterConfig { defaults, models };
+    let router = ModelRouter::start(&rcfg)?;
 
-    let man = cola::runtime::ArtifactDir::open_named(&artifact)?.manifest;
-    let bpe = cola::coordinator::trainer::shared_bpe(man.preset.vocab)?;
+    let mut encoders = Vec::new();
+    for a in &artifacts {
+        let man = cola::runtime::ArtifactDir::open_named(a)?.manifest;
+        encoders.push(cola::coordinator::trainer::shared_bpe(man.preset.vocab)?);
+    }
     let mut gen = CorpusGen::new(CorpusCfg { seed: 123, ..CorpusCfg::default() });
 
-    // Streaming: tokens arrive as they decode (this first request also
-    // compiles prefill+decode, so its time-to-first-token includes compile).
-    let mut stream = pool
-        .submit(bpe.encode(&gen.text(50)), SubmitOptions::default())
+    // Streaming from the first model: tokens arrive as they decode (this
+    // first request also compiles prefill+decode, so its time-to-first-token
+    // includes compile).
+    let mut stream = router
+        .submit(&artifacts[0], encoders[0].encode(&gen.text(50)), SubmitOptions::default())
         .map_err(|e| anyhow::anyhow!("submit: {e}"))?;
-    print!("streaming:");
+    print!("streaming{}:", fmt_labels(&[("model", artifacts[0].as_str())]));
     let completion = loop {
         match stream.recv() {
             Some(StreamEvent::Token(t)) => {
@@ -50,15 +69,28 @@ fn main() -> anyhow::Result<()> {
         "\nwarmup: {} tokens ({:?}), text: {:?}",
         completion.tokens.len(),
         completion.finish_reason,
-        bpe.decode(&completion.tokens)
+        encoders[0].decode(&completion.tokens)
     );
+    // warm the remaining models so the timed workload measures decode
+    for (a, bpe) in artifacts.iter().zip(&encoders).skip(1) {
+        let opts = SubmitOptions { max_new_tokens: Some(2), ..Default::default() };
+        router.generate(a, bpe.encode(&gen.text(40)), opts)?;
+    }
 
-    // Concurrent workload: submit everything up front; the bounded queue
-    // pushes back with QueueFull, which submit_wait rides out.
+    // Concurrent workload round-robin across models: submit everything up
+    // front. Each model's bounded queue pushes back with QueueFull, which
+    // submit_wait rides out by sleeping — note this single submit thread
+    // blocks on the full model, so a saturated queue briefly gates the
+    // round-robin (a per-model submitter would avoid that; kept simple here).
     let t0 = Instant::now();
     let mut streams = Vec::new();
-    for _ in 0..n_requests {
-        streams.push(pool.submit_wait(bpe.encode(&gen.text(50)), SubmitOptions::default())?);
+    for r in 0..n_requests {
+        let which = r % artifacts.len();
+        streams.push(router.submit_wait(
+            &artifacts[which],
+            encoders[which].encode(&gen.text(50)),
+            SubmitOptions::default(),
+        )?);
     }
     let (mut total_tokens, mut lat, mut ttft) = (0usize, Vec::new(), Vec::new());
     for s in streams {
@@ -70,12 +102,13 @@ fn main() -> anyhow::Result<()> {
         }
     }
     let secs = t0.elapsed().as_secs_f64();
-    let stats = pool.stats();
+    let agg = router.aggregate_stats();
     println!(
-        "\n{n_requests} requests: {total_tokens} tokens in {secs:.2}s = {:.0} tok/s \
-         (decode {:.0} tok/s)",
+        "\n{n_requests} requests across {} model(s): {total_tokens} tokens in {secs:.2}s = \
+         {:.0} tok/s (decode {:.0} tok/s)",
+        artifacts.len(),
         total_tokens as f64 / secs.max(1e-9),
-        stats.decode_tokens_per_sec
+        agg.decode_tokens_per_sec
     );
     println!(
         "latency p50 {} | p90 {} | p99 {} | ttft p50 {} | engine RSS {:.2} GB",
@@ -85,10 +118,16 @@ fn main() -> anyhow::Result<()> {
         fmt_ms(percentile(&ttft, 50.0)),
         cola::metrics::peak_rss_bytes() as f64 / 1e9
     );
-    println!(
-        "stats: submitted={} completed={} rejected={} active={}",
-        stats.submitted, stats.completed, stats.rejected, stats.active
-    );
-    pool.shutdown();
+    for (name, s) in router.stats_by_model() {
+        println!(
+            "stats{}: submitted={} completed={} rejected={} active={}",
+            fmt_labels(&[("model", name)]),
+            s.submitted,
+            s.completed,
+            s.rejected,
+            s.active
+        );
+    }
+    router.shutdown();
     Ok(())
 }

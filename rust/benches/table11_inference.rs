@@ -1,37 +1,35 @@
 //! Table 11 — inference memory and throughput: full-rank vs SLTrain vs CoLA
-//! through the serving pool (prefill + KV-cache decode, continuous batching).
+//! served **side by side from one process** through a `ModelRouter` (one
+//! continuous-batching pool per artifact — the multi-artifact deployment the
+//! paper's halved CoLA model size makes cheap).
 //! Paper shape (A100, 1B/7B): CoLA ~1.6x tokens/s of full-rank at lower
 //! memory; SLTrain slightly below full-rank throughput.
 
 use cola::bench::{banner, proxy_note, require_artifacts};
-use cola::config::ServeConfig;
+use cola::config::RouterConfig;
 use cola::data::{corpus::CorpusCfg, CorpusGen};
 use cola::metrics::percentile;
-use cola::serve::{InferenceService, ServicePool, SubmitOptions};
+use cola::serve::{ModelRouter, SubmitOptions};
 use std::time::Instant;
 
-fn measure(artifact: &str, n_requests: usize, max_new: usize) -> (f64, f64, f64) {
-    let cfg = ServeConfig {
-        artifact: artifact.into(),
-        max_new_tokens: max_new,
-        queue_depth: n_requests.max(1),
-        ..ServeConfig::default()
-    };
-    let pool = ServicePool::start(cfg).expect(artifact);
+fn measure(router: &ModelRouter, model: &str, n_requests: usize) -> (f64, f64, f64) {
+    let artifact = &router.pool(model).expect(model).config().artifact;
     let man = cola::runtime::ArtifactDir::open_named(artifact).unwrap().manifest;
     let bpe = cola::coordinator::trainer::shared_bpe(man.preset.vocab).unwrap();
     let mut gen = CorpusGen::new(CorpusCfg { seed: 5, ..CorpusCfg::default() });
 
     // warmup (compile + first batch)
     let opts = SubmitOptions { max_new_tokens: Some(4), ..Default::default() };
-    pool.generate(bpe.encode(&gen.text(40)), opts).unwrap();
+    router.generate(model, bpe.encode(&gen.text(40)), opts).unwrap();
 
     // submit everything up front: continuous batching keeps the slot table
     // full as rows finish, instead of draining whole static batches
     let t0 = Instant::now();
     let mut streams = Vec::new();
     for _ in 0..n_requests {
-        streams.push(pool.submit_wait(bpe.encode(&gen.text(40)), SubmitOptions::default()).unwrap());
+        streams.push(
+            router.submit_wait(model, bpe.encode(&gen.text(40)), SubmitOptions::default()).unwrap(),
+        );
     }
     let mut total_tokens = 0usize;
     let mut lat = Vec::new();
@@ -42,7 +40,6 @@ fn measure(artifact: &str, n_requests: usize, max_new: usize) -> (f64, f64, f64)
     }
     let secs = t0.elapsed().as_secs_f64();
     let p50 = percentile(&lat, 50.0).unwrap_or(f64::NAN);
-    pool.shutdown();
     let rss = cola::metrics::peak_rss_bytes() as f64 / 1e9;
     (total_tokens as f64 / secs, p50, rss)
 }
@@ -52,27 +49,41 @@ fn main() {
     if !require_artifacts(&arts) {
         return;
     }
-    banner("Table 11", "inference memory + throughput through the serving engine");
+    banner("Table 11", "inference memory + throughput through the model router");
     proxy_note();
+
+    // one router, three resident models — variants answer side by side
+    let defaults = cola::config::ServeConfig {
+        max_new_tokens: 16,
+        queue_depth: 24,
+        ..Default::default()
+    };
+    let models = arts
+        .iter()
+        .map(|a| {
+            let name = a.strip_prefix("p350m_").unwrap().to_string();
+            let cfg = cola::config::ServeConfig { artifact: (*a).into(), ..defaults.clone() };
+            (name, cfg)
+        })
+        .collect();
+    let rcfg = RouterConfig { defaults, models };
+    let router = ModelRouter::start(&rcfg).expect("router start");
 
     // paper @1B BZ=32: full 5.74GB/21109 t/s; sltrain 4.18/20096; cola 3.84/34697
     let paper = [(5.74, 21109.0), (4.18, 20096.0), (3.84, 34697.0)];
     println!(
         "{:>14} {:>10} {:>10} {:>10}   {:>22}",
-        "variant", "tok/s", "p50 ms", "proc RSS", "paper @1B (GB, tok/s)"
+        "model", "tok/s", "p50 ms", "proc RSS", "paper @1B (GB, tok/s)"
     );
     let mut tput = Vec::new();
-    for (a, (pm, pt)) in arts.iter().zip(paper) {
-        let (tps, p50, rss) = measure(a, 24, 16);
-        println!(
-            "{:>14} {:>10.0} {:>10.1} {:>7.2} GB   {pm:>8.2}, {pt:>8.0}",
-            a.strip_prefix("p350m_").unwrap(),
-            tps,
-            p50,
-            rss
-        );
+    let model_names: Vec<String> = router.models().iter().map(|s| s.to_string()).collect();
+    for (name, (pm, pt)) in model_names.iter().zip(paper) {
+        let (tps, p50, rss) = measure(&router, name, 24);
+        println!("{name:>14} {tps:>10.0} {p50:>10.1} {rss:>7.2} GB   {pm:>8.2}, {pt:>8.0}");
         tput.push(tps);
     }
+    // RSS above is process-wide with ALL THREE variants resident — the
+    // side-by-side serving footprint, not per-variant.
     // model sizes (memory column at paper scale comes from the manifests)
     for a in arts {
         let m = cola::runtime::ArtifactDir::open_named(a).unwrap().manifest;
@@ -93,4 +104,5 @@ fn main() {
         );
     }
     assert!(ratio > 0.8, "CoLA inference should never be materially slower");
+    router.shutdown();
 }

@@ -82,6 +82,44 @@ impl Default for ServeConfig {
     }
 }
 
+/// Multi-model serving configuration (see `serve::ModelRouter`): pool
+/// defaults plus any number of named per-model stanzas, each a full
+/// [`ServeConfig`] derived from the defaults.
+///
+/// JSON form — plain keys set the defaults, `models` holds per-model
+/// overrides (instantiated in name order):
+///
+/// ```json
+/// { "workers": 1, "queue_depth": 64,
+///   "models": { "cola_130m":   {"artifact": "p130m_cola"},
+///               "full_130m":   {"artifact": "p130m_full", "workers": 2} } }
+/// ```
+///
+/// CLI form: plain `key=value` pairs set the defaults,
+/// `models=name:artifact,name2:artifact2` registers models, and
+/// `name.key=value` overrides one model.
+#[derive(Clone, Debug, Default)]
+pub struct RouterConfig {
+    /// Base pool settings every model starts from; `defaults.artifact`
+    /// doubles as the single-model fallback when `models` is empty.
+    pub defaults: ServeConfig,
+    /// `(model name, fully-resolved pool config)`, in registration order.
+    pub models: Vec<(String, ServeConfig)>,
+}
+
+impl RouterConfig {
+    /// The models a router should start: the configured list, or — when no
+    /// `models` stanza was given — a single model named after the default
+    /// artifact (so flat single-artifact configs keep working).
+    pub fn resolved_models(&self) -> Vec<(String, ServeConfig)> {
+        if self.models.is_empty() {
+            vec![(self.defaults.artifact.clone(), self.defaults.clone())]
+        } else {
+            self.models.clone()
+        }
+    }
+}
+
 /// Apply `key=value` overrides (CLI) onto a TrainConfig.
 pub fn apply_train_overrides(cfg: &mut TrainConfig, kvs: &[(String, String)]) -> Result<()> {
     for (k, v) in kvs {
@@ -131,11 +169,7 @@ fn json_kvs(path: &Path) -> Result<Vec<(String, String)>> {
     let mut file_kvs = Vec::new();
     if let Json::Obj(m) = &j {
         for (k, v) in m {
-            let vs = match v {
-                Json::Str(s) => s.clone(),
-                other => other.to_string(),
-            };
-            file_kvs.push((k.clone(), vs));
+            file_kvs.push((k.clone(), json_leaf(v)));
         }
     }
     Ok(file_kvs)
@@ -153,6 +187,7 @@ pub fn load_train_config(path: Option<&Path>, kvs: &[(String, String)]) -> Resul
 
 /// Load a ServeConfig from a JSON file then apply overrides — `serve`
 /// accepts `--config file.json` and `key=value` exactly like `train`.
+/// Single-pool form; the router-aware loader is [`load_router_config`].
 pub fn load_serve_config(path: Option<&Path>, kvs: &[(String, String)]) -> Result<ServeConfig> {
     let mut cfg = ServeConfig::default();
     if let Some(p) = path {
@@ -160,6 +195,96 @@ pub fn load_serve_config(path: Option<&Path>, kvs: &[(String, String)]) -> Resul
     }
     apply_serve_overrides(&mut cfg, kvs)?;
     Ok(cfg)
+}
+
+/// Stringify a JSON leaf the way the `key=value` appliers expect.
+fn json_leaf(v: &Json) -> String {
+    match v {
+        Json::Str(s) => s.clone(),
+        other => other.to_string(),
+    }
+}
+
+/// Load a [`RouterConfig`] from an optional JSON file plus CLI overrides.
+///
+/// Resolution order (later wins): built-in defaults → file plain keys →
+/// CLI plain keys, then each model = defaults + its file stanza + its
+/// `name.key=value` CLI overrides. Models come from the file's `models`
+/// object (name order) and/or CLI `models=name:artifact,...` entries; a
+/// file without a `models` stanza behaves exactly like the old flat
+/// single-artifact config.
+pub fn load_router_config(path: Option<&Path>, kvs: &[(String, String)]) -> Result<RouterConfig> {
+    let mut defaults = ServeConfig::default();
+    // (name, raw overrides) — resolved against the final defaults below
+    let mut model_stanzas: Vec<(String, Vec<(String, String)>)> = Vec::new();
+
+    if let Some(p) = path {
+        let j = Json::parse(&std::fs::read_to_string(p)?)
+            .with_context(|| format!("parsing {}", p.display()))?;
+        let Json::Obj(entries) = &j else {
+            anyhow::bail!("{}: top level must be a JSON object", p.display());
+        };
+        for (k, v) in entries {
+            if k == "models" {
+                let Json::Obj(models) = v else {
+                    anyhow::bail!("`models` must be an object of per-model stanzas");
+                };
+                for (name, stanza) in models {
+                    let Json::Obj(fields) = stanza else {
+                        anyhow::bail!("model `{name}`: stanza must be an object");
+                    };
+                    anyhow::ensure!(
+                        !name.contains('.'),
+                        "model name `{name}` may not contain `.` (reserved for overrides)"
+                    );
+                    let raw = fields.iter().map(|(fk, fv)| (fk.clone(), json_leaf(fv))).collect();
+                    model_stanzas.push((name.clone(), raw));
+                }
+            } else {
+                apply_serve_overrides(&mut defaults, &[(k.clone(), json_leaf(v))])?;
+            }
+        }
+    }
+
+    // Split the CLI overrides: `models=` registrations, `name.key=value`
+    // per-model overrides, plain keys onto the defaults.
+    let mut per_model: Vec<(String, String, String)> = Vec::new();
+    for (k, v) in kvs {
+        if k == "models" {
+            for part in v.split(',').filter(|s| !s.is_empty()) {
+                let (name, artifact) = match part.split_once(':') {
+                    Some((n, a)) => (n.to_string(), a.to_string()),
+                    None => (part.to_string(), part.to_string()),
+                };
+                anyhow::ensure!(!name.contains('.'), "model name `{name}` may not contain `.`");
+                anyhow::ensure!(
+                    !model_stanzas.iter().any(|(n, _)| *n == name),
+                    "model `{name}` defined twice"
+                );
+                model_stanzas.push((name, vec![("artifact".into(), artifact)]));
+            }
+        } else if let Some((model, key)) = k.split_once('.') {
+            per_model.push((model.to_string(), key.to_string(), v.clone()));
+        } else {
+            apply_serve_overrides(&mut defaults, &[(k.clone(), v.clone())])?;
+        }
+    }
+
+    let mut models = Vec::new();
+    for (name, raw) in model_stanzas {
+        let mut cfg = defaults.clone();
+        apply_serve_overrides(&mut cfg, &raw)
+            .with_context(|| format!("model `{name}` stanza"))?;
+        models.push((name, cfg));
+    }
+    for (model, key, value) in per_model {
+        let Some((_, cfg)) = models.iter_mut().find(|(n, _)| *n == model) else {
+            anyhow::bail!("override `{model}.{key}` names an unknown model `{model}`");
+        };
+        apply_serve_overrides(cfg, &[(key.clone(), value)])
+            .with_context(|| format!("override `{model}.{key}`"))?;
+    }
+    Ok(RouterConfig { defaults, models })
 }
 
 #[cfg(test)]
@@ -225,6 +350,84 @@ mod tests {
         let mut cfg = ServeConfig::default();
         assert!(apply_serve_overrides(&mut cfg, &[("max_wait_ms".into(), "5".into())]).is_err());
         assert!(apply_serve_overrides(&mut cfg, &[("nope".into(), "1".into())]).is_err());
+    }
+
+    #[test]
+    fn router_config_without_models_is_single_model() {
+        let cfg = load_router_config(
+            None,
+            &[("artifact".into(), "p130m_cola".into()), ("workers".into(), "2".into())],
+        )
+        .unwrap();
+        assert!(cfg.models.is_empty());
+        let resolved = cfg.resolved_models();
+        assert_eq!(resolved.len(), 1);
+        assert_eq!(resolved[0].0, "p130m_cola", "fallback model named after the artifact");
+        assert_eq!(resolved[0].1.workers, 2);
+    }
+
+    #[test]
+    fn router_config_models_stanza_inherits_defaults() {
+        let tmp = std::env::temp_dir().join("cola_router_cfg_test.json");
+        std::fs::write(
+            &tmp,
+            r#"{"queue_depth": 8, "max_new_tokens": 4,
+                "models": {"cola": {"artifact": "p130m_cola"},
+                           "full": {"artifact": "p130m_full", "queue_depth": 2}}}"#,
+        )
+        .unwrap();
+        let cfg = load_router_config(Some(&tmp), &[]).unwrap();
+        std::fs::remove_file(&tmp).ok();
+        assert_eq!(cfg.defaults.queue_depth, 8);
+        // BTreeMap stanza → name order
+        let names: Vec<_> = cfg.models.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["cola", "full"]);
+        let cola = &cfg.models[0].1;
+        assert_eq!(cola.artifact, "p130m_cola");
+        assert_eq!(cola.queue_depth, 8, "inherits defaults");
+        assert_eq!(cola.max_new_tokens, 4);
+        let full = &cfg.models[1].1;
+        assert_eq!(full.queue_depth, 2, "stanza overrides defaults");
+    }
+
+    #[test]
+    fn router_config_cli_models_and_dotted_overrides() {
+        let cfg = load_router_config(
+            None,
+            &[
+                ("workers".into(), "1".into()),
+                ("models".into(), "a:art_a,b:art_b".into()),
+                ("b.workers".into(), "3".into()),
+                ("b.queue_depth".into(), "5".into()),
+            ],
+        )
+        .unwrap();
+        assert_eq!(cfg.models.len(), 2);
+        assert_eq!(cfg.models[0].1.artifact, "art_a");
+        assert_eq!(cfg.models[0].1.workers, 1, "plain key lands in every model via defaults");
+        assert_eq!(cfg.models[1].1.workers, 3, "dotted override beats defaults");
+        assert_eq!(cfg.models[1].1.queue_depth, 5);
+    }
+
+    #[test]
+    fn router_config_bare_model_name_is_its_artifact() {
+        let cfg = load_router_config(None, &[("models".into(), "tiny_cola".into())]).unwrap();
+        assert_eq!(cfg.models.len(), 1);
+        assert_eq!(cfg.models[0].0, "tiny_cola");
+        assert_eq!(cfg.models[0].1.artifact, "tiny_cola");
+    }
+
+    #[test]
+    fn router_config_rejects_unknown_model_and_bad_keys() {
+        let err = load_router_config(None, &[("ghost.workers".into(), "1".into())]).unwrap_err();
+        assert!(err.to_string().contains("unknown model"), "{err}");
+        assert!(load_router_config(None, &[("models".into(), "a:x,a:y".into())]).is_err());
+        let err = load_router_config(
+            None,
+            &[("models".into(), "a:x".into()), ("a.nope".into(), "1".into())],
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("unknown serve config key"), "{err:#}");
     }
 
     #[test]

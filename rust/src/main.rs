@@ -3,12 +3,15 @@
 //! Subcommands:
 //!   train     train an artifact (e.g. --artifact p60m_cola steps=400)
 //!   eval      evaluate validation perplexity of a checkpoint
-//!   serve     run a load generator against the serving pool
-//!             (`ServicePool`: continuous batching, streaming, bounded
-//!             admission queue). Flags: --requests N, --config file.json;
-//!             key=value overrides: artifact, max_new_tokens, workers,
-//!             queue_depth, default_deadline_ms. Prints p50/p95/p99
-//!             latency, time-to-first-token, and queue-depth stats.
+//!   serve     run a load generator against the serving tier
+//!             (`ModelRouter` → named `ServicePool`s: continuous batching,
+//!             streaming, bounded admission queues). Flags: --requests N,
+//!             --config file.json, --model NAME (restrict load to one
+//!             model); key=value overrides: artifact, max_new_tokens,
+//!             workers, queue_depth, default_deadline_ms,
+//!             models=name:artifact,... and name.key=value per model.
+//!             Prints per-model p50/p95/p99 latency, time-to-first-token,
+//!             and labeled queue/counter stats plus a fleet aggregate.
 //!   rank      activation-spectrum analysis (Fig. 2) on an artifact
 //!   cost      print the analytic paper tables (2/3/4, Fig 5/6/7 data)
 //!   data-gen  pre-build the corpus + BPE tokenizer caches
@@ -18,19 +21,20 @@
 //! / config::ServeConfig).
 
 use anyhow::{Context, Result};
-use cola::config::{apply_serve_overrides, apply_train_overrides, load_serve_config, TrainConfig};
+use cola::config::{apply_train_overrides, load_router_config, TrainConfig};
 use cola::coordinator::Trainer;
 use cola::costmodel::{tables, PaperPreset, PAPER_PRESETS};
 use cola::data::{corpus::CorpusCfg, CorpusGen};
 use cola::metrics;
 use cola::metrics::{fmt_ms, percentile};
-use cola::serve::{InferenceService, ServicePool, SubmitError, SubmitOptions};
+use cola::serve::{ModelRouter, RouteError, SubmitError, SubmitOptions};
 
 fn usage() -> ! {
     eprintln!(
         "usage: cola <train|eval|serve|rank|cost|data-gen> [--artifact NAME] [key=value ...]\n\
-         serve: cola serve [--artifact NAME] [--requests N] [--config f.json]\n\
+         serve: cola serve [--artifact NAME] [--requests N] [--config f.json] [--model NAME]\n\
                 [max_new_tokens=K] [workers=N] [queue_depth=D] [default_deadline_ms=MS]\n\
+                [models=name:artifact,...] [name.key=value ...]\n\
          run `cola cost` for the analytic paper tables; `make artifacts` first for the rest."
     );
     std::process::exit(2);
@@ -108,43 +112,77 @@ fn cmd_eval(
     Ok(())
 }
 
-/// Load generator against the serving pool: submits `--requests` prompts
-/// with queue backpressure (retrying on `QueueFull`), then reports latency
-/// percentiles, time-to-first-token, throughput, and queue/slot stats.
+/// Load generator against the serving tier: brings up a `ModelRouter` (one
+/// pool per configured model), round-robins `--requests` prompts across the
+/// targeted models with queue backpressure (retrying on `QueueFull`), then
+/// reports per-model latency percentiles, time-to-first-token, and labeled
+/// counter stats plus a fleet aggregate. `--model NAME` restricts the load
+/// to one model.
 fn cmd_serve(
     flags: std::collections::HashMap<String, String>,
     kvs: Vec<(String, String)>,
 ) -> Result<()> {
-    // precedence (last wins): defaults < --config file < --artifact < key=value
-    let mut cfg = load_serve_config(flags.get("config").map(std::path::Path::new), &[])?;
+    // precedence for pool defaults (last wins): built-ins < --config file
+    // plain keys < --artifact < key=value; each model then layers its own
+    // file stanza and `name.key=value` overrides on top of those defaults
+    // (see config::load_router_config)
+    let mut all_kvs = Vec::new();
     if let Some(a) = flags.get("artifact") {
-        cfg.artifact = a.clone();
+        all_kvs.push(("artifact".to_string(), a.clone()));
     }
-    apply_serve_overrides(&mut cfg, &kvs)?;
+    all_kvs.extend(kvs);
+    let rcfg = load_router_config(flags.get("config").map(std::path::Path::new), &all_kvs)?;
+    let models = rcfg.resolved_models();
     let n_requests: usize = flags.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(16);
-    anyhow::ensure!(cfg.workers > 0, "serve needs workers >= 1 (workers=0 is admission-only)");
 
-    let pool = ServicePool::start(cfg.clone())?;
-    let bpe = cola::coordinator::trainer::shared_bpe(
-        cola::runtime::ArtifactDir::open_named(&cfg.artifact)?.manifest.preset.vocab,
-    )?;
+    // which models the load generator drives (the router serves them all)
+    let targets: Vec<String> = match flags.get("model") {
+        Some(m) => {
+            anyhow::ensure!(
+                models.iter().any(|(n, _)| n == m),
+                "--model `{m}` is not configured (models: {})",
+                models.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>().join(", ")
+            );
+            vec![m.clone()]
+        }
+        None => models.iter().map(|(n, _)| n.clone()).collect(),
+    };
+    for (name, cfg) in &models {
+        anyhow::ensure!(
+            cfg.workers > 0 || !targets.contains(name),
+            "model `{name}` needs workers >= 1 (workers=0 is admission-only)"
+        );
+    }
+
+    let router = ModelRouter::start(&rcfg)?;
+    // per-model tokenizer (vocab comes from each artifact's manifest)
+    let mut encoders = Vec::new();
+    for name in &targets {
+        let cfg = &models.iter().find(|(n, _)| n == name).unwrap().1;
+        let vocab =
+            cola::runtime::ArtifactDir::open_named(&cfg.artifact)?.manifest.preset.vocab;
+        encoders.push(cola::coordinator::trainer::shared_bpe(vocab)?);
+    }
     let mut gen = CorpusGen::new(CorpusCfg::default());
 
     if n_requests > 0 {
-        // warmup: compiles prefill+decode on the worker before timing starts
-        let opts = SubmitOptions { max_new_tokens: Some(2), ..Default::default() };
-        pool.generate(bpe.encode(&gen.text(40)), opts)?;
+        // warmup: compiles each target's prefill+decode before timing starts
+        for (name, bpe) in targets.iter().zip(&encoders) {
+            let opts = SubmitOptions { max_new_tokens: Some(2), ..Default::default() };
+            router.generate(name, bpe.encode(&gen.text(40)), opts)?;
+        }
     }
 
     let t0 = std::time::Instant::now();
-    let mut streams = Vec::new();
+    let mut streams: Vec<(usize, cola::serve::TokenStream)> = Vec::new();
     let (mut retries, mut max_queue) = (0u64, 0usize);
-    for _ in 0..n_requests {
-        let prompt = bpe.encode(&gen.text(60));
+    for r in 0..n_requests {
+        let which = r % targets.len();
+        let prompt = encoders[which].encode(&gen.text(60));
         loop {
-            match pool.submit(prompt.clone(), SubmitOptions::default()) {
-                Ok(s) => break streams.push(s),
-                Err(SubmitError::QueueFull) => {
+            match router.submit(&targets[which], prompt.clone(), SubmitOptions::default()) {
+                Ok(s) => break streams.push((which, s)),
+                Err(RouteError::Submit(SubmitError::QueueFull)) => {
                     // bounded queue pushed back: wait for capacity
                     retries += 1;
                     std::thread::sleep(std::time::Duration::from_millis(1));
@@ -152,44 +190,61 @@ fn cmd_serve(
                 Err(e) => anyhow::bail!("submit failed: {e}"),
             }
         }
-        max_queue = max_queue.max(pool.stats().queue_depth);
+        max_queue = max_queue.max(router.aggregate_stats().queue_depth);
     }
-    let (mut total_tokens, mut lat, mut ttft) = (0usize, Vec::new(), Vec::new());
-    for s in streams {
+    // per-target sample sets
+    let mut tokens = vec![0usize; targets.len()];
+    let mut lat = vec![Vec::new(); targets.len()];
+    let mut ttft = vec![Vec::new(); targets.len()];
+    for (which, s) in streams {
         let c = s.wait()?;
-        total_tokens += c.tokens.len();
-        lat.push(c.timing.total.as_secs_f64() * 1000.0);
+        tokens[which] += c.tokens.len();
+        lat[which].push(c.timing.total.as_secs_f64() * 1000.0);
         if let Some(t) = c.timing.first_token {
-            ttft.push(t.as_secs_f64() * 1000.0);
+            ttft[which].push(t.as_secs_f64() * 1000.0);
         }
     }
     let secs = t0.elapsed().as_secs_f64();
-    let stats = pool.stats();
+    let total_tokens: usize = tokens.iter().sum();
+    let agg = router.aggregate_stats();
     println!(
-        "served {n_requests} requests, {total_tokens} tokens in {secs:.2}s \
+        "served {n_requests} requests across {} model(s), {total_tokens} tokens in {secs:.2}s \
          ({:.0} tok/s wall, {:.0} tok/s decode)",
+        targets.len(),
         total_tokens as f64 / secs.max(1e-9),
-        stats.decode_tokens_per_sec
+        agg.decode_tokens_per_sec
     );
-    println!(
-        "latency p50={} p95={} p99={} | ttft p50={} p99={}",
-        fmt_ms(percentile(&lat, 50.0)),
-        fmt_ms(percentile(&lat, 95.0)),
-        fmt_ms(percentile(&lat, 99.0)),
-        fmt_ms(percentile(&ttft, 50.0)),
-        fmt_ms(percentile(&ttft, 99.0)),
-    );
+    for (i, name) in targets.iter().enumerate() {
+        let label = [("model", name.as_str())];
+        println!(
+            "{}: requests={} tokens={} | latency p50={} p95={} p99={} | ttft p50={} p99={}",
+            metrics::fmt_labels(&label),
+            lat[i].len(),
+            tokens[i],
+            fmt_ms(percentile(&lat[i], 50.0)),
+            fmt_ms(percentile(&lat[i], 95.0)),
+            fmt_ms(percentile(&lat[i], 99.0)),
+            fmt_ms(percentile(&ttft[i], 50.0)),
+            fmt_ms(percentile(&ttft[i], 99.0)),
+        );
+    }
+    for (name, s) in router.stats_by_model() {
+        let label = [("model", name)];
+        println!(
+            "{} {} {} {} {}",
+            metrics::stat_line("serve_submitted", &label, s.submitted),
+            metrics::stat_line("serve_completed", &label, s.completed),
+            metrics::stat_line("serve_cancelled", &label, s.cancelled),
+            metrics::stat_line("serve_expired", &label, s.expired),
+            metrics::stat_line("serve_rejected", &label, s.rejected),
+        );
+    }
     println!(
         "queue: peak depth {max_queue}/{} full-retries {retries} | \
          submitted={} completed={} cancelled={} expired={} rejected={}",
-        stats.queue_capacity,
-        stats.submitted,
-        stats.completed,
-        stats.cancelled,
-        stats.expired,
-        stats.rejected
+        agg.queue_capacity, agg.submitted, agg.completed, agg.cancelled, agg.expired, agg.rejected
     );
-    pool.shutdown();
+    router.shutdown();
     Ok(())
 }
 

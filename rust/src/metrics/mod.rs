@@ -74,6 +74,31 @@ pub fn fmt_ms(x: Option<f64>) -> String {
     x.map_or_else(|| "n/a".into(), |v| format!("{v:.1}ms"))
 }
 
+/// Render a `{k="v",...}` label suffix for per-model/per-worker metric
+/// lines (prometheus-style; empty input → empty string, so unlabeled lines
+/// stay clean). Values are escaped per the exposition format (`\`, `"`,
+/// and newlines), keeping one metric per output line.
+pub fn fmt_labels(pairs: &[(&str, &str)]) -> String {
+    if pairs.is_empty() {
+        return String::new();
+    }
+    let body: Vec<String> = pairs
+        .iter()
+        .map(|(k, v)| {
+            let v = v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n");
+            format!("{k}=\"{v}\"")
+        })
+        .collect();
+    format!("{{{}}}", body.join(","))
+}
+
+/// One labeled stat line, e.g. `serve_completed{model="cola_130m"} 42` —
+/// the per-model serving report and load generator both emit these so
+/// multi-model output stays grep-able by label.
+pub fn stat_line(name: &str, labels: &[(&str, &str)], value: impl std::fmt::Display) -> String {
+    format!("{name}{} {value}", fmt_labels(labels))
+}
+
 /// Tokens/sec meter over a training or serving run.
 pub struct Throughput {
     start: Instant,
@@ -183,6 +208,26 @@ mod tests {
         assert_eq!(percentile(&xs, 100.0), Some(100.0));
         assert_eq!(percentile(&[3.0, 1.0, 2.0], 50.0), Some(2.0), "sorts internally");
         assert_eq!(percentile(&[7.5], 99.0), Some(7.5));
+    }
+
+    #[test]
+    fn labels_render_prometheus_style() {
+        assert_eq!(fmt_labels(&[]), "");
+        assert_eq!(fmt_labels(&[("model", "cola_130m")]), "{model=\"cola_130m\"}");
+        assert_eq!(
+            fmt_labels(&[("model", "full"), ("worker", "0")]),
+            "{model=\"full\",worker=\"0\"}"
+        );
+        assert_eq!(
+            stat_line("serve_completed", &[("model", "cola")], 42),
+            "serve_completed{model=\"cola\"} 42"
+        );
+        assert_eq!(stat_line("serve_active", &[], 3), "serve_active 3");
+        assert_eq!(
+            fmt_labels(&[("model", "a\"b\\c")]),
+            "{model=\"a\\\"b\\\\c\"}",
+            "quotes and backslashes escape per the exposition format"
+        );
     }
 
     #[test]

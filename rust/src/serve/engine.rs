@@ -1,36 +1,46 @@
-//! The engine worker: slot-based continuous batching over the AOT
-//! prefill/decode artifacts.
+//! The engine worker: slot-based continuous batching behind the
+//! [`EngineBackend`] trait.
 //!
-//! Each worker owns its PJRT client, compiled executables, device-resident
-//! params and KV caches (PJRT wrappers are `Rc`-based, so nothing XLA leaves
-//! this thread). The loop:
+//! The worker loop is pure scheduling — admission, join prefills, lockstep
+//! decode, vacate/refill — and talks to the model through [`EngineBackend`],
+//! which owns everything stateful about *how* a batch is encoded and
+//! decoded. Two implementations exist:
+//!
+//! - [`PjrtBackend`]: the AOT prefill/decode artifacts on the PJRT CPU
+//!   client. Each worker owns its client, compiled executables,
+//!   device-resident params and KV caches (PJRT wrappers are `Rc`-based, so
+//!   nothing XLA leaves this thread).
+//! - [`MockBackend`](crate::serve::mock::MockBackend): a deterministic,
+//!   artifact-free backend so the entire scheduling surface (router, slot
+//!   table, queue, streaming, cancellation, deadlines) runs hermetically
+//!   under `cargo test -q`.
+//!
+//! The loop:
 //!
 //! 1. park on the admission queue while the slot table is idle;
 //! 2. top up free slots from the queue (expired/cancelled/zero-budget
 //!    requests resolve immediately without burning a slot);
 //! 3. **join prefill**: re-encode the merged batch — every occupied row's
-//!    right-aligned context window — in one `[serve_bs, prompt_len]` call,
-//!    producing fresh KV caches and one next-token per row. The decode
-//!    artifact shares a single `pos` scalar across the batch, so rows can
-//!    only join at a prefill boundary; re-encoding restarts positions at 0,
-//!    which RoPE's shift-equivariance makes attention-equivalent for the
-//!    tokens inside the window. Context older than the most recent
-//!    `prompt_len` tokens is dropped at a join — sliding-window semantics,
-//!    so a row's continuation can depend on whether neighbours joined
-//!    mid-flight (ROADMAP lists prefix caching / per-row positions as the
-//!    fix);
+//!    right-aligned context window — in one `[batch, prompt_len]` call,
+//!    producing fresh KV state and one next-token per row. The decode step
+//!    shares a single `pos` scalar across the batch, so rows can only join
+//!    at a prefill boundary; re-encoding restarts positions at 0, which
+//!    RoPE's shift-equivariance makes attention-equivalent for the tokens
+//!    inside the window. Context older than the most recent `prompt_len`
+//!    tokens is dropped at a join — sliding-window semantics, so a row's
+//!    continuation can depend on whether neighbours joined mid-flight
+//!    (ROADMAP lists prefix caching / per-row positions as the fix);
 //! 4. decode in lockstep, streaming each row's token as it lands, vacating
 //!    rows that finish/cancel/expire — and break back to (3) when an
 //!    admission into a vacated slot actually lands, or when the KV window
 //!    is exhausted (`pos == max_len`, a sliding-window rollover that lets
-//!    generations run past the artifact's static window).
+//!    generations run past the backend's static window).
 //!
 //! Rows that sit empty while the queue is dry still decode junk (the shapes
 //! are static), but unlike the retired flush-and-wait batcher they are
 //! refilled the instant work arrives instead of after the whole batch
 //! drains.
 
-use crate::config::ServeConfig;
 use crate::data::tokenizer;
 use crate::metrics;
 use crate::runtime::executor::{buf_i32_vec, lit_i32, to_device};
@@ -38,28 +48,156 @@ use crate::runtime::{ArtifactDir, Executor};
 use crate::serve::service::{FinishReason, QueuedRequest, Shared};
 use crate::serve::slots::{self, SlotTable};
 use anyhow::{Context, Result};
+use std::rc::Rc;
 use std::sync::atomic::Ordering;
 use std::time::Instant;
 
-/// Body of one `cola-serve-N` thread (spawned by `ServicePool::start`).
-pub(crate) fn worker_main(cfg: &ServeConfig, shared: &Shared) -> Result<()> {
-    let art = ArtifactDir::open_named(&cfg.artifact)?;
-    let man = art.manifest.clone();
-    let serve_bs = man.serve_batch.context("artifact not built with --serve")?;
-    let prompt_len = man.prompt_len.unwrap_or(8);
-    let max_len = man.max_len.unwrap_or(man.preset.seq_len);
-    let prefill = art.step("prefill")?;
-    let decode = art.step("decode_step")?;
-    // params stay on device for the worker's lifetime
-    let params_all = art.load_state0_buffers()?;
-    let params = &params_all[..man.n_params];
+// ---------------------------------------------------------------------------
+// Backend trait
+// ---------------------------------------------------------------------------
 
-    let mut table = SlotTable::new(serve_bs);
+/// What the scheduling loop needs from a model: static batch geometry plus
+/// the two batched ops (join prefill, lockstep decode step).
+///
+/// Implementations are constructed *inside* the worker thread (see
+/// `ServicePool::start_with`), so they may hold thread-local, non-`Send`
+/// state — the PJRT backend does exactly that.
+pub trait EngineBackend {
+    /// Rows decoded in lockstep (the artifact's `serve_bs`).
+    fn batch_size(&self) -> usize;
+
+    /// Join-prefill window length: how many trailing context tokens each row
+    /// re-encodes when the merged batch is rebuilt.
+    fn prompt_len(&self) -> usize;
+
+    /// Static KV window: decode positions available after one prefill. When
+    /// `pos` reaches this, the worker re-prefills (sliding-window rollover).
+    fn max_len(&self) -> usize;
+
+    /// Human-readable identity for worker-up log lines.
+    fn describe(&self) -> String;
+
+    /// Re-encode the merged batch: `tokens` is `[batch_size * prompt_len]`
+    /// row-major (each row right-aligned, pad-filled). Rebuilds the KV state
+    /// and returns one next-token per row.
+    fn prefill(&mut self, tokens: &[i32]) -> Result<Vec<i32>>;
+
+    /// One lockstep decode step at position `pos`: `feed` is one token per
+    /// row (pad for free rows, whose output is ignored). Returns one
+    /// next-token per row and advances the KV state.
+    fn decode_step(&mut self, feed: &[i32], pos: usize) -> Result<Vec<i32>>;
+}
+
+// ---------------------------------------------------------------------------
+// PJRT artifact backend
+// ---------------------------------------------------------------------------
+
+/// [`EngineBackend`] over the AOT prefill/decode artifacts. Owns the
+/// compiled executables, device-resident params, and the KV cache buffers
+/// that thread from one call to the next. All PJRT objects are `Rc`-based
+/// and stay on the constructing thread.
+pub struct PjrtBackend {
+    prefill: Rc<Executor>,
+    decode: Rc<Executor>,
+    /// Model params only (the first `n_params` of state0); optimizer state
+    /// is not needed to serve.
+    params: Vec<xla::PjRtBuffer>,
+    /// `(kc, vc)` produced by the last prefill/decode call.
+    kv: Option<(xla::PjRtBuffer, xla::PjRtBuffer)>,
+    batch: usize,
+    prompt_len: usize,
+    max_len: usize,
+    name: String,
+}
+
+impl PjrtBackend {
+    /// Open an artifact built with `--serve` and compile its step functions.
+    pub fn open(artifact: &str) -> Result<Self> {
+        let art = ArtifactDir::open_named(artifact)?;
+        let man = art.manifest.clone();
+        let batch = man.serve_batch.context("artifact not built with --serve")?;
+        let prompt_len = man.prompt_len.unwrap_or(8);
+        let max_len = man.max_len.unwrap_or(man.preset.seq_len);
+        let prefill = art.step("prefill")?;
+        let decode = art.step("decode_step")?;
+        // params stay on device for the backend's lifetime
+        let mut params = art.load_state0_buffers()?;
+        params.truncate(man.n_params);
+        Ok(Self {
+            prefill,
+            decode,
+            params,
+            kv: None,
+            batch,
+            prompt_len,
+            max_len,
+            name: man.name,
+        })
+    }
+}
+
+impl EngineBackend for PjrtBackend {
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn prompt_len(&self) -> usize {
+        self.prompt_len
+    }
+
+    fn max_len(&self) -> usize {
+        self.max_len
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "pjrt:{} bs={} prompt_len={} max_len={}",
+            self.name, self.batch, self.prompt_len, self.max_len
+        )
+    }
+
+    fn prefill(&mut self, tokens: &[i32]) -> Result<Vec<i32>> {
+        let tok_buf =
+            to_device(&lit_i32(tokens, &[self.batch as i64, self.prompt_len as i64])?)?;
+        let mut refs: Vec<&xla::PjRtBuffer> = self.params.iter().collect();
+        refs.push(&tok_buf);
+        let mut out = self.prefill.run_b(&refs)?;
+        anyhow::ensure!(out.len() == 3, "prefill returns (next, kc, vc)");
+        let vcb = out.pop().unwrap();
+        let kcb = out.pop().unwrap();
+        self.kv = Some((kcb, vcb));
+        buf_i32_vec(&out[0])
+    }
+
+    fn decode_step(&mut self, feed: &[i32], pos: usize) -> Result<Vec<i32>> {
+        // Take the KV pair; a failed step leaves `kv` empty, and the worker
+        // always re-prefills after a batch failure, which restores it.
+        let (kcb, vcb) = self.kv.take().context("decode_step before prefill")?;
+        let tok_b = to_device(&lit_i32(feed, &[self.batch as i64])?)?;
+        let pos_b = to_device(&xla::Literal::scalar(pos as i32))?;
+        let mut refs: Vec<&xla::PjRtBuffer> = self.params.iter().collect();
+        refs.push(&kcb);
+        refs.push(&vcb);
+        refs.push(&tok_b);
+        refs.push(&pos_b);
+        let mut out = self.decode.run_b(&refs)?;
+        anyhow::ensure!(out.len() == 3, "decode returns (next, kc, vc)");
+        let vcb2 = out.pop().unwrap();
+        let kcb2 = out.pop().unwrap();
+        self.kv = Some((kcb2, vcb2));
+        buf_i32_vec(&out[0])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scheduling loop (backend-agnostic)
+// ---------------------------------------------------------------------------
+
+/// Body of one `cola-serve-N` thread (spawned by `ServicePool::start_with`).
+pub(crate) fn run_worker(backend: &mut dyn EngineBackend, shared: &Shared) -> Result<()> {
+    let mut table = SlotTable::new(backend.batch_size());
     let mut gauge = 0usize; // this worker's contribution to stats.active
-    metrics::log_info(&format!(
-        "serve worker up: {} bs={serve_bs} prompt_len={prompt_len} max_len={max_len}",
-        man.name
-    ));
+    metrics::log_info(&format!("serve worker up: {}", backend.describe()));
 
     loop {
         // Park while idle; `None` = queue closed and drained → exit.
@@ -86,10 +224,7 @@ pub(crate) fn worker_main(cfg: &ServeConfig, shared: &Shared) -> Result<()> {
         }
         sync_gauge(shared, &mut gauge, table.active());
 
-        if let Err(e) = decode_rounds(
-            shared, prefill.as_ref(), decode.as_ref(), params, &mut table, &mut gauge,
-            serve_bs, prompt_len, max_len,
-        ) {
+        if let Err(e) = decode_rounds(shared, backend, &mut table, &mut gauge) {
             let n = table.fail_all(Instant::now());
             shared.counters.failed.fetch_add(n as u64, Ordering::Relaxed);
             sync_gauge(shared, &mut gauge, 0);
@@ -145,31 +280,23 @@ fn shed_dead_queued(shared: &Shared, now: Instant) {
 /// One join-prefill plus the lockstep decode rounds that follow it. Returns
 /// when the table drained, a refill opportunity appeared, or the KV window
 /// rolled over — the caller re-enters after topping up slots.
-#[allow(clippy::too_many_arguments)]
 fn decode_rounds(
     shared: &Shared,
-    prefill: &Executor,
-    decode: &Executor,
-    params: &[xla::PjRtBuffer],
+    backend: &mut dyn EngineBackend,
     table: &mut SlotTable,
     gauge: &mut usize,
-    serve_bs: usize,
-    prompt_len: usize,
-    max_len: usize,
 ) -> Result<()> {
+    let (serve_bs, prompt_len, max_len) =
+        (backend.batch_size(), backend.prompt_len(), backend.max_len());
+
     // --- join prefill over the merged batch ---------------------------------
     let mut toks = Vec::with_capacity(serve_bs * prompt_len);
     for i in 0..serve_bs {
         toks.extend(table.window(i, prompt_len, tokenizer::PAD));
     }
-    let tok_buf = to_device(&lit_i32(&toks, &[serve_bs as i64, prompt_len as i64])?)?;
-    let mut refs: Vec<&xla::PjRtBuffer> = params.iter().collect();
-    refs.push(&tok_buf);
-    let mut out = prefill.run_b(&refs)?;
-    anyhow::ensure!(out.len() == 3, "prefill returns (next, kc, vc)");
-    let mut vcb = out.pop().unwrap();
-    let mut kcb = out.pop().unwrap();
-    let mut next = buf_i32_vec(&out[0])?;
+    let mut next = backend.prefill(&toks)?;
+    let rows = next.len();
+    anyhow::ensure!(rows == serve_bs, "prefill returned {rows} rows, want {serve_bs}");
 
     let mut now = Instant::now();
     for i in table.occupied() {
@@ -220,19 +347,10 @@ fn decode_rounds(
         }
 
         let feed = table.feed_tokens(tokenizer::PAD);
-        let tok_b = to_device(&lit_i32(&feed, &[serve_bs as i64])?)?;
-        let pos_b = to_device(&xla::Literal::scalar(pos as i32))?;
-        let mut refs: Vec<&xla::PjRtBuffer> = params.iter().collect();
-        refs.push(&kcb);
-        refs.push(&vcb);
-        refs.push(&tok_b);
-        refs.push(&pos_b);
         let t_step = Instant::now();
-        let mut out = decode.run_b(&refs)?;
-        anyhow::ensure!(out.len() == 3, "decode returns (next, kc, vc)");
-        vcb = out.pop().unwrap();
-        kcb = out.pop().unwrap();
-        next = buf_i32_vec(&out[0])?;
+        next = backend.decode_step(&feed, pos)?;
+        let rows = next.len();
+        anyhow::ensure!(rows == serve_bs, "decode returned {rows} rows, want {serve_bs}");
         pos += 1;
 
         let occupied = table.occupied();

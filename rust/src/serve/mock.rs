@@ -1,0 +1,205 @@
+//! A deterministic, artifact-free [`EngineBackend`]: the hermetic test
+//! harness for the serving tier.
+//!
+//! `MockBackend` generates scripted token streams with a pure arithmetic
+//! rule — the token after `t` is `(t + stride) % vocab` — evaluated on
+//! whatever the scheduler feeds it. Because the engine's join prefill
+//! right-aligns each row's window, the last window token is always the
+//! row's most recent real token, so a row's stream is the arithmetic
+//! progression `p + stride, p + 2·stride, …` (mod `vocab`) from its last
+//! prompt token `p`, *regardless* of when neighbours join, vacate, or the
+//! KV window rolls over. Tests can therefore predict exact outputs while
+//! exercising the real continuous-batching machinery: router dispatch,
+//! slot refills, streaming, cancellation, deadlines, and backpressure —
+//! all under `cargo test -q` with no PJRT artifact on disk.
+//!
+//! Knobs:
+//! - [`step_delay`](MockBackend::step_delay): per-decode-step latency, so
+//!   mid-flight cancellation and deadline expiry have time to land;
+//! - [`fail_after`](MockBackend::fail_after): one-shot decode failure, to
+//!   exercise the engine's batch-failure path (`FinishReason::Error`) and
+//!   its recovery on the next join prefill;
+//! - [`stride`](MockBackend::stride) / [`vocab`](MockBackend::vocab): make
+//!   streams distinguishable per model when several mock pools sit behind
+//!   one `ModelRouter`.
+
+use crate::serve::engine::EngineBackend;
+use anyhow::Result;
+use std::time::Duration;
+
+/// Deterministic scripted backend (see module docs). `Clone` so one
+/// configured instance can serve as the template for every worker in a
+/// pool — see [`MockBackend::factory`].
+#[derive(Clone, Debug)]
+pub struct MockBackend {
+    batch: usize,
+    prompt_len: usize,
+    max_len: usize,
+    stride: i32,
+    vocab: i32,
+    step_delay: Duration,
+    fail_after: Option<u64>,
+    decode_calls: u64,
+}
+
+impl MockBackend {
+    /// A backend with the given batch geometry; token rule `t → t + 1`
+    /// (mod 1009), zero step latency, no failure injection.
+    pub fn new(batch: usize, prompt_len: usize, max_len: usize) -> Self {
+        assert!(batch > 0 && prompt_len > 0 && max_len >= prompt_len, "degenerate mock geometry");
+        Self {
+            batch,
+            prompt_len,
+            max_len,
+            stride: 1,
+            vocab: 1009,
+            step_delay: Duration::ZERO,
+            fail_after: None,
+            decode_calls: 0,
+        }
+    }
+
+    /// Token-rule increment: next token = `(t + stride) % vocab`.
+    pub fn stride(mut self, stride: i32) -> Self {
+        assert!(stride > 0, "stride must be positive");
+        self.stride = stride;
+        self
+    }
+
+    /// Token-rule modulus (tokens stay in `[0, vocab)`).
+    pub fn vocab(mut self, vocab: i32) -> Self {
+        assert!(vocab > 1, "vocab must exceed 1");
+        self.vocab = vocab;
+        self
+    }
+
+    /// Sleep this long inside every decode step — controllable latency for
+    /// deadline/cancellation tests.
+    pub fn step_delay(mut self, d: Duration) -> Self {
+        self.step_delay = d;
+        self
+    }
+
+    /// Make the Nth decode call (1-based, counted across the backend's
+    /// lifetime) return an error — once. The trigger then clears, so the
+    /// worker's next join prefill serves normally: tests cover both the
+    /// `FinishReason::Error` path and recovery.
+    pub fn fail_after(mut self, nth_call: u64) -> Self {
+        assert!(nth_call > 0, "fail_after is 1-based");
+        self.fail_after = Some(nth_call);
+        self
+    }
+
+    /// A `ServicePool::start_with` factory that hands each worker its own
+    /// clone of this backend.
+    pub fn factory(
+        self,
+    ) -> impl Fn(usize) -> Result<Box<dyn EngineBackend>> + Send + Sync + 'static {
+        move |_worker| Ok(Box::new(self.clone()) as Box<dyn EngineBackend>)
+    }
+
+    /// The scripted stream for a row whose last real token is `t`: its
+    /// next `n` tokens under this backend's rule. Test helper.
+    pub fn expected_stream(&self, t: i32, n: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(n);
+        let mut cur = t;
+        for _ in 0..n {
+            cur = self.next_token(cur);
+            out.push(cur);
+        }
+        out
+    }
+
+    fn next_token(&self, t: i32) -> i32 {
+        (t + self.stride).rem_euclid(self.vocab)
+    }
+}
+
+impl EngineBackend for MockBackend {
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn prompt_len(&self) -> usize {
+        self.prompt_len
+    }
+
+    fn max_len(&self) -> usize {
+        self.max_len
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "mock bs={} prompt_len={} max_len={} stride={}",
+            self.batch, self.prompt_len, self.max_len, self.stride
+        )
+    }
+
+    fn prefill(&mut self, tokens: &[i32]) -> Result<Vec<i32>> {
+        anyhow::ensure!(
+            tokens.len() == self.batch * self.prompt_len,
+            "prefill batch is [batch, prompt_len]"
+        );
+        // Right-aligned windows: the last column is each row's most recent
+        // real token (or pad for an empty row — its output is junk the
+        // scheduler ignores, same as the artifact path).
+        Ok(tokens
+            .chunks_exact(self.prompt_len)
+            .map(|row| self.next_token(row[self.prompt_len - 1]))
+            .collect())
+    }
+
+    fn decode_step(&mut self, feed: &[i32], _pos: usize) -> Result<Vec<i32>> {
+        anyhow::ensure!(feed.len() == self.batch, "decode feed is one token per row");
+        if !self.step_delay.is_zero() {
+            std::thread::sleep(self.step_delay);
+        }
+        self.decode_calls += 1;
+        if self.fail_after.is_some_and(|n| self.decode_calls >= n) {
+            self.fail_after = None; // one-shot: recover on the next prefill
+            anyhow::bail!("injected mock decode failure at call {}", self.decode_calls);
+        }
+        Ok(feed.iter().map(|&t| self.next_token(t)).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefill_reads_last_window_column() {
+        let mut b = MockBackend::new(2, 3, 8);
+        // rows right-aligned: [pad, 5, 6] and [1, 2, 3]
+        let next = b.prefill(&[0, 5, 6, 1, 2, 3]).unwrap();
+        assert_eq!(next, vec![7, 4]);
+    }
+
+    #[test]
+    fn decode_applies_rule_per_row() {
+        let mut b = MockBackend::new(3, 2, 4).stride(10).vocab(25);
+        let next = b.decode_step(&[1, 20, 0], 2).unwrap();
+        assert_eq!(next, vec![11, 5, 10], "wraps at vocab");
+    }
+
+    #[test]
+    fn expected_stream_matches_rule() {
+        let b = MockBackend::new(1, 2, 4).stride(7).vocab(100);
+        assert_eq!(b.expected_stream(95, 3), vec![2, 9, 16]);
+    }
+
+    #[test]
+    fn fail_after_is_one_shot() {
+        let mut b = MockBackend::new(1, 2, 8).fail_after(2);
+        assert!(b.decode_step(&[1], 2).is_ok());
+        assert!(b.decode_step(&[2], 3).is_err());
+        assert!(b.decode_step(&[3], 4).is_ok(), "trigger clears after firing");
+    }
+
+    #[test]
+    fn shape_mismatches_are_errors_not_panics() {
+        let mut b = MockBackend::new(2, 3, 8);
+        assert!(b.prefill(&[1, 2, 3]).is_err());
+        assert!(b.decode_step(&[1], 3).is_err());
+    }
+}

@@ -1,50 +1,72 @@
-//! Serving (Table 11's inference path): a production-style service API over
-//! the AOT prefill/decode artifacts with device-resident KV caches.
+//! Serving (Table 11's inference path): a production-style, multi-model
+//! service API over pluggable engine backends.
 //!
 //! # Architecture
 //!
 //! ```text
-//!  submit(prompt, SubmitOptions) ──► BoundedQueue (priority bands,
-//!        │                           queue_depth cap → SubmitError::QueueFull)
-//!        ▼                                │ pop between decode steps
-//!   TokenStream ◄── stream events ── ServicePool workers (1..N threads)
-//!   .recv()/.cancel()                     │ each: own PJRT client + params
-//!   .wait() → Completion                  ▼
-//!                                    SlotTable[serve_bs] — continuous
-//!                                    batching: finished/cancelled/expired
-//!                                    rows refill from the queue at the next
-//!                                    join-prefill boundary
+//!  submit(model, prompt, SubmitOptions)
+//!        │
+//!        ▼
+//!   ModelRouter ── UnknownModel? ──► RouteError (typed, no pool touched)
+//!        │ dispatch by name
+//!        ├─────────────┬──────────────┐
+//!        ▼             ▼              ▼
+//!  ServicePool     ServicePool    ServicePool      one pool per artifact,
+//!  "full_130m"    "sltrain_130m"  "cola_130m"      each with its own:
+//!        │
+//!        ├── BoundedQueue (priority bands, queue_depth cap
+//!        │                 → SubmitError::QueueFull, per-model backpressure)
+//!        │        │ pop between decode steps
+//!        ▼        ▼
+//!   TokenStream ◄── stream events ── engine workers (1..N threads)
+//!   .recv()/.cancel()                     │
+//!   .wait() → Completion             SlotTable[bs] — continuous batching:
+//!                                    vacated rows refill from the queue at
+//!                                    the next join-prefill boundary
+//!                                         │ prefill / decode_step
+//!                                         ▼
+//!                                    EngineBackend (trait)
+//!                                    ├─ PjrtBackend: AOT artifacts on the
+//!                                    │  PJRT CPU client (thread-local Rc)
+//!                                    └─ MockBackend: deterministic scripted
+//!                                       streams — hermetic tests, no
+//!                                       artifact on disk
 //! ```
 //!
-//! - [`InferenceService`] is the public trait: `submit` / `stats` /
-//!   `shutdown`. [`ServicePool`] implements it over N single-artifact engine
-//!   workers; PJRT objects are `Rc`-based and stay thread-local per worker
-//!   (see `runtime::client()`).
+//! - [`ModelRouter`] owns several named [`ServicePool`]s (the Table 11
+//!   full/SLTrain/CoLA variants served from one process), dispatches by
+//!   model name with a typed [`RouteError`], aggregates per-model and
+//!   fleet-wide [`ServiceStats`], and drains models individually.
+//! - [`InferenceService`] is the single-pool trait: `submit` / `stats` /
+//!   `shutdown`. [`ServicePool`] implements it over N engine workers
+//!   sharing one bounded admission queue.
+//! - [`EngineBackend`](engine::EngineBackend) is the seam between
+//!   scheduling and model execution: the worker loop (admission, join
+//!   prefills, lockstep decode, vacate/refill) is backend-agnostic, so the
+//!   whole serving tier — router, slots, queue, streaming, cancellation,
+//!   deadlines — tests hermetically on [`MockBackend`] under
+//!   `cargo test -q`.
 //! - Requests carry typed [`SubmitOptions`] (token budget, stop tokens,
 //!   deadline, priority) and resolve through a [`TokenStream`] that yields
 //!   tokens as they decode, supports mid-flight [`TokenStream::cancel`], and
 //!   ends in a typed [`Completion`] (`tokens`, [`FinishReason`], [`Timing`]).
-//! - Admission is explicitly backpressured: the bounded queue refuses
-//!   submits with [`SubmitError::QueueFull`] rather than hiding load in an
-//!   unbounded channel.
-//! - Inside a worker, a fixed `serve_bs` slot table decodes in lockstep and
-//!   refills vacated rows from the queue between decode steps (see
-//!   `engine` for why joins happen at prefill boundaries under the shared
-//!   `pos` scalar of the decode artifact).
-//!
-//! The flush-and-wait `DynamicBatcher` + `Engine::spawn`/`EngineHandle`
-//! design this replaces batched one static group at a time: a batch ran to
-//! its longest member while finished rows decoded into the void and newly
-//! arrived requests waited for the next flush.
+//! - Admission is explicitly backpressured per model: a bounded queue
+//!   refuses submits with [`SubmitError::QueueFull`] rather than hiding
+//!   load in an unbounded channel.
 
 pub mod engine;
+pub mod mock;
 pub mod queue;
+pub mod router;
 pub mod service;
 pub mod slots;
 
+pub use engine::{EngineBackend, PjrtBackend};
+pub use mock::MockBackend;
 pub use queue::BoundedQueue;
+pub use router::{ModelRouter, RouteError};
 pub use service::{
-    CancelHandle, Completion, FinishReason, InferenceService, Priority, ServicePool,
-    ServiceStats, StreamEvent, SubmitError, SubmitOptions, Timing, TokenStream,
+    CancelHandle, Completion, FinishReason, InferenceService, Priority, QueuedRequest,
+    ServicePool, ServiceStats, StreamEvent, SubmitError, SubmitOptions, Timing, TokenStream,
 };
 pub use slots::SlotTable;

@@ -1,0 +1,199 @@
+//! Multi-artifact routing: one process serving several models side by side.
+//!
+//! [`ModelRouter`] owns a set of *named* [`ServicePool`]s — e.g.
+//! `full_130m` / `sltrain_130m` / `cola_130m`, the paper's Table 11
+//! comparison — and dispatches [`submit`](ModelRouter::submit) by model
+//! name. Each pool keeps its own admission queue, workers, and counters, so
+//! backpressure is per-model: one model's `QueueFull` never blocks another.
+//! Misrouted requests fail with the typed [`RouteError::UnknownModel`]
+//! instead of an artifact error deep in a worker. Stats are available
+//! per model ([`stats`](ModelRouter::stats),
+//! [`stats_by_model`](ModelRouter::stats_by_model)) and aggregated across
+//! the fleet ([`aggregate_stats`](ModelRouter::aggregate_stats)); individual
+//! models can be drained with [`shutdown_model`](ModelRouter::shutdown_model)
+//! while the rest keep serving.
+
+use crate::config::RouterConfig;
+use crate::serve::service::{
+    Completion, InferenceService, ServicePool, ServiceStats, SubmitError, SubmitOptions,
+    TokenStream,
+};
+use anyhow::Result;
+
+/// Why a routed submit failed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RouteError {
+    /// No pool is registered under this model name.
+    UnknownModel(String),
+    /// The named pool refused the submit (backpressure or shutdown).
+    Submit(SubmitError),
+}
+
+impl std::fmt::Display for RouteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RouteError::UnknownModel(m) => write!(f, "unknown model `{m}`"),
+            RouteError::Submit(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
+
+impl From<SubmitError> for RouteError {
+    fn from(e: SubmitError) -> Self {
+        RouteError::Submit(e)
+    }
+}
+
+/// A set of named [`ServicePool`]s behind one dispatch surface.
+pub struct ModelRouter {
+    /// Insertion-ordered; model counts are small, so lookup is linear.
+    pools: Vec<(String, ServicePool)>,
+}
+
+impl ModelRouter {
+    /// Bring up one PJRT pool per configured model. Fails fast if any
+    /// artifact is missing (pools already started are dropped, which drains
+    /// them).
+    pub fn start(cfg: &RouterConfig) -> Result<Self> {
+        let mut pools = Vec::new();
+        for (name, model_cfg) in cfg.resolved_models() {
+            let pool = ServicePool::start(model_cfg)
+                .map_err(|e| e.context(format!("starting pool for model `{name}`")))?;
+            pools.push((name, pool));
+        }
+        Self::from_pools(pools)
+    }
+
+    /// Assemble a router from already-started pools (mock-backed pools in
+    /// tests, heterogeneous `start_with` pools in embedders).
+    pub fn from_pools(pools: Vec<(String, ServicePool)>) -> Result<Self> {
+        anyhow::ensure!(!pools.is_empty(), "router needs at least one model");
+        for (i, (name, _)) in pools.iter().enumerate() {
+            anyhow::ensure!(
+                !pools[..i].iter().any(|(n, _)| n == name),
+                "duplicate model name `{name}`"
+            );
+        }
+        Ok(Self { pools })
+    }
+
+    /// Registered model names, in registration order.
+    pub fn models(&self) -> Vec<&str> {
+        self.pools.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    /// The pool behind a model name, if registered.
+    pub fn pool(&self, model: &str) -> Option<&ServicePool> {
+        self.pools.iter().find(|(n, _)| n == model).map(|(_, p)| p)
+    }
+
+    fn pool_or_err(&self, model: &str) -> Result<&ServicePool, RouteError> {
+        self.pool(model).ok_or_else(|| RouteError::UnknownModel(model.to_string()))
+    }
+
+    /// Route a submit to the named model's pool. Non-blocking; per-model
+    /// backpressure surfaces as `RouteError::Submit(QueueFull)`.
+    pub fn submit(
+        &self,
+        model: &str,
+        prompt: Vec<i32>,
+        opts: SubmitOptions,
+    ) -> Result<TokenStream, RouteError> {
+        let pool = self.pool_or_err(model)?;
+        pool.submit(prompt, opts).map_err(RouteError::from)
+    }
+
+    /// Blocking convenience: submit to the named model and wait for the
+    /// completion.
+    pub fn generate(
+        &self,
+        model: &str,
+        prompt: Vec<i32>,
+        opts: SubmitOptions,
+    ) -> Result<Completion> {
+        let pool = self.pool_or_err(model).map_err(anyhow::Error::new)?;
+        pool.generate(prompt, opts)
+    }
+
+    /// Blocking submit to the named model, riding out `QueueFull` (see
+    /// `ServicePool::submit_wait`).
+    pub fn submit_wait(
+        &self,
+        model: &str,
+        prompt: Vec<i32>,
+        opts: SubmitOptions,
+    ) -> Result<TokenStream> {
+        let pool = self.pool_or_err(model).map_err(anyhow::Error::new)?;
+        pool.submit_wait(prompt, opts)
+    }
+
+    /// One model's queue/slot occupancy and lifetime counters.
+    pub fn stats(&self, model: &str) -> Result<ServiceStats, RouteError> {
+        Ok(self.pool_or_err(model)?.stats())
+    }
+
+    /// Per-model stats snapshot, in registration order.
+    pub fn stats_by_model(&self) -> Vec<(&str, ServiceStats)> {
+        self.pools.iter().map(|(n, p)| (n.as_str(), p.stats())).collect()
+    }
+
+    /// Fleet-wide stats: counters and gauges sum across models;
+    /// `decode_tokens_per_sec` is recomputed from the summed token count and
+    /// summed worker busy-time (not a mean of per-model rates).
+    pub fn aggregate_stats(&self) -> ServiceStats {
+        let mut agg = ServiceStats {
+            workers: 0,
+            queue_depth: 0,
+            queue_capacity: 0,
+            active: 0,
+            submitted: 0,
+            completed: 0,
+            cancelled: 0,
+            expired: 0,
+            rejected: 0,
+            failed: 0,
+            decoded_tokens: 0,
+            decode_tokens_per_sec: 0.0,
+        };
+        let mut busy_secs = 0.0;
+        for (_, pool) in &self.pools {
+            let s = pool.stats();
+            agg.workers += s.workers;
+            agg.queue_depth += s.queue_depth;
+            agg.queue_capacity += s.queue_capacity;
+            agg.active += s.active;
+            agg.submitted += s.submitted;
+            agg.completed += s.completed;
+            agg.cancelled += s.cancelled;
+            agg.expired += s.expired;
+            agg.rejected += s.rejected;
+            agg.failed += s.failed;
+            agg.decoded_tokens += s.decoded_tokens;
+            if s.decode_tokens_per_sec > 0.0 {
+                busy_secs += s.decoded_tokens as f64 / s.decode_tokens_per_sec;
+            }
+        }
+        if busy_secs > 0.0 {
+            agg.decode_tokens_per_sec = agg.decoded_tokens as f64 / busy_secs;
+        }
+        agg
+    }
+
+    /// Drain one model: stop its admissions, resolve its queued requests,
+    /// finish its in-flight rows, and join its workers — the other models
+    /// keep serving. The model stays registered; further submits to it fail
+    /// with `RouteError::Submit(ShuttingDown)`.
+    pub fn shutdown_model(&self, model: &str) -> Result<(), RouteError> {
+        self.pool_or_err(model)?.shutdown();
+        Ok(())
+    }
+
+    /// Drain every model (idempotent; also runs on drop via each pool).
+    pub fn shutdown(&self) {
+        for (_, pool) in &self.pools {
+            pool.shutdown();
+        }
+    }
+}

@@ -183,15 +183,21 @@ impl TokenStream {
     }
 }
 
-/// A submitted request as it crosses into the worker threads.
-pub(crate) struct QueuedRequest {
-    pub(crate) prompt: Vec<i32>,
-    pub(crate) max_new_tokens: usize,
-    pub(crate) stop_tokens: Vec<i32>,
-    pub(crate) deadline: Option<Instant>,
-    pub(crate) submitted_at: Instant,
-    pub(crate) tx: Sender<StreamEvent>,
-    pub(crate) cancel: Arc<AtomicBool>,
+/// A submitted request as it crosses into the worker threads — the
+/// engine-side twin of a [`TokenStream`]. Public so out-of-crate harnesses
+/// (property tests, custom `EngineBackend` schedulers) can drive a
+/// `SlotTable` directly; in normal operation only `ServicePool::submit`
+/// constructs these.
+pub struct QueuedRequest {
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub stop_tokens: Vec<i32>,
+    pub deadline: Option<Instant>,
+    pub submitted_at: Instant,
+    /// Stream events (tokens, then the terminal completion) go out here.
+    pub tx: Sender<StreamEvent>,
+    /// Cooperative cancel flag shared with the [`TokenStream`].
+    pub cancel: Arc<AtomicBool>,
 }
 
 // ---------------------------------------------------------------------------
@@ -269,7 +275,7 @@ pub struct ServicePool {
 }
 
 impl ServicePool {
-    /// Validate the artifact and spawn `cfg.workers` engine threads.
+    /// Validate the artifact and spawn `cfg.workers` PJRT engine threads.
     ///
     /// Fails fast (before any thread starts) when the artifact is missing or
     /// was not built with `--serve`. `workers == 0` is allowed: the pool
@@ -279,21 +285,45 @@ impl ServicePool {
         art.manifest
             .serve_batch
             .context("artifact not built with --serve (no serve_batch in manifest)")?;
+        let artifact = cfg.artifact.clone();
+        Self::start_with(cfg, move |_worker| {
+            let backend = engine::PjrtBackend::open(&artifact)?;
+            Ok(Box::new(backend) as Box<dyn engine::EngineBackend>)
+        })
+    }
+
+    /// Spawn `cfg.workers` engine threads over an arbitrary
+    /// [`EngineBackend`](engine::EngineBackend) factory. The factory runs
+    /// *inside* each worker thread (backends may hold non-`Send` state, as
+    /// the PJRT backend does) and receives the worker index.
+    ///
+    /// This is the artifact-free entry point: hand it a
+    /// [`MockBackend`](crate::serve::mock::MockBackend) factory and the full
+    /// scheduling surface runs hermetically.
+    pub fn start_with<F>(cfg: ServeConfig, factory: F) -> Result<Self>
+    where
+        F: Fn(usize) -> Result<Box<dyn engine::EngineBackend>> + Send + Sync + 'static,
+    {
         let shared = Arc::new(Shared {
             queue: BoundedQueue::new(cfg.queue_depth),
             counters: Counters::default(),
         });
         shared.counters.live_workers.store(cfg.workers, Ordering::SeqCst);
+        let factory = Arc::new(factory);
         let mut handles = Vec::new();
         for w in 0..cfg.workers {
-            let cfg = cfg.clone();
+            let factory = factory.clone();
             let shared = shared.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("cola-serve-{w}"))
                     .spawn(move || {
-                        if let Err(e) = engine::worker_main(&cfg, &shared) {
-                            metrics::log_info(&format!("serve worker {w} exited with error: {e:#}"));
+                        let res = (*factory)(w)
+                            .and_then(|mut backend| engine::run_worker(backend.as_mut(), &shared));
+                        if let Err(e) = res {
+                            metrics::log_info(&format!(
+                                "serve worker {w} exited with error: {e:#}"
+                            ));
                         }
                         // Last worker out closes the shop: otherwise a pool
                         // whose workers all died (e.g. artifact compile
@@ -310,6 +340,11 @@ impl ServicePool {
             );
         }
         Ok(Self { cfg, shared, workers: Mutex::new(handles) })
+    }
+
+    /// The configuration this pool was started with.
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
     }
 
     /// Blocking convenience: submit and wait for the completion.

@@ -3,6 +3,11 @@
 //! cancellation, deadline expiry, and QueueFull backpressure through the
 //! continuous-batching engine. Requires `make artifacts` (tiny_cola built
 //! with --serve); every test skips cleanly when the artifact is missing.
+//!
+//! The same scheduling surface runs hermetically (no artifact) in
+//! `serve_router.rs` via `MockBackend`; this suite is the PJRT-backed
+//! (`PjrtBackend`) counterpart that additionally checks real-model
+//! properties like greedy-decode determinism and vocab bounds.
 
 use cola::config::ServeConfig;
 use cola::serve::{

@@ -1,0 +1,347 @@
+//! Hermetic serving-tier integration: `ModelRouter` → `ServicePool`s →
+//! `MockBackend`. Everything the artifact-backed `serve_integration` suite
+//! can only check when `make artifacts` has run — router dispatch,
+//! continuous batching, streaming, cancellation, deadlines, QueueFull
+//! backpressure, engine failure + recovery — runs here deterministically
+//! under `cargo test -q` with **zero** PJRT/artifact dependency.
+//!
+//! Determinism: `MockBackend`'s token rule is a pure function of a row's
+//! last real token, so every completion is an exact, precomputable
+//! arithmetic progression regardless of how rows interleave in the slot
+//! table (see `serve::mock`).
+
+use cola::config::ServeConfig;
+use cola::serve::{
+    FinishReason, InferenceService, MockBackend, ModelRouter, RouteError, ServicePool,
+    StreamEvent, SubmitError, SubmitOptions,
+};
+use std::time::Duration;
+
+fn cfg(workers: usize, queue_depth: usize) -> ServeConfig {
+    ServeConfig {
+        artifact: "mock".into(),
+        max_new_tokens: 8,
+        workers,
+        queue_depth,
+        default_deadline_ms: 0,
+    }
+}
+
+fn pool(cfg: ServeConfig, mock: MockBackend) -> ServicePool {
+    ServicePool::start_with(cfg, mock.factory()).unwrap()
+}
+
+fn opts(max_new: usize) -> SubmitOptions {
+    SubmitOptions { max_new_tokens: Some(max_new), ..Default::default() }
+}
+
+/// Counters are bumped just *after* the worker streams a request's terminal
+/// `Done`, so asserts that follow a `wait()` poll briefly instead of racing
+/// that window.
+fn eventually(what: &str, mut cond: impl FnMut() -> bool) {
+    for _ in 0..1000 {
+        if cond() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    panic!("not reached within 1s: {what}");
+}
+
+#[test]
+fn router_dispatches_by_model_name_to_distinct_backends() {
+    let a = MockBackend::new(2, 4, 8).stride(1).vocab(10_000);
+    let b = MockBackend::new(2, 4, 8).stride(5).vocab(10_000);
+    let router = ModelRouter::from_pools(vec![
+        ("a".into(), pool(cfg(1, 8), a.clone())),
+        ("b".into(), pool(cfg(1, 8), b.clone())),
+    ])
+    .unwrap();
+    assert_eq!(router.models(), vec!["a", "b"]);
+
+    let ca = router.generate("a", vec![10], opts(3)).unwrap();
+    assert_eq!(ca.tokens, a.expected_stream(10, 3));
+    assert_eq!(ca.tokens, vec![11, 12, 13]);
+    assert_eq!(ca.finish_reason, FinishReason::Length);
+
+    let cb = router.generate("b", vec![10], opts(3)).unwrap();
+    assert_eq!(cb.tokens, b.expected_stream(10, 3));
+    assert_eq!(cb.tokens, vec![15, 20, 25], "model `b` has its own backend");
+    router.shutdown();
+}
+
+#[test]
+fn unknown_model_is_a_typed_route_error() {
+    let router = ModelRouter::from_pools(vec![(
+        "only".into(),
+        pool(cfg(1, 4), MockBackend::new(1, 2, 4)),
+    )])
+    .unwrap();
+    match router.submit("ghost", vec![1], opts(2)) {
+        Err(RouteError::UnknownModel(m)) => {
+            assert_eq!(m, "ghost");
+            assert_eq!(
+                RouteError::UnknownModel(m).to_string(),
+                "unknown model `ghost`"
+            );
+        }
+        other => panic!("expected UnknownModel, got {:?}", other.map(|_| ())),
+    }
+    assert!(router.generate("ghost", vec![1], opts(2)).is_err());
+    assert!(matches!(router.stats("ghost"), Err(RouteError::UnknownModel(_))));
+    router.shutdown();
+}
+
+#[test]
+fn duplicate_model_names_are_rejected() {
+    let p1 = pool(cfg(0, 2), MockBackend::new(1, 2, 4));
+    let p2 = pool(cfg(0, 2), MockBackend::new(1, 2, 4));
+    assert!(ModelRouter::from_pools(vec![("m".into(), p1), ("m".into(), p2)]).is_err());
+    assert!(ModelRouter::from_pools(vec![]).is_err(), "empty router is refused");
+}
+
+#[test]
+fn backpressure_is_per_model() {
+    // `a` is admission-only (workers=0) with a depth-1 queue: it fills
+    // deterministically. `b` keeps serving regardless.
+    let router = ModelRouter::from_pools(vec![
+        ("a".into(), pool(cfg(0, 1), MockBackend::new(1, 2, 4))),
+        ("b".into(), pool(cfg(1, 8), MockBackend::new(1, 2, 4))),
+    ])
+    .unwrap();
+
+    let queued = router.submit("a", vec![1], opts(2)).unwrap();
+    match router.submit("a", vec![2], opts(2)) {
+        Err(RouteError::Submit(SubmitError::QueueFull)) => {}
+        other => panic!("expected QueueFull on `a`, got {:?}", other.map(|_| ())),
+    }
+    // `a` saturated; `b` unaffected
+    let cb = router.generate("b", vec![7], opts(2)).unwrap();
+    assert_eq!(cb.finish_reason, FinishReason::Length);
+
+    let sa = router.stats("a").unwrap();
+    let sb = router.stats("b").unwrap();
+    assert_eq!(sa.rejected, 1);
+    assert_eq!(sa.queue_depth, 1);
+    assert_eq!(sb.rejected, 0, "b never saw a's backpressure");
+
+    // shutdown sheds a's queued request rather than hanging its client
+    router.shutdown();
+    assert_eq!(queued.wait().unwrap().finish_reason, FinishReason::Cancelled);
+}
+
+#[test]
+fn per_model_and_aggregate_stats_line_up() {
+    let router = ModelRouter::from_pools(vec![
+        ("a".into(), pool(cfg(1, 8), MockBackend::new(2, 4, 8))),
+        ("b".into(), pool(cfg(1, 8), MockBackend::new(2, 4, 8).stride(3))),
+    ])
+    .unwrap();
+    for i in 0..3 {
+        router.generate("a", vec![10 + i], opts(2)).unwrap();
+    }
+    for i in 0..2 {
+        router.generate("b", vec![50 + i], opts(4)).unwrap();
+    }
+    eventually("both pools tally completions", || {
+        router.stats("a").unwrap().completed == 3 && router.stats("b").unwrap().completed == 2
+    });
+    let sa = router.stats("a").unwrap();
+    let sb = router.stats("b").unwrap();
+    assert_eq!(sa.submitted, 3);
+    assert_eq!(sb.submitted, 2);
+    assert!(sa.decoded_tokens > 0 && sb.decoded_tokens > 0);
+
+    let agg = router.aggregate_stats();
+    assert_eq!(agg.submitted, 5);
+    assert_eq!(agg.completed, 5);
+    assert_eq!(agg.workers, 2);
+    assert_eq!(agg.decoded_tokens, sa.decoded_tokens + sb.decoded_tokens);
+    assert_eq!(agg.queue_capacity, 16);
+    assert!(agg.decode_tokens_per_sec > 0.0);
+
+    let by_model = router.stats_by_model();
+    assert_eq!(by_model.len(), 2);
+    assert_eq!(by_model[0].0, "a");
+    assert_eq!(by_model[1].0, "b");
+    assert_eq!(by_model[0].1.completed, 3);
+    router.shutdown();
+}
+
+#[test]
+fn continuous_batching_completes_mixed_budgets_with_exact_streams() {
+    // 6 requests through a 2-slot table: short rows vacate and refill while
+    // long rows keep decoding; outputs stay exact regardless of interleaving.
+    let mock = MockBackend::new(2, 4, 8).vocab(10_000);
+    let router =
+        ModelRouter::from_pools(vec![("m".into(), pool(cfg(1, 16), mock.clone()))]).unwrap();
+    let mut streams = Vec::new();
+    for i in 0..6u32 {
+        let max_new = if i % 2 == 0 { 3 } else { 7 };
+        let last = 100 + 10 * i as i32;
+        streams.push((last, max_new, router.submit("m", vec![9, last], opts(max_new)).unwrap()));
+    }
+    for (last, max_new, s) in streams {
+        let c = s.wait().unwrap();
+        assert_eq!(c.finish_reason, FinishReason::Length);
+        assert_eq!(c.tokens, mock.expected_stream(last, max_new), "row seeded with {last}");
+    }
+    eventually("all 6 completions tallied", || router.stats("m").unwrap().completed == 6);
+    eventually("occupancy gauge returns to zero", || router.stats("m").unwrap().active == 0);
+    router.shutdown();
+}
+
+#[test]
+fn streaming_yields_every_token_before_done() {
+    let mock = MockBackend::new(1, 3, 6);
+    let router =
+        ModelRouter::from_pools(vec![("m".into(), pool(cfg(1, 4), mock.clone()))]).unwrap();
+    let mut stream = router.submit("m", vec![40], opts(5)).unwrap();
+    let mut streamed = Vec::new();
+    let done = loop {
+        match stream.recv() {
+            Some(StreamEvent::Token(t)) => streamed.push(t),
+            Some(StreamEvent::Done(c)) => break c,
+            None => panic!("stream dropped before Done"),
+        }
+    };
+    assert_eq!(streamed, mock.expected_stream(40, 5));
+    assert_eq!(streamed, done.tokens, "stream and completion agree");
+    assert!(stream.recv().is_none(), "stream exhausted after Done");
+    assert!(done.timing.first_token.is_some());
+    assert!(done.timing.first_token.unwrap() <= done.timing.total);
+    router.shutdown();
+}
+
+#[test]
+fn stop_token_ends_generation_early() {
+    let mock = MockBackend::new(1, 3, 6);
+    let router =
+        ModelRouter::from_pools(vec![("m".into(), pool(cfg(1, 4), mock.clone()))]).unwrap();
+    // rule: 20 → 21, 22, ... so stop on 22
+    let o = SubmitOptions { stop_tokens: vec![22], ..opts(10) };
+    let c = router.generate("m", vec![20], o).unwrap();
+    assert_eq!(c.finish_reason, FinishReason::Stop);
+    assert_eq!(c.tokens, vec![21, 22], "stops at and includes the stop token");
+    router.shutdown();
+}
+
+#[test]
+fn cancel_mid_flight_delivers_partial_output() {
+    let mock = MockBackend::new(1, 4, 64).step_delay(Duration::from_millis(2));
+    let router = ModelRouter::from_pools(vec![("m".into(), pool(cfg(1, 4), mock))]).unwrap();
+    let mut stream = router.submit("m", vec![5], opts(100_000)).unwrap();
+    match stream.recv() {
+        Some(StreamEvent::Token(t)) => assert_eq!(t, 6, "first token is deterministic"),
+        other => panic!("expected a first token, got {other:?}"),
+    }
+    stream.cancel();
+    let c = stream.wait().unwrap();
+    assert_eq!(c.finish_reason, FinishReason::Cancelled);
+    assert!(!c.tokens.is_empty(), "partial output is delivered");
+    assert!(c.tokens.len() < 100_000, "cancel actually cut generation short");
+    eventually("cancellation tallied", || router.stats("m").unwrap().cancelled == 1);
+    router.shutdown();
+}
+
+#[test]
+fn deadline_expires_mid_decode() {
+    let mock = MockBackend::new(1, 4, 64).step_delay(Duration::from_millis(2));
+    let router = ModelRouter::from_pools(vec![("m".into(), pool(cfg(1, 4), mock))]).unwrap();
+    let o = SubmitOptions { deadline: Some(Duration::from_millis(30)), ..opts(1_000_000) };
+    let c = router.generate("m", vec![5], o).unwrap();
+    assert_eq!(c.finish_reason, FinishReason::DeadlineExpired);
+    assert!(c.tokens.len() < 1_000_000);
+    eventually("expiry tallied", || router.stats("m").unwrap().expired == 1);
+    router.shutdown();
+}
+
+#[test]
+fn default_deadline_comes_from_pool_config() {
+    let mock = MockBackend::new(1, 4, 64).step_delay(Duration::from_millis(2));
+    let mut c = cfg(1, 4);
+    c.default_deadline_ms = 25;
+    let router = ModelRouter::from_pools(vec![("m".into(), pool(c, mock))]).unwrap();
+    let done = router.generate("m", vec![5], opts(1_000_000)).unwrap();
+    assert_eq!(done.finish_reason, FinishReason::DeadlineExpired);
+    router.shutdown();
+}
+
+#[test]
+fn generation_runs_past_the_static_kv_window() {
+    // max_len 6 with prompt_len 4 → only 2 decode positions per prefill;
+    // a 12-token generation forces several sliding-window rollovers, and
+    // the arithmetic stream must come through unbroken.
+    let mock = MockBackend::new(1, 4, 6).stride(3).vocab(10_000);
+    let router =
+        ModelRouter::from_pools(vec![("m".into(), pool(cfg(1, 4), mock.clone()))]).unwrap();
+    let c = router.generate("m", vec![100], opts(12)).unwrap();
+    assert_eq!(c.finish_reason, FinishReason::Length);
+    assert_eq!(c.tokens, mock.expected_stream(100, 12));
+    assert_eq!(c.tokens.first(), Some(&103));
+    assert_eq!(c.tokens.last(), Some(&136));
+    router.shutdown();
+}
+
+#[test]
+fn zero_token_budget_completes_empty() {
+    let router =
+        ModelRouter::from_pools(vec![("m".into(), pool(cfg(1, 4), MockBackend::new(1, 2, 4)))])
+            .unwrap();
+    let c = router.generate("m", vec![5, 6], opts(0)).unwrap();
+    assert!(c.tokens.is_empty(), "max_new_tokens=0 must not leak the prefill token");
+    assert_eq!(c.finish_reason, FinishReason::Length);
+    router.shutdown();
+}
+
+#[test]
+fn injected_engine_failure_fails_the_batch_and_recovers() {
+    // bs=1 so decode-call counting is exact: prefill → token 1, decode
+    // calls 1,2 → tokens 2,3, decode call 3 → injected failure.
+    let mock = MockBackend::new(1, 4, 64).fail_after(3);
+    let router =
+        ModelRouter::from_pools(vec![("m".into(), pool(cfg(1, 4), mock.clone()))]).unwrap();
+    let c = router.generate("m", vec![30], opts(10)).unwrap();
+    assert_eq!(c.finish_reason, FinishReason::Error);
+    assert_eq!(c.tokens, mock.expected_stream(30, 3), "partial tokens are delivered");
+    eventually("batch failure tallied", || router.stats("m").unwrap().failed == 1);
+
+    // one-shot trigger cleared: the pool serves normally again
+    let c2 = router.generate("m", vec![60], opts(10)).unwrap();
+    assert_eq!(c2.finish_reason, FinishReason::Length);
+    assert_eq!(c2.tokens, mock.expected_stream(60, 10));
+    eventually("recovery completion tallied", || router.stats("m").unwrap().completed == 1);
+    router.shutdown();
+}
+
+#[test]
+fn per_model_shutdown_drains_one_pool_and_spares_the_rest() {
+    let router = ModelRouter::from_pools(vec![
+        ("a".into(), pool(cfg(1, 4), MockBackend::new(1, 2, 4))),
+        ("b".into(), pool(cfg(1, 4), MockBackend::new(1, 2, 4))),
+    ])
+    .unwrap();
+    router.shutdown_model("a").unwrap();
+    match router.submit("a", vec![1], opts(2)) {
+        Err(RouteError::Submit(SubmitError::ShuttingDown)) => {}
+        other => panic!("expected ShuttingDown on `a`, got {:?}", other.map(|_| ())),
+    }
+    // `a` stays listed (its stats remain readable), `b` still serves
+    assert_eq!(router.models(), vec!["a", "b"]);
+    assert!(router.stats("a").is_ok());
+    let c = router.generate("b", vec![8], opts(2)).unwrap();
+    assert_eq!(c.tokens, vec![9, 10]);
+    assert!(matches!(router.shutdown_model("ghost"), Err(RouteError::UnknownModel(_))));
+    router.shutdown(); // full shutdown is idempotent over the drained pool
+}
+
+#[test]
+fn router_pool_exposes_inference_service_surface() {
+    // The router composes ServicePools; the single-pool trait surface stays
+    // available for embedders that hold a pool directly.
+    let p = pool(cfg(1, 4), MockBackend::new(1, 2, 4));
+    let c = p.generate(vec![3], opts(2)).unwrap();
+    assert_eq!(c.tokens, vec![4, 5]);
+    eventually("completion tallied", || p.stats().completed == 1);
+    p.shutdown();
+}

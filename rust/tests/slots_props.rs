@@ -1,0 +1,251 @@
+//! Property-style tests for `SlotTable` invariants: whatever sequence of
+//! admit / push_token / sweep / fail_all the engine throws at it, the table
+//! must keep `active + free == size`, refill the lowest free slot first,
+//! resolve every admitted request exactly once, and produce right-aligned
+//! context windows that match `prompt ++ generated` — including past the
+//! `pos == max_len` rollover where the window is all that survives.
+//!
+//! Hermetic: no artifact, no PJRT — the table is pure bookkeeping.
+
+use cola::serve::{FinishReason, QueuedRequest, SlotTable, StreamEvent};
+use cola::util::rng::Rng;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn mk_req(
+    prompt: Vec<i32>,
+    max_new: usize,
+    stop: Vec<i32>,
+    deadline: Option<Instant>,
+) -> (QueuedRequest, Receiver<StreamEvent>, Arc<AtomicBool>) {
+    let (tx, rx) = channel();
+    let cancel = Arc::new(AtomicBool::new(false));
+    let req = QueuedRequest {
+        prompt,
+        max_new_tokens: max_new,
+        stop_tokens: stop,
+        deadline,
+        submitted_at: Instant::now(),
+        tx,
+        cancel: cancel.clone(),
+    };
+    (req, rx, cancel)
+}
+
+fn drain(rx: &Receiver<StreamEvent>) -> (Vec<i32>, Vec<FinishReason>) {
+    let (mut toks, mut dones) = (Vec::new(), Vec::new());
+    while let Ok(ev) = rx.try_recv() {
+        match ev {
+            StreamEvent::Token(t) => toks.push(t),
+            StreamEvent::Done(c) => dones.push(c.finish_reason),
+        }
+    }
+    (toks, dones)
+}
+
+/// The invariant bundle checked after every operation.
+fn check_invariants(tbl: &SlotTable) {
+    assert_eq!(tbl.active() + tbl.free(), tbl.size(), "active + free == size");
+    let occ = tbl.occupied();
+    assert_eq!(occ.len(), tbl.active(), "occupied() agrees with active()");
+    assert!(occ.windows(2).all(|w| w[0] < w[1]), "occupied indices strictly increasing");
+    assert!(occ.iter().all(|&i| i < tbl.size()), "occupied indices in range");
+    assert_eq!(tbl.feed_tokens(-7).len(), tbl.size(), "feed covers every row");
+}
+
+#[test]
+fn random_op_sequences_keep_invariants_and_resolve_every_request() {
+    for seed in 0..12u64 {
+        let mut rng = Rng::new(seed);
+        let size = rng.range(1, 5);
+        let mut tbl = SlotTable::new(size);
+        let now = Instant::now();
+
+        let mut admitted = 0usize;
+        let mut resolved_rxs: Vec<Receiver<StreamEvent>> = Vec::new();
+        let mut live: Vec<(usize, Receiver<StreamEvent>, Arc<AtomicBool>)> = Vec::new();
+
+        for step in 0..200 {
+            let t = now + Duration::from_millis(step as u64);
+            match rng.below(10) {
+                // admit into a free slot
+                0..=3 => {
+                    if tbl.free() > 0 {
+                        let max_new = rng.range(1, 6);
+                        let prompt: Vec<i32> = (0..rng.range(1, 4)).map(|x| x as i32 + 4).collect();
+                        let (req, rx, cancel) = mk_req(prompt, max_new, vec![], None);
+                        let slot = tbl.admit(req, t).expect("free slot admits");
+                        assert!(
+                            !live.iter().any(|(s, _, _)| *s == slot),
+                            "admitted into an occupied slot"
+                        );
+                        admitted += 1;
+                        live.push((slot, rx, cancel));
+                    } else {
+                        let (req, _rx, _) = mk_req(vec![1], 1, vec![], None);
+                        assert!(tbl.admit(req, t).is_none(), "full table must refuse");
+                    }
+                }
+                // push a token to a random occupied row
+                4..=7 => {
+                    if !live.is_empty() {
+                        let k = rng.below(live.len());
+                        let slot = live[k].0;
+                        let tok = rng.below(500) as i32;
+                        if tbl.push_token(slot, tok, t).is_some() {
+                            let (_, rx, _) = live.swap_remove(k);
+                            resolved_rxs.push(rx);
+                        }
+                    }
+                }
+                // cancel a random row, then sweep
+                8 => {
+                    if !live.is_empty() {
+                        let k = rng.below(live.len());
+                        live[k].2.store(true, Ordering::Relaxed);
+                        let (cancelled, expired) = tbl.sweep(t);
+                        assert_eq!(expired, 0, "no deadlines in this sequence");
+                        assert_eq!(cancelled, 1, "exactly the flagged row vacates");
+                        let (_, rx, _) = live.swap_remove(k);
+                        resolved_rxs.push(rx);
+                    }
+                }
+                // batch failure
+                _ => {
+                    let n = tbl.fail_all(t);
+                    assert_eq!(n, live.len(), "fail_all vacates exactly the occupied rows");
+                    assert_eq!(tbl.active(), 0);
+                    for (_, rx, _) in live.drain(..) {
+                        resolved_rxs.push(rx);
+                    }
+                }
+            }
+            check_invariants(&tbl);
+        }
+
+        // close out whatever is still running
+        let n = tbl.fail_all(now + Duration::from_secs(1));
+        assert_eq!(n, live.len());
+        for (_, rx, _) in live.drain(..) {
+            resolved_rxs.push(rx);
+        }
+        check_invariants(&tbl);
+        assert_eq!(tbl.active(), 0);
+
+        // every admitted request resolved exactly once
+        assert_eq!(resolved_rxs.len(), admitted, "seed {seed}");
+        for rx in &resolved_rxs {
+            let (_, dones) = drain(rx);
+            assert_eq!(dones.len(), 1, "exactly one Done per request (seed {seed})");
+        }
+    }
+}
+
+#[test]
+fn refill_always_takes_the_lowest_free_slot() {
+    let mut rng = Rng::new(99);
+    let now = Instant::now();
+    for _ in 0..30 {
+        let size = rng.range(2, 6);
+        let mut tbl = SlotTable::new(size);
+        let mut cancels = Vec::new();
+        for _ in 0..size {
+            let (req, _rx, cancel) = mk_req(vec![1], 100, vec![], None);
+            tbl.admit(req, now).unwrap();
+            cancels.push((cancel, _rx));
+        }
+        // vacate a random subset
+        let mut freed: Vec<usize> = Vec::new();
+        for (i, (cancel, _)) in cancels.iter().enumerate() {
+            if rng.below(2) == 0 {
+                cancel.store(true, Ordering::Relaxed);
+                freed.push(i);
+            }
+        }
+        tbl.sweep(now);
+        assert_eq!(tbl.free(), freed.len());
+        // refills land lowest-first, in order
+        for &want in &freed {
+            let (req, _rx2, _) = mk_req(vec![2], 100, vec![], None);
+            assert_eq!(tbl.admit(req, now), Some(want), "lowest free slot first");
+        }
+        assert_eq!(tbl.free(), 0);
+    }
+}
+
+#[test]
+fn window_matches_prompt_plus_generated_at_every_length() {
+    // Covers the join-prefill math the engine relies on at the
+    // `pos == max_len` rollover: the window must be the most recent
+    // `prompt_len` tokens of `prompt ++ generated`, left-padded while the
+    // context is still short.
+    const PAD: i32 = 0;
+    let mut rng = Rng::new(7);
+    let now = Instant::now();
+    for _ in 0..20 {
+        let prompt_len = rng.range(1, 8);
+        let prompt: Vec<i32> = (0..rng.range(1, 12)).map(|_| rng.range(4, 250) as i32).collect();
+        let mut tbl = SlotTable::new(1);
+        let (req, _rx, _) = mk_req(prompt.clone(), 64, vec![], None);
+        tbl.admit(req, now).unwrap();
+
+        let mut context = prompt.clone();
+        for step in 0..40 {
+            // expected: right-aligned tail of the context, left-padded
+            let take = context.len().min(prompt_len);
+            let mut want = vec![PAD; prompt_len - take];
+            want.extend_from_slice(&context[context.len() - take..]);
+            assert_eq!(tbl.window(0, prompt_len, PAD), want, "step {step}");
+            // feed is the last generated token (or pad before any decode)
+            let want_feed =
+                if context.len() > prompt.len() { *context.last().unwrap() } else { PAD };
+            assert_eq!(tbl.feed_tokens(PAD), vec![want_feed]);
+
+            let tok = rng.range(4, 250) as i32;
+            assert!(tbl.push_token(0, tok, now).is_none(), "budget not exhausted");
+            context.push(tok);
+        }
+    }
+}
+
+#[test]
+fn stop_token_and_budget_resolution_is_exclusive_and_final() {
+    let now = Instant::now();
+    // stop token wins even on the budget-exhausting push
+    let mut tbl = SlotTable::new(1);
+    let (req, rx, _) = mk_req(vec![1], 2, vec![9], None);
+    tbl.admit(req, now).unwrap();
+    assert!(tbl.push_token(0, 5, now).is_none());
+    assert_eq!(tbl.push_token(0, 9, now), Some(FinishReason::Stop));
+    let (toks, dones) = drain(&rx);
+    assert_eq!(toks, vec![5, 9]);
+    assert_eq!(dones, vec![FinishReason::Stop]);
+    // the vacated row ignores further pushes
+    assert!(tbl.push_token(0, 7, now).is_none());
+    let (toks, dones) = drain(&rx);
+    assert!(toks.is_empty() && dones.is_empty(), "no events after resolution");
+}
+
+#[test]
+fn sweep_prefers_cancel_over_deadline_and_counts_both() {
+    let now = Instant::now();
+    let mut tbl = SlotTable::new(3);
+    let past = now - Duration::from_millis(1);
+    // row 0: cancelled AND expired → counted as cancelled
+    let (r0, rx0, c0) = mk_req(vec![1], 10, vec![], Some(past));
+    // row 1: expired only
+    let (r1, rx1, _) = mk_req(vec![2], 10, vec![], Some(past));
+    // row 2: healthy
+    let (r2, rx2, _) = mk_req(vec![3], 10, vec![], None);
+    tbl.admit(r0, now).unwrap();
+    tbl.admit(r1, now).unwrap();
+    tbl.admit(r2, now).unwrap();
+    c0.store(true, Ordering::Relaxed);
+    assert_eq!(tbl.sweep(now), (1, 1));
+    assert_eq!(tbl.occupied(), vec![2], "healthy row survives");
+    assert_eq!(drain(&rx0).1, vec![FinishReason::Cancelled]);
+    assert_eq!(drain(&rx1).1, vec![FinishReason::DeadlineExpired]);
+    assert!(drain(&rx2).1.is_empty());
+}

@@ -1,9 +1,13 @@
 #!/usr/bin/env bash
 # One-entry verification for builders and CI: the tier-1 gate
-# (`cargo build --release && cargo test -q`) plus formatting.
+# (`cargo build --release && cargo test -q`) plus lint, formatting, and a
+# hermeticity pass that proves the test suite needs no built artifacts
+# (the serving tier tests through MockBackend).
 #
-#   scripts/verify.sh            # build + test + fmt-check
-#   SKIP_FMT=1 scripts/verify.sh # tier-1 only
+#   scripts/verify.sh                 # build + test + no-artifact test + clippy + fmt
+#   SKIP_FMT=1 scripts/verify.sh      # skip the fmt check
+#   SKIP_CLIPPY=1 scripts/verify.sh   # skip the clippy gate
+#   SKIP_HERMETIC=1 scripts/verify.sh # skip the no-artifact pass
 #
 # Runs from the rust/ crate root regardless of invocation directory.
 set -euo pipefail
@@ -15,6 +19,22 @@ cargo build --release
 
 echo "== tier-1: cargo test -q =="
 cargo test -q
+
+if [ "${SKIP_HERMETIC:-0}" != "1" ]; then
+    # The full suite must pass on a machine with NO built artifacts:
+    # artifact-backed tests skip, everything else (router, slots, queue,
+    # streaming, cancellation, deadlines — via MockBackend) must still run.
+    # Pointing COLA_ARTIFACTS at an empty dir simulates that machine.
+    echo "== no-artifact pass: cargo test -q with empty COLA_ARTIFACTS =="
+    EMPTY_ARTIFACTS="$(mktemp -d)"
+    trap 'rm -rf "$EMPTY_ARTIFACTS"' EXIT
+    COLA_ARTIFACTS="$EMPTY_ARTIFACTS" cargo test -q
+fi
+
+if [ "${SKIP_CLIPPY:-0}" != "1" ]; then
+    echo "== cargo clippy --all-targets -- -D warnings =="
+    cargo clippy --all-targets -- -D warnings
+fi
 
 if [ "${SKIP_FMT:-0}" != "1" ]; then
     echo "== cargo fmt --check =="
