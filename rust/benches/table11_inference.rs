@@ -17,19 +17,22 @@ fn measure(router: &ModelRouter, model: &str, n_requests: usize) -> (f64, f64, f
     let man = cola::runtime::ArtifactDir::open_named(artifact).unwrap().manifest;
     let bpe = cola::coordinator::trainer::shared_bpe(man.preset.vocab).unwrap();
     let mut gen = CorpusGen::new(CorpusCfg { seed: 5, ..CorpusCfg::default() });
+    // a small cycled prompt set — the repeated-prefix traffic (system
+    // prompts, retries) the KV prefix cache targets, and a fixed workload so
+    // the three variants compare like for like
+    let prompt_set: Vec<Vec<i32>> = (0..4).map(|_| bpe.encode(&gen.text(40))).collect();
 
     // warmup (compile + first batch)
     let opts = SubmitOptions { max_new_tokens: Some(4), ..Default::default() };
-    router.generate(model, bpe.encode(&gen.text(40)), opts).unwrap();
+    router.generate(model, prompt_set[0].clone(), opts).unwrap();
 
     // submit everything up front: continuous batching keeps the slot table
     // full as rows finish, instead of draining whole static batches
     let t0 = Instant::now();
     let mut streams = Vec::new();
-    for _ in 0..n_requests {
-        streams.push(
-            router.submit_wait(model, bpe.encode(&gen.text(40)), SubmitOptions::default()).unwrap(),
-        );
+    for r in 0..n_requests {
+        let prompt = prompt_set[r % prompt_set.len()].clone();
+        streams.push(router.submit_wait(model, prompt, SubmitOptions::default()).unwrap());
     }
     let mut total_tokens = 0usize;
     let mut lat = Vec::new();
@@ -82,6 +85,28 @@ fn main() {
         println!("{name:>14} {tps:>10.0} {p50:>10.1} {rss:>7.2} GB   {pm:>8.2}, {pt:>8.0}");
         tput.push(tps);
     }
+    // prefill-avoidance addendum: each model's workload cycles a 4-prompt
+    // repeated-prefix set, so fresh admissions can hit the KV prefix cache;
+    // mid-flight rows whose windows shifted still re-encode (per-row
+    // positions are the ROADMAP follow-on), so hit rates here are the
+    // honest steady-state mix, not the sequential-retry best case
+    println!("\nprefill avoidance (per model):");
+    for (name, s) in router.stats_by_model() {
+        println!(
+            "  {name:>10}: prefills {} real ({:.1}ms avg) + {} elided ({}) | kv hits {} ({})",
+            s.prefill_calls,
+            if s.prefill_calls > 0 {
+                s.prefill_nanos as f64 / s.prefill_calls as f64 * 1e-6
+            } else {
+                0.0
+            },
+            s.prefills_elided,
+            cola::metrics::fmt_pct(s.prefills_elided, s.prefill_calls + s.prefills_elided),
+            s.kv_cache_hits,
+            cola::metrics::fmt_pct(s.kv_cache_hits, s.kv_cache_hits + s.kv_cache_misses),
+        );
+    }
+
     // RSS above is process-wide with ALL THREE variants resident — the
     // side-by-side serving footprint, not per-variant.
     // model sizes (memory column at paper scale comes from the manifests)

@@ -68,6 +68,13 @@ pub struct ServeConfig {
     /// default per-request deadline from submit time; 0 = unbounded
     /// (`SubmitOptions::deadline` overrides it per request)
     pub default_deadline_ms: u64,
+    /// per-worker KV prefix cache capacity in rows (window → host KV slice
+    /// + next token, see `serve::kvcache`); 0 disables prefill avoidance
+    pub kv_cache_entries: usize,
+    /// at most this many Normal-priority admissions per join-prefill
+    /// boundary (High-priority admissions are never chunk-limited); 0 =
+    /// unlimited, i.e. fill every free slot at each boundary
+    pub join_chunk: usize,
 }
 
 impl Default for ServeConfig {
@@ -78,6 +85,8 @@ impl Default for ServeConfig {
             workers: 1,
             queue_depth: 64,
             default_deadline_ms: 0,
+            kv_cache_entries: 64,
+            join_chunk: 0,
         }
     }
 }
@@ -155,6 +164,8 @@ pub fn apply_serve_overrides(cfg: &mut ServeConfig, kvs: &[(String, String)]) ->
             "default_deadline_ms" => {
                 cfg.default_deadline_ms = v.parse().context("default_deadline_ms")?
             }
+            "kv_cache_entries" => cfg.kv_cache_entries = v.parse().context("kv_cache_entries")?,
+            "join_chunk" => cfg.join_chunk = v.parse().context("join_chunk")?,
             _ => anyhow::bail!("unknown serve config key `{k}`"),
         }
     }
@@ -335,6 +346,8 @@ mod tests {
                 ("workers".into(), "2".into()),
                 ("queue_depth".into(), "128".into()),
                 ("default_deadline_ms".into(), "250".into()),
+                ("kv_cache_entries".into(), "16".into()),
+                ("join_chunk".into(), "2".into()),
             ],
         )
         .unwrap();
@@ -343,6 +356,28 @@ mod tests {
         assert_eq!(cfg.workers, 2);
         assert_eq!(cfg.queue_depth, 128);
         assert_eq!(cfg.default_deadline_ms, 250);
+        assert_eq!(cfg.kv_cache_entries, 16);
+        assert_eq!(cfg.join_chunk, 2);
+    }
+
+    #[test]
+    fn router_models_inherit_cache_and_chunk_knobs() {
+        // parity: the new knobs flow through defaults, stanzas and dotted
+        // overrides exactly like the original serve keys
+        let cfg = load_router_config(
+            None,
+            &[
+                ("kv_cache_entries".into(), "8".into()),
+                ("models".into(), "a:art_a,b:art_b".into()),
+                ("b.kv_cache_entries".into(), "0".into()),
+                ("b.join_chunk".into(), "1".into()),
+            ],
+        )
+        .unwrap();
+        assert_eq!(cfg.models[0].1.kv_cache_entries, 8, "defaults reach every model");
+        assert_eq!(cfg.models[0].1.join_chunk, 0);
+        assert_eq!(cfg.models[1].1.kv_cache_entries, 0, "dotted override disables per model");
+        assert_eq!(cfg.models[1].1.join_chunk, 1);
     }
 
     #[test]

@@ -5,13 +5,18 @@
 //!   eval      evaluate validation perplexity of a checkpoint
 //!   serve     run a load generator against the serving tier
 //!             (`ModelRouter` → named `ServicePool`s: continuous batching,
-//!             streaming, bounded admission queues). Flags: --requests N,
-//!             --config file.json, --model NAME (restrict load to one
-//!             model); key=value overrides: artifact, max_new_tokens,
-//!             workers, queue_depth, default_deadline_ms,
+//!             streaming, bounded admission queues, KV prefix caching).
+//!             Flags: --requests N, --config file.json, --model NAME
+//!             (restrict load to one model), --mock (hermetic MockBackend
+//!             smoke with a repeated-prefix workload — no artifact needed;
+//!             add --distinct D for prompt variety and --bench-json PATH
+//!             to record a BENCH_serve.json line); key=value overrides:
+//!             artifact, max_new_tokens, workers, queue_depth,
+//!             default_deadline_ms, kv_cache_entries, join_chunk,
 //!             models=name:artifact,... and name.key=value per model.
 //!             Prints per-model p50/p95/p99 latency, time-to-first-token,
-//!             and labeled queue/counter stats plus a fleet aggregate.
+//!             and labeled queue/counter/prefill-cache stats plus a fleet
+//!             aggregate.
 //!   rank      activation-spectrum analysis (Fig. 2) on an artifact
 //!   cost      print the analytic paper tables (2/3/4, Fig 5/6/7 data)
 //!   data-gen  pre-build the corpus + BPE tokenizer caches
@@ -33,9 +38,12 @@ fn usage() -> ! {
     eprintln!(
         "usage: cola <train|eval|serve|rank|cost|data-gen> [--artifact NAME] [key=value ...]\n\
          serve: cola serve [--artifact NAME] [--requests N] [--config f.json] [--model NAME]\n\
+                [--mock] [--distinct D] [--bench-json PATH]\n\
                 [max_new_tokens=K] [workers=N] [queue_depth=D] [default_deadline_ms=MS]\n\
+                [kv_cache_entries=E] [join_chunk=J]\n\
                 [models=name:artifact,...] [name.key=value ...]\n\
-         run `cola cost` for the analytic paper tables; `make artifacts` first for the rest."
+         run `cola cost` for the analytic paper tables; `cola serve --mock` needs no\n\
+         artifacts; `make artifacts` first for the rest."
     );
     std::process::exit(2);
 }
@@ -134,6 +142,22 @@ fn cmd_serve(
     let rcfg = load_router_config(flags.get("config").map(std::path::Path::new), &all_kvs)?;
     let models = rcfg.resolved_models();
     let n_requests: usize = flags.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(16);
+
+    if flags.contains_key("mock") {
+        // --model restricts the smoke exactly like the artifact path (and a
+        // typoed name must fail loudly, not silently drive every model)
+        let targeted: Vec<(String, cola::config::ServeConfig)> = match flags.get("model") {
+            Some(m) => match models.iter().find(|(n, _)| n == m) {
+                Some(found) => vec![found.clone()],
+                None => anyhow::bail!(
+                    "--model `{m}` is not configured (models: {})",
+                    models.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>().join(", ")
+                ),
+            },
+            None => models,
+        };
+        return cmd_serve_mock(&flags, &targeted, n_requests);
+    }
 
     // which models the load generator drives (the router serves them all)
     let targets: Vec<String> = match flags.get("model") {
@@ -238,13 +262,172 @@ fn cmd_serve(
             metrics::stat_line("serve_expired", &label, s.expired),
             metrics::stat_line("serve_rejected", &label, s.rejected),
         );
+        println!(
+            "{} {} {} {} {}",
+            metrics::stat_line("serve_prefill_calls", &label, s.prefill_calls),
+            metrics::stat_line("serve_prefills_elided", &label, s.prefills_elided),
+            metrics::stat_line("serve_kv_cache_hits", &label, s.kv_cache_hits),
+            metrics::stat_line("serve_kv_cache_misses", &label, s.kv_cache_misses),
+            metrics::stat_line("serve_kv_cache_evictions", &label, s.kv_cache_evictions),
+        );
     }
     println!(
         "queue: peak depth {max_queue}/{} full-retries {retries} | \
          submitted={} completed={} cancelled={} expired={} rejected={}",
         agg.queue_capacity, agg.submitted, agg.completed, agg.cancelled, agg.expired, agg.rejected
     );
+    println!(
+        "prefill: {} real ({:.1}ms avg) + {} elided ({} of boundaries) | \
+         kv cache: hit rate {} evictions {}",
+        agg.prefill_calls,
+        if agg.prefill_calls > 0 {
+            agg.prefill_nanos as f64 / agg.prefill_calls as f64 * 1e-6
+        } else {
+            0.0
+        },
+        agg.prefills_elided,
+        metrics::fmt_pct(agg.prefills_elided, agg.prefill_calls + agg.prefills_elided),
+        metrics::fmt_pct(agg.kv_cache_hits, agg.kv_cache_hits + agg.kv_cache_misses),
+        agg.kv_cache_evictions,
+    );
     router.shutdown();
+    Ok(())
+}
+
+/// Hermetic serving smoke (`cola serve --mock`): the same `ModelRouter` →
+/// `ServicePool` surface over deterministic `MockBackend` pools — no
+/// artifact, no tokenizer — driven with a repeated-prefix workload that
+/// exercises prefill avoidance. Runs the workload twice, prefix cache on
+/// then off, proves the streamed outputs are byte-identical, reports the
+/// prefill/elision counters, and (with `--bench-json PATH`) records a
+/// one-line JSON benchmark so CI can track the serving perf trajectory.
+fn cmd_serve_mock(
+    flags: &std::collections::HashMap<String, String>,
+    models: &[(String, cola::config::ServeConfig)],
+    n_requests: usize,
+) -> Result<()> {
+    use cola::serve::{FinishReason, MockBackend, ServicePool, ServiceStats};
+    let distinct: usize =
+        flags.get("distinct").map(|s| s.parse()).transpose()?.unwrap_or(4).max(1);
+    for (name, cfg) in models {
+        anyhow::ensure!(cfg.workers > 0, "model `{name}` needs workers >= 1 for --mock");
+    }
+    // 2ms real-prefill latency makes elision visible in wall-clock numbers;
+    // decode itself is free, so tokens/s contrasts the prefill paths.
+    let mock = MockBackend::new(4, 8, 24)
+        .vocab(50_021)
+        .prefill_delay(std::time::Duration::from_millis(2));
+    // deterministic synthetic prompts, recycled every `distinct` requests —
+    // the repeated prefixes (system prompts / retries) the KV cache targets
+    let prompts: Vec<Vec<i32>> =
+        (0..distinct).map(|d| (0..6).map(|j| 100 + 17 * d as i32 + j).collect()).collect();
+
+    let run = |cache_on: bool| -> Result<(Vec<Vec<i32>>, ServiceStats, f64)> {
+        let mut pools = Vec::new();
+        for (name, cfg) in models {
+            let mut cfg = cfg.clone();
+            if !cache_on {
+                cfg.kv_cache_entries = 0;
+            }
+            pools.push((name.clone(), ServicePool::start_with(cfg, mock.clone().factory())?));
+        }
+        let router = ModelRouter::from_pools(pools)?;
+        let t0 = std::time::Instant::now();
+        let mut outs = Vec::with_capacity(n_requests);
+        for r in 0..n_requests {
+            let name = &models[r % models.len()].0;
+            let prompt = prompts[r % distinct].clone();
+            let c = router.generate(name, prompt, SubmitOptions::default())?;
+            anyhow::ensure!(
+                matches!(c.finish_reason, FinishReason::Length | FinishReason::Stop),
+                "mock request {r} ended with {:?}",
+                c.finish_reason
+            );
+            outs.push(c.tokens);
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let agg = router.aggregate_stats();
+        router.shutdown();
+        Ok((outs, agg, secs))
+    };
+
+    let (outs_on, on, secs_on) = run(true)?;
+    let (outs_off, off, secs_off) = run(false)?;
+    anyhow::ensure!(
+        outs_on == outs_off,
+        "prefix cache changed streamed outputs — elision is broken"
+    );
+
+    let tokens: usize = outs_on.iter().map(Vec::len).sum();
+    let boundaries = on.prefill_calls + on.prefills_elided;
+    let lookups = on.kv_cache_hits + on.kv_cache_misses;
+    println!(
+        "mock smoke: {n_requests} requests x {} model(s), {distinct} distinct prompt(s), \
+         {tokens} tokens",
+        models.len()
+    );
+    println!(
+        "  cache on : {:.0} tok/s wall | prefills {} real + {} elided ({} of {} boundaries)",
+        tokens as f64 / secs_on.max(1e-9),
+        on.prefill_calls,
+        on.prefills_elided,
+        metrics::fmt_pct(on.prefills_elided, boundaries),
+        boundaries,
+    );
+    println!(
+        "  cache off: {:.0} tok/s wall | prefills {} real (baseline, outputs identical)",
+        tokens as f64 / secs_off.max(1e-9),
+        off.prefill_calls,
+    );
+    println!(
+        "  kv cache: {} hits / {} lookups ({}) | misses {} evictions {}",
+        on.kv_cache_hits,
+        lookups,
+        metrics::fmt_pct(on.kv_cache_hits, lookups),
+        on.kv_cache_misses,
+        on.kv_cache_evictions,
+    );
+
+    // The perf gate CI relies on: with repeated prefixes and the cache
+    // enabled, at least half of all join boundaries must avoid the real
+    // prefill (ISSUE 5 acceptance). Only meaningful when the run is big
+    // enough that warm-up misses cannot dominate.
+    let cache_enabled = models.iter().all(|(_, c)| c.kv_cache_entries > 0);
+    if cache_enabled && n_requests >= 2 * distinct * models.len() {
+        anyhow::ensure!(
+            2 * on.prefills_elided >= boundaries,
+            "prefill avoidance regressed: only {} of {} boundaries elided",
+            on.prefills_elided,
+            boundaries
+        );
+    }
+
+    if let Some(path) = flags.get("bench-json") {
+        use cola::util::json::Json;
+        let j = Json::obj(vec![
+            ("bench", Json::s("serve_mock")),
+            ("requests", Json::num(n_requests as f64)),
+            ("distinct_prompts", Json::num(distinct as f64)),
+            ("tokens", Json::num(tokens as f64)),
+            ("tokens_per_sec", Json::num(tokens as f64 / secs_on.max(1e-9))),
+            ("tokens_per_sec_nocache", Json::num(tokens as f64 / secs_off.max(1e-9))),
+            ("prefill_calls", Json::num(on.prefill_calls as f64)),
+            ("prefills_elided", Json::num(on.prefills_elided as f64)),
+            ("kv_cache_hits", Json::num(on.kv_cache_hits as f64)),
+            ("kv_cache_misses", Json::num(on.kv_cache_misses as f64)),
+            (
+                "cache_hit_rate",
+                Json::num(if lookups > 0 {
+                    on.kv_cache_hits as f64 / lookups as f64
+                } else {
+                    0.0
+                }),
+            ),
+        ]);
+        std::fs::write(path, format!("{j}\n"))
+            .with_context(|| format!("writing {path}"))?;
+        println!("  wrote {path}");
+    }
     Ok(())
 }
 

@@ -74,6 +74,15 @@ pub fn fmt_ms(x: Option<f64>) -> String {
     x.map_or_else(|| "n/a".into(), |v| format!("{v:.1}ms"))
 }
 
+/// Render `part` of `whole` as a percentage ("n/a" when `whole` is 0) —
+/// cache hit rates and prefill-elision fractions in the serve reports.
+pub fn fmt_pct(part: u64, whole: u64) -> String {
+    if whole == 0 {
+        return "n/a".into();
+    }
+    format!("{:.1}%", 100.0 * part as f64 / whole as f64)
+}
+
 /// Render a `{k="v",...}` label suffix for per-model/per-worker metric
 /// lines (prometheus-style; empty input → empty string, so unlabeled lines
 /// stay clean). Values are escaped per the exposition format (`\`, `"`,
@@ -196,6 +205,14 @@ mod tests {
     fn percentile_empty_is_none() {
         assert!(percentile(&[], 50.0).is_none());
         assert_eq!(fmt_ms(None), "n/a");
+    }
+
+    #[test]
+    fn pct_formats_and_guards_zero_whole() {
+        assert_eq!(fmt_pct(1, 2), "50.0%");
+        assert_eq!(fmt_pct(0, 8), "0.0%");
+        assert_eq!(fmt_pct(3, 3), "100.0%");
+        assert_eq!(fmt_pct(0, 0), "n/a", "empty runs must not divide by zero");
     }
 
     #[test]

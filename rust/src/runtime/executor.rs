@@ -53,6 +53,30 @@ impl Executor {
         Self::untuple(out)
     }
 
+    /// [`run_b`](Self::run_b) over raw buffer pointers, so per-step callers
+    /// can keep one reusable scratch `Vec<*const PjRtBuffer>` instead of
+    /// re-collecting a `Vec<&PjRtBuffer>` on every call of the serve hot
+    /// loop (a `Vec` of borrows cannot be stored across calls — its
+    /// lifetime would be tied to the borrowed buffers).
+    ///
+    /// # Safety
+    ///
+    /// Every pointer in `args` must come from a `&xla::PjRtBuffer` that is
+    /// live for the whole call (`&T` and `*const T` share one layout for
+    /// sized `T`, which the cast below relies on).
+    pub unsafe fn run_b_ptr(
+        &self,
+        args: &[*const xla::PjRtBuffer],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        // SAFETY: caller guarantees each pointer was derived from a live
+        // reference; the slice cast is layout-compatible. (The explicit
+        // block is redundant on pre-2024 editions, hence the allow.)
+        #[allow(unused_unsafe)]
+        let refs: &[&xla::PjRtBuffer] =
+            unsafe { std::slice::from_raw_parts(args.as_ptr().cast(), args.len()) };
+        self.run_b(refs)
+    }
+
     /// The PJRT output is `Vec<Vec<PjRtBuffer>>` (replicas × outputs). With
     /// `return_tuple=True` lowering, CPU PJRT untuples to N buffers already;
     /// handle both the 1-tuple-buffer and N-buffer conventions.
@@ -89,6 +113,11 @@ pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
 /// f32 scalar literal.
 pub fn lit_f32(x: f32) -> xla::Literal {
     xla::Literal::scalar(x)
+}
+
+/// f32 tensor literal from a flat slice + dims (KV-cache row reassembly).
+pub fn lit_f32_vec(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
 }
 
 /// i32 scalar literal.

@@ -18,23 +18,37 @@
 //! The loop:
 //!
 //! 1. park on the admission queue while the slot table is idle;
-//! 2. top up free slots from the queue (expired/cancelled/zero-budget
-//!    requests resolve immediately without burning a slot);
+//! 2. top up free slots from the queue — **chunked admission**: at most
+//!    `join_chunk` Normal-priority rows join per prefill boundary, while
+//!    High-priority rows are popped first and are never chunk-limited, so
+//!    one burst of new requests can neither stall every in-flight decode
+//!    nor saturate the table before urgent work lands (expired/cancelled/
+//!    zero-budget requests resolve immediately without burning a slot);
 //! 3. **join prefill**: re-encode the merged batch — every occupied row's
 //!    right-aligned context window — in one `[batch, prompt_len]` call,
 //!    producing fresh KV state and one next-token per row. The decode step
 //!    shares a single `pos` scalar across the batch, so rows can only join
 //!    at a prefill boundary; re-encoding restarts positions at 0, which
 //!    RoPE's shift-equivariance makes attention-equivalent for the tokens
-//!    inside the window. Context older than the most recent `prompt_len`
-//!    tokens is dropped at a join — sliding-window semantics, so a row's
-//!    continuation can depend on whether neighbours joined mid-flight
-//!    (ROADMAP lists prefix caching / per-row positions as the fix);
+//!    inside the window. **Prefill avoidance**: a row's post-prefill KV
+//!    slice is a pure function of its window (rows never attend across the
+//!    batch), so each worker keeps a host-side
+//!    [`KvPrefixCache`](crate::serve::kvcache::KvPrefixCache) of per-row KV
+//!    snapshots keyed by window hash. When *every* occupied row hits —
+//!    repeated prefixes (system prompts, retries), or rows whose window is
+//!    unchanged since the prefill that inserted it — the join prefill is
+//!    elided entirely: rows are restored through
+//!    [`EngineBackend::import_kv_rows`] instead of re-encoded. Real
+//!    prefills are timed (`prefill_nanos`) and export their missing rows
+//!    into the cache via [`EngineBackend::export_kv_rows`];
 //! 4. decode in lockstep, streaming each row's token as it lands, vacating
 //!    rows that finish/cancel/expire — and break back to (3) when an
 //!    admission into a vacated slot actually lands, or when the KV window
 //!    is exhausted (`pos == max_len`, a sliding-window rollover that lets
-//!    generations run past the backend's static window).
+//!    generations run past the backend's static window). Deterministic
+//!    decoding makes even rollover windows repeat across retries of the
+//!    same prompt, so rollover prefills of repeated traffic hit the cache
+//!    too.
 //!
 //! Rows that sit empty while the queue is dry still decode junk (the shapes
 //! are static), but unlike the retired flush-and-wait batcher they are
@@ -43,8 +57,9 @@
 
 use crate::data::tokenizer;
 use crate::metrics;
-use crate::runtime::executor::{buf_i32_vec, lit_i32, to_device};
+use crate::runtime::executor::{buf_f32_vec, buf_i32_vec, lit_f32_vec, lit_i32, to_device};
 use crate::runtime::{ArtifactDir, Executor};
+use crate::serve::kvcache::{KvPrefixCache, KvRowState};
 use crate::serve::service::{FinishReason, QueuedRequest, Shared};
 use crate::serve::slots::{self, SlotTable};
 use anyhow::{Context, Result};
@@ -57,7 +72,8 @@ use std::time::Instant;
 // ---------------------------------------------------------------------------
 
 /// What the scheduling loop needs from a model: static batch geometry plus
-/// the two batched ops (join prefill, lockstep decode step).
+/// the two batched ops (join prefill, lockstep decode step), and — for
+/// prefill avoidance — per-row KV state transfer between device and host.
 ///
 /// Implementations are constructed *inside* the worker thread (see
 /// `ServicePool::start_with`), so they may hold thread-local, non-`Send`
@@ -86,6 +102,30 @@ pub trait EngineBackend {
     /// row (pad for free rows, whose output is ignored). Returns one
     /// next-token per row and advances the KV state.
     fn decode_step(&mut self, feed: &[i32], pos: usize) -> Result<Vec<i32>>;
+
+    /// f32 elements per plane (`k` or `v`) of one row's KV snapshot, or 0
+    /// when the backend cannot export/import KV rows — the engine then
+    /// disables the prefix cache instead of failing at the first boundary.
+    fn kv_row_elems(&self) -> usize {
+        0
+    }
+
+    /// Snapshot the post-prefill KV state of the given rows to the host
+    /// (one [`KvRowState`] per requested row, in order). Only called after
+    /// a successful [`prefill`](Self::prefill) and only when
+    /// [`kv_row_elems`](Self::kv_row_elems) is non-zero.
+    fn export_kv_rows(&mut self, _rows: &[usize]) -> Result<Vec<KvRowState>> {
+        anyhow::bail!("backend `{}` does not support KV row export", self.describe())
+    }
+
+    /// Replace the batch KV state from per-row host snapshots (`None` =
+    /// free row, which gets a zero slice — its decode output is junk the
+    /// scheduler ignores). `rows.len() == batch_size()`. After this call
+    /// the backend must behave exactly as if a prefill of the snapshotted
+    /// windows had just run.
+    fn import_kv_rows(&mut self, _rows: &[Option<&KvRowState>]) -> Result<()> {
+        anyhow::bail!("backend `{}` does not support KV row import", self.describe())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -104,9 +144,19 @@ pub struct PjrtBackend {
     params: Vec<xla::PjRtBuffer>,
     /// `(kc, vc)` produced by the last prefill/decode call.
     kv: Option<(xla::PjRtBuffer, xla::PjRtBuffer)>,
+    /// Reusable argument scratch: params + per-call inputs as raw pointers,
+    /// so the hot loop stops re-collecting a `Vec` of borrows every step
+    /// (see `Executor::run_b_ptr`).
+    scratch: Vec<*const xla::PjRtBuffer>,
     batch: usize,
     prompt_len: usize,
     max_len: usize,
+    /// KV cache geometry `[n_layers, batch, max_len, n_heads, head_dim]` —
+    /// the per-row export/import slicing below depends on this layout
+    /// (aot.py lowers the cache exactly so).
+    n_layers: usize,
+    n_heads: usize,
+    head_dim: usize,
     name: String,
 }
 
@@ -123,16 +173,60 @@ impl PjrtBackend {
         // params stay on device for the backend's lifetime
         let mut params = art.load_state0_buffers()?;
         params.truncate(man.n_params);
+        let scratch = Vec::with_capacity(params.len() + 4);
+        anyhow::ensure!(
+            man.preset.n_heads > 0 && man.preset.d % man.preset.n_heads == 0,
+            "preset head geometry (d={}, n_heads={})",
+            man.preset.d,
+            man.preset.n_heads
+        );
         Ok(Self {
             prefill,
             decode,
             params,
             kv: None,
+            scratch,
             batch,
             prompt_len,
             max_len,
+            n_layers: man.preset.n_layers,
+            n_heads: man.preset.n_heads,
+            head_dim: man.preset.d / man.preset.n_heads,
             name: man.name,
         })
+    }
+
+    /// f32 elements of one row within one layer (`max_len * n_heads *
+    /// head_dim`), the contiguous unit the `[L, B, T, H, hd]` layout stores
+    /// per `(layer, row)`.
+    fn layer_row_elems(&self) -> usize {
+        self.max_len * self.n_heads * self.head_dim
+    }
+
+    fn kv_dims(&self) -> [i64; 5] {
+        [
+            self.n_layers as i64,
+            self.batch as i64,
+            self.max_len as i64,
+            self.n_heads as i64,
+            self.head_dim as i64,
+        ]
+    }
+
+    /// Rebuild `self.scratch` as params ++ `extra` and run `exe` over it.
+    fn run_step(
+        &mut self,
+        exe: &Rc<Executor>,
+        extra: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        self.scratch.clear();
+        self.scratch.extend(self.params.iter().map(|p| p as *const xla::PjRtBuffer));
+        for b in extra {
+            self.scratch.push(*b);
+        }
+        // SAFETY: every pointer in `scratch` was just derived from a live
+        // reference (`self.params` and `extra`) that outlives this call.
+        unsafe { exe.run_b_ptr(&self.scratch) }
     }
 }
 
@@ -159,9 +253,8 @@ impl EngineBackend for PjrtBackend {
     fn prefill(&mut self, tokens: &[i32]) -> Result<Vec<i32>> {
         let tok_buf =
             to_device(&lit_i32(tokens, &[self.batch as i64, self.prompt_len as i64])?)?;
-        let mut refs: Vec<&xla::PjRtBuffer> = self.params.iter().collect();
-        refs.push(&tok_buf);
-        let mut out = self.prefill.run_b(&refs)?;
+        let exe = self.prefill.clone();
+        let mut out = self.run_step(&exe, &[&tok_buf])?;
         anyhow::ensure!(out.len() == 3, "prefill returns (next, kc, vc)");
         let vcb = out.pop().unwrap();
         let kcb = out.pop().unwrap();
@@ -175,17 +268,75 @@ impl EngineBackend for PjrtBackend {
         let (kcb, vcb) = self.kv.take().context("decode_step before prefill")?;
         let tok_b = to_device(&lit_i32(feed, &[self.batch as i64])?)?;
         let pos_b = to_device(&xla::Literal::scalar(pos as i32))?;
-        let mut refs: Vec<&xla::PjRtBuffer> = self.params.iter().collect();
-        refs.push(&kcb);
-        refs.push(&vcb);
-        refs.push(&tok_b);
-        refs.push(&pos_b);
-        let mut out = self.decode.run_b(&refs)?;
+        let exe = self.decode.clone();
+        let mut out = self.run_step(&exe, &[&kcb, &vcb, &tok_b, &pos_b])?;
         anyhow::ensure!(out.len() == 3, "decode returns (next, kc, vc)");
         let vcb2 = out.pop().unwrap();
         let kcb2 = out.pop().unwrap();
         self.kv = Some((kcb2, vcb2));
         buf_i32_vec(&out[0])
+    }
+
+    fn kv_row_elems(&self) -> usize {
+        self.n_layers * self.layer_row_elems()
+    }
+
+    fn export_kv_rows(&mut self, rows: &[usize]) -> Result<Vec<KvRowState>> {
+        let (kcb, vcb) = self.kv.as_ref().context("export_kv_rows before prefill")?;
+        // one host transfer for the whole batch, then per-row gather — the
+        // [L, B, T, H, hd] layout scatters a row across layers
+        let k_host = buf_f32_vec(kcb)?;
+        let v_host = buf_f32_vec(vcb)?;
+        let lr = self.layer_row_elems();
+        let row_elems = self.kv_row_elems();
+        let mut out = Vec::with_capacity(rows.len());
+        for &r in rows {
+            anyhow::ensure!(r < self.batch, "export row {r} out of range (batch {})", self.batch);
+            let mut k = Vec::with_capacity(row_elems);
+            let mut v = Vec::with_capacity(row_elems);
+            for l in 0..self.n_layers {
+                let off = (l * self.batch + r) * lr;
+                k.extend_from_slice(&k_host[off..off + lr]);
+                v.extend_from_slice(&v_host[off..off + lr]);
+            }
+            out.push(KvRowState { k, v });
+        }
+        Ok(out)
+    }
+
+    fn import_kv_rows(&mut self, rows: &[Option<&KvRowState>]) -> Result<()> {
+        anyhow::ensure!(
+            rows.len() == self.batch,
+            "import_kv_rows wants one entry per row ({} != {})",
+            rows.len(),
+            self.batch
+        );
+        let lr = self.layer_row_elems();
+        let row_elems = self.kv_row_elems();
+        let full = self.n_layers * self.batch * lr;
+        // free rows stay zero — the same state a fresh prefill gives padding
+        let mut k_host = vec![0f32; full];
+        let mut v_host = vec![0f32; full];
+        for (r, state) in rows.iter().enumerate() {
+            let Some(s) = state else { continue };
+            anyhow::ensure!(
+                s.k.len() == row_elems && s.v.len() == row_elems,
+                "KV row snapshot has {} elems, backend wants {row_elems}",
+                s.k.len()
+            );
+            for l in 0..self.n_layers {
+                let dst = (l * self.batch + r) * lr;
+                let src = l * lr;
+                k_host[dst..dst + lr].copy_from_slice(&s.k[src..src + lr]);
+                v_host[dst..dst + lr].copy_from_slice(&s.v[src..src + lr]);
+            }
+        }
+        let dims = self.kv_dims();
+        self.kv = Some((
+            to_device(&lit_f32_vec(&k_host, &dims)?)?,
+            to_device(&lit_f32_vec(&v_host, &dims)?)?,
+        ));
+        Ok(())
     }
 }
 
@@ -193,11 +344,53 @@ impl EngineBackend for PjrtBackend {
 // Scheduling loop (backend-agnostic)
 // ---------------------------------------------------------------------------
 
+/// Worker-loop knobs carried from `ServeConfig` into each engine thread.
+pub(crate) struct EngineOptions {
+    /// KV prefix-cache capacity in rows; 0 disables prefill avoidance.
+    pub(crate) kv_cache_entries: usize,
+    /// Normal-priority admissions per join boundary; 0 = unlimited.
+    pub(crate) join_chunk: usize,
+}
+
+/// Per-worker scratch and cache state that persists across decode rounds.
+struct WorkerState {
+    /// Host-side KV prefix cache (`None` when disabled by config or an
+    /// export-incapable backend).
+    cache: Option<KvPrefixCache>,
+    join_chunk: usize,
+    /// Merged `[batch * prompt_len]` prefill input, rebuilt in place.
+    toks: Vec<i32>,
+    /// Occupied-row snapshot reused every decode step.
+    occ: Vec<usize>,
+    /// Per-row decode feed reused every decode step.
+    feed: Vec<i32>,
+    /// `(row, probe result)` per occupied row at the current boundary.
+    probes: Vec<(usize, Option<usize>)>,
+}
+
 /// Body of one `cola-serve-N` thread (spawned by `ServicePool::start_with`).
-pub(crate) fn run_worker(backend: &mut dyn EngineBackend, shared: &Shared) -> Result<()> {
+pub(crate) fn run_worker(
+    backend: &mut dyn EngineBackend,
+    shared: &Shared,
+    opts: &EngineOptions,
+) -> Result<()> {
     let mut table = SlotTable::new(backend.batch_size());
     let mut gauge = 0usize; // this worker's contribution to stats.active
-    metrics::log_info(&format!("serve worker up: {}", backend.describe()));
+    let cache_rows = if backend.kv_row_elems() > 0 { opts.kv_cache_entries } else { 0 };
+    let mut st = WorkerState {
+        cache: (cache_rows > 0).then(|| KvPrefixCache::new(cache_rows)),
+        join_chunk: opts.join_chunk,
+        toks: vec![tokenizer::PAD; backend.batch_size() * backend.prompt_len()],
+        occ: Vec::with_capacity(backend.batch_size()),
+        feed: Vec::with_capacity(backend.batch_size()),
+        probes: Vec::with_capacity(backend.batch_size()),
+    };
+    metrics::log_info(&format!(
+        "serve worker up: {} kv_cache={} join_chunk={}",
+        backend.describe(),
+        cache_rows,
+        if st.join_chunk == 0 { "off".into() } else { st.join_chunk.to_string() }
+    ));
 
     loop {
         // Park while idle; `None` = queue closed and drained → exit.
@@ -210,21 +403,15 @@ pub(crate) fn run_worker(backend: &mut dyn EngineBackend, shared: &Shared) -> Re
                 None => break,
             }
         }
-        // Top up the remaining free slots without blocking.
-        while table.free() > 0 {
-            match shared.queue.try_pop() {
-                Some(req) => {
-                    admit_one(&mut table, shared, req);
-                }
-                None => break,
-            }
-        }
+        // Top up free slots without blocking (chunk-capped for Normal; the
+        // waking request above is admitted regardless).
+        refill_slots(&mut table, shared, st.join_chunk);
         if table.active() == 0 {
             continue; // everything popped had already expired/cancelled
         }
         sync_gauge(shared, &mut gauge, table.active());
 
-        if let Err(e) = decode_rounds(shared, backend, &mut table, &mut gauge) {
+        if let Err(e) = decode_rounds(shared, backend, &mut table, &mut gauge, &mut st) {
             let n = table.fail_all(Instant::now());
             shared.counters.failed.fetch_add(n as u64, Ordering::Relaxed);
             sync_gauge(shared, &mut gauge, 0);
@@ -259,6 +446,35 @@ fn admit_one(table: &mut SlotTable, shared: &Shared, req: QueuedRequest) -> bool
     false
 }
 
+/// Chunked, priority-aware top-up of free slots: High-priority requests are
+/// popped first and never chunk-limited; at most `join_chunk` Normal rows
+/// are admitted per call (0 = unlimited). Returns whether any admission
+/// actually landed (dead queued requests resolve without costing a slot or
+/// a prefill).
+fn refill_slots(table: &mut SlotTable, shared: &Shared, join_chunk: usize) -> bool {
+    let mut admitted = false;
+    let mut normal_left = if join_chunk == 0 { usize::MAX } else { join_chunk };
+    while table.free() > 0 {
+        if let Some(req) = shared.queue.try_pop_high() {
+            admitted |= admit_one(table, shared, req);
+            continue;
+        }
+        if normal_left == 0 {
+            break;
+        }
+        match shared.queue.try_pop() {
+            Some(req) => {
+                if admit_one(table, shared, req) {
+                    normal_left -= 1;
+                    admitted = true;
+                }
+            }
+            None => break,
+        }
+    }
+    admitted
+}
+
 /// Resolve cancelled/expired requests still sitting in the admission queue,
 /// freeing their capacity instead of letting dead entries block submits (and
 /// hang their clients) until a slot frees up to pop them.
@@ -277,6 +493,84 @@ fn shed_dead_queued(shared: &Shared, now: Instant) {
     }
 }
 
+/// The join boundary: restore every occupied row from the KV prefix cache
+/// when possible (an **elided** prefill), otherwise run the real prefill —
+/// timed — and export the rows the cache was missing. Expects `st.occ` and
+/// `st.toks` to be current. Returns one next-token per row.
+fn join_prefill(
+    shared: &Shared,
+    backend: &mut dyn EngineBackend,
+    table: &mut SlotTable,
+    st: &mut WorkerState,
+    serve_bs: usize,
+    prompt_len: usize,
+) -> Result<Vec<i32>> {
+    let c = &shared.counters;
+    let WorkerState { cache, toks, occ, probes, .. } = st;
+
+    if let Some(cache) = cache.as_mut() {
+        probes.clear();
+        let mut misses = 0u64;
+        for &i in occ.iter() {
+            let h = table.window_hash(i, prompt_len, tokenizer::PAD);
+            let p = cache.probe(h, &toks[i * prompt_len..(i + 1) * prompt_len]);
+            misses += u64::from(p.is_none());
+            probes.push((i, p));
+        }
+        c.kv_cache_hits.fetch_add(occ.len() as u64 - misses, Ordering::Relaxed);
+        c.kv_cache_misses.fetch_add(misses, Ordering::Relaxed);
+        if misses == 0 && !occ.is_empty() {
+            // Every window is known: skip the forward pass, rebuild the
+            // batch KV from host snapshots and replay the cached next
+            // tokens (free rows get zero KV; their output is junk anyway).
+            let mut rows: Vec<Option<&KvRowState>> = vec![None; serve_bs];
+            let mut next = vec![tokenizer::PAD; serve_bs];
+            for &(i, p) in probes.iter() {
+                let (kv, tok) = cache.peek(p.expect("all rows hit"));
+                rows[i] = Some(kv);
+                next[i] = tok;
+            }
+            backend.import_kv_rows(&rows)?;
+            c.prefills_elided.fetch_add(1, Ordering::Relaxed);
+            return Ok(next);
+        }
+    }
+
+    let t0 = Instant::now();
+    let next = backend.prefill(toks)?;
+    c.prefill_calls.fetch_add(1, Ordering::Relaxed);
+    c.prefill_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    anyhow::ensure!(
+        next.len() == serve_bs,
+        "prefill returned {} rows, want {serve_bs}",
+        next.len()
+    );
+
+    if let Some(cache) = cache.as_mut() {
+        // export only the rows the probe missed — hit rows are already
+        // resident (and were LRU-touched by the probe)
+        let miss_rows: Vec<usize> =
+            probes.iter().filter(|(_, p)| p.is_none()).map(|&(i, _)| i).collect();
+        if !miss_rows.is_empty() {
+            let states = backend.export_kv_rows(&miss_rows)?;
+            anyhow::ensure!(
+                states.len() == miss_rows.len(),
+                "export returned {} rows, want {}",
+                states.len(),
+                miss_rows.len()
+            );
+            let mut evicted = 0u64;
+            for (&i, kv) in miss_rows.iter().zip(states) {
+                let h = table.window_hash(i, prompt_len, tokenizer::PAD);
+                let window = toks[i * prompt_len..(i + 1) * prompt_len].to_vec();
+                evicted += cache.insert(h, window, kv, next[i]);
+            }
+            c.kv_cache_evictions.fetch_add(evicted, Ordering::Relaxed);
+        }
+    }
+    Ok(next)
+}
+
 /// One join-prefill plus the lockstep decode rounds that follow it. Returns
 /// when the table drained, a refill opportunity appeared, or the KV window
 /// rolled over — the caller re-enters after topping up slots.
@@ -285,21 +579,21 @@ fn decode_rounds(
     backend: &mut dyn EngineBackend,
     table: &mut SlotTable,
     gauge: &mut usize,
+    st: &mut WorkerState,
 ) -> Result<()> {
     let (serve_bs, prompt_len, max_len) =
         (backend.batch_size(), backend.prompt_len(), backend.max_len());
 
-    // --- join prefill over the merged batch ---------------------------------
-    let mut toks = Vec::with_capacity(serve_bs * prompt_len);
+    // --- join prefill over the merged batch (elided when fully cached) ------
+    table.occupied_into(&mut st.occ);
     for i in 0..serve_bs {
-        toks.extend(table.window(i, prompt_len, tokenizer::PAD));
+        let row = &mut st.toks[i * prompt_len..(i + 1) * prompt_len];
+        table.write_window(i, tokenizer::PAD, row);
     }
-    let mut next = backend.prefill(&toks)?;
-    let rows = next.len();
-    anyhow::ensure!(rows == serve_bs, "prefill returned {rows} rows, want {serve_bs}");
+    let next = join_prefill(shared, backend, table, st, serve_bs, prompt_len)?;
 
     let mut now = Instant::now();
-    for i in table.occupied() {
+    for &i in &st.occ {
         if let Some(reason) = table.push_token(i, next[i], now) {
             tally_finish(shared, reason);
         }
@@ -328,42 +622,33 @@ fn decode_rounds(
         // Refill vacated slots eagerly — but only pay the join prefill when
         // an admission actually lands (a dead queued request, or another
         // worker winning the race for it, must not cost us a prefill).
-        if table.free() > 0 {
-            let mut admitted = false;
-            while table.free() > 0 {
-                match shared.queue.try_pop() {
-                    Some(req) => admitted |= admit_one(table, shared, req),
-                    None => break,
-                }
-            }
-            if admitted {
-                sync_gauge(shared, gauge, table.active());
-                return Ok(()); // caller re-enters via join prefill
-            }
+        if table.free() > 0 && refill_slots(table, shared, st.join_chunk) {
+            sync_gauge(shared, gauge, table.active());
+            return Ok(()); // caller re-enters via join prefill
         }
         sync_gauge(shared, gauge, table.active());
         if pos >= max_len {
             return Ok(()); // KV window exhausted → sliding-window rollover
         }
 
-        let feed = table.feed_tokens(tokenizer::PAD);
+        table.feed_tokens_into(tokenizer::PAD, &mut st.feed);
         let t_step = Instant::now();
-        next = backend.decode_step(&feed, pos)?;
+        let next = backend.decode_step(&st.feed, pos)?;
         let rows = next.len();
         anyhow::ensure!(rows == serve_bs, "decode returned {rows} rows, want {serve_bs}");
         pos += 1;
 
-        let occupied = table.occupied();
+        table.occupied_into(&mut st.occ);
         shared
             .counters
             .decoded_tokens
-            .fetch_add(occupied.len() as u64, Ordering::Relaxed);
+            .fetch_add(st.occ.len() as u64, Ordering::Relaxed);
         shared
             .counters
             .decode_nanos
             .fetch_add(t_step.elapsed().as_nanos() as u64, Ordering::Relaxed);
         now = Instant::now();
-        for i in occupied {
+        for &i in &st.occ {
             if let Some(reason) = table.push_token(i, next[i], now) {
                 tally_finish(shared, reason);
             }

@@ -1,0 +1,334 @@
+//! Host-side KV prefix cache: prefill avoidance for the serving engine.
+//!
+//! Every join prefill re-encodes each occupied row's full context window —
+//! compute the paper's low-rank activations already halved, re-spent at
+//! every admission and KV-window rollover. But a row's post-prefill KV
+//! state is a pure function of its window tokens (the prefill initialises
+//! each row's cache from zeros, and causal attention never crosses rows),
+//! so identical windows always produce identical per-row KV slices and the
+//! same next token. [`KvPrefixCache`] exploits that: a bounded LRU from
+//! window-token hash to `(host KV row snapshot, next token)`, filled after
+//! real prefills via [`EngineBackend::export_kv_rows`] and consulted at
+//! every join boundary. When *all* occupied rows hit, the engine skips the
+//! prefill entirely and restores the rows with
+//! [`EngineBackend::import_kv_rows`] — repeated prefixes (system prompts,
+//! retries, deterministic re-generations after a rollover) cost one host
+//! transfer instead of one full forward pass.
+//!
+//! [`EngineBackend::export_kv_rows`]: crate::serve::engine::EngineBackend::export_kv_rows
+//! [`EngineBackend::import_kv_rows`]: crate::serve::engine::EngineBackend::import_kv_rows
+//!
+//! Design notes:
+//! - Entries verify the full window on lookup — the hash is the index, not
+//!   the identity, so a 64-bit collision degrades to a miss, never to
+//!   serving another prompt's KV state.
+//! - The cache is worker-local (constructed inside the engine loop), so it
+//!   needs no locking and its lifetime matches the backend whose geometry
+//!   produced the snapshots.
+//! - Probing and reading are split ([`probe`](KvPrefixCache::probe) touches
+//!   the LRU order and returns an index; [`peek`](KvPrefixCache::peek) is a
+//!   shared borrow) so the engine can collect every occupied row's entry
+//!   before handing the batch to `import_kv_rows`.
+
+use std::collections::HashMap;
+
+/// Sentinel for "no neighbour" in the intrusive LRU list.
+const NIL: usize = usize::MAX;
+
+/// Host-side snapshot of one row's post-prefill KV state, plus the next
+/// token that prefill produced for the row. Payload layout is
+/// backend-defined (`[n_layers * max_len * n_heads * head_dim]` f32 per
+/// plane for the PJRT backend); the cache only moves it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct KvRowState {
+    /// Key-cache plane for this row.
+    pub k: Vec<f32>,
+    /// Value-cache plane for this row.
+    pub v: Vec<f32>,
+}
+
+/// FNV-1a offset basis — `hash_tokens(&[])`.
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Fold one token into an FNV-1a state (little-endian bytes). `SlotTable`
+/// hashes windows incrementally from its segments with this, so a window
+/// never has to be materialised just to be keyed.
+pub fn fold_token(mut h: u64, t: i32) -> u64 {
+    for b in t.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// FNV-1a over the window tokens: the cache key. Kept `pub` so
+/// `SlotTable::window_hash` and out-of-crate harnesses hash windows exactly
+/// the way the cache does.
+pub fn hash_tokens(tokens: &[i32]) -> u64 {
+    tokens.iter().fold(FNV_OFFSET, |h, &t| fold_token(h, t))
+}
+
+struct Entry {
+    hash: u64,
+    window: Vec<i32>,
+    kv: KvRowState,
+    next_token: i32,
+    /// Towards MRU (the entry more recently used than this one).
+    prev: usize,
+    /// Towards LRU.
+    next: usize,
+}
+
+/// Counter deltas from one cache operation, tallied into the pool's shared
+/// counters by the engine.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheEvents {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+/// Bounded LRU of per-row KV snapshots keyed by window-token hash.
+pub struct KvPrefixCache {
+    cap: usize,
+    /// hash → slab index. One entry per hash: a colliding insert replaces
+    /// the resident entry (verified windows make this safe, merely lossy).
+    map: HashMap<u64, usize>,
+    slab: Vec<Entry>,
+    free: Vec<usize>,
+    head: usize,
+    tail: usize,
+}
+
+impl KvPrefixCache {
+    /// A cache holding at most `capacity` rows (`capacity >= 1`; a capacity
+    /// of 0 means "disabled" and is handled by the engine, which then never
+    /// constructs one).
+    pub fn new(capacity: usize) -> Self {
+        let cap = capacity.max(1);
+        Self {
+            cap,
+            map: HashMap::with_capacity(cap),
+            slab: Vec::with_capacity(cap),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Unlink `i` from the recency list.
+    fn unlink(&mut self, i: usize) {
+        let (p, n) = (self.slab[i].prev, self.slab[i].next);
+        if p == NIL {
+            self.head = n;
+        } else {
+            self.slab[p].next = n;
+        }
+        if n == NIL {
+            self.tail = p;
+        } else {
+            self.slab[n].prev = p;
+        }
+    }
+
+    /// Link `i` at the MRU head.
+    fn push_front(&mut self, i: usize) {
+        self.slab[i].prev = NIL;
+        self.slab[i].next = self.head;
+        if self.head != NIL {
+            self.slab[self.head].prev = i;
+        }
+        self.head = i;
+        if self.tail == NIL {
+            self.tail = i;
+        }
+    }
+
+    /// Look up a window. On a verified hit the entry moves to the MRU head
+    /// and its slab index is returned — read it with [`peek`](Self::peek)
+    /// (a shared borrow, so a whole batch of probed rows can be read at
+    /// once). A hash collision with a different window is a miss.
+    pub fn probe(&mut self, hash: u64, window: &[i32]) -> Option<usize> {
+        let &i = self.map.get(&hash)?;
+        if self.slab[i].window != window {
+            return None;
+        }
+        if self.head != i {
+            self.unlink(i);
+            self.push_front(i);
+        }
+        Some(i)
+    }
+
+    /// The KV snapshot and next token behind a [`probe`](Self::probe)d
+    /// index. Indices stay valid until the next `insert`.
+    pub fn peek(&self, idx: usize) -> (&KvRowState, i32) {
+        let e = &self.slab[idx];
+        (&e.kv, e.next_token)
+    }
+
+    /// Insert (or refresh) the snapshot for a window, evicting the LRU
+    /// entry when the cache is full. Returns how many entries were evicted
+    /// (0 or 1).
+    pub fn insert(&mut self, hash: u64, window: Vec<i32>, kv: KvRowState, next_token: i32) -> u64 {
+        if let Some(&i) = self.map.get(&hash) {
+            // refresh (or hash-collision replacement — last writer wins)
+            let e = &mut self.slab[i];
+            e.window = window;
+            e.kv = kv;
+            e.next_token = next_token;
+            if self.head != i {
+                self.unlink(i);
+                self.push_front(i);
+            }
+            return 0;
+        }
+        let mut evicted = 0;
+        if self.map.len() >= self.cap {
+            let lru = self.tail;
+            debug_assert_ne!(lru, NIL, "full cache must have a tail");
+            self.unlink(lru);
+            self.map.remove(&self.slab[lru].hash);
+            self.free.push(lru);
+            evicted = 1;
+        }
+        let i = match self.free.pop() {
+            Some(i) => {
+                self.slab[i] = Entry { hash, window, kv, next_token, prev: NIL, next: NIL };
+                i
+            }
+            None => {
+                self.slab.push(Entry { hash, window, kv, next_token, prev: NIL, next: NIL });
+                self.slab.len() - 1
+            }
+        };
+        self.map.insert(hash, i);
+        self.push_front(i);
+        evicted
+    }
+
+    /// MRU-first window snapshots (test/debug aid).
+    #[cfg(test)]
+    fn recency_order(&self) -> Vec<&[i32]> {
+        let mut out = Vec::new();
+        let mut i = self.head;
+        while i != NIL {
+            out.push(self.slab[i].window.as_slice());
+            i = self.slab[i].next;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(x: f32) -> KvRowState {
+        KvRowState { k: vec![x; 4], v: vec![-x; 4] }
+    }
+
+    fn put(c: &mut KvPrefixCache, w: &[i32], next: i32) -> u64 {
+        c.insert(hash_tokens(w), w.to_vec(), row(next as f32), next)
+    }
+
+    fn get(c: &mut KvPrefixCache, w: &[i32]) -> Option<i32> {
+        c.probe(hash_tokens(w), w).map(|i| c.peek(i).1)
+    }
+
+    #[test]
+    fn hash_is_stable_and_window_sensitive() {
+        assert_eq!(hash_tokens(&[1, 2, 3]), hash_tokens(&[1, 2, 3]));
+        assert_ne!(hash_tokens(&[1, 2, 3]), hash_tokens(&[3, 2, 1]));
+        assert_ne!(hash_tokens(&[0]), hash_tokens(&[0, 0]), "padding length matters");
+    }
+
+    #[test]
+    fn hit_returns_snapshot_and_next_token() {
+        let mut c = KvPrefixCache::new(4);
+        assert!(get(&mut c, &[1, 2]).is_none(), "cold cache misses");
+        put(&mut c, &[1, 2], 3);
+        let i = c.probe(hash_tokens(&[1, 2]), &[1, 2]).unwrap();
+        let (kv, next) = c.peek(i);
+        assert_eq!(next, 3);
+        assert_eq!(kv, &row(3.0));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let mut c = KvPrefixCache::new(2);
+        assert_eq!(put(&mut c, &[1], 10), 0);
+        assert_eq!(put(&mut c, &[2], 20), 0);
+        // touch [1] so [2] is LRU
+        assert_eq!(get(&mut c, &[1]), Some(10));
+        assert_eq!(put(&mut c, &[3], 30), 1, "insert past capacity evicts");
+        assert_eq!(c.len(), 2);
+        assert!(get(&mut c, &[2]).is_none(), "LRU entry [2] was evicted");
+        assert_eq!(get(&mut c, &[1]), Some(10));
+        assert_eq!(get(&mut c, &[3]), Some(30));
+    }
+
+    #[test]
+    fn refresh_updates_payload_without_eviction() {
+        let mut c = KvPrefixCache::new(2);
+        put(&mut c, &[5], 1);
+        assert_eq!(put(&mut c, &[5], 2), 0, "same window refreshes in place");
+        assert_eq!(c.len(), 1);
+        assert_eq!(get(&mut c, &[5]), Some(2));
+    }
+
+    #[test]
+    fn recency_order_tracks_probes_and_inserts() {
+        let mut c = KvPrefixCache::new(3);
+        put(&mut c, &[1], 1);
+        put(&mut c, &[2], 2);
+        put(&mut c, &[3], 3);
+        assert_eq!(c.recency_order(), vec![&[3][..], &[2], &[1]]);
+        get(&mut c, &[1]);
+        assert_eq!(c.recency_order(), vec![&[1][..], &[3], &[2]]);
+    }
+
+    #[test]
+    fn collision_with_different_window_is_a_verified_miss() {
+        let mut c = KvPrefixCache::new(2);
+        let h = hash_tokens(&[7, 8]);
+        c.insert(h, vec![7, 8], row(1.0), 1);
+        // same hash, different tokens: must NOT serve the resident entry
+        assert!(c.probe(h, &[9, 9]).is_none());
+        assert!(c.probe(h, &[7, 8]).is_some(), "the real window still hits");
+    }
+
+    #[test]
+    fn slab_slots_are_reused_after_eviction() {
+        let mut c = KvPrefixCache::new(2);
+        for x in 0..20 {
+            put(&mut c, &[x], x);
+        }
+        assert_eq!(c.len(), 2);
+        assert!(c.slab.len() <= 3, "evicted slots recycle instead of growing the slab");
+        assert_eq!(get(&mut c, &[19]), Some(19));
+        assert_eq!(get(&mut c, &[18]), Some(18));
+    }
+
+    #[test]
+    fn single_entry_cache_works() {
+        let mut c = KvPrefixCache::new(1);
+        put(&mut c, &[1], 1);
+        assert_eq!(put(&mut c, &[2], 2), 1);
+        assert!(get(&mut c, &[1]).is_none());
+        assert_eq!(get(&mut c, &[2]), Some(2));
+    }
+}

@@ -13,9 +13,20 @@
 //! slot refills, streaming, cancellation, deadlines, and backpressure —
 //! all under `cargo test -q` with no PJRT artifact on disk.
 //!
+//! The KV-row seam is implemented deterministically too: a row's
+//! "KV snapshot" is a pure encoding of its last prefilled window (`k[j] =
+//! token`, `v[j] = token + 0.5`), so export → import round-trips exactly
+//! and the engine's **elided** join prefills (served from the
+//! [`KvPrefixCache`](crate::serve::kvcache::KvPrefixCache)) must reproduce
+//! byte-identical streams to real prefills — which is precisely what the
+//! prefix-cache integration tests assert.
+//!
 //! Knobs:
 //! - [`step_delay`](MockBackend::step_delay): per-decode-step latency, so
 //!   mid-flight cancellation and deadline expiry have time to land;
+//! - [`prefill_delay`](MockBackend::prefill_delay): per-prefill latency, so
+//!   prefill avoidance shows up in throughput and `prefill_nanos`, and so
+//!   bursts deterministically queue up during a join boundary;
 //! - [`fail_after`](MockBackend::fail_after): one-shot decode failure, to
 //!   exercise the engine's batch-failure path (`FinishReason::Error`) and
 //!   its recovery on the next join prefill;
@@ -24,6 +35,7 @@
 //!   one `ModelRouter`.
 
 use crate::serve::engine::EngineBackend;
+use crate::serve::kvcache::KvRowState;
 use anyhow::Result;
 use std::time::Duration;
 
@@ -38,8 +50,12 @@ pub struct MockBackend {
     stride: i32,
     vocab: i32,
     step_delay: Duration,
+    prefill_delay: Duration,
     fail_after: Option<u64>,
     decode_calls: u64,
+    /// Last prefilled (or imported) `[batch * prompt_len]` windows — the
+    /// mock's entire "KV state", exported/imported per row.
+    windows: Vec<i32>,
 }
 
 impl MockBackend {
@@ -54,8 +70,10 @@ impl MockBackend {
             stride: 1,
             vocab: 1009,
             step_delay: Duration::ZERO,
+            prefill_delay: Duration::ZERO,
             fail_after: None,
             decode_calls: 0,
+            windows: Vec::new(),
         }
     }
 
@@ -77,6 +95,14 @@ impl MockBackend {
     /// deadline/cancellation tests.
     pub fn step_delay(mut self, d: Duration) -> Self {
         self.step_delay = d;
+        self
+    }
+
+    /// Sleep this long inside every *real* prefill — elided prefills skip
+    /// it, which is how the hermetic benchmarks make prefill avoidance
+    /// measurable.
+    pub fn prefill_delay(mut self, d: Duration) -> Self {
+        self.prefill_delay = d;
         self
     }
 
@@ -140,6 +166,10 @@ impl EngineBackend for MockBackend {
             tokens.len() == self.batch * self.prompt_len,
             "prefill batch is [batch, prompt_len]"
         );
+        if !self.prefill_delay.is_zero() {
+            std::thread::sleep(self.prefill_delay);
+        }
+        self.windows = tokens.to_vec();
         // Right-aligned windows: the last column is each row's most recent
         // real token (or pad for an empty row — its output is junk the
         // scheduler ignores, same as the artifact path).
@@ -160,6 +190,54 @@ impl EngineBackend for MockBackend {
             anyhow::bail!("injected mock decode failure at call {}", self.decode_calls);
         }
         Ok(feed.iter().map(|&t| self.next_token(t)).collect())
+    }
+
+    fn kv_row_elems(&self) -> usize {
+        self.prompt_len
+    }
+
+    fn export_kv_rows(&mut self, rows: &[usize]) -> Result<Vec<KvRowState>> {
+        anyhow::ensure!(!self.windows.is_empty(), "export_kv_rows before prefill");
+        rows.iter()
+            .map(|&r| {
+                anyhow::ensure!(r < self.batch, "export row {r} out of range");
+                let w = &self.windows[r * self.prompt_len..(r + 1) * self.prompt_len];
+                Ok(KvRowState {
+                    k: w.iter().map(|&t| t as f32).collect(),
+                    v: w.iter().map(|&t| t as f32 + 0.5).collect(),
+                })
+            })
+            .collect()
+    }
+
+    fn import_kv_rows(&mut self, rows: &[Option<&KvRowState>]) -> Result<()> {
+        anyhow::ensure!(
+            rows.len() == self.batch,
+            "import_kv_rows wants one entry per row ({} != {})",
+            rows.len(),
+            self.batch
+        );
+        // rebuild the mock KV state from the snapshots, exactly as if the
+        // snapshotted windows had just been prefilled (free rows → pad)
+        let mut windows = vec![crate::data::tokenizer::PAD; self.batch * self.prompt_len];
+        for (r, state) in rows.iter().enumerate() {
+            let Some(s) = state else { continue };
+            anyhow::ensure!(
+                s.k.len() == self.prompt_len && s.v.len() == self.prompt_len,
+                "KV row snapshot has {} elems, mock wants {}",
+                s.k.len(),
+                self.prompt_len
+            );
+            for (j, &kf) in s.k.iter().enumerate() {
+                anyhow::ensure!(
+                    s.v[j] == kf + 0.5,
+                    "mock KV snapshot violates the k/v encoding invariant"
+                );
+                windows[r * self.prompt_len + j] = kf as i32;
+            }
+        }
+        self.windows = windows;
+        Ok(())
     }
 }
 
@@ -201,5 +279,38 @@ mod tests {
         let mut b = MockBackend::new(2, 3, 8);
         assert!(b.prefill(&[1, 2, 3]).is_err());
         assert!(b.decode_step(&[1], 3).is_err());
+    }
+
+    #[test]
+    fn kv_rows_round_trip_deterministically() {
+        let mut b = MockBackend::new(2, 3, 8);
+        assert!(b.export_kv_rows(&[0]).is_err(), "no KV state before prefill");
+        b.prefill(&[0, 5, 6, 1, 2, 3]).unwrap();
+        let rows = b.export_kv_rows(&[0, 1]).unwrap();
+        assert_eq!(rows[0].k, vec![0.0, 5.0, 6.0]);
+        assert_eq!(rows[0].v, vec![0.5, 5.5, 6.5]);
+        assert_eq!(rows[1].k, vec![1.0, 2.0, 3.0]);
+        // import into swapped slots, then export again: pure function of rows
+        let imported = vec![Some(&rows[1]), None];
+        b.import_kv_rows(&imported).unwrap();
+        let back = b.export_kv_rows(&[0, 1]).unwrap();
+        assert_eq!(back[0], rows[1], "row snapshot survives the round trip");
+        assert_eq!(back[1].k, vec![0.0, 0.0, 0.0], "free row imports as padding");
+        // identical export from identical windows (determinism)
+        let again = b.export_kv_rows(&[0]).unwrap();
+        assert_eq!(again[0], rows[1]);
+    }
+
+    #[test]
+    fn import_validates_shape_and_encoding() {
+        let mut b = MockBackend::new(2, 3, 8);
+        let good = KvRowState { k: vec![1.0, 2.0, 3.0], v: vec![1.5, 2.5, 3.5] };
+        assert!(b.import_kv_rows(&[Some(&good)]).is_err(), "wrong row count");
+        let short = KvRowState { k: vec![1.0], v: vec![1.5] };
+        assert!(b.import_kv_rows(&[Some(&short), None]).is_err(), "wrong row length");
+        let corrupt = KvRowState { k: vec![1.0, 2.0, 3.0], v: vec![9.0, 2.5, 3.5] };
+        assert!(b.import_kv_rows(&[Some(&corrupt), None]).is_err(), "k/v invariant");
+        assert!(b.import_kv_rows(&[Some(&good), None]).is_ok());
+        assert_eq!(b.kv_row_elems(), 3);
     }
 }

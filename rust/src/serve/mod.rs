@@ -24,6 +24,7 @@
 //!                                    vacated rows refill from the queue at
 //!                                    the next join-prefill boundary
 //!                                         │ prefill / decode_step
+//!                                         │ export_kv_rows / import_kv_rows
 //!                                         ▼
 //!                                    EngineBackend (trait)
 //!                                    ├─ PjrtBackend: AOT artifacts on the
@@ -31,6 +32,12 @@
 //!                                    └─ MockBackend: deterministic scripted
 //!                                       streams — hermetic tests, no
 //!                                       artifact on disk
+//!                                         ▲
+//!                                         │ per-row KV snapshots
+//!                                    KvPrefixCache (per worker, host-side
+//!                                    bounded LRU keyed by window hash —
+//!                                    join prefills whose windows are all
+//!                                    cached are *elided* entirely)
 //! ```
 //!
 //! - [`ModelRouter`] owns several named [`ServicePool`]s (the Table 11
@@ -53,8 +60,25 @@
 //! - Admission is explicitly backpressured per model: a bounded queue
 //!   refuses submits with [`SubmitError::QueueFull`] rather than hiding
 //!   load in an unbounded channel.
+//! - **Prefill avoidance** ([`kvcache`]): each worker keeps a bounded LRU
+//!   of host-side per-row KV snapshots keyed by window-token hash, filled
+//!   through the [`EngineBackend`](engine::EngineBackend) KV-row seam
+//!   (`export_kv_rows` / `import_kv_rows`). A join prefill whose occupied
+//!   windows are all cached — repeated prefixes like system prompts and
+//!   retries, or deterministic re-generations after a rollover — is elided
+//!   entirely; stats surface it as `prefill_calls` / `prefills_elided` /
+//!   `kv_cache_{hits,misses,evictions}` plus `prefill_nanos` timing.
+//!   (Mid-flight rows whose window shifted need a per-row-position decode
+//!   artifact to reuse KV across the shift — the RoPE rotation is
+//!   position-dependent — so those still re-encode; see ROADMAP.)
+//! - **Chunked, priority-aware admission**: at most
+//!   `ServeConfig::join_chunk` Normal-priority rows join per prefill
+//!   boundary, while High-priority requests pop first and are never
+//!   chunk-limited — one burst cannot stall every in-flight decode or
+//!   saturate the slot table before urgent work lands.
 
 pub mod engine;
+pub mod kvcache;
 pub mod mock;
 pub mod queue;
 pub mod router;
@@ -62,6 +86,7 @@ pub mod service;
 pub mod slots;
 
 pub use engine::{EngineBackend, PjrtBackend};
+pub use kvcache::{KvPrefixCache, KvRowState};
 pub use mock::MockBackend;
 pub use queue::BoundedQueue;
 pub use router::{ModelRouter, RouteError};

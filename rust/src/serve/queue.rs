@@ -90,6 +90,13 @@ impl<T> BoundedQueue<T> {
         self.inner.lock().unwrap().pop()
     }
 
+    /// Pop from the high band only, without blocking. Chunked admission
+    /// uses this to let High-priority work bypass the per-boundary
+    /// `join_chunk` cap that paces Normal admissions.
+    pub fn try_pop_high(&self) -> Option<T> {
+        self.inner.lock().unwrap().high.pop_front()
+    }
+
     /// Block until an item is available. `None` means the queue was closed
     /// and fully drained — the worker should exit.
     pub fn pop_blocking(&self) -> Option<T> {
@@ -182,6 +189,19 @@ mod tests {
         q.push("h2", true).unwrap();
         let order: Vec<_> = (0..4).map(|_| q.try_pop().unwrap()).collect();
         assert_eq!(order, vec!["h1", "h2", "n1", "n2"]);
+    }
+
+    #[test]
+    fn try_pop_high_skips_the_normal_band() {
+        let q = BoundedQueue::new(8);
+        q.push("n1", false).unwrap();
+        q.push("h1", true).unwrap();
+        q.push("h2", true).unwrap();
+        assert_eq!(q.try_pop_high(), Some("h1"), "FIFO within the high band");
+        assert_eq!(q.try_pop_high(), Some("h2"));
+        assert_eq!(q.try_pop_high(), None, "normal entries are not visible");
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.try_pop(), Some("n1"));
     }
 
     #[test]

@@ -156,6 +156,12 @@ impl ModelRouter {
             failed: 0,
             decoded_tokens: 0,
             decode_tokens_per_sec: 0.0,
+            prefill_calls: 0,
+            prefills_elided: 0,
+            prefill_nanos: 0,
+            kv_cache_hits: 0,
+            kv_cache_misses: 0,
+            kv_cache_evictions: 0,
         };
         let mut busy_secs = 0.0;
         for (_, pool) in &self.pools {
@@ -171,6 +177,12 @@ impl ModelRouter {
             agg.rejected += s.rejected;
             agg.failed += s.failed;
             agg.decoded_tokens += s.decoded_tokens;
+            agg.prefill_calls += s.prefill_calls;
+            agg.prefills_elided += s.prefills_elided;
+            agg.prefill_nanos += s.prefill_nanos;
+            agg.kv_cache_hits += s.kv_cache_hits;
+            agg.kv_cache_misses += s.kv_cache_misses;
+            agg.kv_cache_evictions += s.kv_cache_evictions;
             if s.decode_tokens_per_sec > 0.0 {
                 busy_secs += s.decoded_tokens as f64 / s.decode_tokens_per_sec;
             }

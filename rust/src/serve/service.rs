@@ -228,6 +228,19 @@ pub struct ServiceStats {
     /// per-worker average, not wall-clock pool throughput (with N busy
     /// workers, wall-clock throughput is up to N× this).
     pub decode_tokens_per_sec: f64,
+    /// Real (non-elided) join prefills executed by the backend.
+    pub prefill_calls: u64,
+    /// Join boundaries served entirely from the KV prefix cache — no
+    /// forward pass ran (see `serve::kvcache`).
+    pub prefills_elided: u64,
+    /// Worker busy-time spent inside real prefill calls.
+    pub prefill_nanos: u64,
+    /// Per-row KV prefix-cache lookups that found the window.
+    pub kv_cache_hits: u64,
+    /// Per-row KV prefix-cache lookups that missed.
+    pub kv_cache_misses: u64,
+    /// Rows evicted from the KV prefix cache (LRU, bounded capacity).
+    pub kv_cache_evictions: u64,
 }
 
 #[derive(Default)]
@@ -240,6 +253,12 @@ pub(crate) struct Counters {
     pub(crate) failed: AtomicU64,
     pub(crate) decoded_tokens: AtomicU64,
     pub(crate) decode_nanos: AtomicU64,
+    pub(crate) prefill_calls: AtomicU64,
+    pub(crate) prefills_elided: AtomicU64,
+    pub(crate) prefill_nanos: AtomicU64,
+    pub(crate) kv_cache_hits: AtomicU64,
+    pub(crate) kv_cache_misses: AtomicU64,
+    pub(crate) kv_cache_evictions: AtomicU64,
     pub(crate) active: AtomicUsize,
     pub(crate) live_workers: AtomicUsize,
 }
@@ -314,12 +333,17 @@ impl ServicePool {
         for w in 0..cfg.workers {
             let factory = factory.clone();
             let shared = shared.clone();
+            let eopts = engine::EngineOptions {
+                kv_cache_entries: cfg.kv_cache_entries,
+                join_chunk: cfg.join_chunk,
+            };
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("cola-serve-{w}"))
                     .spawn(move || {
-                        let res = (*factory)(w)
-                            .and_then(|mut backend| engine::run_worker(backend.as_mut(), &shared));
+                        let res = (*factory)(w).and_then(|mut backend| {
+                            engine::run_worker(backend.as_mut(), &shared, &eopts)
+                        });
                         if let Err(e) = res {
                             metrics::log_info(&format!(
                                 "serve worker {w} exited with error: {e:#}"
@@ -430,6 +454,12 @@ impl InferenceService for ServicePool {
             } else {
                 0.0
             },
+            prefill_calls: c.prefill_calls.load(Ordering::Relaxed),
+            prefills_elided: c.prefills_elided.load(Ordering::Relaxed),
+            prefill_nanos: c.prefill_nanos.load(Ordering::Relaxed),
+            kv_cache_hits: c.kv_cache_hits.load(Ordering::Relaxed),
+            kv_cache_misses: c.kv_cache_misses.load(Ordering::Relaxed),
+            kv_cache_evictions: c.kv_cache_evictions.load(Ordering::Relaxed),
         }
     }
 

@@ -10,6 +10,7 @@
 //! and reports decoded tokens back via [`SlotTable::push_token`]. Stream
 //! events go out on each request's channel as they happen.
 
+use crate::serve::kvcache;
 use crate::serve::service::{Completion, FinishReason, QueuedRequest, StreamEvent, Timing};
 use std::sync::atomic::Ordering;
 use std::time::Instant;
@@ -20,6 +21,13 @@ struct ActiveRequest {
     generated: Vec<i32>,
     admitted_at: Instant,
     first_token_at: Option<Instant>,
+    /// The window changed since `window_hash` last ran (admission or a new
+    /// generated token) — the cached hash below is stale.
+    window_dirty: bool,
+    /// `(prompt_len, pad, hash)` of the last hashed window — both inputs
+    /// fold into the hash, so both key the cache — letting clean rows skip
+    /// rehashing at every join-prefill boundary.
+    window_hash: (usize, i32, u64),
 }
 
 /// Fixed-capacity row table; one per engine worker.
@@ -44,10 +52,24 @@ impl SlotTable {
         self.size() - self.active()
     }
 
-    /// Indices of occupied rows (snapshot, so callers can mutate while
-    /// iterating).
+    /// Indices of occupied rows, without allocating. Borrows the table
+    /// immutably — callers that vacate rows while walking the indices use
+    /// [`occupied_into`](Self::occupied_into) with a reusable scratch vec.
+    pub fn occupied_iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.slots.iter().enumerate().filter(|(_, s)| s.is_some()).map(|(i, _)| i)
+    }
+
+    /// Snapshot the occupied indices into a caller-owned scratch vec (the
+    /// engine reuses one across every decode step instead of allocating).
+    pub fn occupied_into(&self, out: &mut Vec<usize>) {
+        out.clear();
+        out.extend(self.occupied_iter());
+    }
+
+    /// Indices of occupied rows (allocating snapshot; hot paths use
+    /// [`occupied_iter`](Self::occupied_iter) / [`occupied_into`](Self::occupied_into)).
     pub fn occupied(&self) -> Vec<usize> {
-        (0..self.slots.len()).filter(|&i| self.slots[i].is_some()).collect()
+        self.occupied_iter().collect()
     }
 
     /// Place a request into the lowest free slot. `None` when the table is
@@ -59,8 +81,36 @@ impl SlotTable {
             generated: Vec::new(),
             admitted_at: now,
             first_token_at: None,
+            window_dirty: true,
+            window_hash: (0, 0, 0),
         });
         Some(i)
+    }
+
+    /// The three segments of row `i`'s right-aligned window: leading pad
+    /// count, the prompt tail, and the generated tail. Single source of
+    /// truth for [`window`](Self::window), [`write_window`](Self::write_window)
+    /// and [`window_hash`](Self::window_hash).
+    fn window_segments(&self, i: usize, prompt_len: usize) -> (usize, &[i32], &[i32]) {
+        let Some(ent) = self.slots[i].as_ref() else { return (prompt_len, &[], &[]) };
+        let take = (ent.req.prompt.len() + ent.generated.len()).min(prompt_len);
+        let from_gen = take.min(ent.generated.len());
+        let from_prompt = take - from_gen;
+        (
+            prompt_len - take,
+            &ent.req.prompt[ent.req.prompt.len() - from_prompt..],
+            &ent.generated[ent.generated.len() - from_gen..],
+        )
+    }
+
+    /// Write row `i`'s window into `out` (`out.len() == prompt_len`)
+    /// without allocating — the engine assembles the merged `[batch,
+    /// prompt_len]` prefill input row by row into one reused buffer.
+    pub fn write_window(&self, i: usize, pad: i32, out: &mut [i32]) {
+        let (n_pad, prompt, gen) = self.window_segments(i, out.len());
+        out[..n_pad].fill(pad);
+        out[n_pad..n_pad + prompt.len()].copy_from_slice(prompt);
+        out[n_pad + prompt.len()..].copy_from_slice(gen);
     }
 
     /// Right-aligned context window for row `i`: the most recent
@@ -71,27 +121,60 @@ impl SlotTable {
     /// dropped (sliding-window truncation, same as the engine's rollover).
     pub fn window(&self, i: usize, prompt_len: usize, pad: i32) -> Vec<i32> {
         let mut w = vec![pad; prompt_len];
-        if let Some(ent) = self.slots[i].as_ref() {
-            let take = (ent.req.prompt.len() + ent.generated.len()).min(prompt_len);
-            let from_gen = take.min(ent.generated.len());
-            let from_prompt = take - from_gen;
-            let dst = &mut w[prompt_len - take..];
-            dst[..from_prompt]
-                .copy_from_slice(&ent.req.prompt[ent.req.prompt.len() - from_prompt..]);
-            dst[from_prompt..]
-                .copy_from_slice(&ent.generated[ent.generated.len() - from_gen..]);
-        }
+        self.write_window(i, pad, &mut w);
         w
+    }
+
+    /// Hash of row `i`'s window under [`kvcache::hash_tokens`] — the KV
+    /// prefix-cache key. Cached per row and recomputed only when the window
+    /// changed (dirty tracking), so clean rows cost one comparison per
+    /// join-prefill boundary. Free rows hash their all-pad window.
+    pub fn window_hash(&mut self, i: usize, prompt_len: usize, pad: i32) -> u64 {
+        if let Some(ent) = self.slots[i].as_ref() {
+            if !ent.window_dirty && ent.window_hash.0 == prompt_len && ent.window_hash.1 == pad {
+                return ent.window_hash.2;
+            }
+        }
+        let (n_pad, prompt, gen) = self.window_segments(i, prompt_len);
+        let mut h = kvcache::hash_tokens(&[]);
+        for _ in 0..n_pad {
+            h = kvcache::fold_token(h, pad);
+        }
+        for &t in prompt.iter().chain(gen) {
+            h = kvcache::fold_token(h, t);
+        }
+        if let Some(ent) = self.slots[i].as_mut() {
+            ent.window_dirty = false;
+            ent.window_hash = (prompt_len, pad, h);
+        }
+        h
+    }
+
+    /// Whether row `i`'s window changed since its last
+    /// [`window_hash`](Self::window_hash) (always `false` for free rows,
+    /// whose pad window never changes).
+    pub fn window_dirty(&self, i: usize) -> bool {
+        self.slots[i].as_ref().is_some_and(|e| e.window_dirty)
     }
 
     /// Per-row input tokens for the next decode step: each active row feeds
     /// its last generated token; free rows feed `pad` (their output is
     /// ignored).
     pub fn feed_tokens(&self, pad: i32) -> Vec<i32> {
-        self.slots
-            .iter()
-            .map(|s| s.as_ref().and_then(|e| e.generated.last().copied()).unwrap_or(pad))
-            .collect()
+        let mut v = Vec::with_capacity(self.slots.len());
+        self.feed_tokens_into(pad, &mut v);
+        v
+    }
+
+    /// [`feed_tokens`](Self::feed_tokens) into a caller-owned scratch vec —
+    /// the engine's decode loop reuses one instead of allocating per step.
+    pub fn feed_tokens_into(&self, pad: i32, out: &mut Vec<i32>) {
+        out.clear();
+        out.extend(
+            self.slots
+                .iter()
+                .map(|s| s.as_ref().and_then(|e| e.generated.last().copied()).unwrap_or(pad)),
+        );
     }
 
     /// Record one decoded token for row `i`: stream it, then finish the row
@@ -100,6 +183,7 @@ impl SlotTable {
     pub fn push_token(&mut self, i: usize, tok: i32, now: Instant) -> Option<FinishReason> {
         let ent = self.slots[i].as_mut()?;
         ent.generated.push(tok);
+        ent.window_dirty = true;
         if ent.first_token_at.is_none() {
             ent.first_token_at = Some(now);
         }
@@ -317,6 +401,67 @@ mod tests {
         let tbl2 = SlotTable::new(2);
         assert_eq!(tbl2.window(1, 3, 0), vec![0, 0, 0]);
         assert_eq!(tbl2.feed_tokens(0), vec![0, 0]);
+    }
+
+    #[test]
+    fn write_window_matches_window_and_reuses_buffer() {
+        let now = Instant::now();
+        let mut tbl = SlotTable::new(2);
+        let (req, _rx, _) = mk_req(vec![1, 2, 3], 100, vec![], None);
+        tbl.admit(req, now).unwrap();
+        tbl.push_token(0, 4, now);
+        let mut buf = vec![-1; 5];
+        tbl.write_window(0, 0, &mut buf);
+        assert_eq!(buf, tbl.window(0, 5, 0));
+        assert_eq!(buf, vec![0, 1, 2, 3, 4]);
+        // free row: pure padding, buffer fully overwritten
+        tbl.write_window(1, 9, &mut buf);
+        assert_eq!(buf, vec![9; 5]);
+    }
+
+    #[test]
+    fn window_hash_matches_kvcache_and_tracks_dirtiness() {
+        use crate::serve::kvcache::hash_tokens;
+        let now = Instant::now();
+        let mut tbl = SlotTable::new(2);
+        let (req, _rx, _) = mk_req(vec![1, 2, 3], 100, vec![], None);
+        tbl.admit(req, now).unwrap();
+        assert!(tbl.window_dirty(0), "fresh admission is dirty");
+        let h = tbl.window_hash(0, 5, 0);
+        assert_eq!(h, hash_tokens(&tbl.window(0, 5, 0)));
+        assert!(!tbl.window_dirty(0), "hashing cleans the row");
+        assert_eq!(tbl.window_hash(0, 5, 0), h, "cached hash is stable");
+        // pad folds into the hash, so it must key the cache too (the row is
+        // clean here — a stale pad-0 hash must not be served for pad 9)
+        assert_eq!(tbl.window_hash(0, 5, 9), hash_tokens(&[9, 9, 1, 2, 3]));
+        assert_eq!(tbl.window_hash(0, 5, 0), h, "switching back re-keys correctly");
+        tbl.push_token(0, 4, now);
+        assert!(tbl.window_dirty(0), "a generated token dirties the window");
+        let h2 = tbl.window_hash(0, 5, 0);
+        assert_ne!(h2, h);
+        assert_eq!(h2, hash_tokens(&tbl.window(0, 5, 0)));
+        // a different prompt_len invalidates the cached hash too
+        assert_eq!(tbl.window_hash(0, 3, 0), hash_tokens(&tbl.window(0, 3, 0)));
+        // free rows hash their all-pad window and are never dirty
+        assert!(!tbl.window_dirty(1));
+        assert_eq!(tbl.window_hash(1, 3, 7), hash_tokens(&[7, 7, 7]));
+    }
+
+    #[test]
+    fn occupied_iter_agrees_with_snapshot() {
+        let now = Instant::now();
+        let mut tbl = SlotTable::new(3);
+        let (r0, _a, _) = mk_req(vec![1], 5, vec![], None);
+        let (r2, _b, _) = mk_req(vec![2], 5, vec![], None);
+        tbl.admit(r0, now).unwrap();
+        tbl.admit(r2, now).unwrap();
+        tbl.push_token(0, 9, now);
+        tbl.push_token(0, 9, now);
+        let mut scratch = vec![99; 8];
+        tbl.occupied_into(&mut scratch);
+        assert_eq!(scratch, tbl.occupied());
+        assert_eq!(tbl.occupied_iter().collect::<Vec<_>>(), scratch);
+        assert_eq!(scratch, vec![0, 1]);
     }
 
     #[test]

@@ -1,0 +1,239 @@
+//! Hermetic prefill-avoidance integration: KV prefix cache + chunked
+//! admission over `MockBackend`, zero artifacts.
+//!
+//! The mock's KV-row seam is deterministic (a row's snapshot is a pure
+//! encoding of its window, see `serve::mock`), so these tests can assert
+//! the strongest property an inference cache has to offer: **streamed
+//! outputs are byte-identical with the cache on and off**, while the
+//! `prefill_calls` / `prefills_elided` / `kv_cache_*` counters prove the
+//! forward passes were actually avoided. Chunked admission is pinned the
+//! same way — deterministic prefill delays turn admission races into
+//! observable boundary counts.
+
+use cola::config::ServeConfig;
+use cola::serve::{
+    FinishReason, InferenceService, MockBackend, Priority, ServicePool, SubmitOptions,
+};
+use std::time::Duration;
+
+fn cfg(workers: usize, queue_depth: usize) -> ServeConfig {
+    ServeConfig {
+        artifact: "mock".into(),
+        max_new_tokens: 8,
+        workers,
+        queue_depth,
+        ..ServeConfig::default()
+    }
+}
+
+fn opts(max_new: usize) -> SubmitOptions {
+    SubmitOptions { max_new_tokens: Some(max_new), ..Default::default() }
+}
+
+/// Counters are bumped just *after* the worker streams a request's terminal
+/// `Done`, so asserts that follow a `wait()` poll briefly instead of racing
+/// that window.
+fn eventually(what: &str, mut cond: impl FnMut() -> bool) {
+    for _ in 0..1000 {
+        if cond() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    panic!("not reached within 1s: {what}");
+}
+
+#[test]
+fn repeated_prompts_elide_join_prefills_and_rollovers() {
+    // max_len 10 with prompt_len 6 → 4 decode positions per prefill, so a
+    // 12-token generation crosses 3 join boundaries (1 admission + 2
+    // rollovers). The stream is deterministic, so a retry of the same
+    // prompt reproduces the same windows — every boundary of requests
+    // 2..N must be served from the cache.
+    let mock = MockBackend::new(2, 6, 10)
+        .vocab(50_000)
+        .prefill_delay(Duration::from_millis(2));
+    let pool = ServicePool::start_with(cfg(1, 8), mock.clone().factory()).unwrap();
+    let prompt: Vec<i32> = vec![11, 12, 13, 14, 15, 16];
+    let n = 4;
+    for _ in 0..n {
+        let c = pool.generate(prompt.clone(), opts(12)).unwrap();
+        assert_eq!(c.finish_reason, FinishReason::Length);
+        assert_eq!(c.tokens, mock.expected_stream(16, 12), "cached KV must not alter output");
+    }
+    eventually("all completions tallied", || pool.stats().completed == n as u64);
+    let s = pool.stats();
+    let boundaries = s.prefill_calls + s.prefills_elided;
+    assert_eq!(s.prefill_calls, 3, "only the first request pays real prefills");
+    assert_eq!(s.prefills_elided, 3 * (n as u64 - 1), "every retry boundary is elided");
+    assert!(
+        2 * s.prefills_elided >= boundaries,
+        "ISSUE 5 acceptance: >=50% of join prefills avoided ({}/{boundaries})",
+        s.prefills_elided
+    );
+    assert!(s.kv_cache_hits >= s.prefills_elided, "elisions are served by row hits");
+    assert_eq!(s.kv_cache_misses, 3, "one cold miss per distinct window");
+    assert!(
+        s.prefill_nanos >= s.prefill_calls * 1_500_000,
+        "real prefills are timed (got {}ns over {} calls)",
+        s.prefill_nanos,
+        s.prefill_calls
+    );
+    pool.shutdown();
+}
+
+#[test]
+fn streams_are_byte_identical_with_cache_on_and_off() {
+    // Mixed budgets + concurrent submissions: joins happen with in-flight
+    // rows (whose shifted windows can never be cache-served), retries of
+    // finished prompts hit, and the outputs must be exactly the streams the
+    // cache-disabled pool produces.
+    let mock = MockBackend::new(2, 4, 12).vocab(10_000);
+    let workload = |kv_cache_entries: usize| -> (Vec<Vec<i32>>, cola::serve::ServiceStats) {
+        let mut c = cfg(1, 16);
+        c.kv_cache_entries = kv_cache_entries;
+        let pool = ServicePool::start_with(c, mock.clone().factory()).unwrap();
+        let mut streams = Vec::new();
+        for i in 0..8u32 {
+            let last = 100 + 10 * (i % 3) as i32; // repeated prefixes
+            let max_new = if i % 2 == 0 { 3 } else { 9 };
+            streams.push(pool.submit(vec![9, last], opts(max_new)).unwrap());
+        }
+        let outs: Vec<Vec<i32>> = streams.into_iter().map(|s| s.wait().unwrap().tokens).collect();
+        eventually("completions tallied", || pool.stats().completed == 8);
+        let stats = pool.stats();
+        pool.shutdown();
+        (outs, stats)
+    };
+    let (on, s_on) = workload(64);
+    let (off, s_off) = workload(0);
+    assert_eq!(on, off, "prefix cache changed streamed outputs");
+    for (i, (last, max_new)) in
+        (0..8u32).map(|i| (100 + 10 * (i % 3) as i32, if i % 2 == 0 { 3 } else { 9 })).enumerate()
+    {
+        assert_eq!(on[i], mock.expected_stream(last, max_new), "request {i} exact");
+    }
+    assert_eq!(s_off.prefills_elided, 0, "disabled cache must never elide");
+    assert_eq!(s_off.kv_cache_hits + s_off.kv_cache_misses, 0, "disabled cache never probes");
+    assert!(
+        s_on.kv_cache_hits + s_on.kv_cache_misses > 0,
+        "enabled cache probes at every boundary"
+    );
+}
+
+#[test]
+fn tiny_cache_evicts_and_stays_correct() {
+    // Capacity 1 with two alternating prompts: every boundary misses, every
+    // insert evicts — the degenerate cache still never corrupts a stream.
+    let mock = MockBackend::new(1, 4, 16).vocab(5_000);
+    let mut c = cfg(1, 4);
+    c.kv_cache_entries = 1;
+    let pool = ServicePool::start_with(c, mock.clone().factory()).unwrap();
+    for i in 0..6 {
+        let p = if i % 2 == 0 { 200 } else { 300 };
+        let done = pool.generate(vec![p], opts(4)).unwrap();
+        assert_eq!(done.tokens, mock.expected_stream(p, 4));
+    }
+    eventually("completions tallied", || pool.stats().completed == 6);
+    let s = pool.stats();
+    assert!(s.kv_cache_evictions >= 4, "alternating prompts thrash a 1-row cache");
+    assert_eq!(s.prefills_elided, 0, "nothing survives long enough to be reused");
+    assert_eq!(s.prefill_calls, 6);
+    pool.shutdown();
+
+    // same traffic, same tiny cache, but a single repeated prompt: the one
+    // resident row is exactly what every retry needs
+    let pool = {
+        let mut c = cfg(1, 4);
+        c.kv_cache_entries = 1;
+        ServicePool::start_with(c, mock.clone().factory()).unwrap()
+    };
+    for _ in 0..4 {
+        let done = pool.generate(vec![400], opts(4)).unwrap();
+        assert_eq!(done.tokens, mock.expected_stream(400, 4));
+    }
+    eventually("completions tallied", || pool.stats().completed == 4);
+    let s = pool.stats();
+    assert_eq!(s.prefill_calls, 1);
+    assert_eq!(s.prefills_elided, 3);
+    pool.shutdown();
+}
+
+#[test]
+fn join_chunk_paces_normal_admissions_per_boundary() {
+    // A slow prefill (30ms) acts as a deterministic barrier: all four
+    // requests are queued while the first boundary runs. join_chunk=1 then
+    // forces (at least) one boundary per remaining admission, where
+    // unchunked admission merges them into a single follow-up join.
+    let run = |join_chunk: usize| -> u64 {
+        let mock = MockBackend::new(4, 4, 64)
+            .vocab(9_000)
+            .prefill_delay(Duration::from_millis(30));
+        let mut c = cfg(1, 16);
+        c.join_chunk = join_chunk;
+        c.kv_cache_entries = 0; // count real prefills only
+        let pool = ServicePool::start_with(c, mock.clone().factory()).unwrap();
+        let streams: Vec<_> =
+            (0..4).map(|i| pool.submit(vec![50 + 100 * i], opts(4)).unwrap()).collect();
+        for (i, s) in streams.into_iter().enumerate() {
+            let done = s.wait().unwrap();
+            assert_eq!(
+                done.tokens,
+                mock.expected_stream(50 + 100 * i as i32, 4),
+                "chunked admission must not alter streams"
+            );
+        }
+        eventually("completions tallied", || pool.stats().completed == 4);
+        let calls = pool.stats().prefill_calls;
+        pool.shutdown();
+        calls
+    };
+    let chunked = run(1);
+    let unchunked = run(0);
+    assert!(chunked >= 3, "join_chunk=1 spreads the burst over boundaries (got {chunked})");
+    assert!(unchunked <= 2, "join_chunk=0 merges the queued burst (got {unchunked})");
+}
+
+#[test]
+fn high_priority_overtakes_a_low_burst_under_chunked_admission() {
+    // Four Low requests and one High are all queued during the first slow
+    // prefill. At the next boundary the engine pops the High band first and
+    // never chunk-limits it, so the High request joins immediately and
+    // finishes its 2 tokens while every 60-token Low is still decoding.
+    let mock = MockBackend::new(4, 4, 256)
+        .vocab(30_000)
+        .prefill_delay(Duration::from_millis(40))
+        .step_delay(Duration::from_millis(2));
+    let mut c = cfg(1, 16);
+    c.join_chunk = 1;
+    let pool = ServicePool::start_with(c, mock.clone().factory()).unwrap();
+
+    let lows: Vec<_> =
+        (0..4).map(|i| pool.submit(vec![1000 + i], opts(60)).unwrap()).collect();
+    let high = pool
+        .submit(
+            vec![7777],
+            SubmitOptions { priority: Priority::High, ..opts(2) },
+        )
+        .unwrap();
+
+    let done = high.wait().unwrap();
+    assert_eq!(done.finish_reason, FinishReason::Length);
+    assert_eq!(done.tokens, mock.expected_stream(7777, 2));
+    // Head-of-line bound: when the High request resolves, no Low has had
+    // time to produce its 60 tokens — at most the High itself is tallied.
+    assert!(
+        pool.stats().completed <= 1,
+        "High finished behind a Low ({} completions already)",
+        pool.stats().completed
+    );
+
+    for s in &lows {
+        s.cancel();
+    }
+    eventually("low burst cancelled", || {
+        let st = pool.stats();
+        st.cancelled + st.completed >= 5
+    });
+    pool.shutdown();
+}

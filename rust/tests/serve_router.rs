@@ -23,7 +23,7 @@ fn cfg(workers: usize, queue_depth: usize) -> ServeConfig {
         max_new_tokens: 8,
         workers,
         queue_depth,
-        default_deadline_ms: 0,
+        ..ServeConfig::default()
     }
 }
 

@@ -53,6 +53,19 @@ fn check_invariants(tbl: &SlotTable) {
     assert!(occ.windows(2).all(|w| w[0] < w[1]), "occupied indices strictly increasing");
     assert!(occ.iter().all(|&i| i < tbl.size()), "occupied indices in range");
     assert_eq!(tbl.feed_tokens(-7).len(), tbl.size(), "feed covers every row");
+    // the non-allocating hot-path variants agree with the snapshots
+    assert_eq!(tbl.occupied_iter().collect::<Vec<_>>(), occ, "occupied_iter == occupied");
+    let mut scratch = vec![77usize; 1];
+    tbl.occupied_into(&mut scratch);
+    assert_eq!(scratch, occ, "occupied_into == occupied");
+    let mut feed = Vec::new();
+    tbl.feed_tokens_into(-7, &mut feed);
+    assert_eq!(feed, tbl.feed_tokens(-7), "feed_tokens_into == feed_tokens");
+    for &i in &occ {
+        let mut w = vec![0i32; 5];
+        tbl.write_window(i, -3, &mut w);
+        assert_eq!(w, tbl.window(i, 5, -3), "write_window == window");
+    }
 }
 
 #[test]

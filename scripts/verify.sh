@@ -4,10 +4,11 @@
 # hermeticity pass that proves the test suite needs no built artifacts
 # (the serving tier tests through MockBackend).
 #
-#   scripts/verify.sh                 # build + test + no-artifact test + clippy + fmt
+#   scripts/verify.sh                 # build + test + no-artifact test + clippy + fmt + serve smoke
 #   SKIP_FMT=1 scripts/verify.sh      # skip the fmt check
 #   SKIP_CLIPPY=1 scripts/verify.sh   # skip the clippy gate
 #   SKIP_HERMETIC=1 scripts/verify.sh # skip the no-artifact pass
+#   SKIP_SMOKE=1 scripts/verify.sh    # skip the mock-backend serve smoke
 #
 # Runs from the rust/ crate root regardless of invocation directory.
 set -euo pipefail
@@ -29,6 +30,18 @@ if [ "${SKIP_HERMETIC:-0}" != "1" ]; then
     EMPTY_ARTIFACTS="$(mktemp -d)"
     trap 'rm -rf "$EMPTY_ARTIFACTS"' EXIT
     COLA_ARTIFACTS="$EMPTY_ARTIFACTS" cargo test -q
+fi
+
+if [ "${SKIP_SMOKE:-0}" != "1" ]; then
+    # Hermetic serving-throughput smoke: MockBackend pools behind the real
+    # router, repeated-prefix workload, prefix cache on vs off. The binary
+    # itself asserts byte-identical streams and the >=50% prefill-elision
+    # floor (ISSUE 5), and BENCH_serve.json records tokens/s + prefill
+    # counters + cache hit rate so the serving perf trajectory is tracked
+    # across PRs.
+    echo "== serve smoke: cargo run --release -- serve --mock =="
+    cargo run --release -- serve --mock --requests 48 --distinct 4 \
+        --bench-json ../BENCH_serve.json
 fi
 
 if [ "${SKIP_CLIPPY:-0}" != "1" ]; then
