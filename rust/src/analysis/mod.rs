@@ -1,0 +1,99 @@
+//! `cola lint`: a dependency-free static-analysis pass over `rust/src/`
+//! that turns the repo's concurrency conventions into build failures.
+//!
+//! Rules (details and rationale in `docs/concurrency.md`):
+//!
+//! | rule              | scope                  | requirement |
+//! |-------------------|------------------------|-------------|
+//! | `no-panic`        | serve runtime files    | no `.unwrap()`/`.expect(`/panicking macros |
+//! | `safety-comment`  | all of `src/`          | `unsafe` carries a nearby `// SAFETY:` / `# Safety` |
+//! | `relaxed-ordering`| all of `src/`          | `Ordering::Relaxed` carries a `relaxed:` justification |
+//! | `lock-hierarchy`  | all of `src/`          | locks acquired in strictly increasing declared rank |
+//! | `unknown-lock`    | all of `src/`          | every lock receiver is in the declared table |
+//! | `sync-shim`       | `serve/` (not `sync.rs`)| no direct `std::sync`/`std::thread` |
+//!
+//! `#[cfg(test)]` regions are exempt from every rule except
+//! `safety-comment`, and any rule can be waived in place with
+//! `// lint: allow(<rule>): <reason>`.
+//!
+//! The pass is a token scanner ([`scan`]), not a compiler plugin: zero
+//! dependencies, runs in milliseconds, and is self-tested both by fixture
+//! strings ([`rules`]) and by linting this very crate
+//! (`lint_runs_clean_on_this_repo` below) — so "the repo lints clean" is
+//! itself a tier-1 test, not a CI hope.
+
+pub mod rules;
+pub mod scan;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// One lint finding, rendered as `file:line: [rule] message`.
+#[derive(Debug)]
+pub struct Diagnostic {
+    /// Path relative to the lint root, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Rule identifier (also the waiver key).
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Lint every `.rs` file under `root` (recursively, deterministic order).
+/// Returns the findings; an empty vec means the tree is clean.
+pub fn lint_dir(root: &Path) -> std::io::Result<Vec<Diagnostic>> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut diags = Vec::new();
+    for f in &files {
+        let rel: String = f
+            .strip_prefix(root)
+            .unwrap_or(f)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let src = std::fs::read_to_string(f)?;
+        diags.extend(rules::lint_source(&rel, &src));
+    }
+    Ok(diags)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The acceptance criterion "cola lint runs clean on the repo" as an
+    /// enforced test rather than a claim: lint this crate's own `src/`.
+    #[test]
+    fn lint_runs_clean_on_this_repo() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+        let diags = lint_dir(&root).expect("walk src/");
+        assert!(
+            diags.is_empty(),
+            "cola lint found {} issue(s):\n{}",
+            diags.len(),
+            diags.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+}

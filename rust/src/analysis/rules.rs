@@ -1,0 +1,470 @@
+//! The `cola lint` rule set. Each rule matches on the scanned code/comment
+//! channels of [`super::scan`] — see `docs/concurrency.md` for the rule
+//! catalogue, the waiver syntax, and the declared lock hierarchy.
+//!
+//! # Waivers
+//!
+//! `// lint: allow(<rule>): <reason>` suppresses `<rule>` on its own line
+//! and on the two lines below it. The reason is mandatory by convention
+//! (the lint does not parse it, reviewers do).
+//!
+//! # Honest limitations
+//!
+//! This is a token-level lint, not a type checker. The lock-hierarchy rule
+//! tracks guards *lexically* (a `let`-bound guard is considered held until
+//! its block's brace depth unwinds, or an explicit `drop(<name>)`); it
+//! cannot see acquisitions hidden behind a function call boundary. The
+//! runtime rank check in `serve::sync` (debug builds) covers exactly that
+//! blind spot, so the two enforce the hierarchy together.
+
+use super::Diagnostic;
+use super::scan::{find_word, is_word, Line, scan};
+
+/// Files (relative to the lint root) whose **runtime** code must be
+/// panic-free: they run on serve worker threads, where a panic strands the
+/// requests parked on that worker. Deliberately excludes `serve/mock.rs`
+/// (a test backend whose builders assert on misuse) and `serve/model.rs`
+/// (reference models driven only by tests).
+const NO_PANIC_FILES: &[&str] = &[
+    "serve/engine.rs",
+    "serve/kvcache.rs",
+    "serve/mod.rs",
+    "serve/queue.rs",
+    "serve/router.rs",
+    "serve/service.rs",
+    "serve/slots.rs",
+    "serve/sync.rs",
+];
+
+/// Method-call panic patterns (matched as substrings of blanked code).
+const PANIC_METHODS: &[&str] = &[".unwrap()", ".expect("];
+
+/// Panicking macros (matched word-boundary + `!`).
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+/// The declared lock hierarchy: `(receiver ident, rank, class name)`.
+/// Locks may only be acquired in strictly increasing rank order within a
+/// thread. Receivers are classified by the field/binding name the guard is
+/// taken from — add new locks here (and to `serve::sync::LockRank` when
+/// they live in the serve tier).
+const LOCK_CLASSES: &[(&str, u8, &str)] = &[
+    ("workers", 0, "pool-workers"),
+    ("inner", 1, "queue-inner"),
+    ("shard", 2, "kv-shard"),
+    ("compiled", 3, "runtime-compile-cache"),
+];
+
+/// How far above a `Ordering::Relaxed` use its `relaxed:` justification may
+/// sit. Wide enough that a type-level doc comment (justifying the policy
+/// once for all methods of a wrapper like `serve::sync::Counter`) counts.
+const RELAXED_WINDOW: usize = 24;
+
+/// How far above an `unsafe` its `SAFETY:` / `# Safety` comment may sit.
+const SAFETY_WINDOW: usize = 12;
+
+/// Lint one file. `rel` is the path relative to the lint root, with `/`
+/// separators (it selects which per-file rules apply).
+pub fn lint_source(rel: &str, source: &str) -> Vec<Diagnostic> {
+    let lines = scan(source);
+    let mut diags = Vec::new();
+    no_panic(rel, &lines, &mut diags);
+    safety_comment(rel, &lines, &mut diags);
+    relaxed_ordering(rel, &lines, &mut diags);
+    lock_hierarchy(rel, &lines, &mut diags);
+    sync_shim(rel, &lines, &mut diags);
+    diags
+}
+
+/// Is rule `rule` waived at line `i` (same line or the two above)?
+fn waived(lines: &[Line], i: usize, rule: &str) -> bool {
+    let pat = format!("lint: allow({rule})");
+    (i.saturating_sub(2)..=i).any(|j| lines[j].comment.contains(&pat))
+}
+
+fn diag(out: &mut Vec<Diagnostic>, rel: &str, i: usize, rule: &'static str, msg: String) {
+    out.push(Diagnostic { file: rel.to_string(), line: i + 1, rule, msg });
+}
+
+/// Does `code` invoke macro `name` (word-boundary match followed by `!`)?
+fn macro_called(code: &str, name: &str) -> bool {
+    let chars: Vec<char> = code.chars().collect();
+    let Some(p) = find_word(code, name) else { return false };
+    chars.get(p + name.chars().count()) == Some(&'!')
+}
+
+// ---------------------------------------------------------------------------
+// Rule: no-panic
+// ---------------------------------------------------------------------------
+
+fn no_panic(rel: &str, lines: &[Line], out: &mut Vec<Diagnostic>) {
+    if !NO_PANIC_FILES.contains(&rel) {
+        return;
+    }
+    for (i, line) in lines.iter().enumerate() {
+        if line.in_test || waived(lines, i, "no-panic") {
+            continue;
+        }
+        for &m in PANIC_METHODS {
+            if line.code.contains(m) {
+                diag(
+                    out,
+                    rel,
+                    i,
+                    "no-panic",
+                    format!(
+                        "`{m}` in a serve runtime path — propagate with `?`/`.context(..)` \
+                         or waive with `// lint: allow(no-panic): <reason>`"
+                    ),
+                );
+            }
+        }
+        for &m in PANIC_MACROS {
+            if macro_called(&line.code, m) {
+                diag(
+                    out,
+                    rel,
+                    i,
+                    "no-panic",
+                    format!(
+                        "`{m}!` in a serve runtime path — a panicking worker strands its \
+                         requests; return an error instead"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: safety-comment
+// ---------------------------------------------------------------------------
+
+fn safety_comment(rel: &str, lines: &[Line], out: &mut Vec<Diagnostic>) {
+    for (i, line) in lines.iter().enumerate() {
+        if find_word(&line.code, "unsafe").is_none() || waived(lines, i, "safety-comment") {
+            continue;
+        }
+        let justified = (i.saturating_sub(SAFETY_WINDOW)..=i).any(|j| {
+            lines[j].comment.contains("SAFETY:") || lines[j].comment.contains("# Safety")
+        });
+        if !justified {
+            diag(
+                out,
+                rel,
+                i,
+                "safety-comment",
+                format!(
+                    "`unsafe` without a `// SAFETY:` comment (or `# Safety` doc section) \
+                     within the preceding {SAFETY_WINDOW} lines"
+                ),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: relaxed-ordering
+// ---------------------------------------------------------------------------
+
+fn relaxed_ordering(rel: &str, lines: &[Line], out: &mut Vec<Diagnostic>) {
+    for (i, line) in lines.iter().enumerate() {
+        if line.in_test
+            || !line.code.contains("Ordering::Relaxed")
+            || waived(lines, i, "relaxed-ordering")
+        {
+            continue;
+        }
+        let justified = (i.saturating_sub(RELAXED_WINDOW)..=i)
+            .any(|j| lines[j].comment.contains("relaxed:"));
+        if !justified {
+            diag(
+                out,
+                rel,
+                i,
+                "relaxed-ordering",
+                format!(
+                    "`Ordering::Relaxed` without a `relaxed:` justification comment within \
+                     the preceding {RELAXED_WINDOW} lines — say why weak ordering is sound \
+                     here, or use a `serve::sync` typed atomic"
+                ),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: lock-hierarchy / unknown-lock
+// ---------------------------------------------------------------------------
+
+/// Positions (char index of the `.`) of lock acquisitions in `code`.
+fn lock_calls(code: &str) -> Vec<usize> {
+    let mut sites = Vec::new();
+    for pat in [".lock_or_poisoned(", ".lock("] {
+        let mut from = 0;
+        while let Some(p) = code[from..].find(pat) {
+            sites.push(from + p);
+            from += p + pat.len();
+        }
+    }
+    sites.sort_unstable();
+    sites
+}
+
+/// The receiver ident a lock call is made on: the last `.`-separated path
+/// segment before the call (`self.inner.lock_or_poisoned()` → `inner`).
+fn receiver_ident(code: &str, dot: usize) -> String {
+    let chars: Vec<char> = code.chars().collect();
+    let mut start = dot;
+    while start > 0 && (is_word(chars[start - 1]) || chars[start - 1] == '.') {
+        start -= 1;
+    }
+    let path: String = chars[start..dot].iter().collect();
+    path.rsplit('.').find(|s| !s.is_empty()).unwrap_or("").to_string()
+}
+
+/// `let [mut] <name> = …` binding name of a line, if any.
+fn let_binding(code: &str) -> Option<String> {
+    let t = code.trim_start();
+    let rest = t.strip_prefix("let ")?.trim_start();
+    let rest = rest.strip_prefix("mut ").unwrap_or(rest).trim_start();
+    let name: String = rest.chars().take_while(|&c| is_word(c)).collect();
+    (!name.is_empty()).then_some(name)
+}
+
+/// Idents passed to `drop(..)` on this line (releases a named guard early).
+fn dropped_idents(code: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(p) = code[from..].find("drop(") {
+        let abs = from + p;
+        // word boundary: don't match `mem::drop(` as-is? it is still a drop.
+        let name: String = code[abs + "drop(".len()..]
+            .chars()
+            .take_while(|&c| is_word(c))
+            .collect();
+        if !name.is_empty() {
+            out.push(name);
+        }
+        from = abs + "drop(".len();
+    }
+    out
+}
+
+/// A lexically-held lock guard.
+struct Held {
+    rank: u8,
+    class: &'static str,
+    /// Brace depth of the line that took the guard; released when a later
+    /// line starts below it.
+    depth: usize,
+    binding: Option<String>,
+}
+
+fn lock_hierarchy(rel: &str, lines: &[Line], out: &mut Vec<Diagnostic>) {
+    if rel == "serve/sync.rs" {
+        // The shim *implements* ranked locking (and checks it at runtime in
+        // debug builds); its internal std lock is below the hierarchy.
+        return;
+    }
+    let mut held: Vec<Held> = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        held.retain(|g| line.depth >= g.depth);
+        for name in dropped_idents(&line.code) {
+            held.retain(|g| g.binding.as_deref() != Some(name.as_str()));
+        }
+        for dot in lock_calls(&line.code) {
+            let recv = receiver_ident(&line.code, dot);
+            let Some(&(_, rank, class)) =
+                LOCK_CLASSES.iter().find(|&&(r, _, _)| r == recv)
+            else {
+                if !waived(lines, i, "unknown-lock") {
+                    diag(
+                        out,
+                        rel,
+                        i,
+                        "unknown-lock",
+                        format!(
+                            "lock acquired through receiver `{recv}` which is not in the \
+                             declared lock table — add it to `analysis::rules::LOCK_CLASSES` \
+                             with a rank (see docs/concurrency.md)"
+                        ),
+                    );
+                }
+                continue;
+            };
+            if !waived(lines, i, "lock-hierarchy") {
+                if let Some(g) = held.iter().find(|g| g.rank >= rank) {
+                    diag(
+                        out,
+                        rel,
+                        i,
+                        "lock-hierarchy",
+                        format!(
+                            "acquiring `{class}` (rank {rank}) while holding `{held}` (rank \
+                             {hrank}) — locks must be taken in strictly increasing rank order",
+                            held = g.class,
+                            hrank = g.rank,
+                        ),
+                    );
+                }
+            }
+            if let_binding(&line.code).is_some() {
+                held.push(Held {
+                    rank,
+                    class,
+                    depth: line.depth,
+                    binding: let_binding(&line.code),
+                });
+            }
+            // non-`let` acquisitions are temporaries: gone at end of line
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: sync-shim
+// ---------------------------------------------------------------------------
+
+fn sync_shim(rel: &str, lines: &[Line], out: &mut Vec<Diagnostic>) {
+    if !rel.starts_with("serve/") || rel == "serve/sync.rs" {
+        return;
+    }
+    for (i, line) in lines.iter().enumerate() {
+        if line.in_test || waived(lines, i, "sync-shim") {
+            continue;
+        }
+        for pat in ["std::sync", "std::thread"] {
+            if line.code.contains(pat) {
+                diag(
+                    out,
+                    rel,
+                    i,
+                    "sync-shim",
+                    format!(
+                        "`{pat}` used directly in serve runtime code — route concurrency \
+                         primitives through `crate::serve::sync` so they stay under one \
+                         poison/ordering/rank policy"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_fired(rel: &str, src: &str) -> Vec<String> {
+        lint_source(rel, src).into_iter().map(|d| d.rule.to_string()).collect()
+    }
+
+    #[test]
+    fn no_panic_fires_in_scope_and_respects_tests_and_waivers() {
+        let src = "fn f() { x.unwrap(); }\n";
+        let d = lint_source("serve/queue.rs", src);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rule, "no-panic");
+        assert_eq!(d[0].line, 1);
+        assert_eq!(d[0].file, "serve/queue.rs");
+        // out of scope file: clean
+        assert!(lint_source("runtime/executor.rs", src).is_empty());
+        // test code: clean
+        let test_src = "#[cfg(test)]\nmod tests {\n    fn f() { x.unwrap(); }\n}\n";
+        assert!(lint_source("serve/queue.rs", test_src).is_empty());
+        // waived: clean
+        let waived_src = "// lint: allow(no-panic): fixture\nfn f() { x.unwrap(); }\n";
+        assert!(lint_source("serve/queue.rs", waived_src).is_empty());
+        // string/comment occurrences never fire
+        let masked = "fn f() { let s = \".unwrap()\"; } // .unwrap()\n";
+        assert!(lint_source("serve/queue.rs", masked).is_empty());
+    }
+
+    #[test]
+    fn no_panic_catches_macros_but_not_lookalikes() {
+        let src = "fn f() { panic!(\"boom\"); }\n";
+        assert_eq!(rules_fired("serve/engine.rs", src), vec!["no-panic"]);
+        let ok = "fn f() { debug_assert!(x); my_panic_helper(); }\n";
+        assert!(lint_source("serve/engine.rs", ok).is_empty());
+        let expect = "fn f() { x.expect(\"reason\"); }\n";
+        assert_eq!(rules_fired("serve/engine.rs", expect), vec!["no-panic"]);
+    }
+
+    #[test]
+    fn safety_comment_required_for_unsafe() {
+        let bad = "fn f() { unsafe { g() } }\n";
+        assert_eq!(rules_fired("runtime/executor.rs", bad), vec!["safety-comment"]);
+        let good = "fn f() {\n    // SAFETY: g has no preconditions here.\n    unsafe { g() }\n}\n";
+        assert!(lint_source("runtime/executor.rs", good).is_empty());
+        let doc = "/// # Safety\n///\n/// Caller must uphold X.\npub unsafe fn f() {}\n";
+        assert!(lint_source("runtime/executor.rs", doc).is_empty());
+        let lookalike = "#[allow(unused_unsafe)]\nfn f() {}\n";
+        assert!(lint_source("runtime/executor.rs", lookalike).is_empty());
+    }
+
+    #[test]
+    fn relaxed_ordering_requires_justification() {
+        let bad = "fn f() { X.load(Ordering::Relaxed); }\n";
+        assert_eq!(rules_fired("metrics/mod.rs", bad), vec!["relaxed-ordering"]);
+        let good = "// relaxed: stats-only tally.\nfn f() { X.load(Ordering::Relaxed); }\n";
+        assert!(lint_source("metrics/mod.rs", good).is_empty());
+    }
+
+    #[test]
+    fn lock_hierarchy_flags_inversions_and_unknown_receivers() {
+        // rank 1 (queue-inner) held, then rank 0 (pool-workers): inversion
+        let bad = "fn f(&self) {\n    let g = self.inner.lock_or_poisoned();\n    \
+                   let w = self.workers.lock_or_poisoned();\n}\n";
+        assert_eq!(rules_fired("serve/service.rs", bad), vec!["lock-hierarchy"]);
+        // waiver silences it
+        let waived = "fn f(&self) {\n    let g = self.inner.lock_or_poisoned();\n    \
+                      // lint: allow(lock-hierarchy): fixture\n    \
+                      let w = self.workers.lock_or_poisoned();\n}\n";
+        assert!(lint_source("serve/service.rs", waived).is_empty());
+    }
+
+    #[test]
+    fn lock_hierarchy_ascending_and_scoping() {
+        let asc = "fn f(&self) {\n    let w = self.workers.lock_or_poisoned();\n    \
+                   let g = self.inner.lock_or_poisoned();\n}\n";
+        assert!(lint_source("serve/service.rs", asc).is_empty(), "ascending ranks are legal");
+        // same-rank reacquisition (self-deadlock) is flagged
+        let re = "fn f(&self) {\n    let a = self.inner.lock_or_poisoned();\n    \
+                  let b = self.inner.lock_or_poisoned();\n}\n";
+        assert_eq!(rules_fired("serve/queue.rs", re), vec!["lock-hierarchy"]);
+        // a dropped guard no longer blocks reacquisition
+        let seq = "fn f(&self) {\n    let a = self.inner.lock_or_poisoned();\n    \
+                   drop(a);\n    let b = self.inner.lock_or_poisoned();\n}\n";
+        assert!(lint_source("serve/queue.rs", seq).is_empty());
+        // scope exit releases: sibling functions don't leak guards
+        let sib = "fn f(&self) {\n    let a = self.inner.lock_or_poisoned();\n}\n\
+                   fn g(&self) {\n    let b = self.inner.lock_or_poisoned();\n}\n";
+        assert!(lint_source("serve/queue.rs", sib).is_empty());
+        // unknown receiver
+        let unk = "fn f(&self) { let a = self.mystery.lock(); }\n";
+        assert_eq!(rules_fired("serve/service.rs", unk), vec!["unknown-lock"]);
+    }
+
+    #[test]
+    fn sync_shim_rule_confines_std_sync_to_the_shim() {
+        let bad = "use std::sync::Mutex;\nfn f() {}\n";
+        assert_eq!(rules_fired("serve/queue.rs", bad), vec!["sync-shim"]);
+        assert!(lint_source("serve/sync.rs", bad).is_empty(), "the shim itself is exempt");
+        assert!(lint_source("runtime/executor.rs", bad).is_empty(), "only serve/ is scoped");
+        let test_ok = "#[cfg(test)]\nmod tests {\n    use std::thread;\n}\n";
+        assert!(lint_source("serve/queue.rs", test_ok).is_empty());
+    }
+
+    #[test]
+    fn diagnostics_render_as_file_line_rule() {
+        let d = lint_source("serve/queue.rs", "fn f() { x.unwrap(); }\n");
+        let rendered = d[0].to_string();
+        assert!(
+            rendered.starts_with("serve/queue.rs:1: [no-panic]"),
+            "got: {rendered}"
+        );
+    }
+}

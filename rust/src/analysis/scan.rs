@@ -1,0 +1,322 @@
+//! Line-oriented token scanner behind `cola lint`: a small character state
+//! machine (no syn, no proc-macro machinery) that splits a Rust source file
+//! into per-line *code* and *comment* channels and tracks just enough
+//! structure — brace depth and `#[cfg(test)]` regions — for the rules in
+//! [`super::rules`] to match on.
+//!
+//! The code channel preserves column positions: every character inside a
+//! string/char literal or a comment is replaced by a space, so substring
+//! matches in rules can never fire on literal or comment text, and tokens
+//! can never fuse across a blanked region (`foo/*x*/bar` stays two words).
+//! Handled literal forms: `"..."` with escapes, `b"..."`, raw strings
+//! `r"…"`/`r#"…"#` (any hash count), char literals `'x'`/`'\n'`, and
+//! lifetimes (`'a`, `'static`), which stay in the code channel. Block
+//! comments nest, as in Rust.
+
+/// One scanned source line.
+#[derive(Debug)]
+pub struct Line {
+    /// Code text with strings/chars/comments blanked to spaces
+    /// (column-preserving).
+    pub code: String,
+    /// Concatenated comment text of the line (line + block comments,
+    /// including doc comments).
+    pub comment: String,
+    /// Whether any part of the line lies in a `#[cfg(test)]` region.
+    pub in_test: bool,
+    /// Brace depth at the start of the line.
+    pub depth: usize,
+}
+
+/// The literal/comment state carried across characters.
+enum State {
+    Normal,
+    LineComment,
+    /// Nesting level of `/* ... */`.
+    BlockComment(usize),
+    Str,
+    /// Hash count of `r#..#"..."#..#`.
+    RawStr(usize),
+    CharLit,
+}
+
+/// Does `src[i..]` start with `pat`?
+fn starts_with_at(src: &[char], i: usize, pat: &str) -> bool {
+    pat.chars().enumerate().all(|(k, p)| src.get(i + k) == Some(&p))
+}
+
+pub(crate) fn is_word(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Scan `source` into per-line code/comment channels. Never fails: input
+/// that is not valid Rust (unterminated literals, stray braces) degrades to
+/// best-effort channels rather than an error — the compiler owns syntax,
+/// the lint only owns conventions.
+pub fn scan(source: &str) -> Vec<Line> {
+    let src: Vec<char> = source.chars().collect();
+    let mut lines = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut state = State::Normal;
+    let mut depth = 0usize;
+    let mut line_depth = 0usize;
+    // `#[cfg(test)]` seen; waiting for the item's `{` (a `;` first — e.g.
+    // a cfg'd `use` — cancels it).
+    let mut pending_test = false;
+    // Depth just *outside* the open test region's brace, when inside one.
+    let mut test_depth: Option<usize> = None;
+    // A test region touched this line (covers regions closing mid-line).
+    let mut line_touched_test = false;
+
+    let mut i = 0;
+    while i < src.len() {
+        let c = src[i];
+        if c == '\n' {
+            if matches!(state, State::LineComment) {
+                state = State::Normal;
+            }
+            lines.push(Line {
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+                in_test: test_depth.is_some() || line_touched_test,
+                depth: line_depth,
+            });
+            line_depth = depth;
+            line_touched_test = false;
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Normal => {
+                if starts_with_at(&src, i, "//") {
+                    state = State::LineComment;
+                    code.push_str("  ");
+                    i += 2;
+                } else if starts_with_at(&src, i, "/*") {
+                    state = State::BlockComment(1);
+                    code.push_str("  ");
+                    i += 2;
+                } else if c == '"' {
+                    state = State::Str;
+                    code.push(' ');
+                    i += 1;
+                } else if c == 'b' && src.get(i + 1) == Some(&'"') && !prev_is_word(&src, i) {
+                    // byte string: skip the prefix, the quote opens Str next
+                    code.push(' ');
+                    i += 1;
+                } else if c == 'r'
+                    && !prev_is_word(&src, i)
+                    && raw_str_hashes(&src, i + 1).is_some()
+                {
+                    let h = raw_str_hashes(&src, i + 1).unwrap_or(0);
+                    state = State::RawStr(h);
+                    for _ in 0..(2 + h) {
+                        code.push(' '); // r, hashes, opening quote
+                    }
+                    i += 2 + h;
+                } else if c == '\'' {
+                    // lifetime ('a, 'static) vs char literal ('x', '\n')
+                    let lifetime = src.get(i + 1).is_some_and(|&n| is_word(n))
+                        && src.get(i + 2) != Some(&'\'');
+                    if lifetime {
+                        code.push(c);
+                        i += 1;
+                    } else {
+                        state = State::CharLit;
+                        code.push(' ');
+                        i += 1;
+                    }
+                } else {
+                    if c == '#'
+                        && (starts_with_at(&src, i, "#[cfg(test)]")
+                            || starts_with_at(&src, i, "#[cfg(all(test"))
+                    {
+                        pending_test = true;
+                    }
+                    if c == ';' && pending_test {
+                        pending_test = false;
+                    }
+                    if c == '{' {
+                        if pending_test && test_depth.is_none() {
+                            test_depth = Some(depth);
+                            pending_test = false;
+                        }
+                        depth += 1;
+                        if test_depth.is_some() {
+                            line_touched_test = true;
+                        }
+                    }
+                    if c == '}' {
+                        depth = depth.saturating_sub(1);
+                        if test_depth.is_some_and(|td| depth <= td) {
+                            test_depth = None;
+                            line_touched_test = true;
+                        }
+                    }
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                comment.push(c);
+                code.push(' ');
+                i += 1;
+            }
+            State::BlockComment(n) => {
+                if starts_with_at(&src, i, "/*") {
+                    state = State::BlockComment(n + 1);
+                    code.push_str("  ");
+                    i += 2;
+                } else if starts_with_at(&src, i, "*/") {
+                    state = if n > 1 { State::BlockComment(n - 1) } else { State::Normal };
+                    code.push_str("  ");
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    code.push_str("  ");
+                    i += 2;
+                } else {
+                    if c == '"' {
+                        state = State::Normal;
+                    }
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            State::RawStr(h) => {
+                if c == '"' && (0..h).all(|k| src.get(i + 1 + k) == Some(&'#')) {
+                    state = State::Normal;
+                    for _ in 0..(1 + h) {
+                        code.push(' ');
+                    }
+                    i += 1 + h;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            State::CharLit => {
+                if c == '\\' {
+                    code.push_str("  ");
+                    i += 2;
+                } else {
+                    if c == '\'' {
+                        state = State::Normal;
+                    }
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        lines.push(Line {
+            code,
+            comment,
+            in_test: test_depth.is_some() || line_touched_test,
+            depth: line_depth,
+        });
+    }
+    lines
+}
+
+/// Is the char before `i` part of an identifier (so `i` cannot start a
+/// literal prefix like `r"` / `b"`)?
+fn prev_is_word(src: &[char], i: usize) -> bool {
+    i > 0 && is_word(src[i - 1])
+}
+
+/// `Some(hash_count)` when `src[i..]` is the `#*"` opener of a raw string.
+fn raw_str_hashes(src: &[char], i: usize) -> Option<usize> {
+    let mut h = 0;
+    while src.get(i + h) == Some(&'#') {
+        h += 1;
+    }
+    (src.get(i + h) == Some(&'"')).then_some(h)
+}
+
+/// `code.find(word)` restricted to whole-word matches (`_` counts as a word
+/// character, so `unused_unsafe` does not contain the word `unsafe`).
+pub fn find_word(code: &str, word: &str) -> Option<usize> {
+    let chars: Vec<char> = code.chars().collect();
+    let pat: Vec<char> = word.chars().collect();
+    if pat.is_empty() || chars.len() < pat.len() {
+        return None;
+    }
+    for start in 0..=(chars.len() - pat.len()) {
+        if chars[start..start + pat.len()] == pat[..]
+            && (start == 0 || !is_word(chars[start - 1]))
+            && (start + pat.len() == chars.len() || !is_word(chars[start + pat.len()]))
+        {
+            return Some(start);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_blanked_column_preserving() {
+        let src = "let x = \".unwrap()\"; // .unwrap()";
+        let lines = scan(&format!("{src}\n"));
+        assert_eq!(lines.len(), 1);
+        assert!(!lines[0].code.contains(".unwrap()"), "code: {:?}", lines[0].code);
+        assert!(lines[0].comment.contains(".unwrap()"));
+        assert_eq!(lines[0].code.chars().count(), src.chars().count());
+    }
+
+    #[test]
+    fn raw_strings_and_char_literals_are_blanked_lifetimes_kept() {
+        let lines = scan("fn f<'a>(s: &'a str) { let c = '{'; let r = r#\"panic!\"#; }\n");
+        let code = &lines[0].code;
+        assert!(code.contains("<'a>"), "lifetime survives: {code:?}");
+        assert!(!code.contains("panic!"));
+        // the '{' char literal must not count toward depth
+        let lines = scan("let c = '{';\nlet d = 1;\n");
+        assert_eq!(lines[1].depth, 0);
+    }
+
+    #[test]
+    fn block_comments_nest_and_tokens_do_not_fuse() {
+        let lines = scan("a/* x /* y */ z */b\n");
+        let code = &lines[0].code;
+        assert!(!code.contains("ab"), "blanking preserves separation: {code:?}");
+        assert!(code.contains('a') && code.contains('b'));
+        assert!(lines[0].comment.contains('y'));
+    }
+
+    #[test]
+    fn cfg_test_regions_are_tracked_by_depth() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn live2() {}\n";
+        let lines = scan(src);
+        assert!(!lines[0].in_test);
+        assert!(lines[2].in_test, "mod header opens the region");
+        assert!(lines[3].in_test);
+        assert!(lines[4].in_test, "closing brace still counts");
+        assert!(!lines[5].in_test, "region ends with its brace");
+    }
+
+    #[test]
+    fn cfg_test_use_item_does_not_open_a_region() {
+        let src = "#[cfg(test)]\nuse foo::bar;\nfn live() { let _ = 1; }\n";
+        let lines = scan(src);
+        assert!(!lines[2].in_test, "the `;` cancelled the pending attr");
+    }
+
+    #[test]
+    fn find_word_respects_underscore_boundaries() {
+        assert!(find_word("#[allow(unused_unsafe)]", "unsafe").is_none());
+        assert_eq!(find_word("  unsafe {", "unsafe"), Some(2));
+        assert!(find_word("my_unsafe_fn()", "unsafe").is_none());
+    }
+}

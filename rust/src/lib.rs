@@ -6,6 +6,7 @@
 //! everything at runtime: data pipeline, training orchestration, serving,
 //! analytics, and the paper's cost model.
 
+pub mod analysis;
 pub mod bench;
 pub mod config;
 pub mod coordinator;

@@ -36,12 +36,14 @@ use cola::serve::{ModelRouter, RouteError, SubmitError, SubmitOptions};
 
 fn usage() -> ! {
     eprintln!(
-        "usage: cola <train|eval|serve|rank|cost|data-gen> [--artifact NAME] [key=value ...]\n\
+        "usage: cola <train|eval|serve|rank|cost|data-gen|lint> [--artifact NAME] [key=value ...]\n\
          serve: cola serve [--artifact NAME] [--requests N] [--config f.json] [--model NAME]\n\
                 [--mock] [--distinct D] [--bench-json PATH]\n\
                 [max_new_tokens=K] [workers=N] [queue_depth=D] [default_deadline_ms=MS]\n\
                 [kv_cache_entries=E] [join_chunk=J]\n\
                 [models=name:artifact,...] [name.key=value ...]\n\
+         lint:  cola lint [--root DIR] — static concurrency/safety checks over rust/src\n\
+                (rules and waiver syntax: docs/concurrency.md); exits 1 on findings\n\
          run `cola cost` for the analytic paper tables; `cola serve --mock` needs no\n\
          artifacts; `make artifacts` first for the rest."
     );
@@ -406,6 +408,9 @@ fn cmd_serve_mock(
         use cola::util::json::Json;
         let j = Json::obj(vec![
             ("bench", Json::s("serve_mock")),
+            // distinguishes a real run from the statically-derived baseline
+            // committed as BENCH_serve.json (provenance "derived-static")
+            ("provenance", Json::s("measured")),
             ("requests", Json::num(n_requests as f64)),
             ("distinct_prompts", Json::num(distinct as f64)),
             ("tokens", Json::num(tokens as f64)),
@@ -483,6 +488,27 @@ fn cmd_data_gen(flags: std::collections::HashMap<String, String>) -> Result<()> 
     Ok(())
 }
 
+/// `cola lint` — run the in-house static-analysis pass (see
+/// `cola::analysis`) over the crate sources and exit non-zero on findings.
+fn cmd_lint(flags: std::collections::HashMap<String, String>) -> Result<()> {
+    let root = match flags.get("root") {
+        Some(r) => std::path::PathBuf::from(r),
+        // work from either the repo root or rust/
+        None if std::path::Path::new("src/serve").exists() => std::path::PathBuf::from("src"),
+        None => std::path::PathBuf::from("rust/src"),
+    };
+    let diags = cola::analysis::lint_dir(&root)
+        .with_context(|| format!("walking {}", root.display()))?;
+    if diags.is_empty() {
+        println!("cola lint: clean ({})", root.display());
+        return Ok(());
+    }
+    for d in &diags {
+        eprintln!("{d}");
+    }
+    anyhow::bail!("cola lint: {} finding(s)", diags.len());
+}
+
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     if args.is_empty() {
@@ -513,6 +539,7 @@ fn main() -> Result<()> {
         "rank" => cmd_rank(flags, kvs),
         "cost" => cmd_cost(flags),
         "data-gen" => cmd_data_gen(flags),
+        "lint" => cmd_lint(flags),
         _ => usage(),
     }
 }

@@ -8,10 +8,13 @@ use std::time::Instant;
 static VERBOSE: AtomicBool = AtomicBool::new(false);
 
 pub fn set_verbose(v: bool) {
+    // relaxed: a write-once verbosity toggle guarding log output only; a
+    // racing reader at worst logs (or skips) one extra line.
     VERBOSE.store(v, Ordering::Relaxed);
 }
 
 pub fn log_debug(msg: &str) {
+    // relaxed: see `set_verbose`.
     if VERBOSE.load(Ordering::Relaxed) {
         eprintln!("[cola] {msg}");
     }

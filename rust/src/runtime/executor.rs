@@ -87,6 +87,8 @@ impl Executor {
     }
 
     fn note(&self, t0: Instant) {
+        // relaxed: per-executor call/time tallies feed `stats()` only; they
+        // publish no other memory, so skew between the two is harmless.
         self.calls.fetch_add(1, Ordering::Relaxed);
         self.nanos
             .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
@@ -94,6 +96,7 @@ impl Executor {
 
     /// (calls, total seconds) since construction.
     pub fn stats(&self) -> (u64, f64) {
+        // relaxed: diagnostic snapshot; see `note()`.
         (
             self.calls.load(Ordering::Relaxed),
             self.nanos.load(Ordering::Relaxed) as f64 * 1e-9,

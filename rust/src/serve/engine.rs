@@ -64,7 +64,6 @@ use crate::serve::service::{FinishReason, QueuedRequest, Shared};
 use crate::serve::slots::{self, SlotTable};
 use anyhow::{Context, Result};
 use std::rc::Rc;
-use std::sync::atomic::Ordering;
 use std::time::Instant;
 
 // ---------------------------------------------------------------------------
@@ -256,8 +255,8 @@ impl EngineBackend for PjrtBackend {
         let exe = self.prefill.clone();
         let mut out = self.run_step(&exe, &[&tok_buf])?;
         anyhow::ensure!(out.len() == 3, "prefill returns (next, kc, vc)");
-        let vcb = out.pop().unwrap();
-        let kcb = out.pop().unwrap();
+        let vcb = out.pop().context("prefill output vc")?;
+        let kcb = out.pop().context("prefill output kc")?;
         self.kv = Some((kcb, vcb));
         buf_i32_vec(&out[0])
     }
@@ -271,8 +270,8 @@ impl EngineBackend for PjrtBackend {
         let exe = self.decode.clone();
         let mut out = self.run_step(&exe, &[&kcb, &vcb, &tok_b, &pos_b])?;
         anyhow::ensure!(out.len() == 3, "decode returns (next, kc, vc)");
-        let vcb2 = out.pop().unwrap();
-        let kcb2 = out.pop().unwrap();
+        let vcb2 = out.pop().context("decode output vc")?;
+        let kcb2 = out.pop().context("decode output kc")?;
         self.kv = Some((kcb2, vcb2));
         buf_i32_vec(&out[0])
     }
@@ -413,7 +412,7 @@ pub(crate) fn run_worker(
 
         if let Err(e) = decode_rounds(shared, backend, &mut table, &mut gauge, &mut st) {
             let n = table.fail_all(Instant::now());
-            shared.counters.failed.fetch_add(n as u64, Ordering::Relaxed);
+            shared.counters.failed.add(n as u64);
             sync_gauge(shared, &mut gauge, 0);
             metrics::log_info(&format!("serve batch failed ({n} requests): {e:#}"));
         }
@@ -427,17 +426,17 @@ pub(crate) fn run_worker(
 /// Returns whether a slot was actually occupied.
 fn admit_one(table: &mut SlotTable, shared: &Shared, req: QueuedRequest) -> bool {
     let now = Instant::now();
-    if req.cancel.load(Ordering::Relaxed) {
+    if req.cancel.poll() {
         slots::complete_unstarted(req, FinishReason::Cancelled, now);
-        shared.counters.cancelled.fetch_add(1, Ordering::Relaxed);
+        shared.counters.cancelled.add(1);
     } else if req.deadline.is_some_and(|d| now >= d) {
         slots::complete_unstarted(req, FinishReason::DeadlineExpired, now);
-        shared.counters.expired.fetch_add(1, Ordering::Relaxed);
+        shared.counters.expired.add(1);
     } else if req.max_new_tokens == 0 {
         // zero generation budget: complete empty instead of emitting the
         // prefill token
         slots::complete_unstarted(req, FinishReason::Length, now);
-        shared.counters.completed.fetch_add(1, Ordering::Relaxed);
+        shared.counters.completed.add(1);
     } else if table.admit(req, now).is_none() {
         debug_assert!(false, "admit_one called with a full slot table");
     } else {
@@ -481,14 +480,14 @@ fn refill_slots(table: &mut SlotTable, shared: &Shared, join_chunk: usize) -> bo
 fn shed_dead_queued(shared: &Shared, now: Instant) {
     let dead = shared
         .queue
-        .drain_where(|r| r.cancel.load(Ordering::Relaxed) || r.deadline.is_some_and(|d| now >= d));
+        .drain_where(|r| r.cancel.poll() || r.deadline.is_some_and(|d| now >= d));
     for req in dead {
-        if req.cancel.load(Ordering::Relaxed) {
+        if req.cancel.poll() {
             slots::complete_unstarted(req, FinishReason::Cancelled, now);
-            shared.counters.cancelled.fetch_add(1, Ordering::Relaxed);
+            shared.counters.cancelled.add(1);
         } else {
             slots::complete_unstarted(req, FinishReason::DeadlineExpired, now);
-            shared.counters.expired.fetch_add(1, Ordering::Relaxed);
+            shared.counters.expired.add(1);
         }
     }
 }
@@ -517,8 +516,8 @@ fn join_prefill(
             misses += u64::from(p.is_none());
             probes.push((i, p));
         }
-        c.kv_cache_hits.fetch_add(occ.len() as u64 - misses, Ordering::Relaxed);
-        c.kv_cache_misses.fetch_add(misses, Ordering::Relaxed);
+        c.kv_cache_hits.add(occ.len() as u64 - misses);
+        c.kv_cache_misses.add(misses);
         if misses == 0 && !occ.is_empty() {
             // Every window is known: skip the forward pass, rebuild the
             // batch KV from host snapshots and replay the cached next
@@ -526,20 +525,24 @@ fn join_prefill(
             let mut rows: Vec<Option<&KvRowState>> = vec![None; serve_bs];
             let mut next = vec![tokenizer::PAD; serve_bs];
             for &(i, p) in probes.iter() {
-                let (kv, tok) = cache.peek(p.expect("all rows hit"));
+                // `misses == 0` makes every probe `Some`; a `None` here
+                // would mean serving a zero KV row, so bail to the real
+                // prefill path below instead of trusting it.
+                let Some(idx) = p else { anyhow::bail!("probe/miss accounting diverged") };
+                let (kv, tok) = cache.peek(idx);
                 rows[i] = Some(kv);
                 next[i] = tok;
             }
             backend.import_kv_rows(&rows)?;
-            c.prefills_elided.fetch_add(1, Ordering::Relaxed);
+            c.prefills_elided.add(1);
             return Ok(next);
         }
     }
 
     let t0 = Instant::now();
     let next = backend.prefill(toks)?;
-    c.prefill_calls.fetch_add(1, Ordering::Relaxed);
-    c.prefill_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    c.prefill_calls.add(1);
+    c.prefill_nanos.add(t0.elapsed().as_nanos() as u64);
     anyhow::ensure!(
         next.len() == serve_bs,
         "prefill returned {} rows, want {serve_bs}",
@@ -565,7 +568,7 @@ fn join_prefill(
                 let window = toks[i * prompt_len..(i + 1) * prompt_len].to_vec();
                 evicted += cache.insert(h, window, kv, next[i]);
             }
-            c.kv_cache_evictions.fetch_add(evicted, Ordering::Relaxed);
+            c.kv_cache_evictions.add(evicted);
         }
     }
     Ok(next)
@@ -606,8 +609,8 @@ fn decode_rounds(
     loop {
         now = Instant::now();
         let (cancelled, expired) = table.sweep(now);
-        shared.counters.cancelled.fetch_add(cancelled as u64, Ordering::Relaxed);
-        shared.counters.expired.fetch_add(expired as u64, Ordering::Relaxed);
+        shared.counters.cancelled.add(cancelled as u64);
+        shared.counters.expired.add(expired as u64);
         // Periodically shed cancelled/expired entries still queued, so dead
         // work frees admission capacity without waiting for a pop. Throttled:
         // an O(queue) scan under the shared lock is not for every step.
@@ -642,11 +645,11 @@ fn decode_rounds(
         shared
             .counters
             .decoded_tokens
-            .fetch_add(st.occ.len() as u64, Ordering::Relaxed);
+            .add(st.occ.len() as u64);
         shared
             .counters
             .decode_nanos
-            .fetch_add(t_step.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            .add(t_step.elapsed().as_nanos() as u64);
         now = Instant::now();
         for &i in &st.occ {
             if let Some(reason) = table.push_token(i, next[i], now) {
@@ -659,7 +662,7 @@ fn decode_rounds(
 fn tally_finish(shared: &Shared, reason: FinishReason) {
     match reason {
         FinishReason::Length | FinishReason::Stop => {
-            shared.counters.completed.fetch_add(1, Ordering::Relaxed);
+            shared.counters.completed.add(1);
         }
         // cancellations/expiries are tallied where they are detected
         _ => {}
@@ -668,11 +671,10 @@ fn tally_finish(shared: &Shared, reason: FinishReason) {
 
 /// Publish this worker's slot occupancy into the pool-wide `active` gauge.
 fn sync_gauge(shared: &Shared, prev: &mut usize, cur: usize) {
-    use std::cmp::Ordering::*;
-    match cur.cmp(prev) {
-        Greater => shared.counters.active.fetch_add(cur - *prev, Ordering::Relaxed),
-        Less => shared.counters.active.fetch_sub(*prev - cur, Ordering::Relaxed),
-        Equal => cur,
-    };
+    if cur > *prev {
+        shared.counters.active.add(cur - *prev);
+    } else if cur < *prev {
+        shared.counters.active.sub(*prev - cur);
+    }
     *prev = cur;
 }

@@ -331,4 +331,76 @@ mod tests {
         assert!(get(&mut c, &[1]).is_none());
         assert_eq!(get(&mut c, &[2]), Some(2));
     }
+
+    /// Eviction-accounting conservation under random thrash: across a long
+    /// mixed probe/insert workload over 3x-capacity distinct windows,
+    /// hits + misses == probes, every probe outcome agrees with the actual
+    /// resident set, occupancy never exceeds capacity, and every *new*
+    /// insert is conserved as either a still-resident entry or a reported
+    /// eviction (`new_inserts == evictions + len`).
+    #[test]
+    fn eviction_accounting_is_conserved_under_thrash() {
+        use crate::util::rng::Rng;
+        use std::collections::{HashMap, HashSet};
+        const CAP: usize = 8;
+        let windows: Vec<Vec<i32>> = (0..24).map(|w| vec![w, 7 * w + 1, 3]).collect();
+        for a in 0..windows.len() {
+            for b in (a + 1)..windows.len() {
+                assert_ne!(hash_tokens(&windows[a]), hash_tokens(&windows[b]));
+            }
+        }
+        let mut rng = Rng::new(0xC0_1A);
+        let mut c = KvPrefixCache::new(CAP);
+        let mut latest: HashMap<u64, i32> = HashMap::new();
+        let (mut probes, mut hits, mut misses) = (0u64, 0u64, 0u64);
+        let (mut new_inserts, mut refreshes, mut evictions) = (0u64, 0u64, 0u64);
+        for step in 0..4000 {
+            let w = &windows[rng.below(windows.len())];
+            let h = hash_tokens(w);
+            let resident: HashSet<u64> =
+                c.recency_order().iter().map(|w| hash_tokens(w)).collect();
+            if rng.f64() < 0.5 {
+                probes += 1;
+                match c.probe(h, w) {
+                    Some(i) => {
+                        hits += 1;
+                        assert!(resident.contains(&h), "hit on a non-resident window");
+                        assert_eq!(c.peek(i).1, latest[&h], "stale token served");
+                    }
+                    None => {
+                        misses += 1;
+                        assert!(!resident.contains(&h), "miss on a resident window");
+                    }
+                }
+            } else {
+                let pre_len = c.len();
+                let tok = step as i32;
+                let ev = c.insert(h, w.clone(), row(tok as f32), tok);
+                latest.insert(h, tok);
+                if resident.contains(&h) {
+                    refreshes += 1;
+                    assert_eq!(ev, 0, "a refresh never evicts");
+                    assert_eq!(c.len(), pre_len, "a refresh never changes occupancy");
+                } else {
+                    new_inserts += 1;
+                    if pre_len == CAP {
+                        assert_eq!(ev, 1, "insert at capacity evicts exactly one");
+                        assert_eq!(c.len(), CAP);
+                    } else {
+                        assert_eq!(ev, 0, "no eviction below capacity");
+                        assert_eq!(c.len(), pre_len + 1);
+                    }
+                    evictions += ev;
+                }
+            }
+            assert!(c.len() <= CAP, "occupancy above capacity");
+        }
+        assert_eq!(hits + misses, probes, "every probe is a hit xor a miss");
+        assert_eq!(
+            new_inserts,
+            evictions + c.len() as u64,
+            "every new insert is still resident or was evicted (refreshes {refreshes})"
+        );
+        assert!(hits > 0 && misses > 0 && evictions > 0, "the workload exercised all paths");
+    }
 }

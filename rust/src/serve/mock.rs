@@ -167,7 +167,7 @@ impl EngineBackend for MockBackend {
             "prefill batch is [batch, prompt_len]"
         );
         if !self.prefill_delay.is_zero() {
-            std::thread::sleep(self.prefill_delay);
+            crate::serve::sync::sleep(self.prefill_delay);
         }
         self.windows = tokens.to_vec();
         // Right-aligned windows: the last column is each row's most recent
@@ -182,7 +182,7 @@ impl EngineBackend for MockBackend {
     fn decode_step(&mut self, feed: &[i32], _pos: usize) -> Result<Vec<i32>> {
         anyhow::ensure!(feed.len() == self.batch, "decode feed is one token per row");
         if !self.step_delay.is_zero() {
-            std::thread::sleep(self.step_delay);
+            crate::serve::sync::sleep(self.step_delay);
         }
         self.decode_calls += 1;
         if self.fail_after.is_some_and(|n| self.decode_calls >= n) {

@@ -76,14 +76,41 @@
 //!   boundary, while High-priority requests pop first and are never
 //!   chunk-limited — one burst cannot stall every in-flight decode or
 //!   saturate the slot table before urgent work lands.
+//!
+//! # Concurrency correctness tooling
+//!
+//! The serving tier is hand-rolled concurrency (Mutex/Condvar queue, atomic
+//! cancel flags, shared counters, worker threads), so its invariants are
+//! enforced mechanically rather than by review hope:
+//!
+//! - **[`sync`] seam**: every concurrency primitive used by the serve
+//!   runtime is routed through [`serve::sync`](sync) — a thin shim over
+//!   `std::sync`/`std::thread` that centralises the poison policy
+//!   (`lock_or_poisoned`), a ranked lock hierarchy (checked at runtime in
+//!   debug builds), and the memory-ordering policy (typed atomics:
+//!   [`sync::Counter`], [`sync::Gauge`], [`sync::Flag`],
+//!   [`sync::Countdown`]). Direct `std::sync`/`std::thread` use in
+//!   `serve/` is a lint error outside `#[cfg(test)]`.
+//! - **`cola lint`** ([`crate::analysis`]): a dependency-free static pass
+//!   run by `scripts/verify.sh` that enforces the no-panic rule on serve
+//!   runtime paths, `// SAFETY:` on every `unsafe`, justification comments
+//!   on `Ordering::Relaxed`, the declared lock hierarchy, and the sync-shim
+//!   routing above. See `docs/concurrency.md` for rules and waiver syntax.
+//! - **Interleaving checks** ([`model`] + `tests/serve_interleave.rs`): the
+//!   queue and KV-cache semantics are extracted into pure reference models
+//!   and checked against the real types under *exhaustive* enumeration of
+//!   small-thread interleavings — linearizability by construction, not by
+//!   stress-test luck.
 
 pub mod engine;
 pub mod kvcache;
 pub mod mock;
+pub mod model;
 pub mod queue;
 pub mod router;
 pub mod service;
 pub mod slots;
+pub mod sync;
 
 pub use engine::{EngineBackend, PjrtBackend};
 pub use kvcache::{KvPrefixCache, KvRowState};

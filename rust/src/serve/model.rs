@@ -1,0 +1,489 @@
+//! Pure reference models of the serving primitives, plus an exhaustive
+//! interleaving explorer that checks the real types against them.
+//!
+//! # Why this works
+//!
+//! Both checked primitives serialise every operation under one lock
+//! ([`BoundedQueue`] holds its `Mutex` for the whole op; [`KvPrefixCache`]
+//! is `&mut self` behind a worker), so any concurrent execution is
+//! equivalent to *some* total order of the individual ops. Linearizability
+//! therefore reduces to: **for every schedulable total order of the ops,
+//! the real type's observations match the reference model's.** The
+//! explorer enumerates those orders exhaustively for small per-thread op
+//! sequences — unlike `queue_stress.rs`, which merely samples them.
+//!
+//! # Blocking ops
+//!
+//! [`QueueOp::PopBlocking`] only *completes* (and thus only linearises)
+//! when the queue is non-empty or closed, so the explorer schedules it
+//! only in states where [`QueueModel::ready`] holds. Replaying such a
+//! schedule on the real queue then never parks. A state where ops remain
+//! but none is schedulable is reported as a [deadlock]
+//! (`ExploreReport::deadlocks`) — e.g. a lone `PopBlocking` against an
+//! empty queue that nothing will ever close.
+//!
+//! # Extending the models
+//!
+//! To put a new primitive under the checker: (1) define `Op`/`Obs` enums
+//! and a `Clone`-able model with `ready`/`apply`; (2) impl the matching
+//! `*Sut` trait for the real type (and for deliberately-broken wrappers —
+//! regression tests pin the minimal counterexample the explorer finds);
+//! (3) drive it from `tests/serve_interleave.rs`. See `docs/concurrency.md`.
+
+use crate::serve::kvcache::{hash_tokens, KvPrefixCache, KvRowState};
+use crate::serve::queue::{BoundedQueue, PushError};
+use std::collections::VecDeque;
+
+// ---------------------------------------------------------------------------
+// Queue: ops, observations, reference model
+// ---------------------------------------------------------------------------
+
+/// One queue operation, as issued by some thread.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueueOp {
+    /// `push(value, high_priority)`.
+    Push(i32, bool),
+    /// Non-blocking pop across both bands.
+    TryPop,
+    /// Non-blocking pop from the high band only.
+    TryPopHigh,
+    /// Blocking pop; schedulable only when it would complete (see module
+    /// docs).
+    PopBlocking,
+    /// Close the queue and drain the leftovers.
+    Close,
+}
+
+/// What a [`QueueOp`] observed. `Divergence` means the real queue and the
+/// model disagreed on one of these.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum QueueObs {
+    /// Push accepted.
+    Pushed,
+    /// Push refused: at capacity (item handed back).
+    Full(i32),
+    /// Push refused: queue closed (item handed back).
+    Closed(i32),
+    /// Non-blocking pop yielded an item.
+    Item(i32),
+    /// Non-blocking pop found nothing (band empty).
+    Empty,
+    /// Close drained these leftovers, high band first.
+    Drained(Vec<i32>),
+    /// Blocking pop woke with an item, or `None` after close+drain.
+    Woke(Option<i32>),
+}
+
+/// Executable specification of [`BoundedQueue`] semantics: two FIFO bands,
+/// high drains first, hard capacity across both, close is sticky.
+#[derive(Clone, Debug)]
+pub struct QueueModel {
+    cap: usize,
+    high: VecDeque<i32>,
+    normal: VecDeque<i32>,
+    closed: bool,
+}
+
+impl QueueModel {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            cap: capacity.max(1),
+            high: VecDeque::new(),
+            normal: VecDeque::new(),
+            closed: false,
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.high.len() + self.normal.len()
+    }
+
+    /// Whether `op` can complete (linearise) in the current state. Only
+    /// [`QueueOp::PopBlocking`] is ever not ready.
+    pub fn ready(&self, op: QueueOp) -> bool {
+        match op {
+            QueueOp::PopBlocking => self.len() > 0 || self.closed,
+            _ => true,
+        }
+    }
+
+    /// Apply `op` (which must be [`ready`](Self::ready)) and return what it
+    /// observes.
+    pub fn apply(&mut self, op: QueueOp) -> QueueObs {
+        match op {
+            QueueOp::Push(v, high) => {
+                if self.closed {
+                    QueueObs::Closed(v)
+                } else if self.len() >= self.cap {
+                    QueueObs::Full(v)
+                } else {
+                    if high {
+                        self.high.push_back(v);
+                    } else {
+                        self.normal.push_back(v);
+                    }
+                    QueueObs::Pushed
+                }
+            }
+            QueueOp::TryPop => self.pop().map_or(QueueObs::Empty, QueueObs::Item),
+            QueueOp::TryPopHigh => {
+                self.high.pop_front().map_or(QueueObs::Empty, QueueObs::Item)
+            }
+            QueueOp::PopBlocking => QueueObs::Woke(self.pop()),
+            QueueOp::Close => {
+                self.closed = true;
+                let mut left: Vec<i32> = self.high.drain(..).collect();
+                left.extend(self.normal.drain(..));
+                QueueObs::Drained(left)
+            }
+        }
+    }
+
+    fn pop(&mut self) -> Option<i32> {
+        self.high.pop_front().or_else(|| self.normal.pop_front())
+    }
+}
+
+/// System-under-test seam: anything that can execute [`QueueOp`]s. Implemented
+/// by the real [`BoundedQueue`] and, in tests, by deliberately-broken
+/// wrappers that pin the explorer's counterexamples as regressions.
+pub trait QueueSut {
+    fn apply(&self, op: QueueOp) -> QueueObs;
+}
+
+impl QueueSut for BoundedQueue<i32> {
+    fn apply(&self, op: QueueOp) -> QueueObs {
+        match op {
+            QueueOp::Push(v, high) => match self.push(v, high) {
+                Ok(()) => QueueObs::Pushed,
+                Err(PushError::Full(v)) => QueueObs::Full(v),
+                Err(PushError::Closed(v)) => QueueObs::Closed(v),
+            },
+            QueueOp::TryPop => self.try_pop().map_or(QueueObs::Empty, QueueObs::Item),
+            QueueOp::TryPopHigh => {
+                self.try_pop_high().map_or(QueueObs::Empty, QueueObs::Item)
+            }
+            // Scheduled only when the model says it completes, so this
+            // never parks during replay (see module docs).
+            QueueOp::PopBlocking => QueueObs::Woke(self.pop_blocking()),
+            QueueOp::Close => QueueObs::Drained(self.close()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Interleaving explorer
+// ---------------------------------------------------------------------------
+
+/// First disagreement between the SUT and the model on some schedule.
+#[derive(Clone, Debug)]
+pub struct Divergence {
+    /// The full `(thread, op)` schedule that exposed it.
+    pub schedule: Vec<(usize, QueueOp)>,
+    /// Index into `schedule` of the diverging op.
+    pub step: usize,
+    /// What the reference model observed.
+    pub expected: QueueObs,
+    /// What the real type observed.
+    pub actual: QueueObs,
+}
+
+/// Result of exhaustively exploring every schedulable interleaving.
+#[derive(Debug)]
+pub struct ExploreReport {
+    /// Complete schedules enumerated (every thread ran every op).
+    pub schedules: usize,
+    /// States where ops remained but none was schedulable.
+    pub deadlocks: usize,
+    /// First model/SUT disagreement found, if any.
+    pub divergence: Option<Divergence>,
+}
+
+/// Exhaustively enumerate every interleaving of the per-thread op sequences
+/// in `threads` that respects [`QueueModel::ready`], replay each complete
+/// (and each deadlocked) schedule on a fresh SUT from `mk`, and compare
+/// observations step by step against a fresh [`QueueModel`].
+pub fn explore_queue<S: QueueSut>(
+    capacity: usize,
+    threads: &[Vec<QueueOp>],
+    mk: &dyn Fn() -> S,
+) -> ExploreReport {
+    let mut report = ExploreReport { schedules: 0, deadlocks: 0, divergence: None };
+    let mut pos = vec![0usize; threads.len()];
+    let mut trace: Vec<(usize, QueueOp)> = Vec::new();
+    dfs(&QueueModel::new(capacity), capacity, threads, &mut pos, &mut trace, mk, &mut report);
+    report
+}
+
+fn dfs<S: QueueSut>(
+    model: &QueueModel,
+    capacity: usize,
+    threads: &[Vec<QueueOp>],
+    pos: &mut [usize],
+    trace: &mut Vec<(usize, QueueOp)>,
+    mk: &dyn Fn() -> S,
+    report: &mut ExploreReport,
+) {
+    let mut any_remaining = false;
+    let mut scheduled = false;
+    for t in 0..threads.len() {
+        if pos[t] >= threads[t].len() {
+            continue;
+        }
+        any_remaining = true;
+        let op = threads[t][pos[t]];
+        if !model.ready(op) {
+            continue;
+        }
+        scheduled = true;
+        let mut next = model.clone();
+        next.apply(op);
+        pos[t] += 1;
+        trace.push((t, op));
+        dfs(&next, capacity, threads, pos, trace, mk, report);
+        trace.pop();
+        pos[t] -= 1;
+    }
+    if !any_remaining {
+        report.schedules += 1;
+        record_replay(capacity, trace, mk, report);
+    } else if !scheduled {
+        report.deadlocks += 1;
+        // The prefix executed so far must still linearise.
+        record_replay(capacity, trace, mk, report);
+    }
+}
+
+fn record_replay<S: QueueSut>(
+    capacity: usize,
+    trace: &[(usize, QueueOp)],
+    mk: &dyn Fn() -> S,
+    report: &mut ExploreReport,
+) {
+    if report.divergence.is_some() {
+        return;
+    }
+    let sut = mk();
+    let mut model = QueueModel::new(capacity);
+    for (step, &(_, op)) in trace.iter().enumerate() {
+        let expected = model.apply(op);
+        let actual = sut.apply(op);
+        if expected != actual {
+            report.divergence =
+                Some(Divergence { schedule: trace.to_vec(), step, expected, actual });
+            return;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// KV prefix cache: ops, observations, reference model
+// ---------------------------------------------------------------------------
+
+/// One cache operation. Windows come from a caller-supplied table (the
+/// drivers verify the table's FNV hashes are collision-free, so the model
+/// may key by index where the real cache keys by hash).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheOp {
+    /// `insert(windows[w], next_token)`.
+    Insert(usize, i32),
+    /// `probe(windows[w])` + `peek` on a hit.
+    Probe(usize),
+}
+
+/// What a [`CacheOp`] observed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheObs {
+    /// Insert completed, evicting this many entries (0 or 1).
+    Inserted(u64),
+    /// Probe hit; the stored next token.
+    Hit(i32),
+    /// Probe missed.
+    Miss,
+}
+
+/// Executable specification of [`KvPrefixCache`] semantics: a bounded
+/// MRU-first list — probes and inserts both promote to the front, inserts
+/// at capacity evict the back.
+#[derive(Clone, Debug)]
+pub struct CacheModel {
+    cap: usize,
+    /// MRU-first `(window index, next token)`.
+    entries: Vec<(usize, i32)>,
+}
+
+impl CacheModel {
+    pub fn new(capacity: usize) -> Self {
+        Self { cap: capacity.max(1), entries: Vec::new() }
+    }
+
+    pub fn apply(&mut self, op: CacheOp) -> CacheObs {
+        match op {
+            CacheOp::Probe(w) => match self.entries.iter().position(|&(e, _)| e == w) {
+                Some(i) => {
+                    let e = self.entries.remove(i);
+                    self.entries.insert(0, e);
+                    CacheObs::Hit(e.1)
+                }
+                None => CacheObs::Miss,
+            },
+            CacheOp::Insert(w, tok) => {
+                if let Some(i) = self.entries.iter().position(|&(e, _)| e == w) {
+                    self.entries.remove(i);
+                    self.entries.insert(0, (w, tok));
+                    return CacheObs::Inserted(0);
+                }
+                let mut evicted = 0;
+                if self.entries.len() >= self.cap {
+                    self.entries.pop();
+                    evicted = 1;
+                }
+                self.entries.insert(0, (w, tok));
+                CacheObs::Inserted(evicted)
+            }
+        }
+    }
+}
+
+/// System-under-test seam for the cache model.
+pub trait CacheSut {
+    fn apply(&mut self, op: CacheOp, windows: &[Vec<i32>]) -> CacheObs;
+}
+
+impl CacheSut for KvPrefixCache {
+    fn apply(&mut self, op: CacheOp, windows: &[Vec<i32>]) -> CacheObs {
+        match op {
+            CacheOp::Probe(w) => {
+                let win = &windows[w];
+                match self.probe(hash_tokens(win), win) {
+                    Some(idx) => CacheObs::Hit(self.peek(idx).1),
+                    None => CacheObs::Miss,
+                }
+            }
+            CacheOp::Insert(w, tok) => {
+                let win = windows[w].clone();
+                let kv = KvRowState { k: vec![w as f32], v: vec![tok as f32] };
+                CacheObs::Inserted(self.insert(hash_tokens(&win), win, kv, tok))
+            }
+        }
+    }
+}
+
+/// First disagreement between a cache SUT and [`CacheModel`].
+#[derive(Clone, Debug)]
+pub struct CacheDivergence {
+    /// The op sequence that exposed it.
+    pub sequence: Vec<CacheOp>,
+    /// Index into `sequence` of the diverging op.
+    pub step: usize,
+    pub expected: CacheObs,
+    pub actual: CacheObs,
+}
+
+/// Exhaustively run every length-`depth` sequence over `alphabet` against a
+/// fresh SUT and a fresh [`CacheModel`], comparing observations step by
+/// step. Returns `(sequences checked, first divergence)`.
+///
+/// The window table must be collision-free under [`hash_tokens`] for the
+/// index-keyed model to match the hash-keyed cache — drivers assert this
+/// before calling.
+pub fn check_cache_sequences<S: CacheSut>(
+    capacity: usize,
+    windows: &[Vec<i32>],
+    alphabet: &[CacheOp],
+    depth: usize,
+    mk: &dyn Fn() -> S,
+) -> (usize, Option<CacheDivergence>) {
+    let mut checked = 0usize;
+    let mut seq = vec![0usize; depth]; // odometer over alphabet indices
+    loop {
+        checked += 1;
+        let ops: Vec<CacheOp> = seq.iter().map(|&i| alphabet[i]).collect();
+        let mut model = CacheModel::new(capacity);
+        let mut sut = mk();
+        for (step, &op) in ops.iter().enumerate() {
+            let expected = model.apply(op);
+            let actual = sut.apply(op, windows);
+            if expected != actual {
+                return (
+                    checked,
+                    Some(CacheDivergence { sequence: ops, step, expected, actual }),
+                );
+            }
+        }
+        // advance the odometer
+        let mut d = 0;
+        loop {
+            if d == depth {
+                return (checked, None);
+            }
+            seq[d] += 1;
+            if seq[d] < alphabet.len() {
+                break;
+            }
+            seq[d] = 0;
+            d += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_model_matches_documented_semantics() {
+        let mut m = QueueModel::new(2);
+        assert_eq!(m.apply(QueueOp::Push(1, false)), QueueObs::Pushed);
+        assert_eq!(m.apply(QueueOp::Push(2, true)), QueueObs::Pushed);
+        assert_eq!(m.apply(QueueOp::Push(3, false)), QueueObs::Full(3));
+        assert_eq!(m.apply(QueueOp::TryPop), QueueObs::Item(2), "high first");
+        assert_eq!(m.apply(QueueOp::TryPopHigh), QueueObs::Empty);
+        assert_eq!(m.apply(QueueOp::Close), QueueObs::Drained(vec![1]));
+        assert_eq!(m.apply(QueueOp::Push(4, false)), QueueObs::Closed(4));
+        assert!(m.ready(QueueOp::PopBlocking), "closed queue never blocks");
+        assert_eq!(m.apply(QueueOp::PopBlocking), QueueObs::Woke(None));
+    }
+
+    #[test]
+    fn pop_blocking_not_ready_on_empty_open_queue() {
+        let m = QueueModel::new(1);
+        assert!(!m.ready(QueueOp::PopBlocking));
+        assert!(m.ready(QueueOp::TryPop), "non-blocking ops are always ready");
+    }
+
+    #[test]
+    fn cache_model_promotes_on_probe_and_evicts_lru() {
+        let mut m = CacheModel::new(2);
+        assert_eq!(m.apply(CacheOp::Insert(0, 10)), CacheObs::Inserted(0));
+        assert_eq!(m.apply(CacheOp::Insert(1, 11)), CacheObs::Inserted(0));
+        // probe 0 promotes it, so inserting 2 evicts 1 (LRU), not 0
+        assert_eq!(m.apply(CacheOp::Probe(0)), CacheObs::Hit(10));
+        assert_eq!(m.apply(CacheOp::Insert(2, 12)), CacheObs::Inserted(1));
+        assert_eq!(m.apply(CacheOp::Probe(1)), CacheObs::Miss);
+        assert_eq!(m.apply(CacheOp::Probe(0)), CacheObs::Hit(10));
+    }
+
+    #[test]
+    fn explorer_counts_interleavings_of_independent_pushes() {
+        // 3 threads x 1 push, no blocking: 3! = 6 schedules, no deadlocks.
+        let threads = vec![
+            vec![QueueOp::Push(1, false)],
+            vec![QueueOp::Push(2, false)],
+            vec![QueueOp::Push(3, true)],
+        ];
+        let report = explore_queue(4, &threads, &|| BoundedQueue::new(4));
+        assert_eq!(report.schedules, 6);
+        assert_eq!(report.deadlocks, 0);
+        assert!(report.divergence.is_none(), "{:?}", report.divergence);
+    }
+
+    #[test]
+    fn explorer_reports_deadlock_for_unwakeable_pop() {
+        let threads = vec![vec![QueueOp::PopBlocking]];
+        let report = explore_queue(1, &threads, &|| BoundedQueue::new(1));
+        assert_eq!(report.schedules, 0);
+        assert_eq!(report.deadlocks, 1);
+        assert!(report.divergence.is_none());
+    }
+}

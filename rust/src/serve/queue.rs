@@ -3,8 +3,8 @@
 //! backpressure to callers instead of buffering unboundedly, and condvar
 //! parking so idle workers block instead of spinning.
 
+use crate::serve::sync::{Condvar, LockRank, Mutex};
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
 
 /// Why a non-blocking `push` did not enqueue. The item is handed back so the
 /// caller can resolve it (e.g. complete the request with an error).
@@ -42,11 +42,10 @@ pub struct BoundedQueue<T> {
 impl<T> BoundedQueue<T> {
     pub fn new(capacity: usize) -> Self {
         Self {
-            inner: Mutex::new(Inner {
-                high: VecDeque::new(),
-                normal: VecDeque::new(),
-                closed: false,
-            }),
+            inner: Mutex::new(
+                LockRank::QueueInner,
+                Inner { high: VecDeque::new(), normal: VecDeque::new(), closed: false },
+            ),
             cv: Condvar::new(),
             capacity: capacity.max(1),
         }
@@ -57,7 +56,7 @@ impl<T> BoundedQueue<T> {
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().len()
+        self.inner.lock_or_poisoned().len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -67,7 +66,7 @@ impl<T> BoundedQueue<T> {
     /// Non-blocking enqueue; never waits for space (bounded = explicit
     /// backpressure, not hidden latency).
     pub fn push(&self, item: T, high_priority: bool) -> Result<(), PushError<T>> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock_or_poisoned();
         if inner.closed {
             return Err(PushError::Closed(item));
         }
@@ -87,20 +86,20 @@ impl<T> BoundedQueue<T> {
     /// Pop without blocking (used by workers topping up free slots between
     /// decode steps).
     pub fn try_pop(&self) -> Option<T> {
-        self.inner.lock().unwrap().pop()
+        self.inner.lock_or_poisoned().pop()
     }
 
     /// Pop from the high band only, without blocking. Chunked admission
     /// uses this to let High-priority work bypass the per-boundary
     /// `join_chunk` cap that paces Normal admissions.
     pub fn try_pop_high(&self) -> Option<T> {
-        self.inner.lock().unwrap().high.pop_front()
+        self.inner.lock_or_poisoned().high.pop_front()
     }
 
     /// Block until an item is available. `None` means the queue was closed
     /// and fully drained — the worker should exit.
     pub fn pop_blocking(&self) -> Option<T> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock_or_poisoned();
         loop {
             if let Some(item) = inner.pop() {
                 return Some(item);
@@ -108,7 +107,7 @@ impl<T> BoundedQueue<T> {
             if inner.closed {
                 return None;
             }
-            inner = self.cv.wait(inner).unwrap();
+            inner = self.cv.wait(inner);
         }
     }
 
@@ -116,7 +115,7 @@ impl<T> BoundedQueue<T> {
     /// capacity immediately (cancelled/expired requests must not block
     /// admission while they wait for a pop). Order within bands is kept.
     pub fn drain_where(&self, mut pred: impl FnMut(&T) -> bool) -> Vec<T> {
-        let mut guard = self.inner.lock().unwrap();
+        let mut guard = self.inner.lock_or_poisoned();
         let inner = &mut *guard;
         // fast path: no matches → no band rebuild under the lock
         if !inner.high.iter().any(|x| pred(x)) && !inner.normal.iter().any(|x| pred(x)) {
@@ -140,7 +139,7 @@ impl<T> BoundedQueue<T> {
     /// Close the queue, waking every parked worker, and hand back whatever
     /// was still enqueued so the caller can resolve those requests.
     pub fn close(&self) -> Vec<T> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock_or_poisoned();
         inner.closed = true;
         let mut left: Vec<T> = inner.high.drain(..).collect();
         left.extend(inner.normal.drain(..));
@@ -202,6 +201,20 @@ mod tests {
         assert_eq!(q.try_pop_high(), None, "normal entries are not visible");
         assert_eq!(q.len(), 1);
         assert_eq!(q.try_pop(), Some("n1"));
+    }
+
+    #[test]
+    fn try_pop_high_after_close_is_none() {
+        let q = BoundedQueue::new(4);
+        q.push("h", true).unwrap();
+        q.push("n", false).unwrap();
+        assert_eq!(q.close(), vec!["h", "n"], "close hands everything back");
+        assert_eq!(q.try_pop_high(), None, "the high band was drained by close");
+        assert_eq!(q.try_pop(), None);
+        assert!(q.is_empty());
+        // a second close stays empty and is harmless
+        assert!(q.close().is_empty());
+        assert_eq!(q.try_pop_high(), None);
     }
 
     #[test]

@@ -16,10 +16,11 @@ use crate::runtime::ArtifactDir;
 use crate::serve::engine;
 use crate::serve::queue::{BoundedQueue, PushError};
 use crate::serve::slots;
+use crate::serve::sync::{
+    self, Arc, channel, Countdown, Counter, Flag, Gauge, JoinHandle, LockRank, Mutex, Receiver,
+    Sender,
+};
 use anyhow::{Context, Result};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 // ---------------------------------------------------------------------------
@@ -114,15 +115,15 @@ pub enum StreamEvent {
 /// Clonable cancel switch detached from the stream (so one thread can wait
 /// while another cancels).
 #[derive(Clone)]
-pub struct CancelHandle(Arc<AtomicBool>);
+pub struct CancelHandle(Arc<Flag>);
 
 impl CancelHandle {
     pub fn cancel(&self) {
-        self.0.store(true, Ordering::SeqCst);
+        self.0.set();
     }
 
     pub fn is_cancelled(&self) -> bool {
-        self.0.load(Ordering::SeqCst)
+        self.0.get()
     }
 }
 
@@ -130,7 +131,7 @@ impl CancelHandle {
 /// and resolves to a [`Completion`].
 pub struct TokenStream {
     rx: Receiver<StreamEvent>,
-    cancel: Arc<AtomicBool>,
+    cancel: Arc<Flag>,
     done: Option<Completion>,
     disconnected: bool,
 }
@@ -160,7 +161,7 @@ impl TokenStream {
     /// Request cancellation; the engine vacates the row at the next decode
     /// step and the stream resolves with [`FinishReason::Cancelled`].
     pub fn cancel(&self) {
-        self.cancel.store(true, Ordering::SeqCst);
+        self.cancel.set();
     }
 
     /// A clonable cancel switch for this request.
@@ -197,7 +198,7 @@ pub struct QueuedRequest {
     /// Stream events (tokens, then the terminal completion) go out here.
     pub tx: Sender<StreamEvent>,
     /// Cooperative cancel flag shared with the [`TokenStream`].
-    pub cancel: Arc<AtomicBool>,
+    pub cancel: Arc<Flag>,
 }
 
 // ---------------------------------------------------------------------------
@@ -245,22 +246,22 @@ pub struct ServiceStats {
 
 #[derive(Default)]
 pub(crate) struct Counters {
-    pub(crate) submitted: AtomicU64,
-    pub(crate) completed: AtomicU64,
-    pub(crate) cancelled: AtomicU64,
-    pub(crate) expired: AtomicU64,
-    pub(crate) rejected: AtomicU64,
-    pub(crate) failed: AtomicU64,
-    pub(crate) decoded_tokens: AtomicU64,
-    pub(crate) decode_nanos: AtomicU64,
-    pub(crate) prefill_calls: AtomicU64,
-    pub(crate) prefills_elided: AtomicU64,
-    pub(crate) prefill_nanos: AtomicU64,
-    pub(crate) kv_cache_hits: AtomicU64,
-    pub(crate) kv_cache_misses: AtomicU64,
-    pub(crate) kv_cache_evictions: AtomicU64,
-    pub(crate) active: AtomicUsize,
-    pub(crate) live_workers: AtomicUsize,
+    pub(crate) submitted: Counter,
+    pub(crate) completed: Counter,
+    pub(crate) cancelled: Counter,
+    pub(crate) expired: Counter,
+    pub(crate) rejected: Counter,
+    pub(crate) failed: Counter,
+    pub(crate) decoded_tokens: Counter,
+    pub(crate) decode_nanos: Counter,
+    pub(crate) prefill_calls: Counter,
+    pub(crate) prefills_elided: Counter,
+    pub(crate) prefill_nanos: Counter,
+    pub(crate) kv_cache_hits: Counter,
+    pub(crate) kv_cache_misses: Counter,
+    pub(crate) kv_cache_evictions: Counter,
+    pub(crate) active: Gauge,
+    pub(crate) live_workers: Countdown,
 }
 
 /// State shared between the submit side and every worker thread.
@@ -290,7 +291,7 @@ pub trait InferenceService {
 pub struct ServicePool {
     cfg: ServeConfig,
     shared: Arc<Shared>,
-    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
 }
 
 impl ServicePool {
@@ -327,7 +328,7 @@ impl ServicePool {
             queue: BoundedQueue::new(cfg.queue_depth),
             counters: Counters::default(),
         });
-        shared.counters.live_workers.store(cfg.workers, Ordering::SeqCst);
+        shared.counters.live_workers.set(cfg.workers);
         let factory = Arc::new(factory);
         let mut handles = Vec::new();
         for w in 0..cfg.workers {
@@ -337,33 +338,26 @@ impl ServicePool {
                 kv_cache_entries: cfg.kv_cache_entries,
                 join_chunk: cfg.join_chunk,
             };
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("cola-serve-{w}"))
-                    .spawn(move || {
-                        let res = (*factory)(w).and_then(|mut backend| {
-                            engine::run_worker(backend.as_mut(), &shared, &eopts)
-                        });
-                        if let Err(e) = res {
-                            metrics::log_info(&format!(
-                                "serve worker {w} exited with error: {e:#}"
-                            ));
-                        }
-                        // Last worker out closes the shop: otherwise a pool
-                        // whose workers all died (e.g. artifact compile
-                        // failure) would leave queued clients blocked forever
-                        // and submitters spinning on QueueFull.
-                        if shared.counters.live_workers.fetch_sub(1, Ordering::SeqCst) == 1 {
-                            let now = Instant::now();
-                            for req in shared.queue.close() {
-                                slots::complete_unstarted(req, FinishReason::Error, now);
-                                shared.counters.failed.fetch_add(1, Ordering::Relaxed);
-                            }
-                        }
-                    })?,
-            );
+            handles.push(sync::spawn_named(&format!("cola-serve-{w}"), move || {
+                let res = (*factory)(w)
+                    .and_then(|mut backend| engine::run_worker(backend.as_mut(), &shared, &eopts));
+                if let Err(e) = res {
+                    metrics::log_info(&format!("serve worker {w} exited with error: {e:#}"));
+                }
+                // Last worker out closes the shop: otherwise a pool whose
+                // workers all died (e.g. artifact compile failure) would
+                // leave queued clients blocked forever and submitters
+                // spinning on QueueFull.
+                if shared.counters.live_workers.arrive() {
+                    let now = Instant::now();
+                    for req in shared.queue.close() {
+                        slots::complete_unstarted(req, FinishReason::Error, now);
+                        shared.counters.failed.add(1);
+                    }
+                }
+            })?);
         }
-        Ok(Self { cfg, shared, workers: Mutex::new(handles) })
+        Ok(Self { cfg, shared, workers: Mutex::new(LockRank::PoolWorkers, handles) })
     }
 
     /// The configuration this pool was started with.
@@ -391,7 +385,7 @@ impl ServicePool {
             match self.submit(prompt.clone(), opts.clone()) {
                 Ok(s) => return Ok(s),
                 Err(SubmitError::QueueFull) => {
-                    std::thread::sleep(Duration::from_millis(1));
+                    sync::sleep(Duration::from_millis(1));
                 }
                 Err(e) => anyhow::bail!("submit failed: {e}"),
             }
@@ -403,7 +397,7 @@ impl InferenceService for ServicePool {
     fn submit(&self, prompt: Vec<i32>, opts: SubmitOptions) -> Result<TokenStream, SubmitError> {
         let now = Instant::now();
         let (tx, rx) = channel();
-        let cancel = Arc::new(AtomicBool::new(false));
+        let cancel = Arc::new(Flag::new());
         let deadline = opts
             .deadline
             .or_else(|| {
@@ -422,11 +416,11 @@ impl InferenceService for ServicePool {
         };
         match self.shared.queue.push(req, opts.priority == Priority::High) {
             Ok(()) => {
-                self.shared.counters.submitted.fetch_add(1, Ordering::Relaxed);
+                self.shared.counters.submitted.add(1);
                 Ok(TokenStream { rx, cancel, done: None, disconnected: false })
             }
             Err(PushError::Full(_)) => {
-                self.shared.counters.rejected.fetch_add(1, Ordering::Relaxed);
+                self.shared.counters.rejected.add(1);
                 Err(SubmitError::QueueFull)
             }
             Err(PushError::Closed(_)) => Err(SubmitError::ShuttingDown),
@@ -435,31 +429,31 @@ impl InferenceService for ServicePool {
 
     fn stats(&self) -> ServiceStats {
         let c = &self.shared.counters;
-        let decode_secs = c.decode_nanos.load(Ordering::Relaxed) as f64 * 1e-9;
-        let decoded = c.decoded_tokens.load(Ordering::Relaxed);
+        let decode_secs = c.decode_nanos.get() as f64 * 1e-9;
+        let decoded = c.decoded_tokens.get();
         ServiceStats {
             workers: self.cfg.workers,
             queue_depth: self.shared.queue.len(),
             queue_capacity: self.shared.queue.capacity(),
-            active: c.active.load(Ordering::Relaxed),
-            submitted: c.submitted.load(Ordering::Relaxed),
-            completed: c.completed.load(Ordering::Relaxed),
-            cancelled: c.cancelled.load(Ordering::Relaxed),
-            expired: c.expired.load(Ordering::Relaxed),
-            rejected: c.rejected.load(Ordering::Relaxed),
-            failed: c.failed.load(Ordering::Relaxed),
+            active: c.active.get(),
+            submitted: c.submitted.get(),
+            completed: c.completed.get(),
+            cancelled: c.cancelled.get(),
+            expired: c.expired.get(),
+            rejected: c.rejected.get(),
+            failed: c.failed.get(),
             decoded_tokens: decoded,
             decode_tokens_per_sec: if decode_secs > 0.0 {
                 decoded as f64 / decode_secs
             } else {
                 0.0
             },
-            prefill_calls: c.prefill_calls.load(Ordering::Relaxed),
-            prefills_elided: c.prefills_elided.load(Ordering::Relaxed),
-            prefill_nanos: c.prefill_nanos.load(Ordering::Relaxed),
-            kv_cache_hits: c.kv_cache_hits.load(Ordering::Relaxed),
-            kv_cache_misses: c.kv_cache_misses.load(Ordering::Relaxed),
-            kv_cache_evictions: c.kv_cache_evictions.load(Ordering::Relaxed),
+            prefill_calls: c.prefill_calls.get(),
+            prefills_elided: c.prefills_elided.get(),
+            prefill_nanos: c.prefill_nanos.get(),
+            kv_cache_hits: c.kv_cache_hits.get(),
+            kv_cache_misses: c.kv_cache_misses.get(),
+            kv_cache_evictions: c.kv_cache_evictions.get(),
         }
     }
 
@@ -468,9 +462,9 @@ impl InferenceService for ServicePool {
         let shed = self.shared.queue.close();
         for req in shed {
             slots::complete_unstarted(req, FinishReason::Cancelled, now);
-            self.shared.counters.cancelled.fetch_add(1, Ordering::Relaxed);
+            self.shared.counters.cancelled.add(1);
         }
-        let handles: Vec<_> = self.workers.lock().unwrap().drain(..).collect();
+        let handles: Vec<_> = self.workers.lock_or_poisoned().drain(..).collect();
         for h in handles {
             let _ = h.join();
         }

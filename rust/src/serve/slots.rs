@@ -12,7 +12,6 @@
 
 use crate::serve::kvcache;
 use crate::serve::service::{Completion, FinishReason, QueuedRequest, StreamEvent, Timing};
-use std::sync::atomic::Ordering;
 use std::time::Instant;
 
 /// A request occupying one slot.
@@ -207,7 +206,7 @@ impl SlotTable {
         let (mut cancelled, mut expired) = (0, 0);
         for i in 0..self.slots.len() {
             let Some(ent) = self.slots[i].as_ref() else { continue };
-            if ent.req.cancel.load(Ordering::Relaxed) {
+            if ent.req.cancel.poll() {
                 self.finish(i, FinishReason::Cancelled, now);
                 cancelled += 1;
             } else if ent.req.deadline.is_some_and(|d| now >= d) {
@@ -232,7 +231,13 @@ impl SlotTable {
     }
 
     fn finish(&mut self, i: usize, reason: FinishReason, now: Instant) {
-        let ent = self.slots[i].take().expect("finish() on an occupied slot");
+        let Some(ent) = self.slots[i].take() else {
+            // Internal invariant: every caller checked occupancy first. A
+            // vacant row here is a bookkeeping bug, but panicking would take
+            // the whole worker (and its other slots) down with it.
+            debug_assert!(false, "finish() on a vacant slot {i}");
+            return;
+        };
         let timing = Timing {
             queued: ent.admitted_at.saturating_duration_since(ent.req.submitted_at),
             first_token: ent
@@ -267,7 +272,7 @@ pub fn complete_unstarted(req: QueuedRequest, reason: FinishReason, now: Instant
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicBool;
+    use crate::serve::sync::Flag;
     use std::sync::mpsc::{channel, Receiver};
     use std::sync::Arc;
     use std::time::Duration;
@@ -277,9 +282,9 @@ mod tests {
         max_new: usize,
         stop: Vec<i32>,
         deadline: Option<Instant>,
-    ) -> (QueuedRequest, Receiver<StreamEvent>, Arc<AtomicBool>) {
+    ) -> (QueuedRequest, Receiver<StreamEvent>, Arc<Flag>) {
         let (tx, rx) = channel();
-        let cancel = Arc::new(AtomicBool::new(false));
+        let cancel = Arc::new(Flag::new());
         let req = QueuedRequest {
             prompt,
             max_new_tokens: max_new,
@@ -363,7 +368,7 @@ mod tests {
         tbl.admit(req, now).unwrap();
         tbl.push_token(0, 3, now);
         assert_eq!(tbl.sweep(now), (0, 0), "no flags set yet");
-        cancel.store(true, Ordering::Relaxed);
+        cancel.set();
         assert_eq!(tbl.sweep(now), (1, 0));
         assert_eq!(tbl.active(), 0);
         let (_, done) = drain(&rx);

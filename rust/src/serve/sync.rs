@@ -1,0 +1,407 @@
+//! The serving tier's single seam over `std::sync` / `std::thread` — a
+//! loom-style shim plus the repo's concurrency policies in one place.
+//!
+//! Every runtime module under `serve/` routes its Mutex/Condvar/atomic/
+//! thread usage through this module (`cola lint`'s `sync-shim` rule makes
+//! that mechanical): swapping these definitions for a model checker's — or
+//! instrumenting them — never touches a call site again.
+//!
+//! Three policies live here rather than at call sites:
+//!
+//! - **Poison policy** ([`Mutex::lock_or_poisoned`]): serving data guarded
+//!   by these locks (queue bands, worker handles) is structurally valid at
+//!   every unlock point — mutations are small and self-contained — so a
+//!   panicked peer cannot leave it half-written in a way later operations
+//!   would misread. We therefore take the poisoned guard and continue
+//!   (`PoisonError::into_inner`) instead of propagating panics across
+//!   threads; the alternative turns one worker's bug into a pool-wide
+//!   abort while clients are still parked on stream channels.
+//! - **Lock hierarchy** ([`LockRank`]): locks are ranked, and nested
+//!   acquisition must follow strictly increasing rank. `cola lint` checks
+//!   this statically per function; debug builds also enforce it at runtime
+//!   with a thread-local stack of held ranks, so an inversion panics in
+//!   tests long before it deadlocks in production.
+//! - **Ordering policy**: counters and gauges that only feed stats
+//!   snapshots use `Relaxed` (encapsulated in [`Counter`] / [`Gauge`]);
+//!   anything that gates control flow — cancel flags, worker liveness —
+//!   uses `SeqCst` ([`Flag::set`]/[`Flag::get`], [`Countdown`]). The one
+//!   deliberate exception, [`Flag::poll`], is documented at its definition.
+
+use std::sync::PoisonError;
+use std::time::Duration;
+
+pub use std::sync::mpsc::{channel, Receiver, Sender};
+pub use std::sync::Arc;
+pub use std::thread::JoinHandle;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+// ---------------------------------------------------------------------------
+// Lock hierarchy
+// ---------------------------------------------------------------------------
+
+/// Rank of every lock in the serving tier. Nested acquisition must follow
+/// strictly increasing rank; acquiring an equal or lower rank while holding
+/// one is an inversion (`cola lint` rule `lock-hierarchy`, plus the
+/// debug-build runtime check below). Keep this table in sync with
+/// `analysis::rules::LOCK_CLASSES` and `docs/concurrency.md` (the lint
+/// table also ranks locks outside the serve tier — e.g. the runtime's
+/// compile cache — which take `std::sync::Mutex` directly and have no
+/// variant here).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LockRank {
+    /// `ServicePool::workers` — join handles, touched only at shutdown.
+    PoolWorkers = 0,
+    /// `BoundedQueue::inner` — the admission queue's bands.
+    QueueInner = 1,
+    /// Reserved for the ROADMAP's sharded pool-level KV cache.
+    KvShard = 2,
+}
+
+#[cfg(debug_assertions)]
+mod rank_check {
+    use super::LockRank;
+    use std::cell::RefCell;
+
+    thread_local! {
+        /// Ranks this thread currently holds, in acquisition order.
+        static HELD: RefCell<Vec<LockRank>> = const { RefCell::new(Vec::new()) };
+    }
+
+    pub(super) fn acquire(rank: LockRank) {
+        HELD.with(|h| {
+            let mut h = h.borrow_mut();
+            if let Some(&top) = h.last() {
+                if top >= rank {
+                    // lint: allow(no-panic): debug-only lock-order check — the
+                    // whole point is to fail loudly in tests, not deadlock later
+                    panic!(
+                        "lock-order violation: acquiring {rank:?} while holding {top:?} \
+                         (ranks must strictly increase; see docs/concurrency.md)"
+                    );
+                }
+            }
+            h.push(rank);
+        });
+    }
+
+    pub(super) fn release(rank: LockRank) {
+        HELD.with(|h| {
+            let mut h = h.borrow_mut();
+            if let Some(pos) = h.iter().rposition(|&r| r == rank) {
+                h.remove(pos);
+            }
+        });
+    }
+}
+
+#[cfg(not(debug_assertions))]
+mod rank_check {
+    use super::LockRank;
+    #[inline(always)]
+    pub(super) fn acquire(_rank: LockRank) {}
+    #[inline(always)]
+    pub(super) fn release(_rank: LockRank) {}
+}
+
+// ---------------------------------------------------------------------------
+// Mutex + Condvar
+// ---------------------------------------------------------------------------
+
+/// A ranked mutex with the serve tier's poison policy baked in. See module
+/// docs for both policies.
+pub struct Mutex<T> {
+    rank: LockRank,
+    inner: std::sync::Mutex<T>,
+}
+
+impl<T> Mutex<T> {
+    pub fn new(rank: LockRank, value: T) -> Self {
+        Self { rank, inner: std::sync::Mutex::new(value) }
+    }
+
+    /// Acquire the lock, taking the data even if a previous holder panicked
+    /// (poison policy: serve-tier critical sections leave the data valid at
+    /// every unlock point, so continuing is safe; aborting the pool is not).
+    /// Debug builds assert the lock hierarchy on entry.
+    pub fn lock_or_poisoned(&self) -> MutexGuard<'_, T> {
+        // Check order *before* blocking: an inversion is a bug even on the
+        // runs where the timing happens not to deadlock.
+        rank_check::acquire(self.rank);
+        let g = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        MutexGuard { g: std::mem::ManuallyDrop::new(g), rank: self.rank }
+    }
+}
+
+/// Guard returned by [`Mutex::lock_or_poisoned`]; releases the lock and pops
+/// the debug rank stack on drop.
+pub struct MutexGuard<'a, T> {
+    /// `ManuallyDrop` so [`Condvar::wait`] can move the std guard out
+    /// without running our `Drop` (the rank entry must survive the park:
+    /// the lock is reacquired before `wait` returns).
+    g: std::mem::ManuallyDrop<std::sync::MutexGuard<'a, T>>,
+    rank: LockRank,
+}
+
+impl<T> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &**self.g
+    }
+}
+
+impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut **self.g
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        // SAFETY: `g` is still live here — the only place it is taken out
+        // (`Condvar::wait`) forgets the guard instead of dropping it.
+        unsafe { std::mem::ManuallyDrop::drop(&mut self.g) };
+        rank_check::release(self.rank);
+    }
+}
+
+/// Condition variable paired with [`Mutex`]; waits tolerate poisoning under
+/// the same policy as [`Mutex::lock_or_poisoned`].
+pub struct Condvar(std::sync::Condvar);
+
+impl Default for Condvar {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Condvar {
+    pub fn new() -> Self {
+        Self(std::sync::Condvar::new())
+    }
+
+    /// Atomically release the lock and park; the guard is reacquired before
+    /// this returns. The debug rank entry stays on the stack across the
+    /// park — the thread still logically holds the lock's place in its
+    /// acquisition order, and no code runs on this thread while parked.
+    pub fn wait<'a, T>(&self, mut guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+        let rank = guard.rank;
+        // SAFETY: `guard` is forgotten immediately below, so its `Drop`
+        // (which would drop `g` a second time and pop the rank) never runs.
+        let std_g = unsafe { std::mem::ManuallyDrop::take(&mut guard.g) };
+        std::mem::forget(guard);
+        let std_g = self.0.wait(std_g).unwrap_or_else(PoisonError::into_inner);
+        MutexGuard { g: std::mem::ManuallyDrop::new(std_g), rank }
+    }
+
+    pub fn notify_one(&self) {
+        self.0.notify_one();
+    }
+
+    pub fn notify_all(&self) {
+        self.0.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Atomics with their ordering policy attached
+// ---------------------------------------------------------------------------
+
+/// Monotonic event counter for stats snapshots.
+///
+/// relaxed: counters are independent tallies read by `stats()` snapshots;
+/// no other memory is published through them, so cross-counter skew within
+/// one snapshot is acceptable and no ordering stronger than `Relaxed` buys
+/// anything.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Self {
+        Self(AtomicU64::new(0))
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Occupancy gauge (goes up and down) for stats snapshots.
+///
+/// relaxed: same policy as [`Counter`] — the gauge feeds snapshots only and
+/// publishes no other memory.
+#[derive(Default)]
+pub struct Gauge(AtomicUsize);
+
+impl Gauge {
+    pub const fn new() -> Self {
+        Self(AtomicUsize::new(0))
+    }
+
+    pub fn add(&self, n: usize) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn sub(&self, n: usize) {
+        self.0.fetch_sub(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> usize {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// One-way boolean used for cooperative cancellation: set once, read often.
+#[derive(Default)]
+pub struct Flag(AtomicBool);
+
+impl Flag {
+    pub const fn new() -> Self {
+        Self(AtomicBool::new(false))
+    }
+
+    /// Raise the flag (SeqCst: the cancel must be visible to any worker
+    /// that subsequently observes the request, on every path).
+    pub fn set(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    /// Read with full ordering — the submit/shutdown paths use this.
+    pub fn get(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+
+    /// Hot-loop read for the decode sweep.
+    ///
+    /// relaxed: cooperative cancellation only needs *eventual* visibility —
+    /// a sweep that misses a just-raised flag catches it one decode step
+    /// later, which is within the cancel latency the API already promises
+    /// ("the engine vacates the row at the next decode step").
+    pub fn poll(&self) -> bool {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Countdown for last-one-out detection (worker liveness). Each participant
+/// calls [`arrive`](Self::arrive) exactly once; the call that brings the
+/// count to zero returns `true` and runs the epilogue (closing the queue,
+/// failing stranded requests).
+#[derive(Default)]
+pub struct Countdown(AtomicUsize);
+
+impl Countdown {
+    pub const fn new() -> Self {
+        Self(AtomicUsize::new(0))
+    }
+
+    /// Set the number of participants before any of them starts.
+    pub fn set(&self, n: usize) {
+        self.0.store(n, Ordering::SeqCst);
+    }
+
+    /// Record this participant's exit; `true` for the last one out. SeqCst
+    /// so exactly one caller wins and it observes every peer's prior writes.
+    pub fn arrive(&self) -> bool {
+        self.0.fetch_sub(1, Ordering::SeqCst) == 1
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Threads
+// ---------------------------------------------------------------------------
+
+/// Spawn a named thread (the seam for all serve-tier spawns).
+pub fn spawn_named<F>(name: &str, f: F) -> std::io::Result<JoinHandle<()>>
+where
+    F: FnOnce() + Send + 'static,
+{
+    std::thread::Builder::new().name(name.to_string()).spawn(f)
+}
+
+/// Sleep the current thread (the seam for all serve-tier sleeps).
+pub fn sleep(d: Duration) {
+    std::thread::sleep(d);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mutex_roundtrips_and_guards_deref() {
+        let m = Mutex::new(LockRank::QueueInner, 41);
+        *m.lock_or_poisoned() += 1;
+        assert_eq!(*m.lock_or_poisoned(), 42);
+    }
+
+    #[test]
+    fn lock_or_poisoned_survives_a_panicked_holder() {
+        let m = Arc::new(Mutex::new(LockRank::QueueInner, 7));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock_or_poisoned();
+            panic!("poison the lock");
+        })
+        .join();
+        assert_eq!(*m.lock_or_poisoned(), 7, "data survives the poisoned holder");
+    }
+
+    #[test]
+    fn condvar_wait_wakes_and_returns_the_guard() {
+        let pair = Arc::new((Mutex::new(LockRank::QueueInner, false), Condvar::new()));
+        let p2 = pair.clone();
+        let waker = std::thread::spawn(move || {
+            *p2.0.lock_or_poisoned() = true;
+            p2.1.notify_one();
+        });
+        let mut g = pair.0.lock_or_poisoned();
+        while !*g {
+            g = pair.1.wait(g);
+        }
+        drop(g);
+        waker.join().unwrap();
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn rank_inversion_panics_in_debug_builds() {
+        let outer = Mutex::new(LockRank::QueueInner, ());
+        let inner = Mutex::new(LockRank::PoolWorkers, ());
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = outer.lock_or_poisoned();
+            let _h = inner.lock_or_poisoned(); // rank 0 under rank 1 → inversion
+        }));
+        assert!(caught.is_err(), "acquiring a lower rank under a higher one must panic");
+        // and the correct order passes (the poisoned locks are reusable
+        // thanks to the poison policy)
+        let _g = inner.lock_or_poisoned();
+        let _h = outer.lock_or_poisoned();
+    }
+
+    #[test]
+    fn counters_gauges_flags_countdowns() {
+        let c = Counter::new();
+        c.add(3);
+        c.add(4);
+        assert_eq!(c.get(), 7);
+
+        let g = Gauge::new();
+        g.add(5);
+        g.sub(2);
+        assert_eq!(g.get(), 3);
+
+        let f = Flag::new();
+        assert!(!f.get() && !f.poll());
+        f.set();
+        assert!(f.get() && f.poll());
+
+        let cd = Countdown::new();
+        cd.set(2);
+        assert!(!cd.arrive());
+        assert!(cd.arrive(), "last participant out sees true");
+    }
+}

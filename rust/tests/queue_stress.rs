@@ -191,3 +191,45 @@ fn close_under_contention_conserves_every_item_exactly_once() {
     // and the queue stays closed
     assert!(matches!(q.push((0, 0), false), Err(PushError::Closed(_))));
 }
+
+#[test]
+fn cancel_raised_while_consumer_is_parked_is_discarded_on_wake() {
+    // Deterministic cancel-during-blocked-pop: the consumer parks on an
+    // empty queue, the cancel flag of a not-yet-pushed request is raised
+    // while it is parked, and both that request and a live one are then
+    // pushed. Whatever order the consumer wakes in, it must serve exactly
+    // the live request, discard the cancelled one (the engine's sweep
+    // semantics), and park again until close wakes it with `None`.
+    use cola::serve::sync::Flag;
+    let q: Arc<BoundedQueue<(usize, Arc<Flag>)>> = Arc::new(BoundedQueue::new(4));
+    let consumer = {
+        let q = q.clone();
+        thread::spawn(move || {
+            let (mut served, mut discarded) = (Vec::new(), Vec::new());
+            while let Some((id, cancel)) = q.pop_blocking() {
+                if cancel.poll() {
+                    discarded.push(id);
+                } else {
+                    served.push(id);
+                }
+            }
+            (served, discarded)
+        })
+    };
+    // let the consumer reach pop_blocking and park
+    thread::sleep(Duration::from_millis(10));
+    let dead = Arc::new(Flag::new());
+    let live = Arc::new(Flag::new());
+    dead.set(); // cancelled while the consumer is parked
+    q.push((1, dead), false).unwrap();
+    q.push((2, live), true).unwrap();
+    // drain both, then unblock the final parked pop
+    while !q.is_empty() {
+        thread::sleep(Duration::from_millis(1));
+    }
+    let leftover = q.close();
+    assert!(leftover.is_empty(), "the consumer drained everything");
+    let (served, discarded) = consumer.join().unwrap();
+    assert_eq!(served, vec![2], "only the live request is served");
+    assert_eq!(discarded, vec![1], "the cancelled request is dropped, not decoded");
+}

@@ -7,9 +7,9 @@
 //!
 //! Hermetic: no artifact, no PJRT — the table is pure bookkeeping.
 
+use cola::serve::sync::Flag;
 use cola::serve::{FinishReason, QueuedRequest, SlotTable, StreamEvent};
 use cola::util::rng::Rng;
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -19,9 +19,9 @@ fn mk_req(
     max_new: usize,
     stop: Vec<i32>,
     deadline: Option<Instant>,
-) -> (QueuedRequest, Receiver<StreamEvent>, Arc<AtomicBool>) {
+) -> (QueuedRequest, Receiver<StreamEvent>, Arc<Flag>) {
     let (tx, rx) = channel();
-    let cancel = Arc::new(AtomicBool::new(false));
+    let cancel = Arc::new(Flag::new());
     let req = QueuedRequest {
         prompt,
         max_new_tokens: max_new,
@@ -78,7 +78,7 @@ fn random_op_sequences_keep_invariants_and_resolve_every_request() {
 
         let mut admitted = 0usize;
         let mut resolved_rxs: Vec<Receiver<StreamEvent>> = Vec::new();
-        let mut live: Vec<(usize, Receiver<StreamEvent>, Arc<AtomicBool>)> = Vec::new();
+        let mut live: Vec<(usize, Receiver<StreamEvent>, Arc<Flag>)> = Vec::new();
 
         for step in 0..200 {
             let t = now + Duration::from_millis(step as u64);
@@ -117,7 +117,7 @@ fn random_op_sequences_keep_invariants_and_resolve_every_request() {
                 8 => {
                     if !live.is_empty() {
                         let k = rng.below(live.len());
-                        live[k].2.store(true, Ordering::Relaxed);
+                        live[k].2.set();
                         let (cancelled, expired) = tbl.sweep(t);
                         assert_eq!(expired, 0, "no deadlines in this sequence");
                         assert_eq!(cancelled, 1, "exactly the flagged row vacates");
@@ -173,7 +173,7 @@ fn refill_always_takes_the_lowest_free_slot() {
         let mut freed: Vec<usize> = Vec::new();
         for (i, (cancel, _)) in cancels.iter().enumerate() {
             if rng.below(2) == 0 {
-                cancel.store(true, Ordering::Relaxed);
+                cancel.set();
                 freed.push(i);
             }
         }
@@ -255,7 +255,7 @@ fn sweep_prefers_cancel_over_deadline_and_counts_both() {
     tbl.admit(r0, now).unwrap();
     tbl.admit(r1, now).unwrap();
     tbl.admit(r2, now).unwrap();
-    c0.store(true, Ordering::Relaxed);
+    c0.set();
     assert_eq!(tbl.sweep(now), (1, 1));
     assert_eq!(tbl.occupied(), vec![2], "healthy row survives");
     assert_eq!(drain(&rx0).1, vec![FinishReason::Cancelled]);

@@ -9,6 +9,7 @@
 #   SKIP_CLIPPY=1 scripts/verify.sh   # skip the clippy gate
 #   SKIP_HERMETIC=1 scripts/verify.sh # skip the no-artifact pass
 #   SKIP_SMOKE=1 scripts/verify.sh    # skip the mock-backend serve smoke
+#   SKIP_LINT=1 scripts/verify.sh     # skip cola lint + the interleaving suite
 #
 # Runs from the rust/ crate root regardless of invocation directory.
 set -euo pipefail
@@ -42,6 +43,19 @@ if [ "${SKIP_SMOKE:-0}" != "1" ]; then
     echo "== serve smoke: cargo run --release -- serve --mock =="
     cargo run --release -- serve --mock --requests 48 --distinct 4 \
         --bench-json ../BENCH_serve.json
+fi
+
+if [ "${SKIP_LINT:-0}" != "1" ]; then
+    # Concurrency-correctness gate (docs/concurrency.md): the in-house
+    # static pass over rust/src (panic discipline, SAFETY comments, lock
+    # hierarchy, sync-shim routing) plus the exhaustive interleaving checks
+    # of the serving primitives against their reference models. The
+    # interleaving tests also run inside `cargo test -q` above; this stage
+    # names them so a lint or linearizability break fails loudly on its own.
+    echo "== cola lint =="
+    cargo run --release -- lint
+    echo "== interleaving suite: cargo test -q --test serve_interleave =="
+    cargo test -q --test serve_interleave
 fi
 
 if [ "${SKIP_CLIPPY:-0}" != "1" ]; then
