@@ -1,0 +1,651 @@
+//! Interprocedural lock pass: propagates held-lock sets across the
+//! name-based call graph of [`super::parse`], builds the crate-global
+//! acquired-before relation over the declared lock classes, and reports
+//!
+//! - `lock-cycle` (L007): a cycle in the acquired-before graph, with the
+//!   full witness path (every edge's `file:line` acquisition site);
+//! - `lock-order` (L008): an acquisition whose rank does not exceed the
+//!   rank of a lock held by some *caller* — the interprocedural complement
+//!   of the lexical `lock-hierarchy` rule (same-function inversions stay
+//!   L004 so they are not reported twice);
+//! - `blocking-under-lock` (L009): a blocking operation (`Condvar` wait,
+//!   `sleep`, thread `join`, channel `recv`) reached while any lock is
+//!   held, locally or in a caller. A `Condvar` wait releases the guard
+//!   passed to it, so `cv.wait(inner)` with only `inner` held is clean.
+//!
+//! Held-set propagation is a fixpoint over call edges: if `f` calls `g`
+//! while holding class `A`, then `A` joins `g`'s *context* set, and
+//! transitively its callees'. Each context entry carries a provenance chain
+//! (`file:line` of the acquisition plus every call edge crossed) so a
+//! finding two functions away still prints an actionable witness.
+//!
+//! `serve/sync.rs` is excluded from event collection: the shim implements
+//! ranked locking and its internal std lock sits below the hierarchy.
+
+use super::parse::call_tokens;
+use super::rules::{self, guard_binding, receiver_ident, LOCK_CLASSES};
+use super::scan::find_word;
+use super::{diag, Diagnostic, FileData, Profile, Waivers};
+use std::collections::BTreeMap;
+
+/// Blocking-operation method patterns (matched on blanked code). `.wait(`
+/// also covers `wait_timeout`/`wait_while` via the explicit entries —
+/// substring matching would double-count otherwise, so each is exact.
+const BLOCKING_METHODS: &[(&str, &str)] = &[
+    (".wait(", "Condvar wait"),
+    (".wait_timeout(", "Condvar wait"),
+    (".wait_while(", "Condvar wait"),
+    (".recv(", "channel recv"),
+    (".recv_timeout(", "channel recv"),
+    (".join()", "thread join"),
+];
+
+/// One acquired-before edge, `from` held while `to` is acquired.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LockEdge {
+    /// Class name of the already-held lock.
+    pub from: &'static str,
+    /// Class name being acquired.
+    pub to: &'static str,
+    /// Acquisition site of `to` (`file:line`, 1-based).
+    pub site: String,
+    /// Call-chain witness when `from` is held by a caller (empty when the
+    /// two acquisitions are in the same function).
+    pub via: Vec<String>,
+}
+
+/// The crate-global lock graph, exposed for `--dump-lock-graph` and the
+/// tier-1 non-vacuity assertions.
+#[derive(Debug, Default)]
+pub struct LockGraphInfo {
+    /// Per-class acquisition-site counts, in rank order.
+    pub acquisitions: Vec<(&'static str, usize)>,
+    /// Deduplicated acquired-before edges.
+    pub edges: Vec<LockEdge>,
+    /// Names of functions whose held-lock context is non-empty at entry.
+    pub called_under_lock: Vec<String>,
+}
+
+impl LockGraphInfo {
+    /// Graphviz DOT rendering of the acquired-before graph (all declared
+    /// classes appear as nodes even when isolated, so the rank table and
+    /// the picture stay in sync).
+    pub fn dot(&self) -> String {
+        let mut out = String::from("digraph lock_order {\n    rankdir=LR;\n");
+        for &(recv, rank, class) in LOCK_CLASSES {
+            out.push_str(&format!(
+                "    \"{class}\" [label=\"{class}\\nrank {rank} ({recv})\"];\n"
+            ));
+        }
+        for e in &self.edges {
+            out.push_str(&format!(
+                "    \"{}\" -> \"{}\" [label=\"{}\"];\n",
+                e.from, e.to, e.site
+            ));
+        }
+        out.push_str("}\n");
+        out
+    }
+}
+
+/// A lock event inside one function body.
+#[derive(Debug)]
+enum Event {
+    Acquire {
+        line: usize,
+        /// Index into [`LOCK_CLASSES`].
+        class: usize,
+        /// Bound guard name (`None` = temporary, gone at end of line).
+        binding: Option<String>,
+        /// Brace depth of the acquiring line (lexical release point).
+        depth: usize,
+    },
+    Drop { names: Vec<String> },
+    Call { line: usize, callee: String },
+    Block {
+        line: usize,
+        what: &'static str,
+        /// Guard ident released for the duration (Condvar wait argument).
+        releases: Option<String>,
+    },
+}
+
+/// Per-function event stream plus identity.
+struct FnBody {
+    file: usize,
+    name: String,
+    test_caller: bool,
+    events: Vec<(usize, Vec<Event>)>, // (line, events in column order)
+}
+
+/// Provenance of a context-held lock: where it was acquired and the call
+/// edges crossed to get here.
+#[derive(Debug, Clone)]
+struct Prov {
+    site: String,
+    chain: Vec<String>,
+}
+
+fn class_of(recv: &str) -> Option<usize> {
+    LOCK_CLASSES.iter().position(|&(r, _, _)| r == recv)
+}
+
+/// Extract the ident of a call's first argument (for `cv.wait(guard)`).
+fn first_arg_ident(code: &str, open_paren: usize) -> Option<String> {
+    let chars: Vec<char> = code.chars().collect();
+    let mut k = open_paren + 1;
+    while chars.get(k) == Some(&' ') {
+        k += 1;
+    }
+    let name: String =
+        chars[k.min(chars.len())..].iter().take_while(|&&c| super::scan::is_word(c)).collect();
+    (!name.is_empty()).then_some(name)
+}
+
+/// Collect per-function event streams for every lintable file.
+fn collect_bodies(files: &[FileData]) -> Vec<FnBody> {
+    let mut bodies = Vec::new();
+    for (fi, fd) in files.iter().enumerate() {
+        if fd.rel == "serve/sync.rs" {
+            continue;
+        }
+        for (item_idx, item) in fd.fns.iter().enumerate() {
+            if fd.profile == Profile::Runtime && item.in_test {
+                continue;
+            }
+            let mut events = Vec::new();
+            for li in item.decl_line..=item.body_end.min(fd.lines.len().saturating_sub(1)) {
+                if fd.owners[li] != item_idx {
+                    continue;
+                }
+                let line = &fd.lines[li];
+                if fd.profile == Profile::Runtime && line.in_test {
+                    continue;
+                }
+                let mut evs: Vec<(usize, Event)> = Vec::new();
+                let code = &line.code;
+                for dot in rules::lock_calls(code) {
+                    if let Some(class) = class_of(&receiver_ident(code, dot)) {
+                        evs.push((
+                            dot,
+                            Event::Acquire {
+                                line: li,
+                                class,
+                                binding: guard_binding(code, dot),
+                                depth: line.depth,
+                            },
+                        ));
+                    }
+                }
+                let dropped = rules::dropped_idents(code);
+                if !dropped.is_empty() {
+                    evs.push((0, Event::Drop { names: dropped }));
+                }
+                for tok in call_tokens(code) {
+                    evs.push((
+                        tok.col,
+                        Event::Call { line: li, callee: tok.name.clone() },
+                    ));
+                }
+                for &(pat, what) in BLOCKING_METHODS {
+                    let mut from = 0;
+                    while let Some(p) = code[from..].find(pat) {
+                        let abs = from + p;
+                        let releases = if what == "Condvar wait" {
+                            first_arg_ident(code, abs + pat.len() - 1)
+                        } else {
+                            None
+                        };
+                        evs.push((abs, Event::Block { line: li, what, releases }));
+                        from = abs + pat.len();
+                    }
+                }
+                if find_word(code, "sleep").is_some() && code.contains("sleep(") {
+                    let p = code.find("sleep(").unwrap_or(0);
+                    evs.push((p, Event::Block { line: li, what: "sleep", releases: None }));
+                }
+                if !evs.is_empty() {
+                    evs.sort_by_key(|&(col, _)| col);
+                    events.push((li, evs.into_iter().map(|(_, e)| e).collect()));
+                }
+            }
+            bodies.push(FnBody {
+                file: fi,
+                name: item.name.clone(),
+                test_caller: fd.profile == Profile::Test || item.in_test,
+                events,
+            });
+        }
+    }
+    bodies
+}
+
+/// A lock held at some point during replay.
+#[derive(Debug, Clone)]
+struct Held {
+    class: usize,
+    depth: usize,
+    binding: Option<String>,
+    /// `true` only for the line that acquired it (temporaries die there).
+    temp_line: Option<usize>,
+    site: String,
+}
+
+/// Run the interprocedural lock pass. Emits diagnostics into `out` and
+/// returns the global lock-graph summary.
+pub(crate) fn run(
+    files: &[FileData],
+    waivers: &mut [Waivers],
+    out: &mut Vec<Diagnostic>,
+) -> LockGraphInfo {
+    let bodies = collect_bodies(files);
+    // name -> candidate fn indices (strict targets first for determinism)
+    let mut by_name: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+    for (i, b) in bodies.iter().enumerate() {
+        by_name.entry(&b.name).or_default().push(i);
+    }
+    let resolve = |caller: &FnBody, callee: &str| -> Vec<usize> {
+        let Some(cands) = by_name.get(callee) else { return Vec::new() };
+        cands
+            .iter()
+            .copied()
+            .filter(|&t| caller.test_caller || !bodies[t].test_caller)
+            .collect()
+    };
+
+    // --- fixpoint: propagate held classes into callee contexts -----------
+    let mut ctx: Vec<BTreeMap<usize, Prov>> = vec![BTreeMap::new(); bodies.len()];
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for bi in 0..bodies.len() {
+            let b = &bodies[bi];
+            let caller_ctx = ctx[bi].clone();
+            let mut held: Vec<Held> = Vec::new();
+            for (li, evs) in &b.events {
+                let depth_now = files[b.file].lines[*li].depth;
+                held.retain(|h| depth_now >= h.depth && h.temp_line.map_or(true, |t| t == *li));
+                for ev in evs {
+                    match ev {
+                        Event::Acquire { line, class, binding, depth } => {
+                            held.push(Held {
+                                class: *class,
+                                depth: *depth,
+                                binding: binding.clone(),
+                                temp_line: binding.is_none().then_some(*line),
+                                site: format!("{}:{}", files[b.file].rel, line + 1),
+                            });
+                        }
+                        Event::Drop { names } => {
+                            held.retain(|h| {
+                                h.binding.as_ref().map_or(true, |b| !names.contains(b))
+                            });
+                        }
+                        Event::Call { line, callee, .. } => {
+                            for t in resolve(b, callee) {
+                                let step = format!(
+                                    "{}:{} {} -> {}",
+                                    files[b.file].rel,
+                                    line + 1,
+                                    b.name,
+                                    callee
+                                );
+                                for h in &held {
+                                    if !ctx[t].contains_key(&h.class) {
+                                        ctx[t].insert(
+                                            h.class,
+                                            Prov {
+                                                site: h.site.clone(),
+                                                chain: vec![step.clone()],
+                                            },
+                                        );
+                                        changed = true;
+                                    }
+                                }
+                                for (&c, p) in caller_ctx.iter() {
+                                    if !ctx[t].contains_key(&c) {
+                                        let mut chain = p.chain.clone();
+                                        chain.push(step.clone());
+                                        ctx[t].insert(c, Prov { site: p.site.clone(), chain });
+                                        changed = true;
+                                    }
+                                }
+                            }
+                        }
+                        Event::Block { .. } => {}
+                    }
+                }
+            }
+        }
+    }
+
+    // --- reporting sweep -------------------------------------------------
+    let mut info = LockGraphInfo {
+        acquisitions: LOCK_CLASSES.iter().map(|&(_, _, c)| (c, 0)).collect(),
+        ..Default::default()
+    };
+    let mut edges: Vec<LockEdge> = Vec::new();
+    for (bi, b) in bodies.iter().enumerate() {
+        let w = &mut waivers[b.file];
+        let mut held: Vec<Held> = Vec::new();
+        if !ctx[bi].is_empty() {
+            info.called_under_lock.push(b.name.clone());
+        }
+        for (li, evs) in &b.events {
+            let depth_now = files[b.file].lines[*li].depth;
+            held.retain(|h| depth_now >= h.depth && h.temp_line.map_or(true, |t| t == *li));
+            for ev in evs {
+                match ev {
+                    Event::Acquire { line, class, binding, depth } => {
+                        info.acquisitions[*class].1 += 1;
+                        let to = LOCK_CLASSES[*class].2;
+                        let site = format!("{}:{}", files[b.file].rel, line + 1);
+                        for h in &held {
+                            push_edge(&mut edges, LockEdge {
+                                from: LOCK_CLASSES[h.class].2,
+                                to,
+                                site: site.clone(),
+                                via: Vec::new(),
+                            });
+                        }
+                        for (&c, p) in ctx[bi].iter() {
+                            push_edge(&mut edges, LockEdge {
+                                from: LOCK_CLASSES[c].2,
+                                to,
+                                site: site.clone(),
+                                via: p.chain.clone(),
+                            });
+                            let (_, crank, cclass) = LOCK_CLASSES[c];
+                            let (_, rank, _) = LOCK_CLASSES[*class];
+                            if crank >= rank && !w.check(*line, "lock-order") {
+                                diag(
+                                    out,
+                                    &files[b.file].rel,
+                                    *line,
+                                    "lock-order",
+                                    format!(
+                                        "acquiring `{to}` (rank {rank}) while a caller holds \
+                                         `{cclass}` (rank {crank}, taken at {}) — call chain: {}",
+                                        p.site,
+                                        p.chain.join(", "),
+                                    ),
+                                );
+                            }
+                        }
+                        held.push(Held {
+                            class: *class,
+                            depth: *depth,
+                            binding: binding.clone(),
+                            temp_line: binding.is_none().then_some(*line),
+                            site,
+                        });
+                    }
+                    Event::Drop { names } => {
+                        held.retain(|h| h.binding.as_ref().map_or(true, |b| !names.contains(b)));
+                    }
+                    Event::Block { line, what, releases, .. } => {
+                        let still: Vec<&Held> = held
+                            .iter()
+                            .filter(|h| {
+                                h.binding.as_ref() != releases.as_ref()
+                                    || releases.is_none()
+                            })
+                            .collect();
+                        let ctx_held = !ctx[bi].is_empty();
+                        if (still.is_empty() && !ctx_held)
+                            || w.check(*line, "blocking-under-lock")
+                        {
+                            continue;
+                        }
+                        let mut held_desc: Vec<String> = still
+                            .iter()
+                            .map(|h| format!("`{}` ({})", LOCK_CLASSES[h.class].2, h.site))
+                            .collect();
+                        for (&c, p) in ctx[bi].iter() {
+                            held_desc.push(format!(
+                                "`{}` (held by caller, {}; via {})",
+                                LOCK_CLASSES[c].2,
+                                p.site,
+                                p.chain.join(", "),
+                            ));
+                        }
+                        diag(
+                            out,
+                            &files[b.file].rel,
+                            *line,
+                            "blocking-under-lock",
+                            format!(
+                                "{what} while holding {} — a blocked holder stalls every \
+                                 other thread contending for the lock",
+                                held_desc.join(", "),
+                            ),
+                        );
+                    }
+                    Event::Call { .. } => {}
+                }
+            }
+        }
+    }
+    edges.sort_by(|a, b| (a.from, a.to, &a.site).cmp(&(b.from, b.to, &b.site)));
+    report_cycles(&edges, files, waivers, out);
+    info.edges = edges;
+    info.called_under_lock.sort();
+    info.called_under_lock.dedup();
+    info
+}
+
+fn push_edge(edges: &mut Vec<LockEdge>, e: LockEdge) {
+    if !edges.iter().any(|x| x.from == e.from && x.to == e.to && x.site == e.site) {
+        edges.push(e);
+    }
+}
+
+/// Find cycles in the acquired-before graph and report each once
+/// (deduplicated by the set of classes involved), anchored at its
+/// lexicographically-first edge site with the full witness chain.
+fn report_cycles(
+    edges: &[LockEdge],
+    files: &[FileData],
+    waivers: &mut [Waivers],
+    out: &mut Vec<Diagnostic>,
+) {
+    let mut reported: Vec<Vec<&str>> = Vec::new();
+    for start in edges {
+        // BFS from `start.to` back to `start.from` over the edge relation.
+        let mut frontier: Vec<Vec<&LockEdge>> = vec![vec![start]];
+        let mut found: Option<Vec<&LockEdge>> = None;
+        let mut visited: Vec<&str> = vec![start.to];
+        while let Some(path) = frontier.pop() {
+            let last = path[path.len() - 1];
+            if last.to == start.from {
+                found = Some(path);
+                break;
+            }
+            for next in edges.iter().filter(|e| e.from == last.to) {
+                if !visited.contains(&next.to) || next.to == start.from {
+                    visited.push(next.to);
+                    let mut p = path.clone();
+                    p.push(next);
+                    frontier.push(p);
+                }
+            }
+        }
+        let Some(cycle) = found else { continue };
+        let mut classes: Vec<&str> = cycle.iter().map(|e| e.to).collect();
+        classes.sort_unstable();
+        if reported.contains(&classes) {
+            continue;
+        }
+        reported.push(classes);
+        // anchor at the first edge's acquisition site
+        let site = &cycle[0].site;
+        let (file, line) = split_site(site);
+        let fi = files.iter().position(|f| f.rel == file);
+        if let Some(fi) = fi {
+            if waivers[fi].check(line, "lock-cycle") {
+                continue;
+            }
+        }
+        let mut desc = vec![format!("`{}`", cycle[0].from)];
+        for e in &cycle {
+            let via = if e.via.is_empty() {
+                String::new()
+            } else {
+                format!("; via {}", e.via.join(", "))
+            };
+            desc.push(format!("`{}` (acquired at {}{via})", e.to, e.site));
+        }
+        out.push(Diagnostic {
+            file: file.to_string(),
+            line: line + 1,
+            rule: "lock-cycle",
+            code: super::rule_code("lock-cycle"),
+            msg: format!(
+                "cycle in the acquired-before graph: {} — two threads entering this cycle \
+                 from different edges can deadlock",
+                desc.join(" -> "),
+            ),
+        });
+    }
+}
+
+fn split_site(site: &str) -> (&str, usize) {
+    match site.rsplit_once(':') {
+        Some((f, l)) => (f, l.parse::<usize>().unwrap_or(1).saturating_sub(1)),
+        None => (site, 0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{analyze_sources, Profile};
+
+    fn codes(diags: &[super::Diagnostic]) -> Vec<(&str, String, usize)> {
+        diags.iter().map(|d| (d.rule, d.file.clone(), d.line)).collect()
+    }
+
+    /// Fixture A: a lock cycle split across two files — `alpha` holds
+    /// `workers` and calls `beta` (locks `inner`); `gamma` holds `inner`
+    /// and calls `delta` (locks `workers`). Each function is locally
+    /// clean; only the whole-crate graph sees workers -> inner -> workers.
+    #[test]
+    fn cross_file_lock_cycle_fires_with_witness_path() {
+        let a = "fn alpha(&self) {\n    let w = self.workers.lock_or_poisoned();\n    \
+                 beta(w.len());\n}\nfn delta(&self) {\n    \
+                 let w = self.workers.lock_or_poisoned();\n    w.clear();\n}\n";
+        let b = "fn beta(&self, n: usize) {\n    let g = self.inner.lock_or_poisoned();\n    \
+                 g.touch(n);\n}\nfn gamma(&self) {\n    \
+                 let g = self.inner.lock_or_poisoned();\n    delta(g.len());\n}\n";
+        let an = analyze_sources(&[
+            ("serve/a.rs".into(), a.into(), Profile::Runtime),
+            ("serve/b.rs".into(), b.into(), Profile::Runtime),
+        ]);
+        let cycles: Vec<_> =
+            an.diagnostics.iter().filter(|d| d.rule == "lock-cycle").collect();
+        assert_eq!(cycles.len(), 1, "got: {:?}", codes(&an.diagnostics));
+        let msg = &cycles[0].msg;
+        assert!(msg.contains("pool-workers") && msg.contains("queue-inner"), "{msg}");
+        assert!(
+            msg.contains("serve/b.rs:2") && msg.contains("serve/a.rs:6"),
+            "witness carries both acquisition sites: {msg}"
+        );
+        assert!(msg.contains("alpha -> beta"), "witness carries the call edge: {msg}");
+        // the inner->workers edge is also a rank inversion seen from gamma
+        assert!(
+            an.diagnostics
+                .iter()
+                .any(|d| d.rule == "lock-order" && d.file == "serve/a.rs" && d.line == 6),
+            "lock-order fires at delta's acquisition: {:?}",
+            codes(&an.diagnostics)
+        );
+        // and the graph itself carries both edges
+        assert_eq!(an.lock_graph.edges.len(), 2);
+    }
+
+    /// Fixture B: waiting on a condvar while a *caller* holds an unrelated
+    /// lock. `holder` locks `workers` and calls `park_for_work`, which
+    /// waits on `inner`'s condvar — releasing `inner`, but not the
+    /// caller's `workers`.
+    #[test]
+    fn wait_while_holding_foreign_lock_fires_via_context() {
+        let src = "fn holder(&self) {\n    let w = self.workers.lock_or_poisoned();\n    \
+                   park_for_work(w.len());\n}\nfn park_for_work(&self, n: usize) {\n    \
+                   let mut g = self.inner.lock_or_poisoned();\n    \
+                   g = self.cv.wait(g);\n    g.touch(n);\n}\n";
+        let an = analyze_sources(&[("serve/p.rs".into(), src.into(), Profile::Runtime)]);
+        let blocks: Vec<_> =
+            an.diagnostics.iter().filter(|d| d.rule == "blocking-under-lock").collect();
+        assert_eq!(blocks.len(), 1, "got: {:?}", codes(&an.diagnostics));
+        assert_eq!((blocks[0].file.as_str(), blocks[0].line), ("serve/p.rs", 7));
+        assert!(blocks[0].msg.contains("pool-workers"), "{}", blocks[0].msg);
+        assert!(blocks[0].msg.contains("holder -> park_for_work"), "{}", blocks[0].msg);
+        // workers->inner is a legal descending... ascending edge; no cycle
+        assert!(an.diagnostics.iter().all(|d| d.rule != "lock-cycle"));
+    }
+
+    /// A condvar wait that releases the *only* held guard is clean — this
+    /// is exactly `BoundedQueue::pop_blocking`'s shape.
+    #[test]
+    fn wait_releasing_its_own_guard_is_clean() {
+        let src = "fn pop_blocking(&self) {\n    let mut inner = \
+                   self.inner.lock_or_poisoned();\n    loop {\n        \
+                   inner = self.cv.wait(inner);\n    }\n}\n";
+        let an = analyze_sources(&[("serve/q.rs".into(), src.into(), Profile::Runtime)]);
+        assert!(an.diagnostics.is_empty(), "got: {:?}", codes(&an.diagnostics));
+    }
+
+    #[test]
+    fn sleep_under_local_lock_fires_and_is_waivable() {
+        let src = "fn f(&self) {\n    let g = self.inner.lock_or_poisoned();\n    \
+                   sleep(ms);\n    g.touch();\n}\n";
+        let an = analyze_sources(&[("serve/s.rs".into(), src.into(), Profile::Runtime)]);
+        assert_eq!(codes(&an.diagnostics), vec![("blocking-under-lock", "serve/s.rs".into(), 3)]);
+        let waived = "fn f(&self) {\n    let g = self.inner.lock_or_poisoned();\n    \
+                      // lint: allow(blocking-under-lock): fixture\n    sleep(ms);\n    \
+                      g.touch();\n}\n";
+        let an = analyze_sources(&[("serve/s.rs".into(), waived.into(), Profile::Runtime)]);
+        assert!(an.diagnostics.is_empty(), "got: {:?}", codes(&an.diagnostics));
+    }
+
+    /// A chained temporary guard (`.lock_or_poisoned().drain(..)`) dies at
+    /// end of line: the `join()` on the *next* line is not under the lock.
+    /// This is `ServicePool::shutdown`'s shape.
+    #[test]
+    fn chained_temporary_guard_does_not_leak_into_next_line() {
+        let src = "fn shutdown(&self) {\n    let hs: Vec<_> = \
+                   self.workers.lock_or_poisoned().drain(..).collect();\n    \
+                   for h in hs {\n        let _ = h.join();\n    }\n}\n";
+        let an = analyze_sources(&[("serve/t.rs".into(), src.into(), Profile::Runtime)]);
+        assert!(an.diagnostics.is_empty(), "got: {:?}", codes(&an.diagnostics));
+    }
+
+    /// `.lock().unwrap()` keeps the guard (unwrap is guard-preserving), so
+    /// a blocking op in a callee still sees it held.
+    #[test]
+    fn unwrap_chained_guard_is_still_held_across_calls() {
+        let src = "fn step(&self) {\n    let mut cache = self.compiled.lock().unwrap();\n    \
+                   compile_file(cache.len());\n}\nfn compile_file(&self, n: usize) {\n    \
+                   let r = self.rx.recv();\n}\n";
+        let an = analyze_sources(&[("runtime/c.rs".into(), src.into(), Profile::Runtime)]);
+        let blocks: Vec<_> =
+            an.diagnostics.iter().filter(|d| d.rule == "blocking-under-lock").collect();
+        assert_eq!(blocks.len(), 1, "got: {:?}", codes(&an.diagnostics));
+        assert_eq!(blocks[0].line, 6);
+        assert!(blocks[0].msg.contains("runtime-compile-cache"), "{}", blocks[0].msg);
+    }
+
+    #[test]
+    fn dot_output_lists_all_classes_and_edges() {
+        let src = "fn f(&self) {\n    let w = self.workers.lock_or_poisoned();\n    \
+                   let g = self.inner.lock_or_poisoned();\n}\n";
+        let an = analyze_sources(&[("serve/d.rs".into(), src.into(), Profile::Runtime)]);
+        let dot = an.lock_graph.dot();
+        for class in ["pool-workers", "queue-inner", "kv-shard", "runtime-compile-cache"] {
+            assert!(dot.contains(class), "{dot}");
+        }
+        assert!(
+            dot.contains("\"pool-workers\" -> \"queue-inner\" [label=\"serve/d.rs:3\"]"),
+            "{dot}"
+        );
+    }
+}

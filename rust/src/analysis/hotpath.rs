@@ -1,0 +1,273 @@
+//! Hot-path allocation pass (`hot-path-alloc`, L010): starting from
+//! functions declared hot with a `// lint: hot-path` marker, walk the
+//! transitive call set (the name-based graph of [`super::parse`]) and
+//! reject heap-allocation tokens anywhere inside it — `Vec::new`,
+//! `Box::new`, `with_capacity`, `to_vec`, `to_string`, `to_owned`,
+//! `collect`, `clone`, `vec!`, `format!`, and friends.
+//!
+//! This is what turns PR 5's "the steady-state decode loop does not
+//! allocate" claim from a review hope into a build failure: the engine's
+//! `decode_loop` is the declared root, and every helper it reaches —
+//! slot admission, sweeping, queue draining — is checked, however many
+//! calls deep the allocation hides.
+//!
+//! `// lint: hot-path-end` marks a *boundary*: the function is reachable
+//! but exempt and not traversed further. The backend `decode_step`
+//! implementations carry it — their internals are the model-execution
+//! cost the benchmark measures, not scheduler overhead the lint polices.
+//!
+//! `Vec::new()` is flagged even though a capacity-0 vec does not touch the
+//! allocator, because it is almost always followed by growth; the rare
+//! deliberate empty-vec handoff carries a waiver
+//! (`// lint: allow(hot-path-alloc): <reason>`) so the exception is
+//! visible in review.
+
+use super::parse::call_tokens;
+use super::rules::macro_called;
+use super::{diag, Diagnostic, FileData, Profile, Waivers};
+use std::collections::BTreeMap;
+
+/// Substring allocation patterns over blanked code.
+const ALLOC_PATTERNS: &[&str] = &[
+    "Vec::new(",
+    "VecDeque::new(",
+    "String::new(",
+    "Box::new(",
+    "Rc::new(",
+    "Arc::new(",
+    "HashMap::new(",
+    "HashSet::new(",
+    "BTreeMap::new(",
+    "BTreeSet::new(",
+    "with_capacity(",
+    ".to_vec(",
+    ".to_string(",
+    ".to_owned(",
+    ".collect(",
+    ".collect::<",
+    ".clone(",
+];
+
+/// Allocating macros (matched word-boundary + `!`).
+const ALLOC_MACROS: &[&str] = &["vec", "format"];
+
+/// The declared hot set, exposed for the tier-1 non-vacuity assertions.
+#[derive(Debug, Default)]
+pub struct HotPathInfo {
+    /// Functions carrying a `// lint: hot-path` marker.
+    pub roots: Vec<String>,
+    /// Every function in the transitive hot set (roots included,
+    /// boundaries excluded), sorted.
+    pub reached: Vec<String>,
+    /// Reachable functions exempted by `// lint: hot-path-end`.
+    pub boundaries: Vec<String>,
+}
+
+/// Key identifying one function occurrence.
+type FnId = (usize, usize); // (file index, fn index within file)
+
+/// Run the hot-path pass. Emits `hot-path-alloc` diagnostics into `out`
+/// and returns the hot-set summary.
+pub(crate) fn run(
+    files: &[FileData],
+    waivers: &mut [Waivers],
+    out: &mut Vec<Diagnostic>,
+) -> HotPathInfo {
+    // name -> candidate fns; test fns only resolvable from test callers,
+    // mirroring the graph pass.
+    let mut by_name: BTreeMap<&str, Vec<FnId>> = BTreeMap::new();
+    let mut roots: Vec<FnId> = Vec::new();
+    for (fi, fd) in files.iter().enumerate() {
+        for (ii, item) in fd.fns.iter().enumerate() {
+            by_name.entry(&item.name).or_default().push((fi, ii));
+            if item.hot_root {
+                roots.push((fi, ii));
+            }
+        }
+    }
+
+    let mut info = HotPathInfo::default();
+    // parent call edge for witness paths: child -> (parent, call site)
+    let mut parent: BTreeMap<FnId, (FnId, String)> = BTreeMap::new();
+    let mut queue: Vec<FnId> = roots.clone();
+    let mut seen: Vec<FnId> = roots.clone();
+    for &(fi, ii) in &roots {
+        info.roots.push(files[fi].fns[ii].name.clone());
+    }
+
+    while let Some(id @ (fi, ii)) = queue.pop() {
+        let fd = &files[fi];
+        let item = &fd.fns[ii];
+        if item.hot_end {
+            info.boundaries.push(item.name.clone());
+            continue;
+        }
+        info.reached.push(item.name.clone());
+        let caller_is_test = fd.profile == Profile::Test || item.in_test;
+        for li in item.decl_line..=item.body_end.min(fd.lines.len().saturating_sub(1)) {
+            if fd.owners[li] != ii || (fd.profile == Profile::Runtime && fd.lines[li].in_test) {
+                continue;
+            }
+            let code = &fd.lines[li].code;
+            for tok in alloc_tokens(code) {
+                if waivers[fi].check(li, "hot-path-alloc") {
+                    continue;
+                }
+                diag(
+                    out,
+                    &fd.rel,
+                    li,
+                    "hot-path-alloc",
+                    format!(
+                        "heap allocation `{tok}` in the hot path: {} — the decode loop \
+                         must stay allocation-free; reuse a scratch buffer owned by the \
+                         caller, or waive with `// lint: allow(hot-path-alloc): <reason>`",
+                        witness(files, &parent, id),
+                    ),
+                );
+            }
+            for call in call_tokens(code) {
+                let Some(cands) = by_name.get(call.name.as_str()) else { continue };
+                for &target @ (tfi, tii) in cands {
+                    let t = &files[tfi].fns[tii];
+                    let target_is_test = files[tfi].profile == Profile::Test || t.in_test;
+                    if (target_is_test && !caller_is_test) || seen.contains(&target) {
+                        continue;
+                    }
+                    seen.push(target);
+                    parent.insert(
+                        target,
+                        (id, format!("{}:{}", fd.rel, li + 1)),
+                    );
+                    queue.push(target);
+                }
+            }
+        }
+    }
+    info.roots.sort();
+    info.reached.sort();
+    info.reached.dedup();
+    info.boundaries.sort();
+    info.boundaries.dedup();
+    info
+}
+
+/// Allocation tokens present on one blanked code line.
+fn alloc_tokens(code: &str) -> Vec<&'static str> {
+    let mut out = Vec::new();
+    for &pat in ALLOC_PATTERNS {
+        // `.collect(` and `.collect::<` describe the same call; report once
+        if pat == ".collect::<" && code.contains(".collect(") {
+            continue;
+        }
+        if code.contains(pat) {
+            out.push(pat);
+        }
+    }
+    for &m in ALLOC_MACROS {
+        if macro_called(code, m) {
+            out.push(if m == "vec" { "vec![..]" } else { "format!(..)" });
+        }
+    }
+    out
+}
+
+/// Render the root -> … -> here call chain for a finding.
+fn witness(
+    files: &[FileData],
+    parent: &BTreeMap<FnId, (FnId, String)>,
+    mut id: FnId,
+) -> String {
+    let mut parts = vec![files[id.0].fns[id.1].name.clone()];
+    while let Some((p, site)) = parent.get(&id) {
+        parts.push(format!("{} ({site})", files[p.0].fns[p.1].name));
+        id = *p;
+    }
+    parts.reverse();
+    parts.join(" -> ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{analyze_sources, Profile};
+
+    /// Fixture C: an allocation smuggled two calls deep. Only the root is
+    /// marked hot; the `.to_vec()` lives in `helper_two`, reached through
+    /// `helper_one` — a per-file lint can never see this.
+    #[test]
+    fn allocation_two_calls_deep_fires_with_call_chain() {
+        let a = "// lint: hot-path\nfn hot_root(&self) {\n    helper_one(1);\n}\n";
+        let b = "fn helper_one(&self, n: usize) {\n    helper_two(n);\n}\n\
+                 fn helper_two(&self, n: usize) {\n    let v = self.buf.to_vec();\n}\n";
+        let an = analyze_sources(&[
+            ("serve/hr.rs".into(), a.into(), Profile::Runtime),
+            ("serve/hh.rs".into(), b.into(), Profile::Runtime),
+        ]);
+        let hits: Vec<_> =
+            an.diagnostics.iter().filter(|d| d.rule == "hot-path-alloc").collect();
+        assert_eq!(hits.len(), 1, "got: {:?}", an.diagnostics);
+        assert_eq!((hits[0].file.as_str(), hits[0].line), ("serve/hh.rs", 5));
+        let msg = &hits[0].msg;
+        assert!(msg.contains("`.to_vec(`"), "{msg}");
+        assert!(
+            msg.contains("hot_root (serve/hr.rs:3) -> helper_one (serve/hh.rs:2) -> helper_two"),
+            "witness chain names every hop: {msg}"
+        );
+        assert_eq!(an.hot.roots, vec!["hot_root"]);
+        assert!(an.hot.reached.contains(&"helper_two".to_string()));
+    }
+
+    /// `hot-path-end` stops traversal: the boundary fn's own allocations
+    /// are exempt, and nothing past it is visited.
+    #[test]
+    fn hot_path_end_is_a_traversal_boundary() {
+        let src = "// lint: hot-path\nfn hot_root(&self) {\n    boundary(1);\n}\n\n\
+                   // lint: hot-path-end\nfn boundary(&self, n: usize) {\n    \
+                   let v = vec![0u8; n];\n    deeper(v);\n}\n\n\
+                   fn deeper(&self, v: Vec<u8>) {\n    let s = v.to_vec();\n}\n";
+        let an = analyze_sources(&[("serve/hb.rs".into(), src.into(), Profile::Runtime)]);
+        assert!(
+            an.diagnostics.iter().all(|d| d.rule != "hot-path-alloc"),
+            "got: {:?}",
+            an.diagnostics
+        );
+        assert_eq!(an.hot.boundaries, vec!["boundary"]);
+        assert!(!an.hot.reached.contains(&"deeper".to_string()));
+    }
+
+    #[test]
+    fn waiver_suppresses_and_counts_as_used() {
+        let src = "// lint: hot-path\nfn hot_root(&self) {\n    \
+                   // lint: allow(hot-path-alloc): capacity-0, never grows here\n    \
+                   let v: Vec<u8> = Vec::new();\n}\n";
+        let an = analyze_sources(&[("serve/hw.rs".into(), src.into(), Profile::Runtime)]);
+        assert!(
+            an.diagnostics.is_empty(),
+            "waived alloc and no stale-waiver: {:?}",
+            an.diagnostics
+        );
+    }
+
+    #[test]
+    fn macros_and_direct_constructors_fire_in_a_root() {
+        let src = "// lint: hot-path\nfn hot_root(&self) {\n    let s = format!(\"x\");\n    \
+                   let b = Box::new(1);\n}\n";
+        let an = analyze_sources(&[("serve/hm.rs".into(), src.into(), Profile::Runtime)]);
+        let rules: Vec<_> = an.diagnostics.iter().map(|d| (d.rule, d.line)).collect();
+        assert_eq!(
+            rules,
+            vec![("hot-path-alloc", 3), ("hot-path-alloc", 4)],
+            "got: {:?}",
+            an.diagnostics
+        );
+    }
+
+    /// Functions not reachable from a root are never checked.
+    #[test]
+    fn cold_functions_may_allocate_freely() {
+        let src = "fn cold(&self) {\n    let v = vec![1, 2, 3];\n    let s = v.clone();\n}\n";
+        let an = analyze_sources(&[("serve/hc.rs".into(), src.into(), Profile::Runtime)]);
+        assert!(an.diagnostics.is_empty(), "got: {:?}", an.diagnostics);
+        assert!(an.hot.roots.is_empty() && an.hot.reached.is_empty());
+    }
+}

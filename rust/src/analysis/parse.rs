@@ -1,0 +1,332 @@
+//! Lightweight item parser behind the whole-crate passes: recovers `fn`
+//! spans, hot-path markers, and a conservative *name-based* call graph from
+//! the scanned code channels of [`super::scan`]. No type information — a
+//! call token `foo(` resolves to **every** crate function named `foo`, an
+//! over-approximation that is exactly what a lock/allocation lint wants
+//! (trait dispatch and method calls land on all candidate bodies).
+//!
+//! # Honest limitations
+//!
+//! - Call tokens with [`GENERIC_NAMES`] (`len`, `push`, `clone`, …) are not
+//!   resolved at all: they overwhelmingly mean std methods, and resolving
+//!   them to same-named crate functions would wire unrelated code together
+//!   (e.g. `VecDeque::pop_front` to a crate `pop_front`). A crate function
+//!   that shadows a generic name is therefore invisible to the
+//!   interprocedural passes — prefer distinctive names for anything that
+//!   locks or allocates.
+//! - Closures are attributed to their enclosing function, so work a closure
+//!   does on *another* thread (e.g. a spawned worker body) is analyzed as if
+//!   it ran at the definition site with the definition site's held-lock set.
+//!   Today's spawn sites hold no locks, which the repo-level tier-1 tests
+//!   keep true.
+//! - Lock acquisition and blocking-operation tokens (`lock`, `wait`,
+//!   `recv`, `join`, `sleep`, …) are consumed by [`super::graph`] as events,
+//!   never as call edges.
+//!
+//! # Markers
+//!
+//! A comment line starting with `lint: hot-path` within the three lines
+//! above a `fn` declares a **hot root**: the hot-path pass
+//! ([`super::hotpath`]) walks its transitive callees and rejects heap
+//! allocation. `lint: hot-path-end` declares a **boundary**: the function
+//! is reachable from a hot root but its body is exempt and not traversed
+//! (used for backend `decode_step` implementations, whose internals are the
+//! model-execution cost, not scheduler overhead).
+
+use super::scan::{is_word, Line};
+
+/// Call-token names never resolved to crate functions (std-collection /
+/// iterator / atomic vocabulary). Kept sorted for readability; membership is
+/// a linear scan over a few dozen entries per token.
+pub(crate) const GENERIC_NAMES: &[&str] = &[
+    "add", "all", "and_then", "any", "as_deref", "as_mut", "as_ref", "as_slice", "as_str",
+    "borrow", "capacity", "chain", "chars", "chunks", "chunks_exact", "clear", "clone", "cloned",
+    "cmp", "collect", "contains", "contains_key", "copied", "count", "default", "drain", "drop",
+    "enumerate", "eq", "err", "extend", "extend_from_slice", "fill", "filter", "filter_map",
+    "find", "first", "flat_map", "flatten", "flush", "fmt", "from", "get", "get_mut", "hash",
+    "insert", "into", "into_iter", "is_empty", "is_none", "is_some", "is_some_and", "iter",
+    "iter_mut", "last", "len", "load", "map", "max", "min", "ne", "next", "ok", "or_else",
+    "parse", "partial_cmp", "pop", "pop_back", "pop_front", "position", "push", "push_back",
+    "push_front", "read", "remove", "replace", "resize", "retain", "rev", "send", "set", "sort",
+    "sort_unstable", "split", "split_off", "store", "sub", "sum", "swap", "take", "then",
+    "then_some", "to_owned", "to_string", "to_vec", "truncate", "try_from", "try_into",
+    "unwrap_or", "unwrap_or_default", "unwrap_or_else", "write", "zip",
+];
+
+/// Token names [`super::graph`] treats as lock/blocking *events*; they are
+/// excluded from call-edge resolution so e.g. `self.cv.wait(inner)` never
+/// resolves to an unrelated crate fn named `wait`.
+pub(crate) const EVENT_NAMES: &[&str] = &[
+    "join", "lock", "lock_or_poisoned", "recv", "recv_timeout", "sleep", "try_recv", "wait",
+    "wait_timeout", "wait_while",
+];
+
+const KEYWORDS: &[&str] = &[
+    "Self", "as", "await", "box", "break", "const", "continue", "crate", "dyn", "else", "enum",
+    "fn", "for", "if", "impl", "in", "let", "loop", "match", "mod", "move", "mut", "pub", "ref",
+    "return", "self", "static", "struct", "super", "trait", "type", "unsafe", "use", "where",
+    "while", "yield",
+];
+
+/// Unresolvable-but-harmless constructors: tokens like `Some(x)` / `Ok(v)`.
+const TUPLE_CTORS: &[&str] = &["Err", "None", "Ok", "Some"];
+
+/// One `fn` item recovered from a file. Line numbers are 0-based indices
+/// into the scanned lines.
+#[derive(Debug)]
+pub(crate) struct FnItem {
+    pub(crate) name: String,
+    /// Line of the `fn` keyword.
+    pub(crate) decl_line: usize,
+    /// Line holding the body's opening `{`.
+    pub(crate) body_start: usize,
+    /// Line where the body's `}` closes (inclusive).
+    pub(crate) body_end: usize,
+    /// Declared inside a `#[cfg(test)]` region.
+    pub(crate) in_test: bool,
+    /// `lint: hot-path` marker above the declaration.
+    pub(crate) hot_root: bool,
+    /// `lint: hot-path-end` marker above the declaration.
+    pub(crate) hot_end: bool,
+}
+
+/// All word-boundary occurrences of `word` in `code` (char indices).
+fn word_positions(code: &str, word: &str) -> Vec<usize> {
+    let chars: Vec<char> = code.chars().collect();
+    let pat: Vec<char> = word.chars().collect();
+    let mut out = Vec::new();
+    if pat.is_empty() || chars.len() < pat.len() {
+        return out;
+    }
+    for start in 0..=(chars.len() - pat.len()) {
+        if chars[start..start + pat.len()] == pat[..]
+            && (start == 0 || !is_word(chars[start - 1]))
+            && (start + pat.len() == chars.len() || !is_word(chars[start + pat.len()]))
+        {
+            out.push(start);
+        }
+    }
+    out
+}
+
+/// How many lines above a `fn` its marker comment may sit (room for
+/// attributes between marker and declaration).
+const MARKER_WINDOW: usize = 3;
+
+fn marker_above(lines: &[Line], decl_line: usize) -> (bool, bool) {
+    let (mut root, mut end) = (false, false);
+    for j in decl_line.saturating_sub(MARKER_WINDOW)..=decl_line {
+        let t = lines[j].comment.trim_start();
+        if t.starts_with("lint: hot-path-end") {
+            end = true;
+        } else if t.starts_with("lint: hot-path") {
+            root = true;
+        }
+    }
+    (root, end)
+}
+
+/// Recover every `fn` item (with a body) from one file's scanned lines.
+/// Bodyless trait signatures and `fn(..)` pointer types are skipped; nested
+/// fns are returned as separate items (see [`line_owners`]).
+pub(crate) fn parse_fns(lines: &[Line]) -> Vec<FnItem> {
+    let mut items = Vec::new();
+    for i in 0..lines.len() {
+        for p in word_positions(&lines[i].code, "fn") {
+            let chars: Vec<char> = lines[i].code.chars().collect();
+            // name directly after `fn` (skipping spaces); empty → `fn(` type
+            let mut k = p + 2;
+            while chars.get(k) == Some(&' ') {
+                k += 1;
+            }
+            let name: String =
+                chars[k.min(chars.len())..].iter().take_while(|&&c| is_word(c)).collect();
+            if name.is_empty() || name.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+                continue;
+            }
+            let Some((bl, bc)) = find_body_open(lines, i, k + name.chars().count()) else {
+                continue;
+            };
+            let Some(be) = find_body_close(lines, bl, bc) else { continue };
+            let (hot_root, hot_end) = marker_above(lines, i);
+            items.push(FnItem {
+                name,
+                decl_line: i,
+                body_start: bl,
+                body_end: be,
+                in_test: lines[i].in_test,
+                hot_root,
+                hot_end,
+            });
+        }
+    }
+    items
+}
+
+/// How far past its `fn` keyword a signature may run before we give up.
+const SIG_SCAN_LINES: usize = 64;
+
+/// Find the body's `{` (or bail on `;` — a bodyless signature), scanning
+/// from `(start_line, start_col)` at paren/bracket depth 0.
+fn find_body_open(lines: &[Line], start_line: usize, start_col: usize) -> Option<(usize, usize)> {
+    let mut depth = 0i32;
+    for j in start_line..lines.len().min(start_line + SIG_SCAN_LINES) {
+        let from = if j == start_line { start_col } else { 0 };
+        for (c_idx, c) in lines[j].code.chars().enumerate().skip(from) {
+            match c {
+                '(' | '[' => depth += 1,
+                ')' | ']' => depth -= 1,
+                '{' if depth == 0 => return Some((j, c_idx)),
+                ';' if depth == 0 => return None,
+                _ => {}
+            }
+        }
+    }
+    None
+}
+
+/// Line where the brace opened at `(open_line, open_col)` closes.
+fn find_body_close(lines: &[Line], open_line: usize, open_col: usize) -> Option<usize> {
+    let mut depth = 0i32;
+    for j in open_line..lines.len() {
+        let from = if j == open_line { open_col } else { 0 };
+        for c in lines[j].code.chars().skip(from) {
+            match c {
+                '{' => depth += 1,
+                '}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Some(j);
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    None
+}
+
+/// Innermost owning item per line (`usize::MAX` = no owner). Items arrive in
+/// source order, so a nested fn overwrites its outer fn's claim on exactly
+/// its own lines.
+pub(crate) fn line_owners(n_lines: usize, items: &[FnItem]) -> Vec<usize> {
+    let mut own = vec![usize::MAX; n_lines];
+    for (idx, it) in items.iter().enumerate() {
+        for slot in own.iter_mut().take(it.body_end + 1).skip(it.decl_line) {
+            *slot = idx;
+        }
+    }
+    own
+}
+
+/// One call token on a line: a word immediately followed by `(` that is not
+/// a keyword, macro, declaration, event name, or generic-name method.
+#[derive(Debug)]
+pub(crate) struct CallTok {
+    pub(crate) name: String,
+    pub(crate) col: usize,
+}
+
+/// Extract the call tokens of one code line, in column order.
+pub(crate) fn call_tokens(code: &str) -> Vec<CallTok> {
+    let chars: Vec<char> = code.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0;
+    let mut prev_word = String::new();
+    while i < chars.len() {
+        if !is_word(chars[i]) {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        while i < chars.len() && is_word(chars[i]) {
+            i += 1;
+        }
+        let word: String = chars[start..i].iter().collect();
+        // macro (`name!(`) — never a fn call
+        let macro_bang = chars.get(i) == Some(&'!');
+        let mut j = i;
+        while chars.get(j) == Some(&' ') {
+            j += 1;
+        }
+        let called = !macro_bang && chars.get(j) == Some(&'(');
+        if called
+            && prev_word != "fn"
+            && !word.chars().next().is_some_and(|c| c.is_ascii_digit())
+            && !KEYWORDS.contains(&word.as_str())
+            && !TUPLE_CTORS.contains(&word.as_str())
+            && !GENERIC_NAMES.contains(&word.as_str())
+            && !EVENT_NAMES.contains(&word.as_str())
+        {
+            out.push(CallTok { name: word.clone(), col: start });
+        }
+        prev_word = word;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::scan::scan;
+
+    #[test]
+    fn fn_spans_and_nesting_are_recovered() {
+        let src = "fn outer(a: usize) -> usize {\n    let f = |x: usize| x + 1;\n    \
+                   fn inner() {\n        helper();\n    }\n    inner();\n    f(a)\n}\n\
+                   fn second() {}\n";
+        let lines = scan(src);
+        let items = parse_fns(&lines);
+        let names: Vec<&str> = items.iter().map(|i| i.name.as_str()).collect();
+        assert_eq!(names, vec!["outer", "inner", "second"]);
+        assert_eq!(items[0].body_end, 7);
+        assert_eq!((items[1].decl_line, items[1].body_end), (2, 4));
+        let own = line_owners(lines.len(), &items);
+        assert_eq!(own[1], 0, "closure line belongs to outer");
+        assert_eq!(own[3], 1, "inner body belongs to inner");
+        assert_eq!(own[5], 0, "after inner closes, outer owns again");
+    }
+
+    #[test]
+    fn signatures_without_bodies_and_fn_pointer_types_are_skipped() {
+        let src = "trait T {\n    fn required(&self) -> usize;\n    fn provided(&self) -> usize \
+                   {\n        0\n    }\n}\nfn takes_ptr(f: fn(usize) -> usize) -> usize {\n    \
+                   f(1)\n}\n";
+        let items = parse_fns(&scan(src));
+        let names: Vec<&str> = items.iter().map(|i| i.name.as_str()).collect();
+        assert_eq!(names, vec!["provided", "takes_ptr"]);
+    }
+
+    #[test]
+    fn multiline_signatures_with_generics_find_their_body() {
+        let src = "fn start<F>(\n    cfg: Config,\n    factory: F,\n) -> Result<Self>\nwhere\n    \
+                   F: Fn(usize) -> Result<Box<dyn Backend>> + Send + 'static,\n{\n    body()\n}\n";
+        let items = parse_fns(&scan(src));
+        assert_eq!(items.len(), 1);
+        assert_eq!(items[0].name, "start");
+        assert_eq!(items[0].body_start, 6);
+        assert_eq!(items[0].body_end, 8);
+    }
+
+    #[test]
+    fn hot_markers_attach_with_attributes_between() {
+        let src = "// lint: hot-path — decode loop\n#[inline]\nfn hot() {}\n\n\
+                   // lint: hot-path-end — backend boundary\nfn stop() {}\n\nfn plain() {}\n";
+        let items = parse_fns(&scan(src));
+        assert!(items[0].hot_root && !items[0].hot_end);
+        assert!(items[1].hot_end && !items[1].hot_root, "-end is not a root");
+        assert!(!items[2].hot_root && !items[2].hot_end);
+    }
+
+    #[test]
+    fn call_tokens_skip_macros_keywords_generics_and_events() {
+        let toks = call_tokens(
+            "    if cond(x) { helper(y); v.push(z); foo!(a); self.cv.wait(g); Some(beta()) }",
+        );
+        let names: Vec<&str> = toks.iter().map(|t| t.name.as_str()).collect();
+        assert_eq!(names, vec!["cond", "helper", "beta"]);
+        assert!(call_tokens("fn decl(x: usize) {").is_empty(), "declarations are not calls");
+        let qualified = call_tokens("slots::complete_unstarted(req, reason, now);");
+        assert_eq!(qualified[0].name, "complete_unstarted");
+    }
+}

@@ -1,24 +1,27 @@
-//! The `cola lint` rule set. Each rule matches on the scanned code/comment
-//! channels of [`super::scan`] — see `docs/concurrency.md` for the rule
-//! catalogue, the waiver syntax, and the declared lock hierarchy.
+//! The per-file `cola lint` rule set. Each rule matches on the scanned
+//! code/comment channels of [`super::scan`] — see `docs/concurrency.md` for
+//! the rule catalogue, the waiver syntax, and the declared lock hierarchy.
+//! The whole-crate passes ([`super::graph`], [`super::hotpath`]) build on
+//! the same lock table and low-level matchers exported from here.
 //!
 //! # Waivers
 //!
 //! `// lint: allow(<rule>): <reason>` suppresses `<rule>` on its own line
 //! and on the two lines below it. The reason is mandatory by convention
-//! (the lint does not parse it, reviewers do).
+//! (the lint does not parse it, reviewers do). A waiver that suppresses
+//! nothing is itself a finding (`stale-waiver`, emitted by [`super`]).
 //!
 //! # Honest limitations
 //!
-//! This is a token-level lint, not a type checker. The lock-hierarchy rule
-//! tracks guards *lexically* (a `let`-bound guard is considered held until
-//! its block's brace depth unwinds, or an explicit `drop(<name>)`); it
-//! cannot see acquisitions hidden behind a function call boundary. The
-//! runtime rank check in `serve::sync` (debug builds) covers exactly that
-//! blind spot, so the two enforce the hierarchy together.
+//! This is a token-level lint, not a type checker. The `lock-hierarchy`
+//! rule tracks guards *lexically* (a guard-preserving `let` binding is
+//! considered held until its block's brace depth unwinds, or an explicit
+//! `drop(<name>)`); acquisitions hidden behind a call boundary are the
+//! interprocedural pass's job ([`super::graph`]), and the runtime rank
+//! check in `serve::sync` (debug builds) backstops both.
 
-use super::Diagnostic;
-use super::scan::{find_word, is_word, Line, scan};
+use super::scan::{find_word, is_word, scan, Line};
+use super::{diag, Diagnostic, Profile, Waivers};
 
 /// Files (relative to the lint root) whose **runtime** code must be
 /// panic-free: they run on serve worker threads, where a panic strands the
@@ -47,7 +50,7 @@ const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"]
 /// thread. Receivers are classified by the field/binding name the guard is
 /// taken from — add new locks here (and to `serve::sync::LockRank` when
 /// they live in the serve tier).
-const LOCK_CLASSES: &[(&str, u8, &str)] = &[
+pub(crate) const LOCK_CLASSES: &[(&str, u8, &str)] = &[
     ("workers", 0, "pool-workers"),
     ("inner", 1, "queue-inner"),
     ("shard", 2, "kv-shard"),
@@ -62,50 +65,61 @@ const RELAXED_WINDOW: usize = 24;
 /// How far above an `unsafe` its `SAFETY:` / `# Safety` comment may sit.
 const SAFETY_WINDOW: usize = 12;
 
-/// Lint one file. `rel` is the path relative to the lint root, with `/`
-/// separators (it selects which per-file rules apply).
+/// Run the per-file rules for one file under the given profile.
+///
+/// The `Test` profile (integration tests under `rust/tests/`) keeps
+/// `safety-comment` and the lock rules — test-only `unsafe` and lock
+/// misuse are real bugs — but drops `no-panic` (asserting is what tests
+/// do), `sync-shim` (tests may drive raw primitives to probe them), and
+/// `relaxed-ordering` (test counters carry no doc obligations).
+pub(crate) fn run_rules(
+    rel: &str,
+    lines: &[Line],
+    profile: Profile,
+    w: &mut Waivers,
+    out: &mut Vec<Diagnostic>,
+) {
+    if profile == Profile::Runtime {
+        no_panic(rel, lines, w, out);
+        relaxed_ordering(rel, lines, w, out);
+        sync_shim(rel, lines, w, out);
+    }
+    safety_comment(rel, lines, w, out);
+    lock_hierarchy(rel, lines, w, out);
+}
+
+/// Lint one file standalone under the strict profile (fixture-test entry
+/// point; the whole-crate passes and stale-waiver detection only run via
+/// [`super::analyze_sources`]).
 pub fn lint_source(rel: &str, source: &str) -> Vec<Diagnostic> {
     let lines = scan(source);
+    let mut w = Waivers::collect(&lines);
     let mut diags = Vec::new();
-    no_panic(rel, &lines, &mut diags);
-    safety_comment(rel, &lines, &mut diags);
-    relaxed_ordering(rel, &lines, &mut diags);
-    lock_hierarchy(rel, &lines, &mut diags);
-    sync_shim(rel, &lines, &mut diags);
+    run_rules(rel, &lines, Profile::Runtime, &mut w, &mut diags);
     diags
 }
 
-/// Is rule `rule` waived at line `i` (same line or the two above)?
-fn waived(lines: &[Line], i: usize, rule: &str) -> bool {
-    let pat = format!("lint: allow({rule})");
-    (i.saturating_sub(2)..=i).any(|j| lines[j].comment.contains(&pat))
-}
-
-fn diag(out: &mut Vec<Diagnostic>, rel: &str, i: usize, rule: &'static str, msg: String) {
-    out.push(Diagnostic { file: rel.to_string(), line: i + 1, rule, msg });
-}
-
 /// Does `code` invoke macro `name` (word-boundary match followed by `!`)?
-fn macro_called(code: &str, name: &str) -> bool {
+pub(crate) fn macro_called(code: &str, name: &str) -> bool {
     let chars: Vec<char> = code.chars().collect();
     let Some(p) = find_word(code, name) else { return false };
     chars.get(p + name.chars().count()) == Some(&'!')
 }
 
 // ---------------------------------------------------------------------------
-// Rule: no-panic
+// Rule: no-panic (L001)
 // ---------------------------------------------------------------------------
 
-fn no_panic(rel: &str, lines: &[Line], out: &mut Vec<Diagnostic>) {
+fn no_panic(rel: &str, lines: &[Line], w: &mut Waivers, out: &mut Vec<Diagnostic>) {
     if !NO_PANIC_FILES.contains(&rel) {
         return;
     }
     for (i, line) in lines.iter().enumerate() {
-        if line.in_test || waived(lines, i, "no-panic") {
+        if line.in_test {
             continue;
         }
         for &m in PANIC_METHODS {
-            if line.code.contains(m) {
+            if line.code.contains(m) && !w.check(i, "no-panic") {
                 diag(
                     out,
                     rel,
@@ -119,7 +133,7 @@ fn no_panic(rel: &str, lines: &[Line], out: &mut Vec<Diagnostic>) {
             }
         }
         for &m in PANIC_MACROS {
-            if macro_called(&line.code, m) {
+            if macro_called(&line.code, m) && !w.check(i, "no-panic") {
                 diag(
                     out,
                     rel,
@@ -136,18 +150,18 @@ fn no_panic(rel: &str, lines: &[Line], out: &mut Vec<Diagnostic>) {
 }
 
 // ---------------------------------------------------------------------------
-// Rule: safety-comment
+// Rule: safety-comment (L002)
 // ---------------------------------------------------------------------------
 
-fn safety_comment(rel: &str, lines: &[Line], out: &mut Vec<Diagnostic>) {
+fn safety_comment(rel: &str, lines: &[Line], w: &mut Waivers, out: &mut Vec<Diagnostic>) {
     for (i, line) in lines.iter().enumerate() {
-        if find_word(&line.code, "unsafe").is_none() || waived(lines, i, "safety-comment") {
+        if find_word(&line.code, "unsafe").is_none() {
             continue;
         }
         let justified = (i.saturating_sub(SAFETY_WINDOW)..=i).any(|j| {
             lines[j].comment.contains("SAFETY:") || lines[j].comment.contains("# Safety")
         });
-        if !justified {
+        if !justified && !w.check(i, "safety-comment") {
             diag(
                 out,
                 rel,
@@ -163,20 +177,17 @@ fn safety_comment(rel: &str, lines: &[Line], out: &mut Vec<Diagnostic>) {
 }
 
 // ---------------------------------------------------------------------------
-// Rule: relaxed-ordering
+// Rule: relaxed-ordering (L003)
 // ---------------------------------------------------------------------------
 
-fn relaxed_ordering(rel: &str, lines: &[Line], out: &mut Vec<Diagnostic>) {
+fn relaxed_ordering(rel: &str, lines: &[Line], w: &mut Waivers, out: &mut Vec<Diagnostic>) {
     for (i, line) in lines.iter().enumerate() {
-        if line.in_test
-            || !line.code.contains("Ordering::Relaxed")
-            || waived(lines, i, "relaxed-ordering")
-        {
+        if line.in_test || !line.code.contains("Ordering::Relaxed") {
             continue;
         }
         let justified = (i.saturating_sub(RELAXED_WINDOW)..=i)
             .any(|j| lines[j].comment.contains("relaxed:"));
-        if !justified {
+        if !justified && !w.check(i, "relaxed-ordering") {
             diag(
                 out,
                 rel,
@@ -193,11 +204,11 @@ fn relaxed_ordering(rel: &str, lines: &[Line], out: &mut Vec<Diagnostic>) {
 }
 
 // ---------------------------------------------------------------------------
-// Rule: lock-hierarchy / unknown-lock
+// Rule: lock-hierarchy (L004) / unknown-lock (L005)
 // ---------------------------------------------------------------------------
 
 /// Positions (char index of the `.`) of lock acquisitions in `code`.
-fn lock_calls(code: &str) -> Vec<usize> {
+pub(crate) fn lock_calls(code: &str) -> Vec<usize> {
     let mut sites = Vec::new();
     for pat in [".lock_or_poisoned(", ".lock("] {
         let mut from = 0;
@@ -212,7 +223,7 @@ fn lock_calls(code: &str) -> Vec<usize> {
 
 /// The receiver ident a lock call is made on: the last `.`-separated path
 /// segment before the call (`self.inner.lock_or_poisoned()` → `inner`).
-fn receiver_ident(code: &str, dot: usize) -> String {
+pub(crate) fn receiver_ident(code: &str, dot: usize) -> String {
     let chars: Vec<char> = code.chars().collect();
     let mut start = dot;
     while start > 0 && (is_word(chars[start - 1]) || chars[start - 1] == '.') {
@@ -223,7 +234,7 @@ fn receiver_ident(code: &str, dot: usize) -> String {
 }
 
 /// `let [mut] <name> = …` binding name of a line, if any.
-fn let_binding(code: &str) -> Option<String> {
+pub(crate) fn let_binding(code: &str) -> Option<String> {
     let t = code.trim_start();
     let rest = t.strip_prefix("let ")?.trim_start();
     let rest = rest.strip_prefix("mut ").unwrap_or(rest).trim_start();
@@ -232,12 +243,11 @@ fn let_binding(code: &str) -> Option<String> {
 }
 
 /// Idents passed to `drop(..)` on this line (releases a named guard early).
-fn dropped_idents(code: &str) -> Vec<String> {
+pub(crate) fn dropped_idents(code: &str) -> Vec<String> {
     let mut out = Vec::new();
     let mut from = 0;
     while let Some(p) = code[from..].find("drop(") {
         let abs = from + p;
-        // word boundary: don't match `mem::drop(` as-is? it is still a drop.
         let name: String = code[abs + "drop(".len()..]
             .chars()
             .take_while(|&c| is_word(c))
@@ -250,6 +260,67 @@ fn dropped_idents(code: &str) -> Vec<String> {
     out
 }
 
+/// Classify the guard produced by the lock call at `dot`: `Some(binding)`
+/// if the guard outlives the line under a `let` binding, `None` if it is a
+/// temporary dropped at end of statement.
+///
+/// Follows the method chain after the call's closing paren: `.unwrap()` /
+/// `.expect(..)` are guard-preserving (the chain still yields the guard);
+/// any other chained method *consumes* the temporary — so
+/// `let h = q.lock_or_poisoned().drain(..).collect();` binds a `Vec`, not
+/// a guard, while `let g = m.lock().unwrap();` binds the guard.
+pub(crate) fn guard_binding(code: &str, dot: usize) -> Option<String> {
+    let binding = let_binding(code)?;
+    let chars: Vec<char> = code.chars().collect();
+    let mut i = dot;
+    while i < chars.len() && chars[i] != '(' {
+        i += 1;
+    }
+    loop {
+        // `i` sits on an opening paren: find its match on this line
+        let mut depth = 0i32;
+        while i < chars.len() {
+            match chars[i] {
+                '(' => depth += 1,
+                ')' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+        if i >= chars.len() {
+            // call spans lines; conservatively treat the guard as bound
+            return Some(binding);
+        }
+        i += 1;
+        while chars.get(i) == Some(&' ') {
+            i += 1;
+        }
+        if chars.get(i) != Some(&'.') {
+            return Some(binding);
+        }
+        i += 1;
+        let start = i;
+        while i < chars.len() && is_word(chars[i]) {
+            i += 1;
+        }
+        let method: String = chars[start..i].iter().collect();
+        if method != "unwrap" && method != "expect" {
+            return None;
+        }
+        while i < chars.len() && chars[i] != '(' {
+            i += 1;
+        }
+        if i >= chars.len() {
+            return Some(binding);
+        }
+    }
+}
+
 /// A lexically-held lock guard.
 struct Held {
     rank: u8,
@@ -260,7 +331,7 @@ struct Held {
     binding: Option<String>,
 }
 
-fn lock_hierarchy(rel: &str, lines: &[Line], out: &mut Vec<Diagnostic>) {
+fn lock_hierarchy(rel: &str, lines: &[Line], w: &mut Waivers, out: &mut Vec<Diagnostic>) {
     if rel == "serve/sync.rs" {
         // The shim *implements* ranked locking (and checks it at runtime in
         // debug builds); its internal std lock is below the hierarchy.
@@ -280,7 +351,7 @@ fn lock_hierarchy(rel: &str, lines: &[Line], out: &mut Vec<Diagnostic>) {
             let Some(&(_, rank, class)) =
                 LOCK_CLASSES.iter().find(|&&(r, _, _)| r == recv)
             else {
-                if !waived(lines, i, "unknown-lock") {
+                if !w.check(i, "unknown-lock") {
                     diag(
                         out,
                         rel,
@@ -295,8 +366,8 @@ fn lock_hierarchy(rel: &str, lines: &[Line], out: &mut Vec<Diagnostic>) {
                 }
                 continue;
             };
-            if !waived(lines, i, "lock-hierarchy") {
-                if let Some(g) = held.iter().find(|g| g.rank >= rank) {
+            if let Some(g) = held.iter().find(|g| g.rank >= rank) {
+                if !w.check(i, "lock-hierarchy") {
                     diag(
                         out,
                         rel,
@@ -311,33 +382,29 @@ fn lock_hierarchy(rel: &str, lines: &[Line], out: &mut Vec<Diagnostic>) {
                     );
                 }
             }
-            if let_binding(&line.code).is_some() {
-                held.push(Held {
-                    rank,
-                    class,
-                    depth: line.depth,
-                    binding: let_binding(&line.code),
-                });
+            if let Some(binding) = guard_binding(&line.code, dot) {
+                held.push(Held { rank, class, depth: line.depth, binding: Some(binding) });
             }
-            // non-`let` acquisitions are temporaries: gone at end of line
+            // chained/unbound acquisitions are temporaries: gone at end of
+            // line (the interprocedural pass models the same-line window)
         }
     }
 }
 
 // ---------------------------------------------------------------------------
-// Rule: sync-shim
+// Rule: sync-shim (L006)
 // ---------------------------------------------------------------------------
 
-fn sync_shim(rel: &str, lines: &[Line], out: &mut Vec<Diagnostic>) {
+fn sync_shim(rel: &str, lines: &[Line], w: &mut Waivers, out: &mut Vec<Diagnostic>) {
     if !rel.starts_with("serve/") || rel == "serve/sync.rs" {
         return;
     }
     for (i, line) in lines.iter().enumerate() {
-        if line.in_test || waived(lines, i, "sync-shim") {
+        if line.in_test {
             continue;
         }
         for pat in ["std::sync", "std::thread"] {
-            if line.code.contains(pat) {
+            if line.code.contains(pat) && !w.check(i, "sync-shim") {
                 diag(
                     out,
                     rel,
@@ -368,6 +435,7 @@ mod tests {
         let d = lint_source("serve/queue.rs", src);
         assert_eq!(d.len(), 1);
         assert_eq!(d[0].rule, "no-panic");
+        assert_eq!(d[0].code, "L001");
         assert_eq!(d[0].line, 1);
         assert_eq!(d[0].file, "serve/queue.rs");
         // out of scope file: clean
@@ -449,21 +517,50 @@ mod tests {
     }
 
     #[test]
-    fn sync_shim_rule_confines_std_sync_to_the_shim() {
-        let bad = "use std::sync::Mutex;\nfn f() {}\n";
-        assert_eq!(rules_fired("serve/queue.rs", bad), vec!["sync-shim"]);
-        assert!(lint_source("serve/sync.rs", bad).is_empty(), "the shim itself is exempt");
-        assert!(lint_source("runtime/executor.rs", bad).is_empty(), "only serve/ is scoped");
-        let test_ok = "#[cfg(test)]\nmod tests {\n    use std::thread;\n}\n";
-        assert!(lint_source("serve/queue.rs", test_ok).is_empty());
+    fn chained_temporary_guards_do_not_count_as_held() {
+        // `.drain(..).collect()` consumes the guard at end of statement —
+        // the next line's acquisition is NOT nested (ServicePool::shutdown)
+        let seq = "fn f(&self) {\n    let hs: Vec<_> = \
+                   self.workers.lock_or_poisoned().drain(..).collect();\n    \
+                   let w = self.workers.lock_or_poisoned();\n}\n";
+        assert!(lint_source("serve/service.rs", seq).is_empty(), "temporary died on its line");
+        // `.lock().unwrap()` is guard-preserving: still held on later lines
+        let held = "fn f(&self) {\n    let c = self.compiled.lock().unwrap();\n    \
+                    let d = self.compiled.lock().unwrap();\n}\n";
+        assert_eq!(
+            lint_source("runtime/artifact.rs", held)
+                .iter()
+                .map(|d| d.rule)
+                .collect::<Vec<_>>(),
+            vec!["lock-hierarchy"]
+        );
+        let probe = |code: &str| guard_binding(code, lock_calls(code)[0]);
+        assert_eq!(probe("    let g = m.lock().unwrap();"), Some("g".into()));
+        assert_eq!(probe("    let n = m.lock().unwrap().len();"), None);
+        assert_eq!(probe("    m.lock();"), None);
+        assert_eq!(probe("    let w = self.workers.lock_or_poisoned();"), Some("w".into()));
     }
 
     #[test]
-    fn diagnostics_render_as_file_line_rule() {
+    fn test_profile_drops_panic_and_shim_but_keeps_safety_and_locks() {
+        let src = "fn t() {\n    use std::thread;\n    x.unwrap();\n    \
+                   let g = self.inner.lock_or_poisoned();\n    \
+                   let w = self.workers.lock_or_poisoned();\n    unsafe { poke() }\n}\n";
+        let lines = scan(src);
+        let mut w = Waivers::collect(&lines);
+        let mut diags = Vec::new();
+        run_rules("tests/serve_interleave.rs", &lines, Profile::Test, &mut w, &mut diags);
+        let mut rules: Vec<&str> = diags.iter().map(|d| d.rule).collect();
+        rules.sort_unstable();
+        assert_eq!(rules, vec!["lock-hierarchy", "safety-comment"], "got: {diags:?}");
+    }
+
+    #[test]
+    fn diagnostics_render_as_file_line_code_rule() {
         let d = lint_source("serve/queue.rs", "fn f() { x.unwrap(); }\n");
         let rendered = d[0].to_string();
         assert!(
-            rendered.starts_with("serve/queue.rs:1: [no-panic]"),
+            rendered.starts_with("serve/queue.rs:1: [L001 no-panic]"),
             "got: {rendered}"
         );
     }

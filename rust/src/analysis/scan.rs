@@ -72,6 +72,13 @@ pub fn scan(source: &str) -> Vec<Line> {
     let mut i = 0;
     while i < src.len() {
         let c = src[i];
+        if c == '\r' {
+            // CRLF normalization: carriage returns never reach either
+            // channel, so findings (and their columns) are byte-stable
+            // across checkouts with different line-ending conventions.
+            i += 1;
+            continue;
+        }
         if c == '\n' {
             if matches!(state, State::LineComment) {
                 state = State::Normal;
@@ -311,6 +318,19 @@ mod tests {
         let src = "#[cfg(test)]\nuse foo::bar;\nfn live() { let _ = 1; }\n";
         let lines = scan(src);
         assert!(!lines[2].in_test, "the `;` cancelled the pending attr");
+    }
+
+    #[test]
+    fn crlf_sources_scan_identically_to_lf() {
+        let lf = "fn f() { x.unwrap(); }\n// lint: allow(no-panic): why\nlet y = 1;\n";
+        let crlf = lf.replace('\n', "\r\n");
+        let (a, b) = (scan(lf), scan(&crlf));
+        assert_eq!(a.len(), b.len());
+        for (la, lb) in a.iter().zip(&b) {
+            assert_eq!(la.code, lb.code, "code channel is CR-free and identical");
+            assert_eq!(la.comment, lb.comment);
+        }
+        assert!(!b[1].comment.contains('\r'));
     }
 
     #[test]

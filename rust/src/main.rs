@@ -20,6 +20,9 @@
 //!   rank      activation-spectrum analysis (Fig. 2) on an artifact
 //!   cost      print the analytic paper tables (2/3/4, Fig 5/6/7 data)
 //!   data-gen  pre-build the corpus + BPE tokenizer caches
+//!   lint      whole-crate static analysis: per-file convention rules plus
+//!             interprocedural lock-graph and hot-path allocation passes
+//!             (`--format json`, `--baseline`, `--dump-lock-graph`)
 //!
 //! Config values are `key=value` pairs after flags; `train` and `serve`
 //! both accept `--config file.json` plus overrides (see config::TrainConfig
@@ -42,8 +45,12 @@ fn usage() -> ! {
                 [max_new_tokens=K] [workers=N] [queue_depth=D] [default_deadline_ms=MS]\n\
                 [kv_cache_entries=E] [join_chunk=J]\n\
                 [models=name:artifact,...] [name.key=value ...]\n\
-         lint:  cola lint [--root DIR] — static concurrency/safety checks over rust/src\n\
-                (rules and waiver syntax: docs/concurrency.md); exits 1 on findings\n\
+         lint:  cola lint [--root DIR] [--format text|json] [--baseline FILE]\n\
+                [--write-baseline FILE] [--dump-lock-graph]\n\
+                whole-crate static concurrency/safety checks over rust/src (strict)\n\
+                and rust/tests (relaxed profile); interprocedural lock-graph and\n\
+                hot-path passes included (rule codes, waiver syntax, baseline\n\
+                workflow: docs/concurrency.md); exits 1 on non-baselined findings\n\
          run `cola cost` for the analytic paper tables; `cola serve --mock` needs no\n\
          artifacts; `make artifacts` first for the rest."
     );
@@ -488,25 +495,73 @@ fn cmd_data_gen(flags: std::collections::HashMap<String, String>) -> Result<()> 
     Ok(())
 }
 
-/// `cola lint` — run the in-house static-analysis pass (see
-/// `cola::analysis`) over the crate sources and exit non-zero on findings.
+/// `cola lint` — run the in-house whole-crate static analyzer (see
+/// `cola::analysis`): per-file convention rules plus the interprocedural
+/// lock-graph and hot-path allocation passes. Exits non-zero on any
+/// finding not covered by the optional `--baseline` ratchet file.
 fn cmd_lint(flags: std::collections::HashMap<String, String>) -> Result<()> {
-    let root = match flags.get("root") {
-        Some(r) => std::path::PathBuf::from(r),
-        // work from either the repo root or rust/
-        None if std::path::Path::new("src/serve").exists() => std::path::PathBuf::from("src"),
-        None => std::path::PathBuf::from("rust/src"),
+    use cola::analysis::{self, Baseline};
+    let an = match flags.get("root") {
+        // explicit root: strict profile over that one tree, no tests dir
+        Some(r) => {
+            let root = std::path::PathBuf::from(r);
+            analysis::analyze_repo(&root, None)
+                .with_context(|| format!("walking {}", root.display()))?
+        }
+        None => {
+            // work from either the repo root or rust/
+            let base = if std::path::Path::new("src/serve").exists() {
+                std::path::PathBuf::from(".")
+            } else {
+                std::path::PathBuf::from("rust")
+            };
+            analysis::analyze_repo(&base.join("src"), Some(&base.join("tests")))
+                .with_context(|| format!("walking {}", base.display()))?
+        }
     };
-    let diags = cola::analysis::lint_dir(&root)
-        .with_context(|| format!("walking {}", root.display()))?;
-    if diags.is_empty() {
-        println!("cola lint: clean ({})", root.display());
+    if flags.contains_key("dump-lock-graph") {
+        print!("{}", an.lock_graph.dot());
         return Ok(());
     }
-    for d in &diags {
-        eprintln!("{d}");
+    if let Some(path) = flags.get("write-baseline") {
+        let baseline = Baseline::from_diags(&an.diagnostics);
+        std::fs::write(path, baseline.render())
+            .with_context(|| format!("writing baseline {path}"))?;
+        eprintln!(
+            "cola lint: baseline covering {} finding(s) written to {path}",
+            an.diagnostics.len()
+        );
+        return Ok(());
     }
-    anyhow::bail!("cola lint: {} finding(s)", diags.len());
+    let (kept, suppressed) = match flags.get("baseline") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading baseline {path}"))?;
+            Baseline::parse(&text)
+                .with_context(|| format!("parsing baseline {path}"))?
+                .apply(an.diagnostics)
+        }
+        None => (an.diagnostics, 0),
+    };
+    match flags.get("format").map(String::as_str).unwrap_or("text") {
+        "json" => print!("{}", analysis::render_json(&kept, suppressed)),
+        "text" => {
+            for d in &kept {
+                eprintln!("{d}");
+            }
+            if kept.is_empty() && suppressed == 0 {
+                println!("cola lint: clean");
+            } else if kept.is_empty() {
+                println!("cola lint: clean ({suppressed} baselined finding(s) suppressed)");
+            }
+        }
+        other => anyhow::bail!("cola lint: unknown --format `{other}` (expected text|json)"),
+    }
+    if kept.is_empty() {
+        Ok(())
+    } else {
+        anyhow::bail!("cola lint: {} finding(s)", kept.len());
+    }
 }
 
 fn main() -> Result<()> {

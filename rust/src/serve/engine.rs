@@ -261,6 +261,8 @@ impl EngineBackend for PjrtBackend {
         buf_i32_vec(&out[0])
     }
 
+    // lint: hot-path-end — the backend step is the model-execution cost the
+    // benchmark measures; its device transfers are not scheduler overhead.
     fn decode_step(&mut self, feed: &[i32], pos: usize) -> Result<Vec<i32>> {
         // Take the KV pair; a failed step leaves `kv` empty, and the worker
         // always re-prefills after a batch failure, which restores it.
@@ -365,6 +367,9 @@ struct WorkerState {
     feed: Vec<i32>,
     /// `(row, probe result)` per occupied row at the current boundary.
     probes: Vec<(usize, Option<usize>)>,
+    /// Scratch for dead-queued sheds, reused so the decode loop's periodic
+    /// sweep stays allocation-free when nothing matches.
+    dead: Vec<QueuedRequest>,
 }
 
 /// Body of one `cola-serve-N` thread (spawned by `ServicePool::start_with`).
@@ -383,6 +388,7 @@ pub(crate) fn run_worker(
         occ: Vec::with_capacity(backend.batch_size()),
         feed: Vec::with_capacity(backend.batch_size()),
         probes: Vec::with_capacity(backend.batch_size()),
+        dead: Vec::with_capacity(8),
     };
     metrics::log_info(&format!(
         "serve worker up: {} kv_cache={} join_chunk={}",
@@ -476,12 +482,15 @@ fn refill_slots(table: &mut SlotTable, shared: &Shared, join_chunk: usize) -> bo
 
 /// Resolve cancelled/expired requests still sitting in the admission queue,
 /// freeing their capacity instead of letting dead entries block submits (and
-/// hang their clients) until a slot frees up to pop them.
-fn shed_dead_queued(shared: &Shared, now: Instant) {
-    let dead = shared
+/// hang their clients) until a slot frees up to pop them. `scratch` is a
+/// caller-owned buffer (the worker keeps one) so the common nothing-matched
+/// sweep runs without touching the heap.
+fn shed_dead_queued(shared: &Shared, now: Instant, scratch: &mut Vec<QueuedRequest>) {
+    scratch.clear();
+    shared
         .queue
-        .drain_where(|r| r.cancel.poll() || r.deadline.is_some_and(|d| now >= d));
-    for req in dead {
+        .drain_where_into(|r| r.cancel.poll() || r.deadline.is_some_and(|d| now >= d), scratch);
+    for req in scratch.drain(..) {
         if req.cancel.poll() {
             slots::complete_unstarted(req, FinishReason::Cancelled, now);
             shared.counters.cancelled.add(1);
@@ -595,7 +604,7 @@ fn decode_rounds(
     }
     let next = join_prefill(shared, backend, table, st, serve_bs, prompt_len)?;
 
-    let mut now = Instant::now();
+    let now = Instant::now();
     for &i in &st.occ {
         if let Some(reason) = table.push_token(i, next[i], now) {
             tally_finish(shared, reason);
@@ -603,11 +612,32 @@ fn decode_rounds(
     }
     sync_gauge(shared, gauge, table.active());
 
-    // --- lockstep decode ----------------------------------------------------
-    let mut pos = prompt_len;
+    decode_loop(shared, backend, table, gauge, st, serve_bs, max_len, prompt_len)
+}
+
+/// The steady-state lockstep decode loop — the tightest loop in serving.
+/// Declared as the allocation lint's hot root: everything reachable from
+/// here (sweeping, queue shedding, refills, slot bookkeeping) must stay off
+/// the heap, reusing the scratch buffers in [`WorkerState`]. The backend
+/// `decode_step` implementations are the boundary (`lint: hot-path-end`) —
+/// their internals are model-execution cost, not scheduler overhead.
+/// Returns when the table drains, a refill lands, or the KV window rolls
+/// over; the caller re-enters through the join prefill.
+#[allow(clippy::too_many_arguments)]
+// lint: hot-path
+fn decode_loop(
+    shared: &Shared,
+    backend: &mut dyn EngineBackend,
+    table: &mut SlotTable,
+    gauge: &mut usize,
+    st: &mut WorkerState,
+    serve_bs: usize,
+    max_len: usize,
+    mut pos: usize,
+) -> Result<()> {
     let mut step = 0usize;
     loop {
-        now = Instant::now();
+        let mut now = Instant::now();
         let (cancelled, expired) = table.sweep(now);
         shared.counters.cancelled.add(cancelled as u64);
         shared.counters.expired.add(expired as u64);
@@ -615,7 +645,7 @@ fn decode_rounds(
         // work frees admission capacity without waiting for a pop. Throttled:
         // an O(queue) scan under the shared lock is not for every step.
         if step % 16 == 0 {
-            shed_dead_queued(shared, now);
+            shed_dead_queued(shared, now, &mut st.dead);
         }
         step += 1;
         if table.active() == 0 {

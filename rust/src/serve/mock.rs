@@ -179,6 +179,8 @@ impl EngineBackend for MockBackend {
             .collect())
     }
 
+    // lint: hot-path-end — stands in for the model-execution boundary; its
+    // paced sleep and per-step collect model backend cost, not scheduling.
     fn decode_step(&mut self, feed: &[i32], _pos: usize) -> Result<Vec<i32>> {
         anyhow::ensure!(feed.len() == self.batch, "decode feed is one token per row");
         if !self.step_delay.is_zero() {

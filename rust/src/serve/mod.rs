@@ -91,11 +91,22 @@
 //!   [`sync::Counter`], [`sync::Gauge`], [`sync::Flag`],
 //!   [`sync::Countdown`]). Direct `std::sync`/`std::thread` use in
 //!   `serve/` is a lint error outside `#[cfg(test)]`.
-//! - **`cola lint`** ([`crate::analysis`]): a dependency-free static pass
-//!   run by `scripts/verify.sh` that enforces the no-panic rule on serve
-//!   runtime paths, `// SAFETY:` on every `unsafe`, justification comments
-//!   on `Ordering::Relaxed`, the declared lock hierarchy, and the sync-shim
-//!   routing above. See `docs/concurrency.md` for rules and waiver syntax.
+//! - **`cola lint`** ([`crate::analysis`]): a dependency-free whole-crate
+//!   static analyzer run by `scripts/verify.sh`. Per-file rules enforce the
+//!   no-panic rule on serve runtime paths, `// SAFETY:` on every `unsafe`,
+//!   justification comments on `Ordering::Relaxed`, the declared lock
+//!   hierarchy, and the sync-shim routing above; interprocedural passes
+//!   propagate held locks across the call graph (acquired-before cycles,
+//!   blocking ops under a lock) and walk the declared hot paths rejecting
+//!   heap allocation. The hot roots are marked in source with
+//!   `// lint: hot-path` — today that is [`engine`]'s steady-state
+//!   `decode_loop`, whose transitive call set (sweeping, shedding, refills,
+//!   queue draining, slot bookkeeping) must stay allocation-free, with the
+//!   backend `decode_step` implementations marked `// lint: hot-path-end`
+//!   as the model-execution boundary. Tier-1 tests pin both properties on
+//!   this crate's real sources (`analysis` module tests). See
+//!   `docs/concurrency.md` for rule codes, waiver syntax, and the baseline
+//!   ratchet workflow.
 //! - **Interleaving checks** ([`model`] + `tests/serve_interleave.rs`): the
 //!   queue and KV-cache semantics are extracted into pure reference models
 //!   and checked against the real types under *exhaustive* enumeration of

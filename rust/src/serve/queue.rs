@@ -114,26 +114,33 @@ impl<T> BoundedQueue<T> {
     /// Remove and return every queued item matching `pred`, freeing its
     /// capacity immediately (cancelled/expired requests must not block
     /// admission while they wait for a pop). Order within bands is kept.
-    pub fn drain_where(&self, mut pred: impl FnMut(&T) -> bool) -> Vec<T> {
+    pub fn drain_where(&self, pred: impl FnMut(&T) -> bool) -> Vec<T> {
+        let mut out = Vec::new();
+        self.drain_where_into(pred, &mut out);
+        out
+    }
+
+    /// Allocation-free `drain_where`: matches are appended to `out` (which
+    /// the caller reuses across calls), survivors stay in band order. The
+    /// engine's decode loop calls this every shed sweep, so it must not
+    /// touch the heap when nothing matches — each band is rotated in place
+    /// through its existing ring buffer instead of rebuilt.
+    pub fn drain_where_into(&self, mut pred: impl FnMut(&T) -> bool, out: &mut Vec<T>) {
         let mut guard = self.inner.lock_or_poisoned();
         let inner = &mut *guard;
-        // fast path: no matches → no band rebuild under the lock
-        if !inner.high.iter().any(|x| pred(x)) && !inner.normal.iter().any(|x| pred(x)) {
-            return Vec::new();
-        }
-        let mut out = Vec::new();
         for band in [&mut inner.high, &mut inner.normal] {
-            let mut keep = VecDeque::with_capacity(band.len());
-            for item in band.drain(..) {
+            // One full rotation: pop each item once; survivors go to the
+            // back, so after `len` steps the band holds exactly the
+            // survivors in their original relative order.
+            for _ in 0..band.len() {
+                let Some(item) = band.pop_front() else { break };
                 if pred(&item) {
                     out.push(item);
                 } else {
-                    keep.push_back(item);
+                    band.push_back(item);
                 }
             }
-            *band = keep;
         }
-        out
     }
 
     /// Close the queue, waking every parked worker, and hand back whatever
@@ -271,6 +278,26 @@ mod tests {
         assert_eq!(q.try_pop(), Some(3), "high band survivor first");
         assert_eq!(q.try_pop(), Some(1));
         assert_eq!(q.try_pop(), Some(5));
+    }
+
+    #[test]
+    fn drain_where_into_reuses_the_caller_buffer() {
+        let q = BoundedQueue::new(8);
+        for i in 0..6 {
+            q.push(i, i == 3).unwrap(); // 3 rides the high band
+        }
+        let mut scratch: Vec<i32> = Vec::with_capacity(8);
+        q.drain_where_into(|&x| x % 2 == 1, &mut scratch);
+        assert_eq!(scratch, vec![3, 1, 5], "high-band match first, then normal in order");
+        assert!(scratch.capacity() >= 8, "matches landed in the caller's buffer");
+        scratch.clear();
+        q.drain_where_into(|_| false, &mut scratch);
+        assert!(scratch.is_empty());
+        assert_eq!(
+            (0..3).map(|_| q.try_pop().unwrap()).collect::<Vec<_>>(),
+            vec![0, 2, 4],
+            "survivors keep band order across both sweeps"
+        );
     }
 
     #[test]

@@ -77,6 +77,8 @@ impl SlotTable {
         let i = self.slots.iter().position(|s| s.is_none())?;
         self.slots[i] = Some(ActiveRequest {
             req,
+            // lint: allow(hot-path-alloc): capacity-0 Vec::new never touches
+            // the heap; the row grows on its first decoded token
             generated: Vec::new(),
             admitted_at: now,
             first_token_at: None,
@@ -263,6 +265,8 @@ pub fn complete_unstarted(req: QueuedRequest, reason: FinishReason, now: Instant
         total: now.saturating_duration_since(req.submitted_at),
     };
     let _ = req.tx.send(StreamEvent::Done(Completion {
+        // lint: allow(hot-path-alloc): capacity-0 Vec::new never touches the
+        // heap — the completion is empty by definition here
         tokens: Vec::new(),
         finish_reason: reason,
         timing,

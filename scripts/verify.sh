@@ -47,13 +47,31 @@ fi
 
 if [ "${SKIP_LINT:-0}" != "1" ]; then
     # Concurrency-correctness gate (docs/concurrency.md): the in-house
-    # static pass over rust/src (panic discipline, SAFETY comments, lock
-    # hierarchy, sync-shim routing) plus the exhaustive interleaving checks
-    # of the serving primitives against their reference models. The
-    # interleaving tests also run inside `cargo test -q` above; this stage
-    # names them so a lint or linearizability break fails loudly on its own.
-    echo "== cola lint =="
-    cargo run --release -- lint
+    # whole-crate analyzer over rust/src + rust/tests (panic discipline,
+    # SAFETY comments, lock hierarchy, sync-shim routing, interprocedural
+    # lock-graph and hot-path allocation passes) plus the exhaustive
+    # interleaving checks of the serving primitives against their reference
+    # models. The interleaving tests also run inside `cargo test -q` above;
+    # this stage names them so a lint or linearizability break fails loudly
+    # on its own. The machine-readable report is archived next to
+    # BENCH_serve.json; a lint_baseline.json at the repo root (written via
+    # `cola lint --write-baseline`) ratchets pre-existing findings without
+    # admitting new ones.
+    echo "== cola lint (report: LINT_report.json) =="
+    LINT_BASELINE=""
+    if [ -f ../lint_baseline.json ]; then
+        LINT_BASELINE="--baseline ../lint_baseline.json"
+    fi
+    # shellcheck disable=SC2086  # intentional word-splitting of the flag pair
+    if cargo run --release --quiet -- lint --format json $LINT_BASELINE \
+        > ../LINT_report.json; then
+        echo "cola lint: clean"
+    else
+        echo "cola lint: non-baselined findings — see LINT_report.json" >&2
+        # shellcheck disable=SC2086
+        cargo run --release --quiet -- lint $LINT_BASELINE || true
+        exit 1
+    fi
     echo "== interleaving suite: cargo test -q --test serve_interleave =="
     cargo test -q --test serve_interleave
 fi
@@ -66,6 +84,16 @@ fi
 if [ "${SKIP_FMT:-0}" != "1" ]; then
     echo "== cargo fmt --check =="
     cargo fmt --check
+fi
+
+# BENCH_serve.json provenance sanity: the smoke stage writes real measured
+# numbers; a `derived-static` provenance means someone hand-synthesized the
+# file instead of running the benchmark. Warn loudly rather than fail — the
+# file may be a stale checkout artifact on machines that skipped the smoke.
+if [ -f ../BENCH_serve.json ] \
+    && grep -q '"provenance"[[:space:]]*:[[:space:]]*"derived-static"' ../BENCH_serve.json; then
+    echo "WARNING: BENCH_serve.json provenance is 'derived-static' (not measured)." >&2
+    echo "WARNING: re-run the serve smoke (unset SKIP_SMOKE) to refresh it." >&2
 fi
 
 echo "verify: OK"
