@@ -31,6 +31,7 @@ use super::{diag, Diagnostic, Profile, Waivers};
 const NO_PANIC_FILES: &[&str] = &[
     "serve/engine.rs",
     "serve/kvcache.rs",
+    "serve/kvcodec.rs",
     "serve/mod.rs",
     "serve/queue.rs",
     "serve/router.rs",

@@ -2,6 +2,7 @@
 //! `key=value` CLI overrides and/or JSON config files (the offline vendor
 //! set has no serde/toml; see util::json).
 
+use crate::serve::kvcodec::KvCodecKind;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
@@ -71,6 +72,15 @@ pub struct ServeConfig {
     /// per-worker KV prefix cache capacity in rows (window → host KV slice
     /// + next token, see `serve::kvcache`); 0 disables prefill avoidance
     pub kv_cache_entries: usize,
+    /// per-worker KV prefix cache budget in *encoded* bytes; 0 = no byte
+    /// budget (entry count alone bounds the cache)
+    pub kv_cache_bytes: usize,
+    /// codec for cached KV snapshots: `f32` (lossless), `f16`
+    /// (half-precision), or `rankr` (truncated low-rank; see `kv_rank`)
+    pub kv_codec: KvCodecKind,
+    /// factorization rank for `kv_codec=rankr` (clamped to ≥ 1; ignored by
+    /// the other codecs)
+    pub kv_rank: usize,
     /// at most this many Normal-priority admissions per join-prefill
     /// boundary (High-priority admissions are never chunk-limited); 0 =
     /// unlimited, i.e. fill every free slot at each boundary
@@ -86,6 +96,9 @@ impl Default for ServeConfig {
             queue_depth: 64,
             default_deadline_ms: 0,
             kv_cache_entries: 64,
+            kv_cache_bytes: 0,
+            kv_codec: KvCodecKind::F32,
+            kv_rank: 8,
             join_chunk: 0,
         }
     }
@@ -165,6 +178,9 @@ pub fn apply_serve_overrides(cfg: &mut ServeConfig, kvs: &[(String, String)]) ->
                 cfg.default_deadline_ms = v.parse().context("default_deadline_ms")?
             }
             "kv_cache_entries" => cfg.kv_cache_entries = v.parse().context("kv_cache_entries")?,
+            "kv_cache_bytes" => cfg.kv_cache_bytes = v.parse().context("kv_cache_bytes")?,
+            "kv_codec" => cfg.kv_codec = KvCodecKind::parse(v).context("kv_codec")?,
+            "kv_rank" => cfg.kv_rank = v.parse().context("kv_rank")?,
             "join_chunk" => cfg.join_chunk = v.parse().context("join_chunk")?,
             _ => anyhow::bail!("unknown serve config key `{k}`"),
         }
@@ -347,6 +363,9 @@ mod tests {
                 ("queue_depth".into(), "128".into()),
                 ("default_deadline_ms".into(), "250".into()),
                 ("kv_cache_entries".into(), "16".into()),
+                ("kv_cache_bytes".into(), "4096".into()),
+                ("kv_codec".into(), "f16".into()),
+                ("kv_rank".into(), "3".into()),
                 ("join_chunk".into(), "2".into()),
             ],
         )
@@ -357,7 +376,23 @@ mod tests {
         assert_eq!(cfg.queue_depth, 128);
         assert_eq!(cfg.default_deadline_ms, 250);
         assert_eq!(cfg.kv_cache_entries, 16);
+        assert_eq!(cfg.kv_cache_bytes, 4096);
+        assert_eq!(cfg.kv_codec, KvCodecKind::F16);
+        assert_eq!(cfg.kv_rank, 3);
         assert_eq!(cfg.join_chunk, 2);
+    }
+
+    #[test]
+    fn serve_codec_defaults_and_rejection() {
+        let cfg = ServeConfig::default();
+        assert_eq!(cfg.kv_codec, KvCodecKind::F32, "lossless by default");
+        assert_eq!(cfg.kv_cache_bytes, 0, "no byte budget by default");
+        let mut cfg = ServeConfig::default();
+        apply_serve_overrides(&mut cfg, &[("kv_codec".into(), "rankr".into())]).unwrap();
+        assert_eq!(cfg.kv_codec, KvCodecKind::RankR);
+        let err = apply_serve_overrides(&mut cfg, &[("kv_codec".into(), "f64".into())])
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("unknown kv codec"), "{err:#}");
     }
 
     #[test]
@@ -368,16 +403,24 @@ mod tests {
             None,
             &[
                 ("kv_cache_entries".into(), "8".into()),
+                ("kv_codec".into(), "f16".into()),
                 ("models".into(), "a:art_a,b:art_b".into()),
                 ("b.kv_cache_entries".into(), "0".into()),
                 ("b.join_chunk".into(), "1".into()),
+                ("b.kv_codec".into(), "rankr".into()),
+                ("b.kv_rank".into(), "4".into()),
+                ("b.kv_cache_bytes".into(), "1024".into()),
             ],
         )
         .unwrap();
         assert_eq!(cfg.models[0].1.kv_cache_entries, 8, "defaults reach every model");
         assert_eq!(cfg.models[0].1.join_chunk, 0);
+        assert_eq!(cfg.models[0].1.kv_codec, KvCodecKind::F16, "codec default inherited");
         assert_eq!(cfg.models[1].1.kv_cache_entries, 0, "dotted override disables per model");
         assert_eq!(cfg.models[1].1.join_chunk, 1);
+        assert_eq!(cfg.models[1].1.kv_codec, KvCodecKind::RankR, "dotted codec override");
+        assert_eq!(cfg.models[1].1.kv_rank, 4);
+        assert_eq!(cfg.models[1].1.kv_cache_bytes, 1024);
     }
 
     #[test]

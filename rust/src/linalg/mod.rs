@@ -7,7 +7,7 @@
 
 pub mod svd;
 
-pub use svd::{effective_rank, singular_values, spectrum_energy};
+pub use svd::{effective_rank, singular_values, spectrum_energy, truncated_factor};
 
 /// Row-major dense f64 matrix.
 #[derive(Clone, Debug)]

@@ -29,11 +29,26 @@ pub fn singular_values(a: &Mat) -> Vec<f64> {
 }
 
 /// Eigenvalues of a symmetric matrix by cyclic Jacobi rotations.
-fn jacobi_eigenvalues(mut g: Mat) -> Vec<f64> {
+fn jacobi_eigenvalues(g: Mat) -> Vec<f64> {
+    jacobi_eigen(g).0
+}
+
+/// Cyclic Jacobi eigen-iteration that also accumulates the eigenvectors.
+///
+/// Returns `(eigenvalues, v)` where column `j` of `v` (an n×n matrix) is the
+/// eigenvector for `eigenvalues[j]`: G ≈ V·diag(λ)·Vᵀ. Pairs are in the
+/// order the diagonal settles into — callers wanting spectral order must
+/// sort. The rotation accumulation is the textbook V ← V·J update, applied
+/// column-wise alongside the two-sided update of G.
+fn jacobi_eigen(mut g: Mat) -> (Vec<f64>, Mat) {
     let n = g.rows;
     assert_eq!(n, g.cols);
     if n == 0 {
-        return vec![];
+        return (vec![], Mat::zeros(0, 0));
+    }
+    let mut v = Mat::zeros(n, n);
+    for i in 0..n {
+        *v.at_mut(i, i) = 1.0;
     }
     let max_sweeps = 60;
     for _sweep in 0..max_sweeps {
@@ -72,10 +87,56 @@ fn jacobi_eigenvalues(mut g: Mat) -> Vec<f64> {
                     *g.at_mut(p, k) = c * gpk - s * gqk;
                     *g.at_mut(q, k) = s * gpk + c * gqk;
                 }
+                for k in 0..n {
+                    let vkp = v.at(k, p);
+                    let vkq = v.at(k, q);
+                    *v.at_mut(k, p) = c * vkp - s * vkq;
+                    *v.at_mut(k, q) = s * vkp + c * vkq;
+                }
             }
         }
     }
-    (0..n).map(|i| g.at(i, i)).collect()
+    ((0..n).map(|i| g.at(i, i)).collect(), v)
+}
+
+/// Best rank-`r` factorization of `a` (rows × cols) as `(l, rt)` with
+/// `l` rows × r and `rt` r × cols, so that `l · rt` is the Eckart–Young
+/// optimal rank-r approximation of `a`.
+///
+/// Built on the Gram route: the eigenvectors V of G = AᵀA are the right
+/// singular vectors of A, so with V_r the top-r columns,
+/// `l = A·V_r` and `rt = V_rᵀ` give `l·rt = A·V_r·V_rᵀ` — projection onto
+/// the dominant right-singular subspace. The residual satisfies
+/// ‖A − l·rt‖_F² = Σ_{i>r} σᵢ² (the truncated spectral tail), which bounds
+/// the max-abs entry error by √(Σ_{i>r} σᵢ²).
+///
+/// `r` is clamped to `min(rows, cols)`; r = 0 yields empty factors whose
+/// product is the zero matrix.
+pub fn truncated_factor(a: &Mat, r: usize) -> (Mat, Mat) {
+    let r = r.min(a.rows).min(a.cols);
+    let (ev, v) = jacobi_eigen(a.gram());
+    // spectral order: indices of the r largest eigenvalues, descending
+    let mut order: Vec<usize> = (0..ev.len()).collect();
+    order.sort_by(|&i, &j| ev[j].partial_cmp(&ev[i]).unwrap_or(std::cmp::Ordering::Equal));
+    order.truncate(r);
+    let mut rt = Mat::zeros(r, a.cols);
+    for (k, &idx) in order.iter().enumerate() {
+        for j in 0..a.cols {
+            *rt.at_mut(k, j) = v.at(j, idx);
+        }
+    }
+    // l = A·V_r  (rows × r); V_r's column k is rt's row k
+    let mut l = Mat::zeros(a.rows, r);
+    for i in 0..a.rows {
+        for k in 0..r {
+            let mut s = 0.0;
+            for j in 0..a.cols {
+                s += a.at(i, j) * rt.at(k, j);
+            }
+            *l.at_mut(i, k) = s;
+        }
+    }
+    (l, rt)
 }
 
 /// Eq. (1): minimal k with Σ_{i≤k} σᵢ² / Σ σᵢ² ≥ α.
@@ -212,5 +273,75 @@ mod tests {
             assert!(r >= prev);
             prev = r;
         }
+    }
+
+    /// ‖A − L·R‖_F for the rank-r factorization of `m`.
+    fn residual_frobenius(m: &Mat, r: usize) -> f64 {
+        let (l, rt) = truncated_factor(m, r);
+        let mut err_sq = 0.0;
+        for i in 0..m.rows {
+            for j in 0..m.cols {
+                let mut s = 0.0;
+                for k in 0..l.cols {
+                    s += l.at(i, k) * rt.at(k, j);
+                }
+                let d = m.at(i, j) - s;
+                err_sq += d * d;
+            }
+        }
+        err_sq.sqrt()
+    }
+
+    #[test]
+    fn truncated_factor_exact_on_low_rank_input() {
+        // A built as rank 3 must reconstruct (near-)exactly at r = 3.
+        let mut rng = Rng::new(17);
+        let (n, c, k) = (40, 16, 3);
+        let u: Vec<f64> = (0..n * k).map(|_| rng.normal()).collect();
+        let v: Vec<f64> = (0..k * c).map(|_| rng.normal()).collect();
+        let mut m = Mat::zeros(n, c);
+        for i in 0..n {
+            for j in 0..c {
+                let mut s = 0.0;
+                for l in 0..k {
+                    s += u[i * k + l] * v[l * c + j];
+                }
+                *m.at_mut(i, j) = s;
+            }
+        }
+        let fro = m.frobenius_sq().sqrt();
+        assert!(residual_frobenius(&m, k) < 1e-8 * fro);
+        // and r beyond k stays exact
+        assert!(residual_frobenius(&m, k + 2) < 1e-8 * fro);
+    }
+
+    #[test]
+    fn truncated_factor_residual_matches_spectral_tail() {
+        // Eckart–Young: ‖A − A_r‖_F² = Σ_{i>r} σᵢ², checked on a full-rank
+        // random matrix for every truncation rank.
+        let mut rng = Rng::new(29);
+        let (n, c) = (30, 8);
+        let data: Vec<f64> = (0..n * c).map(|_| rng.normal()).collect();
+        let m = Mat::from_rows(n, c, data);
+        let sv = singular_values(&m);
+        for r in 0..=c {
+            let tail: f64 = sv.iter().skip(r).map(|s| s * s).sum::<f64>().sqrt();
+            let res = residual_frobenius(&m, r);
+            assert!(
+                (res - tail).abs() <= 1e-8 * (1.0 + tail),
+                "r={r}: residual {res} vs tail {tail}"
+            );
+        }
+    }
+
+    #[test]
+    fn truncated_factor_shapes_and_clamping() {
+        let m = Mat::from_rows(2, 5, vec![1.0; 10]);
+        let (l, rt) = truncated_factor(&m, 99);
+        assert_eq!((l.rows, l.cols), (2, 2), "rank clamps to min(rows, cols)");
+        assert_eq!((rt.rows, rt.cols), (2, 5));
+        let (l0, rt0) = truncated_factor(&m, 0);
+        assert_eq!((l0.rows, l0.cols), (2, 0));
+        assert_eq!((rt0.rows, rt0.cols), (0, 5));
     }
 }

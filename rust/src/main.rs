@@ -12,7 +12,8 @@
 //!             add --distinct D for prompt variety and --bench-json PATH
 //!             to record a BENCH_serve.json line); key=value overrides:
 //!             artifact, max_new_tokens, workers, queue_depth,
-//!             default_deadline_ms, kv_cache_entries, join_chunk,
+//!             default_deadline_ms, kv_cache_entries, kv_cache_bytes,
+//!             kv_codec (f32|f16|rankr), kv_rank, join_chunk,
 //!             models=name:artifact,... and name.key=value per model.
 //!             Prints per-model p50/p95/p99 latency, time-to-first-token,
 //!             and labeled queue/counter/prefill-cache stats plus a fleet
@@ -43,7 +44,8 @@ fn usage() -> ! {
          serve: cola serve [--artifact NAME] [--requests N] [--config f.json] [--model NAME]\n\
                 [--mock] [--distinct D] [--bench-json PATH]\n\
                 [max_new_tokens=K] [workers=N] [queue_depth=D] [default_deadline_ms=MS]\n\
-                [kv_cache_entries=E] [join_chunk=J]\n\
+                [kv_cache_entries=E] [kv_cache_bytes=B] [kv_codec=f32|f16|rankr]\n\
+                [kv_rank=R] [join_chunk=J]\n\
                 [models=name:artifact,...] [name.key=value ...]\n\
          lint:  cola lint [--root DIR] [--format text|json] [--baseline FILE]\n\
                 [--write-baseline FILE] [--dump-lock-graph]\n\
@@ -279,6 +281,12 @@ fn cmd_serve(
             metrics::stat_line("serve_kv_cache_misses", &label, s.kv_cache_misses),
             metrics::stat_line("serve_kv_cache_evictions", &label, s.kv_cache_evictions),
         );
+        println!(
+            "{} {} {}",
+            metrics::stat_line("serve_kv_bytes_resident", &label, s.kv_bytes_resident),
+            metrics::stat_line("serve_kv_bytes_saved", &label, s.kv_bytes_saved),
+            metrics::stat_line("serve_kv_decode_nanos", &label, s.kv_decode_nanos),
+        );
     }
     println!(
         "queue: peak depth {max_queue}/{} full-retries {retries} | \
@@ -298,6 +306,12 @@ fn cmd_serve(
         metrics::fmt_pct(agg.prefills_elided, agg.prefill_calls + agg.prefills_elided),
         metrics::fmt_pct(agg.kv_cache_hits, agg.kv_cache_hits + agg.kv_cache_misses),
         agg.kv_cache_evictions,
+    );
+    println!(
+        "kv bytes: resident {} saved {} (codec vs f32) | cached-row decode {:.2}ms total",
+        agg.kv_bytes_resident,
+        agg.kv_bytes_saved,
+        agg.kv_decode_nanos as f64 * 1e-6,
     );
     router.shutdown();
     Ok(())
@@ -331,13 +345,15 @@ fn cmd_serve_mock(
     let prompts: Vec<Vec<i32>> =
         (0..distinct).map(|d| (0..6).map(|j| 100 + 17 * d as i32 + j).collect()).collect();
 
-    let run = |cache_on: bool| -> Result<(Vec<Vec<i32>>, ServiceStats, f64)> {
+    let run = |mutate: &dyn Fn(&mut cola::config::ServeConfig)| -> Result<(
+        Vec<Vec<i32>>,
+        ServiceStats,
+        f64,
+    )> {
         let mut pools = Vec::new();
         for (name, cfg) in models {
             let mut cfg = cfg.clone();
-            if !cache_on {
-                cfg.kv_cache_entries = 0;
-            }
+            mutate(&mut cfg);
             pools.push((name.clone(), ServicePool::start_with(cfg, mock.clone().factory())?));
         }
         let router = ModelRouter::from_pools(pools)?;
@@ -360,8 +376,8 @@ fn cmd_serve_mock(
         Ok((outs, agg, secs))
     };
 
-    let (outs_on, on, secs_on) = run(true)?;
-    let (outs_off, off, secs_off) = run(false)?;
+    let (outs_on, on, secs_on) = run(&|_| {})?;
+    let (outs_off, off, secs_off) = run(&|c| c.kv_cache_entries = 0)?;
     anyhow::ensure!(
         outs_on == outs_off,
         "prefix cache changed streamed outputs — elision is broken"
@@ -411,6 +427,75 @@ fn cmd_serve_mock(
         );
     }
 
+    // Fixed-memory codec comparison: rerun the same workload three times
+    // under one shared byte budget sized so the lossless f32 codec can hold
+    // only ~2.5 entries — the compressed codecs fit more windows into the
+    // same bytes, which shows up directly as hit rate. Encoded entry sizes
+    // are data-independent, so a zero row prices each codec exactly.
+    use cola::serve::engine::EngineBackend;
+    use cola::serve::{kvcodec, KvCodec, KvCodecKind, KvRowState};
+    let geom = mock.kv_row_geom();
+    let zero = KvRowState { k: vec![0.0; geom.elems()], v: vec![0.0; geom.elems()] };
+    let codecs: [(KvCodecKind, usize, KvCodec); 3] = [
+        (KvCodecKind::F32, 0, KvCodec::F32),
+        (KvCodecKind::F16, 0, KvCodec::F16),
+        (KvCodecKind::RankR, 3, KvCodec::RankR { rank: 3 }),
+    ];
+    let mut entry_bytes = [0u64; 3];
+    for (i, (_, _, codec)) in codecs.iter().enumerate() {
+        entry_bytes[i] = kvcodec::encode_row(&zero, *codec, geom)?.encoded_bytes();
+    }
+    let budget = entry_bytes[0] * 5 / 2;
+    let mut fixed_mem = [(0.0f64, 0u64, 0u64); 3]; // (hit rate, bytes resident, bytes saved)
+    if cache_enabled {
+        for (i, (kind, rank, _)) in codecs.iter().enumerate() {
+            let (outs, s, _) = run(&|c| {
+                c.kv_cache_bytes = budget as usize;
+                c.kv_codec = *kind;
+                c.kv_rank = *rank;
+            })?;
+            anyhow::ensure!(
+                outs == outs_on,
+                "kv_codec={} changed streamed outputs under a byte budget",
+                kind.as_str()
+            );
+            let looks = s.kv_cache_hits + s.kv_cache_misses;
+            fixed_mem[i] = (
+                if looks > 0 { s.kv_cache_hits as f64 / looks as f64 } else { 0.0 },
+                s.kv_bytes_resident,
+                s.kv_bytes_saved,
+            );
+            println!(
+                "  fixed mem ({budget} B): codec {:<5} {:>5} B/entry | hit rate {:.0}% | \
+                 resident {} B saved {} B",
+                kind.as_str(),
+                entry_bytes[i],
+                fixed_mem[i].0 * 100.0,
+                fixed_mem[i].1,
+                fixed_mem[i].2,
+            );
+        }
+        // Compressed codecs must never do worse than f32 at equal memory —
+        // and with enough distinct prompts to thrash the f32 budget they
+        // must do strictly better (that is the point of the codecs).
+        anyhow::ensure!(
+            fixed_mem[1].0 >= fixed_mem[0].0 && fixed_mem[2].0 >= fixed_mem[0].0,
+            "compressed codecs lost hit rate at fixed memory: f32 {:.2} f16 {:.2} rankr {:.2}",
+            fixed_mem[0].0,
+            fixed_mem[1].0,
+            fixed_mem[2].0
+        );
+        if distinct >= 3 && n_requests >= 2 * distinct * models.len() {
+            anyhow::ensure!(
+                fixed_mem[1].0 > fixed_mem[0].0 && fixed_mem[2].0 > fixed_mem[0].0,
+                "compression bought no hit rate at fixed memory: f32 {:.2} f16 {:.2} rankr {:.2}",
+                fixed_mem[0].0,
+                fixed_mem[1].0,
+                fixed_mem[2].0
+            );
+        }
+    }
+
     if let Some(path) = flags.get("bench-json") {
         use cola::util::json::Json;
         let j = Json::obj(vec![
@@ -434,6 +519,32 @@ fn cmd_serve_mock(
                 } else {
                     0.0
                 }),
+            ),
+            ("kv_decode_nanos", Json::num(on.kv_decode_nanos as f64)),
+            ("kv_budget_bytes", Json::num(budget as f64)),
+            (
+                "bytes_per_entry",
+                Json::obj(vec![
+                    ("f32", Json::num(entry_bytes[0] as f64)),
+                    ("f16", Json::num(entry_bytes[1] as f64)),
+                    ("rankr", Json::num(entry_bytes[2] as f64)),
+                ]),
+            ),
+            (
+                "hit_rate_fixed_mem",
+                Json::obj(vec![
+                    ("f32", Json::num(fixed_mem[0].0)),
+                    ("f16", Json::num(fixed_mem[1].0)),
+                    ("rankr", Json::num(fixed_mem[2].0)),
+                ]),
+            ),
+            (
+                "kv_bytes_saved_fixed_mem",
+                Json::obj(vec![
+                    ("f32", Json::num(fixed_mem[0].2 as f64)),
+                    ("f16", Json::num(fixed_mem[1].2 as f64)),
+                    ("rankr", Json::num(fixed_mem[2].2 as f64)),
+                ]),
             ),
         ]);
         std::fs::write(path, format!("{j}\n"))

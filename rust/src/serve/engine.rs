@@ -60,6 +60,7 @@ use crate::metrics;
 use crate::runtime::executor::{buf_f32_vec, buf_i32_vec, lit_f32_vec, lit_i32, to_device};
 use crate::runtime::{ArtifactDir, Executor};
 use crate::serve::kvcache::{KvPrefixCache, KvRowState};
+use crate::serve::kvcodec::{KvCodec, PlaneGeom};
 use crate::serve::service::{FinishReason, QueuedRequest, Shared};
 use crate::serve::slots::{self, SlotTable};
 use anyhow::{Context, Result};
@@ -107,6 +108,15 @@ pub trait EngineBackend {
     /// disables the prefix cache instead of failing at the first boundary.
     fn kv_row_elems(&self) -> usize {
         0
+    }
+
+    /// Matrix structure of one KV plane, as stacked per-layer `rows × cols`
+    /// matrices, for codecs that factorize (the rank-r codec clamps its
+    /// rank to `min(rows, cols)`, so an honest geometry is what makes
+    /// low-rank compression effective). The default flat shape is safe but
+    /// degenerate — backends that support KV export should override it.
+    fn kv_row_geom(&self) -> PlaneGeom {
+        PlaneGeom::flat(self.kv_row_elems())
     }
 
     /// Snapshot the post-prefill KV state of the given rows to the host
@@ -282,6 +292,16 @@ impl EngineBackend for PjrtBackend {
         self.n_layers * self.layer_row_elems()
     }
 
+    fn kv_row_geom(&self) -> PlaneGeom {
+        // per layer, a row's plane is [max_len, n_heads * head_dim] — the
+        // contiguous slice export_kv_rows gathers per (layer, row)
+        PlaneGeom {
+            layers: self.n_layers,
+            rows: self.max_len,
+            cols: self.n_heads * self.head_dim,
+        }
+    }
+
     fn export_kv_rows(&mut self, rows: &[usize]) -> Result<Vec<KvRowState>> {
         let (kcb, vcb) = self.kv.as_ref().context("export_kv_rows before prefill")?;
         // one host transfer for the whole batch, then per-row gather — the
@@ -349,6 +369,11 @@ impl EngineBackend for PjrtBackend {
 pub(crate) struct EngineOptions {
     /// KV prefix-cache capacity in rows; 0 disables prefill avoidance.
     pub(crate) kv_cache_entries: usize,
+    /// KV prefix-cache byte budget over encoded payloads; 0 = unlimited.
+    pub(crate) kv_cache_bytes: usize,
+    /// Codec the cache stores entries under (`ServeConfig::kv_codec` joined
+    /// with `kv_rank`).
+    pub(crate) kv_codec: KvCodec,
     /// Normal-priority admissions per join boundary; 0 = unlimited.
     pub(crate) join_chunk: usize,
 }
@@ -367,6 +392,14 @@ struct WorkerState {
     feed: Vec<i32>,
     /// `(row, probe result)` per occupied row at the current boundary.
     probes: Vec<(usize, Option<usize>)>,
+    /// Per-slot decode scratch for elided prefills: cache entries are
+    /// stored encoded, so each hit is decoded here before import. Reused
+    /// across boundaries — decode is codec work, not per-call allocation.
+    decoded: Vec<KvRowState>,
+    /// Last published value of the `kv_bytes_resident` gauge, so cache
+    /// byte-occupancy changes sync as deltas (same pattern as the `active`
+    /// gauge in `sync_gauge`).
+    kv_bytes: usize,
     /// Scratch for dead-queued sheds, reused so the decode loop's periodic
     /// sweep stays allocation-free when nothing matches.
     dead: Vec<QueuedRequest>,
@@ -382,18 +415,29 @@ pub(crate) fn run_worker(
     let mut gauge = 0usize; // this worker's contribution to stats.active
     let cache_rows = if backend.kv_row_elems() > 0 { opts.kv_cache_entries } else { 0 };
     let mut st = WorkerState {
-        cache: (cache_rows > 0).then(|| KvPrefixCache::new(cache_rows)),
+        cache: (cache_rows > 0).then(|| {
+            KvPrefixCache::with_codec(
+                cache_rows,
+                opts.kv_cache_bytes as u64,
+                opts.kv_codec,
+                backend.kv_row_geom(),
+            )
+        }),
         join_chunk: opts.join_chunk,
         toks: vec![tokenizer::PAD; backend.batch_size() * backend.prompt_len()],
         occ: Vec::with_capacity(backend.batch_size()),
         feed: Vec::with_capacity(backend.batch_size()),
         probes: Vec::with_capacity(backend.batch_size()),
+        decoded: vec![KvRowState::default(); backend.batch_size()],
+        kv_bytes: 0,
         dead: Vec::with_capacity(8),
     };
     metrics::log_info(&format!(
-        "serve worker up: {} kv_cache={} join_chunk={}",
+        "serve worker up: {} kv_cache={} kv_bytes={} kv_codec={:?} join_chunk={}",
         backend.describe(),
         cache_rows,
+        opts.kv_cache_bytes,
+        opts.kv_codec,
         if st.join_chunk == 0 { "off".into() } else { st.join_chunk.to_string() }
     ));
 
@@ -424,6 +468,10 @@ pub(crate) fn run_worker(
         }
     }
     sync_gauge(shared, &mut gauge, 0);
+    // this worker's cache dies with it — retire its resident-bytes share
+    if st.kv_bytes > 0 {
+        shared.counters.kv_bytes_resident.sub(st.kv_bytes);
+    }
     Ok(())
 }
 
@@ -514,7 +562,7 @@ fn join_prefill(
     prompt_len: usize,
 ) -> Result<Vec<i32>> {
     let c = &shared.counters;
-    let WorkerState { cache, toks, occ, probes, .. } = st;
+    let WorkerState { cache, toks, occ, probes, decoded, kv_bytes, .. } = st;
 
     if let Some(cache) = cache.as_mut() {
         probes.clear();
@@ -528,19 +576,27 @@ fn join_prefill(
         c.kv_cache_hits.add(occ.len() as u64 - misses);
         c.kv_cache_misses.add(misses);
         if misses == 0 && !occ.is_empty() {
-            // Every window is known: skip the forward pass, rebuild the
-            // batch KV from host snapshots and replay the cached next
-            // tokens (free rows get zero KV; their output is junk anyway).
-            let mut rows: Vec<Option<&KvRowState>> = vec![None; serve_bs];
+            // Every window is known: skip the forward pass, decode the
+            // encoded snapshots into per-slot scratch (timed — this is the
+            // codec's cost on the elision path), rebuild the batch KV from
+            // them, and replay the cached next tokens (free rows get zero
+            // KV; their output is junk anyway).
+            let t0 = Instant::now();
             let mut next = vec![tokenizer::PAD; serve_bs];
             for &(i, p) in probes.iter() {
                 // `misses == 0` makes every probe `Some`; a `None` here
                 // would mean serving a zero KV row, so bail to the real
                 // prefill path below instead of trusting it.
                 let Some(idx) = p else { anyhow::bail!("probe/miss accounting diverged") };
-                let (kv, tok) = cache.peek(idx);
-                rows[i] = Some(kv);
-                next[i] = tok;
+                cache.decode_into(idx, &mut decoded[i]);
+                next[i] = cache.peek(idx).1;
+            }
+            c.kv_decode_nanos.add(t0.elapsed().as_nanos() as u64);
+            let mut rows: Vec<Option<&KvRowState>> = vec![None; serve_bs];
+            for &(i, p) in probes.iter() {
+                if p.is_some() {
+                    rows[i] = Some(&decoded[i]);
+                }
             }
             backend.import_kv_rows(&rows)?;
             c.prefills_elided.add(1);
@@ -572,12 +628,26 @@ fn join_prefill(
                 miss_rows.len()
             );
             let mut evicted = 0u64;
+            let mut bytes_saved = 0u64;
             for (&i, kv) in miss_rows.iter().zip(states) {
                 let h = table.window_hash(i, prompt_len, tokenizer::PAD);
                 let window = toks[i * prompt_len..(i + 1) * prompt_len].to_vec();
-                evicted += cache.insert(h, window, kv, next[i]);
+                let out = cache.insert(h, window, &kv, next[i])?;
+                evicted += out.evicted;
+                bytes_saved += out.bytes_saved;
             }
             c.kv_cache_evictions.add(evicted);
+            c.kv_bytes_saved.add(bytes_saved);
+            // Gauge tracks the *resident* encoded bytes across all workers;
+            // sync it by delta against this worker's last observation so
+            // evictions (including budget-driven ones) are reflected too.
+            let cur = cache.bytes_resident() as usize;
+            if cur > *kv_bytes {
+                c.kv_bytes_resident.add(cur - *kv_bytes);
+            } else {
+                c.kv_bytes_resident.sub(*kv_bytes - cur);
+            }
+            *kv_bytes = cur;
         }
     }
     Ok(next)

@@ -7,16 +7,32 @@
 //! each row's cache from zeros, and causal attention never crosses rows),
 //! so identical windows always produce identical per-row KV slices and the
 //! same next token. [`KvPrefixCache`] exploits that: a bounded LRU from
-//! window-token hash to `(host KV row snapshot, next token)`, filled after
-//! real prefills via [`EngineBackend::export_kv_rows`] and consulted at
-//! every join boundary. When *all* occupied rows hit, the engine skips the
-//! prefill entirely and restores the rows with
+//! window-token hash to `(encoded KV row snapshot, next token)`, filled
+//! after real prefills via [`EngineBackend::export_kv_rows`] and consulted
+//! at every join boundary. When *all* occupied rows hit, the engine skips
+//! the prefill entirely and restores the rows with
 //! [`EngineBackend::import_kv_rows`] — repeated prefixes (system prompts,
 //! retries, deterministic re-generations after a rollover) cost one host
 //! transfer instead of one full forward pass.
 //!
 //! [`EngineBackend::export_kv_rows`]: crate::serve::engine::EngineBackend::export_kv_rows
 //! [`EngineBackend::import_kv_rows`]: crate::serve::engine::EngineBackend::import_kv_rows
+//!
+//! # Byte budgeting and codecs
+//!
+//! Entries are stored **encoded** through a [`KvCodec`] (`f32` lossless,
+//! `f16` half-precision, `rankr` low-rank — see [`kvcodec`] for the error
+//! contract of each) and the cache budgets the *encoded payload bytes*, not
+//! just the entry count: [`KvPrefixCache::insert`] evicts LRU entries until
+//! both the entry cap and the byte budget fit. Byte accounting is exact —
+//! [`bytes_resident`](KvPrefixCache::bytes_resident) is the sum of
+//! `encoded_bytes()` over resident entries, and every insert reports the
+//! bytes it released (evictions plus refresh replacement), so
+//! `bytes_inserted − bytes_released == bytes_resident` holds as an
+//! invariant (checked exhaustively in `tests/serve_interleave.rs`). One
+//! soft spot, by design: a single entry larger than the whole budget is
+//! still admitted once the cache is empty (mirroring the `capacity >= 1`
+//! floor) — refusing it would disable caching entirely for that geometry.
 //!
 //! Design notes:
 //! - Entries verify the full window on lookup — the hash is the index, not
@@ -26,10 +42,13 @@
 //!   needs no locking and its lifetime matches the backend whose geometry
 //!   produced the snapshots.
 //! - Probing and reading are split ([`probe`](KvPrefixCache::probe) touches
-//!   the LRU order and returns an index; [`peek`](KvPrefixCache::peek) is a
-//!   shared borrow) so the engine can collect every occupied row's entry
-//!   before handing the batch to `import_kv_rows`.
+//!   the LRU order and returns an index;
+//!   [`decode_into`](KvPrefixCache::decode_into) is a shared borrow) so the
+//!   engine can decode every occupied row's entry before handing the batch
+//!   to `import_kv_rows`.
 
+use crate::serve::kvcodec::{self, EncodedKvRow, EncodedPlane, KvCodec, PlaneGeom};
+use anyhow::Result;
 use std::collections::HashMap;
 
 /// Sentinel for "no neighbour" in the intrusive LRU list.
@@ -38,8 +57,9 @@ const NIL: usize = usize::MAX;
 /// Host-side snapshot of one row's post-prefill KV state, plus the next
 /// token that prefill produced for the row. Payload layout is
 /// backend-defined (`[n_layers * max_len * n_heads * head_dim]` f32 per
-/// plane for the PJRT backend); the cache only moves it.
-#[derive(Clone, Debug, PartialEq)]
+/// plane for the PJRT backend); the cache encodes it on insert and decodes
+/// it back on import.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct KvRowState {
     /// Key-cache plane for this row.
     pub k: Vec<f32>,
@@ -71,8 +91,10 @@ pub fn hash_tokens(tokens: &[i32]) -> u64 {
 struct Entry {
     hash: u64,
     window: Vec<i32>,
-    kv: KvRowState,
+    enc: EncodedKvRow,
     next_token: i32,
+    /// Exact serialized size of `enc` — the unit of the byte budget.
+    bytes: u64,
     /// Towards MRU (the entry more recently used than this one).
     prev: usize,
     /// Towards LRU.
@@ -88,9 +110,32 @@ pub struct CacheEvents {
     pub evictions: u64,
 }
 
-/// Bounded LRU of per-row KV snapshots keyed by window-token hash.
+/// What one [`KvPrefixCache::insert`] did, for exact byte accounting.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct InsertOutcome {
+    /// Entries evicted to make room (0 for a refresh or an in-budget insert).
+    pub evicted: u64,
+    /// Bytes released: evicted entries' payloads plus, on a refresh, the
+    /// replaced payload. `bytes_inserted − Σ bytes_released` always equals
+    /// [`bytes_resident`](KvPrefixCache::bytes_resident).
+    pub bytes_released: u64,
+    /// Encoded size of the inserted payload.
+    pub bytes_inserted: u64,
+    /// How many bytes the codec saved vs. the lossless f32 baseline for
+    /// this payload (0 for the `F32` codec).
+    pub bytes_saved: u64,
+}
+
+/// Bounded LRU of encoded per-row KV snapshots keyed by window-token hash,
+/// budgeted by entry count **and** encoded bytes.
 pub struct KvPrefixCache {
     cap: usize,
+    /// Byte budget over encoded payloads; 0 means unlimited.
+    max_bytes: u64,
+    codec: KvCodec,
+    geom: PlaneGeom,
+    /// Sum of `bytes` over resident entries.
+    bytes: u64,
     /// hash → slab index. One entry per hash: a colliding insert replaces
     /// the resident entry (verified windows make this safe, merely lossy).
     map: HashMap<u64, usize>,
@@ -103,11 +148,23 @@ pub struct KvPrefixCache {
 impl KvPrefixCache {
     /// A cache holding at most `capacity` rows (`capacity >= 1`; a capacity
     /// of 0 means "disabled" and is handled by the engine, which then never
-    /// constructs one).
+    /// constructs one), storing lossless `f32` with no byte budget — the
+    /// pre-codec behaviour.
     pub fn new(capacity: usize) -> Self {
+        Self::with_codec(capacity, 0, KvCodec::F32, PlaneGeom::flat(0))
+    }
+
+    /// A cache with an explicit codec, plane geometry, and byte budget
+    /// (`max_bytes == 0` means unlimited). `geom` is only consulted by the
+    /// rank-r codec, which needs the matrix structure of each plane.
+    pub fn with_codec(capacity: usize, max_bytes: u64, codec: KvCodec, geom: PlaneGeom) -> Self {
         let cap = capacity.max(1);
         Self {
             cap,
+            max_bytes,
+            codec,
+            geom,
+            bytes: 0,
             map: HashMap::with_capacity(cap),
             slab: Vec::with_capacity(cap),
             free: Vec::new(),
@@ -126,6 +183,11 @@ impl KvPrefixCache {
 
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
+    }
+
+    /// Sum of encoded payload bytes over resident entries.
+    pub fn bytes_resident(&self) -> u64 {
+        self.bytes
     }
 
     /// Unlink `i` from the recency list.
@@ -157,9 +219,10 @@ impl KvPrefixCache {
     }
 
     /// Look up a window. On a verified hit the entry moves to the MRU head
-    /// and its slab index is returned — read it with [`peek`](Self::peek)
-    /// (a shared borrow, so a whole batch of probed rows can be read at
-    /// once). A hash collision with a different window is a miss.
+    /// and its slab index is returned — read it with
+    /// [`decode_into`](Self::decode_into) (a shared borrow, so a whole
+    /// batch of probed rows can be read at once). A hash collision with a
+    /// different window is a miss.
     pub fn probe(&mut self, hash: u64, window: &[i32]) -> Option<usize> {
         let &i = self.map.get(&hash)?;
         if self.slab[i].window != window {
@@ -172,51 +235,116 @@ impl KvPrefixCache {
         Some(i)
     }
 
-    /// The KV snapshot and next token behind a [`probe`](Self::probe)d
+    /// The encoded snapshot and next token behind a [`probe`](Self::probe)d
     /// index. Indices stay valid until the next `insert`.
-    pub fn peek(&self, idx: usize) -> (&KvRowState, i32) {
+    pub fn peek(&self, idx: usize) -> (&EncodedKvRow, i32) {
         let e = &self.slab[idx];
-        (&e.kv, e.next_token)
+        (&e.enc, e.next_token)
     }
 
-    /// Insert (or refresh) the snapshot for a window, evicting the LRU
-    /// entry when the cache is full. Returns how many entries were evicted
-    /// (0 or 1).
-    pub fn insert(&mut self, hash: u64, window: Vec<i32>, kv: KvRowState, next_token: i32) -> u64 {
+    /// Decode the snapshot behind a probed index into `out` (cleared
+    /// first), so the engine can reuse per-slot scratch buffers across
+    /// imports instead of allocating on every elided prefill.
+    pub fn decode_into(&self, idx: usize, out: &mut KvRowState) {
+        self.slab[idx].enc.decode_into(out);
+    }
+
+    /// Evict the least-recently-used entry, returning the bytes it freed
+    /// (`None` when the cache is empty). Exposed so harnesses can drive the
+    /// eviction path directly; `insert` uses the same mechanism.
+    pub fn evict_lru(&mut self) -> Option<u64> {
+        let lru = self.tail;
+        if lru == NIL {
+            return None;
+        }
+        Some(self.evict_index(lru))
+    }
+
+    fn evict_index(&mut self, i: usize) -> u64 {
+        self.unlink(i);
+        self.map.remove(&self.slab[i].hash);
+        let e = &mut self.slab[i];
+        let freed = e.bytes;
+        // drop the payload now — a slot can sit on the free list for a
+        // while, and the byte budget is about real resident memory
+        e.window = Vec::new();
+        e.enc = EncodedKvRow { k: EncodedPlane::F32(Vec::new()), v: EncodedPlane::F32(Vec::new()) };
+        e.bytes = 0;
+        self.free.push(i);
+        self.bytes -= freed;
+        freed
+    }
+
+    fn over_budget(&self) -> bool {
+        self.max_bytes > 0 && self.bytes > self.max_bytes
+    }
+
+    /// Insert (or refresh) the snapshot for a window, encoding it under the
+    /// cache's codec and evicting LRU entries until both the entry cap and
+    /// the byte budget fit. Errors only on codec misuse (a rank-r geometry
+    /// that does not match the payload), never on capacity.
+    pub fn insert(
+        &mut self,
+        hash: u64,
+        window: Vec<i32>,
+        kv: &KvRowState,
+        next_token: i32,
+    ) -> Result<InsertOutcome> {
+        let enc = kvcodec::encode_row(kv, self.codec, self.geom)?;
+        let new_bytes = enc.encoded_bytes();
+        let mut out = InsertOutcome {
+            evicted: 0,
+            bytes_released: 0,
+            bytes_inserted: new_bytes,
+            bytes_saved: kvcodec::f32_row_bytes(kv).saturating_sub(new_bytes),
+        };
         if let Some(&i) = self.map.get(&hash) {
             // refresh (or hash-collision replacement — last writer wins)
             let e = &mut self.slab[i];
+            out.bytes_released += e.bytes;
+            self.bytes = self.bytes - e.bytes + new_bytes;
             e.window = window;
-            e.kv = kv;
+            e.enc = enc;
             e.next_token = next_token;
+            e.bytes = new_bytes;
             if self.head != i {
                 self.unlink(i);
                 self.push_front(i);
             }
-            return 0;
+            // a grown payload can overflow the budget: shrink, but never
+            // evict the entry just refreshed (it is the MRU head anyway)
+            while self.over_budget() && self.tail != i {
+                out.bytes_released += self.evict_index(self.tail);
+                out.evicted += 1;
+            }
+            return Ok(out);
         }
-        let mut evicted = 0;
-        if self.map.len() >= self.cap {
-            let lru = self.tail;
-            debug_assert_ne!(lru, NIL, "full cache must have a tail");
-            self.unlink(lru);
-            self.map.remove(&self.slab[lru].hash);
-            self.free.push(lru);
-            evicted = 1;
+        while self.map.len() >= self.cap {
+            out.bytes_released += self.evict_index(self.tail);
+            out.evicted += 1;
         }
+        while self.max_bytes > 0
+            && !self.map.is_empty()
+            && self.bytes + new_bytes > self.max_bytes
+        {
+            out.bytes_released += self.evict_index(self.tail);
+            out.evicted += 1;
+        }
+        let entry = Entry { hash, window, enc, next_token, bytes: new_bytes, prev: NIL, next: NIL };
         let i = match self.free.pop() {
             Some(i) => {
-                self.slab[i] = Entry { hash, window, kv, next_token, prev: NIL, next: NIL };
+                self.slab[i] = entry;
                 i
             }
             None => {
-                self.slab.push(Entry { hash, window, kv, next_token, prev: NIL, next: NIL });
+                self.slab.push(entry);
                 self.slab.len() - 1
             }
         };
         self.map.insert(hash, i);
         self.push_front(i);
-        evicted
+        self.bytes += new_bytes;
+        Ok(out)
     }
 
     /// MRU-first window snapshots (test/debug aid).
@@ -240,8 +368,11 @@ mod tests {
         KvRowState { k: vec![x; 4], v: vec![-x; 4] }
     }
 
+    /// Encoded f32 size of `row(_)`: two planes of 4 f32 each.
+    const ROW_BYTES: u64 = 2 * (5 + 4 * 4);
+
     fn put(c: &mut KvPrefixCache, w: &[i32], next: i32) -> u64 {
-        c.insert(hash_tokens(w), w.to_vec(), row(next as f32), next)
+        c.insert(hash_tokens(w), w.to_vec(), &row(next as f32), next).unwrap().evicted
     }
 
     fn get(c: &mut KvPrefixCache, w: &[i32]) -> Option<i32> {
@@ -261,10 +392,13 @@ mod tests {
         assert!(get(&mut c, &[1, 2]).is_none(), "cold cache misses");
         put(&mut c, &[1, 2], 3);
         let i = c.probe(hash_tokens(&[1, 2]), &[1, 2]).unwrap();
-        let (kv, next) = c.peek(i);
+        let (_, next) = c.peek(i);
         assert_eq!(next, 3);
-        assert_eq!(kv, &row(3.0));
+        let mut kv = KvRowState::default();
+        c.decode_into(i, &mut kv);
+        assert_eq!(kv, row(3.0), "f32 codec decodes bit-identically");
         assert_eq!(c.len(), 1);
+        assert_eq!(c.bytes_resident(), ROW_BYTES);
     }
 
     #[test]
@@ -285,8 +419,11 @@ mod tests {
     fn refresh_updates_payload_without_eviction() {
         let mut c = KvPrefixCache::new(2);
         put(&mut c, &[5], 1);
-        assert_eq!(put(&mut c, &[5], 2), 0, "same window refreshes in place");
+        let out = c.insert(hash_tokens(&[5]), vec![5], &row(2.0), 2).unwrap();
+        assert_eq!(out.evicted, 0, "same window refreshes in place");
+        assert_eq!(out.bytes_released, ROW_BYTES, "the replaced payload is released");
         assert_eq!(c.len(), 1);
+        assert_eq!(c.bytes_resident(), ROW_BYTES);
         assert_eq!(get(&mut c, &[5]), Some(2));
     }
 
@@ -305,7 +442,7 @@ mod tests {
     fn collision_with_different_window_is_a_verified_miss() {
         let mut c = KvPrefixCache::new(2);
         let h = hash_tokens(&[7, 8]);
-        c.insert(h, vec![7, 8], row(1.0), 1);
+        c.insert(h, vec![7, 8], &row(1.0), 1).unwrap();
         // same hash, different tokens: must NOT serve the resident entry
         assert!(c.probe(h, &[9, 9]).is_none());
         assert!(c.probe(h, &[7, 8]).is_some(), "the real window still hits");
@@ -332,12 +469,73 @@ mod tests {
         assert_eq!(get(&mut c, &[2]), Some(2));
     }
 
+    #[test]
+    fn byte_budget_evicts_until_the_new_entry_fits() {
+        // Budget for exactly two rows; the entry cap is slack.
+        let c_budget = 2 * ROW_BYTES;
+        let mut c = KvPrefixCache::with_codec(16, c_budget, KvCodec::F32, PlaneGeom::flat(4));
+        assert_eq!(put(&mut c, &[1], 1), 0);
+        assert_eq!(put(&mut c, &[2], 2), 0);
+        assert_eq!(c.bytes_resident(), c_budget);
+        assert_eq!(put(&mut c, &[3], 3), 1, "third row exceeds the byte budget");
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.bytes_resident(), c_budget);
+        assert!(get(&mut c, &[1]).is_none(), "LRU went first");
+        assert_eq!(get(&mut c, &[2]), Some(2));
+        assert_eq!(get(&mut c, &[3]), Some(3));
+    }
+
+    #[test]
+    fn oversized_entry_is_admitted_into_an_empty_cache() {
+        // Budget below one row: everything resident is evicted, then the
+        // row is admitted anyway (the documented capacity >= 1 floor).
+        let mut c = KvPrefixCache::with_codec(16, ROW_BYTES / 2, KvCodec::F32, PlaneGeom::flat(4));
+        assert_eq!(put(&mut c, &[1], 1), 0);
+        assert_eq!(c.len(), 1, "oversized row admitted while empty");
+        let out = c.insert(hash_tokens(&[2]), vec![2], &row(2.0), 2).unwrap();
+        assert_eq!(out.evicted, 1, "the resident oversized row makes room first");
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.bytes_resident(), ROW_BYTES);
+    }
+
+    #[test]
+    fn evict_lru_frees_bytes_and_reports_them() {
+        let mut c = KvPrefixCache::new(4);
+        put(&mut c, &[1], 1);
+        put(&mut c, &[2], 2);
+        assert_eq!(c.evict_lru(), Some(ROW_BYTES));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.bytes_resident(), ROW_BYTES);
+        assert!(get(&mut c, &[1]).is_none(), "eviction took the LRU entry");
+        assert_eq!(c.evict_lru(), Some(ROW_BYTES));
+        assert_eq!(c.evict_lru(), None, "empty cache has nothing to evict");
+        assert_eq!(c.bytes_resident(), 0);
+    }
+
+    #[test]
+    fn f16_codec_doubles_entries_per_byte() {
+        let f16_row = 2 * (5 + 2 * 4);
+        let mut c = KvPrefixCache::with_codec(16, 2 * ROW_BYTES, KvCodec::F16, PlaneGeom::flat(4));
+        for w in 1..=4 {
+            put(&mut c, &[w], w);
+        }
+        assert_eq!(c.len(), 4, "the f16 budget holds twice the f32 rows");
+        assert_eq!(c.bytes_resident(), 4 * f16_row);
+        let out = c.insert(hash_tokens(&[9]), vec![9], &row(9.0), 9).unwrap();
+        assert_eq!(out.bytes_saved, ROW_BYTES - f16_row);
+        let i = c.probe(hash_tokens(&[2]), &[2]).unwrap();
+        let mut kv = KvRowState::default();
+        c.decode_into(i, &mut kv);
+        assert_eq!(kv, row(2.0), "small integers survive f16 exactly");
+    }
+
     /// Eviction-accounting conservation under random thrash: across a long
     /// mixed probe/insert workload over 3x-capacity distinct windows,
     /// hits + misses == probes, every probe outcome agrees with the actual
-    /// resident set, occupancy never exceeds capacity, and every *new*
-    /// insert is conserved as either a still-resident entry or a reported
-    /// eviction (`new_inserts == evictions + len`).
+    /// resident set, occupancy never exceeds capacity, every *new* insert
+    /// is conserved as either a still-resident entry or a reported eviction
+    /// (`new_inserts == evictions + len`), and the byte ledger balances:
+    /// `bytes_inserted − bytes_released == bytes_resident`.
     #[test]
     fn eviction_accounting_is_conserved_under_thrash() {
         use crate::util::rng::Rng;
@@ -354,6 +552,7 @@ mod tests {
         let mut latest: HashMap<u64, i32> = HashMap::new();
         let (mut probes, mut hits, mut misses) = (0u64, 0u64, 0u64);
         let (mut new_inserts, mut refreshes, mut evictions) = (0u64, 0u64, 0u64);
+        let (mut bytes_in, mut bytes_out) = (0u64, 0u64);
         for step in 0..4000 {
             let w = &windows[rng.below(windows.len())];
             let h = hash_tokens(w);
@@ -375,25 +574,33 @@ mod tests {
             } else {
                 let pre_len = c.len();
                 let tok = step as i32;
-                let ev = c.insert(h, w.clone(), row(tok as f32), tok);
+                let out = c.insert(h, w.clone(), &row(tok as f32), tok).unwrap();
+                bytes_in += out.bytes_inserted;
+                bytes_out += out.bytes_released;
                 latest.insert(h, tok);
                 if resident.contains(&h) {
                     refreshes += 1;
-                    assert_eq!(ev, 0, "a refresh never evicts");
+                    assert_eq!(out.evicted, 0, "a refresh never evicts");
                     assert_eq!(c.len(), pre_len, "a refresh never changes occupancy");
                 } else {
                     new_inserts += 1;
                     if pre_len == CAP {
-                        assert_eq!(ev, 1, "insert at capacity evicts exactly one");
+                        assert_eq!(out.evicted, 1, "insert at capacity evicts exactly one");
                         assert_eq!(c.len(), CAP);
                     } else {
-                        assert_eq!(ev, 0, "no eviction below capacity");
+                        assert_eq!(out.evicted, 0, "no eviction below capacity");
                         assert_eq!(c.len(), pre_len + 1);
                     }
-                    evictions += ev;
+                    evictions += out.evicted;
                 }
             }
             assert!(c.len() <= CAP, "occupancy above capacity");
+            assert_eq!(
+                bytes_in - bytes_out,
+                c.bytes_resident(),
+                "byte ledger must balance at every step"
+            );
+            assert_eq!(c.bytes_resident(), c.len() as u64 * ROW_BYTES);
         }
         assert_eq!(hits + misses, probes, "every probe is a hit xor a miss");
         assert_eq!(

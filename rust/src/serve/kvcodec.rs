@@ -1,0 +1,542 @@
+//! Pluggable KV-row codecs for the host-side prefix cache (`kvcache`).
+//!
+//! CoLA's thesis is that transformer activations are low-rank, so the KV
+//! snapshots the cache stores (and ships over the `EngineBackend` KV-row
+//! seam) are massively redundant. This module turns that into cache
+//! capacity: a [`KvRowState`] is encoded once on insert and decoded once on
+//! import, and the cache budgets **bytes** of encoded payload rather than
+//! entry counts.
+//!
+//! # Codec contract
+//!
+//! | Codec   | Error contract                                               |
+//! |---------|--------------------------------------------------------------|
+//! | `F32`   | lossless — decode is bit-identical to the input              |
+//! | `F16`   | per-element round-to-nearest-even; values exactly            |
+//! |         | representable in half precision (integers ≤ 2048, etc.)      |
+//! |         | round-trip bit-exact, everything else within half an f16 ulp |
+//! | `RankR` | per-layer rank-r truncation via `linalg::svd::`              |
+//! |         | `truncated_factor`; max-abs reconstruction error is bounded  |
+//! |         | by √(Σ_{i>r} σᵢ²), the truncated spectral tail               |
+//!
+//! Every [`EncodedPlane`] knows its exact serialized size
+//! ([`EncodedPlane::encoded_bytes`] equals `serialize_into`'s output length
+//! to the byte — a property test in `tests/kvcodec_props.rs` pins this), so
+//! the cache's byte accounting is exact, not estimated.
+//!
+//! The codec runs only at prefill/import boundaries (`join_prefill` in the
+//! engine), never inside the decode hot loop — the `cola lint` hot-path
+//! pass keeps it that way.
+
+use crate::linalg::{truncated_factor, Mat};
+use crate::serve::kvcache::KvRowState;
+use anyhow::Result;
+
+/// A fully-specified codec, as handed to the cache and the engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvCodec {
+    /// Identity: planes stored as raw f32 — lossless.
+    F32,
+    /// Half-precision planes: 2 bytes/element, round-to-nearest-even.
+    F16,
+    /// Per-layer truncated rank-`rank` factorization: a `rows × cols` plane
+    /// becomes `rows × rank` + `rank × cols` factors.
+    RankR { rank: usize },
+}
+
+/// The config-facing codec name: what `kv_codec=...` parses into. The rank
+/// for `RankR` arrives through the separate `kv_rank` knob, so the two
+/// overrides compose in either order; [`KvCodecKind::with_rank`] joins them
+/// into a [`KvCodec`] at engine-start time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum KvCodecKind {
+    #[default]
+    F32,
+    F16,
+    RankR,
+}
+
+impl KvCodecKind {
+    /// Parse a config value; unknown names are rejected with a typed error
+    /// listing the accepted set.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(KvCodecKind::F32),
+            "f16" => Ok(KvCodecKind::F16),
+            "rankr" => Ok(KvCodecKind::RankR),
+            _ => anyhow::bail!("unknown kv codec `{s}` (expected f32|f16|rankr)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KvCodecKind::F32 => "f32",
+            KvCodecKind::F16 => "f16",
+            KvCodecKind::RankR => "rankr",
+        }
+    }
+
+    /// Combine with the configured rank. The rank is clamped to ≥ 1 — a
+    /// rank-0 codec would decode every plane to zeros, which is never what
+    /// a config meant.
+    pub fn with_rank(self, rank: usize) -> KvCodec {
+        match self {
+            KvCodecKind::F32 => KvCodec::F32,
+            KvCodecKind::F16 => KvCodec::F16,
+            KvCodecKind::RankR => KvCodec::RankR { rank: rank.max(1) },
+        }
+    }
+}
+
+/// Logical shape of one KV plane as stacked per-layer matrices. Only the
+/// `RankR` codec consults it (the factorization needs matrix structure);
+/// `F32`/`F16` treat the plane as a flat vector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlaneGeom {
+    pub layers: usize,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl PlaneGeom {
+    pub fn flat(elems: usize) -> Self {
+        Self { layers: 1, rows: 1, cols: elems }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.layers * self.rows * self.cols
+    }
+}
+
+/// One encoded KV plane. The serialized layout (little-endian) is:
+///
+/// - `F32`:   tag `0u8` · `len: u32` · `len × f32`          → 5 + 4·len bytes
+/// - `F16`:   tag `1u8` · `len: u32` · `len × u16`          → 5 + 2·len bytes
+/// - `RankR`: tag `2u8` · `layers,rows,cols,rank: 4 × u32`
+///   · per layer `rows·rank + rank·cols` f32 factors
+///   → 17 + 4·layers·(rows·rank + rank·cols) bytes
+#[derive(Clone, Debug, PartialEq)]
+pub enum EncodedPlane {
+    F32(Vec<f32>),
+    F16(Vec<u16>),
+    RankR { layers: usize, rows: usize, cols: usize, rank: usize, factors: Vec<f32> },
+}
+
+impl EncodedPlane {
+    /// Exact serialized size in bytes — matches `serialize_into` output
+    /// length for every variant (pinned by a property test).
+    pub fn encoded_bytes(&self) -> u64 {
+        match self {
+            EncodedPlane::F32(d) => 5 + 4 * d.len() as u64,
+            EncodedPlane::F16(d) => 5 + 2 * d.len() as u64,
+            EncodedPlane::RankR { factors, .. } => 17 + 4 * factors.len() as u64,
+        }
+    }
+
+    pub fn serialize_into(&self, out: &mut Vec<u8>) {
+        match self {
+            EncodedPlane::F32(d) => {
+                out.push(0);
+                out.extend_from_slice(&(d.len() as u32).to_le_bytes());
+                for x in d {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            EncodedPlane::F16(d) => {
+                out.push(1);
+                out.extend_from_slice(&(d.len() as u32).to_le_bytes());
+                for x in d {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            EncodedPlane::RankR { layers, rows, cols, rank, factors } => {
+                out.push(2);
+                for dim in [*layers, *rows, *cols, *rank] {
+                    out.extend_from_slice(&(dim as u32).to_le_bytes());
+                }
+                for x in factors {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+    }
+
+    /// Parse one plane from the front of `buf`; returns the plane and the
+    /// number of bytes consumed.
+    pub fn deserialize_from(buf: &[u8]) -> Result<(EncodedPlane, usize)> {
+        let Some(&tag) = buf.first() else {
+            anyhow::bail!("encoded plane: empty buffer");
+        };
+        match tag {
+            0 => {
+                let len = read_u32(buf, 1)? as usize;
+                let mut data = Vec::with_capacity(len);
+                for i in 0..len {
+                    data.push(f32::from_le_bytes(read4(buf, 5 + 4 * i)?));
+                }
+                Ok((EncodedPlane::F32(data), 5 + 4 * len))
+            }
+            1 => {
+                let len = read_u32(buf, 1)? as usize;
+                let mut data = Vec::with_capacity(len);
+                for i in 0..len {
+                    let off = 5 + 2 * i;
+                    let Some(pair) = buf.get(off..off + 2) else {
+                        anyhow::bail!("encoded plane: truncated at byte {off}");
+                    };
+                    data.push(u16::from_le_bytes([pair[0], pair[1]]));
+                }
+                Ok((EncodedPlane::F16(data), 5 + 2 * len))
+            }
+            2 => {
+                let layers = read_u32(buf, 1)? as usize;
+                let rows = read_u32(buf, 5)? as usize;
+                let cols = read_u32(buf, 9)? as usize;
+                let rank = read_u32(buf, 13)? as usize;
+                let n = layers * (rows * rank + rank * cols);
+                let mut factors = Vec::with_capacity(n);
+                for i in 0..n {
+                    factors.push(f32::from_le_bytes(read4(buf, 17 + 4 * i)?));
+                }
+                Ok((EncodedPlane::RankR { layers, rows, cols, rank, factors }, 17 + 4 * n))
+            }
+            other => anyhow::bail!("encoded plane: unknown tag {other}"),
+        }
+    }
+
+    /// Decode into `out` (cleared first), so the engine can reuse one
+    /// scratch buffer per slot across imports.
+    pub fn decode_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        match self {
+            EncodedPlane::F32(d) => out.extend_from_slice(d),
+            EncodedPlane::F16(d) => out.extend(d.iter().map(|&h| f16_to_f32(h))),
+            EncodedPlane::RankR { layers, rows, cols, rank, factors } => {
+                let (layers, rows, cols, rank) = (*layers, *rows, *cols, *rank);
+                out.reserve(layers * rows * cols);
+                let per_layer = rows * rank + rank * cols;
+                for layer in 0..layers {
+                    let base = layer * per_layer;
+                    let l = &factors[base..base + rows * rank];
+                    let rt = &factors[base + rows * rank..base + per_layer];
+                    for i in 0..rows {
+                        for j in 0..cols {
+                            let mut s = 0.0f64;
+                            for k in 0..rank {
+                                s += l[i * rank + k] as f64 * rt[k * cols + j] as f64;
+                            }
+                            out.push(s as f32);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// An encoded KV-row snapshot: the cache's stored payload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EncodedKvRow {
+    pub k: EncodedPlane,
+    pub v: EncodedPlane,
+}
+
+impl EncodedKvRow {
+    pub fn encoded_bytes(&self) -> u64 {
+        self.k.encoded_bytes() + self.v.encoded_bytes()
+    }
+
+    pub fn serialize(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.encoded_bytes() as usize);
+        self.k.serialize_into(&mut out);
+        self.v.serialize_into(&mut out);
+        out
+    }
+
+    pub fn deserialize(buf: &[u8]) -> Result<EncodedKvRow> {
+        let (k, used) = EncodedPlane::deserialize_from(buf)?;
+        let (v, used_v) = EncodedPlane::deserialize_from(&buf[used..])?;
+        anyhow::ensure!(
+            used + used_v == buf.len(),
+            "encoded KV row: {} trailing bytes",
+            buf.len() - used - used_v
+        );
+        Ok(EncodedKvRow { k, v })
+    }
+
+    pub fn decode_into(&self, out: &mut KvRowState) {
+        self.k.decode_into(&mut out.k);
+        self.v.decode_into(&mut out.v);
+    }
+}
+
+/// Encode a row snapshot under `codec`. `geom` describes both planes (k and
+/// v have identical shape at this seam); only `RankR` validates it.
+pub fn encode_row(kv: &KvRowState, codec: KvCodec, geom: PlaneGeom) -> Result<EncodedKvRow> {
+    Ok(EncodedKvRow { k: encode_plane(&kv.k, codec, geom)?, v: encode_plane(&kv.v, codec, geom)? })
+}
+
+/// Serialized size a row would take under the lossless `F32` codec — the
+/// baseline `kv_bytes_saved` is measured against.
+pub fn f32_row_bytes(kv: &KvRowState) -> u64 {
+    10 + 4 * (kv.k.len() + kv.v.len()) as u64
+}
+
+fn encode_plane(data: &[f32], codec: KvCodec, geom: PlaneGeom) -> Result<EncodedPlane> {
+    match codec {
+        KvCodec::F32 => Ok(EncodedPlane::F32(data.to_vec())),
+        KvCodec::F16 => Ok(EncodedPlane::F16(data.iter().map(|&x| f32_to_f16(x)).collect())),
+        KvCodec::RankR { rank } => {
+            anyhow::ensure!(
+                geom.elems() == data.len() && geom.rows > 0 && geom.cols > 0,
+                "rank-r codec needs a matching plane geometry: {}x{}x{} vs {} elems",
+                geom.layers,
+                geom.rows,
+                geom.cols,
+                data.len()
+            );
+            let r = rank.min(geom.rows).min(geom.cols);
+            let per = geom.rows * geom.cols;
+            let mut factors = Vec::with_capacity(geom.layers * (geom.rows * r + r * geom.cols));
+            for layer in 0..geom.layers {
+                let plane = &data[layer * per..(layer + 1) * per];
+                let m = Mat::from_f32(geom.rows, geom.cols, plane);
+                let (l, rt) = truncated_factor(&m, r);
+                factors.extend(l.data.iter().map(|&x| x as f32));
+                factors.extend(rt.data.iter().map(|&x| x as f32));
+            }
+            Ok(EncodedPlane::RankR {
+                layers: geom.layers,
+                rows: geom.rows,
+                cols: geom.cols,
+                rank: r,
+                factors,
+            })
+        }
+    }
+}
+
+/// f32 → f16 bit conversion, round-to-nearest-even (ties to even), with
+/// inf/nan/subnormal handling. Hand-rolled: the crate is dependency-free.
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 255 {
+        // inf stays inf; nan keeps a set mantissa bit so it stays nan
+        return sign | 0x7c00 | u16::from(man != 0) << 9;
+    }
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7c00; // overflow → ±inf
+    }
+    if unbiased >= -14 {
+        // normal half: keep 10 mantissa bits, round the dropped 13
+        let mut m = man >> 13;
+        let dropped = man & 0x1fff;
+        let mut e = (unbiased + 15) as u32;
+        if dropped > 0x1000 || (dropped == 0x1000 && (m & 1) != 0) {
+            m += 1;
+            if m == 0x400 {
+                m = 0;
+                e += 1;
+                if e >= 31 {
+                    return sign | 0x7c00;
+                }
+            }
+        }
+        return sign | ((e as u16) << 10) | (m as u16);
+    }
+    if unbiased < -25 {
+        return sign; // underflow → ±0 (2⁻²⁵ itself ties to even = 0)
+    }
+    // subnormal half: make the implicit leading 1 explicit, then shift
+    let full = man | 0x0080_0000;
+    let shift = (-14 - unbiased) as u32 + 13; // in 14..=24
+    let mut m = full >> shift;
+    let rem = full & ((1u32 << shift) - 1);
+    let half = 1u32 << (shift - 1);
+    if rem > half || (rem == half && (m & 1) != 0) {
+        m += 1; // a carry past 0x3ff lands on the smallest normal — valid
+    }
+    sign | (m as u16)
+}
+
+/// f16 → f32 bit conversion (exact — every f16 value is representable).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x03ff) as u32;
+    if exp == 0 {
+        // ±0 or subnormal: value is man × 2⁻²⁴ (exact in f32)
+        let mag = man as f32 / 16_777_216.0;
+        return if sign != 0 { -mag } else { mag };
+    }
+    if exp == 31 {
+        return f32::from_bits(sign | 0x7f80_0000 | (man << 13));
+    }
+    f32::from_bits(sign | ((exp + 112) << 23) | (man << 13))
+}
+
+fn read_u32(buf: &[u8], at: usize) -> Result<u32> {
+    read4(buf, at).map(u32::from_le_bytes)
+}
+
+fn read4(buf: &[u8], at: usize) -> Result<[u8; 4]> {
+    let Some(b) = buf.get(at..at + 4) else {
+        anyhow::bail!("encoded plane: truncated at byte {at}");
+    };
+    Ok([b[0], b[1], b[2], b[3]])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codec_kind_parses_and_rejects() {
+        assert_eq!(KvCodecKind::parse("f32").unwrap(), KvCodecKind::F32);
+        assert_eq!(KvCodecKind::parse("f16").unwrap(), KvCodecKind::F16);
+        assert_eq!(KvCodecKind::parse("rankr").unwrap(), KvCodecKind::RankR);
+        for bad in ["f64", "rank-r", "F16", "", "int8"] {
+            assert!(KvCodecKind::parse(bad).is_err(), "`{bad}` must be rejected");
+        }
+        assert_eq!(KvCodecKind::F16.with_rank(4), KvCodec::F16);
+        assert_eq!(KvCodecKind::RankR.with_rank(4), KvCodec::RankR { rank: 4 });
+        assert_eq!(KvCodecKind::RankR.with_rank(0), KvCodec::RankR { rank: 1 });
+    }
+
+    #[test]
+    fn f16_known_values_round_trip() {
+        for (x, bits) in [
+            (0.0f32, 0x0000u16),
+            (-0.0, 0x8000),
+            (1.0, 0x3c00),
+            (-2.0, 0xc000),
+            (0.5, 0x3800),
+            (65504.0, 0x7bff),       // f16::MAX
+            (6.103_515_6e-5, 0x0400), // smallest normal 2⁻¹⁴
+            (5.960_464_5e-8, 0x0001), // smallest subnormal 2⁻²⁴
+        ] {
+            assert_eq!(f32_to_f16(x), bits, "encode {x}");
+            assert_eq!(f16_to_f32(bits), x, "decode {bits:#06x}");
+        }
+        assert_eq!(f32_to_f16(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16(f32::NEG_INFINITY), 0xfc00);
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        assert_eq!(f32_to_f16(1e9), 0x7c00, "overflow saturates to inf");
+        assert_eq!(f32_to_f16(1e-10), 0x0000, "underflow flushes to zero");
+    }
+
+    #[test]
+    fn f16_rounds_to_nearest_even() {
+        // 1 + 2⁻¹¹ is exactly halfway between 1.0 and the next f16
+        // (1 + 2⁻¹⁰); ties-to-even keeps the even mantissa 1.0.
+        assert_eq!(f32_to_f16(1.0 + 2f32.powi(-11)), 0x3c00);
+        // Just above the tie rounds up.
+        assert_eq!(f32_to_f16(1.0 + 2f32.powi(-11) + 2f32.powi(-20)), 0x3c01);
+        // (1 + 3·2⁻¹¹): halfway between 0x3c01 (odd) and 0x3c02 → even 0x3c02.
+        assert_eq!(f32_to_f16(1.0 + 3.0 * 2f32.powi(-11)), 0x3c02);
+        // Small integers are exact.
+        for t in 0..=2048 {
+            let x = t as f32;
+            assert_eq!(f16_to_f32(f32_to_f16(x)), x, "integer {t} must be f16-exact");
+        }
+    }
+
+    #[test]
+    fn integers_above_2048_are_not_exact_but_close() {
+        let x = 2049.0f32;
+        let y = f16_to_f32(f32_to_f16(x));
+        assert_ne!(x, y);
+        assert!((x - y).abs() <= 1.0, "within one f16 ulp at this magnitude");
+    }
+
+    fn row(k: Vec<f32>, v: Vec<f32>) -> KvRowState {
+        KvRowState { k, v }
+    }
+
+    #[test]
+    fn f32_codec_is_lossless_and_sized_exactly() {
+        let kv = row(vec![1.5, -2.25, 3.0], vec![0.0, 7.125, -1.0]);
+        let enc = encode_row(&kv, KvCodec::F32, PlaneGeom::flat(3)).unwrap();
+        assert_eq!(enc.encoded_bytes(), 2 * (5 + 4 * 3));
+        assert_eq!(enc.encoded_bytes(), f32_row_bytes(&kv));
+        let bytes = enc.serialize();
+        assert_eq!(bytes.len() as u64, enc.encoded_bytes());
+        let back = EncodedKvRow::deserialize(&bytes).unwrap();
+        assert_eq!(back, enc);
+        let mut out = row(vec![], vec![]);
+        enc.decode_into(&mut out);
+        assert_eq!(out, kv);
+    }
+
+    #[test]
+    fn f16_codec_halves_payload() {
+        let kv = row(vec![1.0; 8], vec![2.0; 8]);
+        let enc = encode_row(&kv, KvCodec::F16, PlaneGeom::flat(8)).unwrap();
+        assert_eq!(enc.encoded_bytes(), 2 * (5 + 2 * 8));
+        let bytes = enc.serialize();
+        assert_eq!(bytes.len() as u64, enc.encoded_bytes());
+        assert_eq!(EncodedKvRow::deserialize(&bytes).unwrap(), enc);
+        let mut out = row(vec![], vec![]);
+        enc.decode_into(&mut out);
+        assert_eq!(out, kv, "f16-exact values round-trip losslessly");
+    }
+
+    #[test]
+    fn rankr_reconstructs_low_rank_planes_and_compresses() {
+        // 4×6 rank-1 plane: outer product of two vectors, two layers.
+        let u = [1.0f32, -2.0, 0.5, 3.0];
+        let w = [2.0f32, 1.0, -1.0, 0.25, 4.0, -0.5];
+        let mut plane = Vec::new();
+        for layer in 0..2 {
+            let scale = (layer + 1) as f32;
+            for &ui in &u {
+                for &wj in &w {
+                    plane.push(scale * ui * wj);
+                }
+            }
+        }
+        let kv = row(plane.clone(), plane.iter().map(|x| -x).collect());
+        let geom = PlaneGeom { layers: 2, rows: 4, cols: 6 };
+        let enc = encode_row(&kv, KvCodec::RankR { rank: 1 }, geom).unwrap();
+        // 17 + 4·2·(4·1 + 1·6) per plane = 97 < 5 + 4·48 = 197 raw
+        assert_eq!(enc.encoded_bytes(), 2 * (17 + 4 * 2 * (4 + 6)));
+        assert!(enc.encoded_bytes() < f32_row_bytes(&kv));
+        let bytes = enc.serialize();
+        assert_eq!(bytes.len() as u64, enc.encoded_bytes());
+        assert_eq!(EncodedKvRow::deserialize(&bytes).unwrap(), enc);
+        let mut out = row(vec![], vec![]);
+        enc.decode_into(&mut out);
+        for (a, b) in kv.k.iter().zip(&out.k) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+        for (a, b) in kv.v.iter().zip(&out.v) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn rankr_rejects_mismatched_geometry() {
+        let kv = row(vec![0.0; 10], vec![0.0; 10]);
+        let geom = PlaneGeom { layers: 1, rows: 3, cols: 3 }; // 9 ≠ 10
+        assert!(encode_row(&kv, KvCodec::RankR { rank: 2 }, geom).is_err());
+        assert!(encode_row(&kv, KvCodec::F32, geom).is_ok(), "f32 ignores geometry");
+    }
+
+    #[test]
+    fn deserialize_rejects_garbage() {
+        assert!(EncodedKvRow::deserialize(&[]).is_err());
+        assert!(EncodedKvRow::deserialize(&[9, 0, 0, 0, 0]).is_err(), "unknown tag");
+        let kv = row(vec![1.0, 2.0], vec![3.0, 4.0]);
+        let enc = encode_row(&kv, KvCodec::F32, PlaneGeom::flat(2)).unwrap();
+        let mut bytes = enc.serialize();
+        bytes.pop();
+        assert!(EncodedKvRow::deserialize(&bytes).is_err(), "truncation");
+        bytes.push(0);
+        bytes.push(0);
+        assert!(EncodedKvRow::deserialize(&bytes).is_err(), "trailing bytes");
+    }
+}

@@ -14,12 +14,26 @@
 //! all under `cargo test -q` with no PJRT artifact on disk.
 //!
 //! The KV-row seam is implemented deterministically too: a row's
-//! "KV snapshot" is a pure encoding of its last prefilled window (`k[j] =
-//! token`, `v[j] = token + 0.5`), so export → import round-trips exactly
-//! and the engine's **elided** join prefills (served from the
-//! [`KvPrefixCache`](crate::serve::kvcache::KvPrefixCache)) must reproduce
-//! byte-identical streams to real prefills — which is precisely what the
-//! prefix-cache integration tests assert.
+//! "KV snapshot" is a pure function of its last prefilled window. Each
+//! window token `t` at position `j` becomes one row of a
+//! `prompt_len × MOCK_KV_COLS` plane, built as a rank-≤3 linear combination
+//! of three fixed direction vectors `U`/`W`/`Z` with per-(token, position)
+//! pseudo-noise: `k[j] = lo·U + hi·W + n·Z` and `v[j] = hi·U + lo·W + n·Z`,
+//! where `lo = t & 0xff`, `hi = t >> 8`. The planes are deliberately
+//! **non-constant and spectrum-rich** (so compression tests cannot pass
+//! vacuously on all-equal data) yet exactly low-rank by construction — the
+//! rank-r codec with `rank >= 3` reconstructs them to numerical noise.
+//! Because `U[0..2] = [1, 0]` and `W[0..2] = [0, 1]`, columns 0 and 1 carry
+//! `lo`/`hi` verbatim (integers ≤ 2048, hence f16-exact); import recovers
+//! each token as `round(k[j][1])·256 + round(k[j][0])`, *requires* the
+//! round-off error to stay ≤ 0.25, and cross-checks the swapped `v`
+//! encoding — so a corrupted or over-lossy snapshot is rejected instead of
+//! silently serving wrong KV state. Export → import therefore round-trips
+//! exactly under `f32`/`f16` and within the documented token-level contract
+//! under `rankr`, and the engine's **elided** join prefills (served from
+//! the [`KvPrefixCache`](crate::serve::kvcache::KvPrefixCache)) must
+//! reproduce byte-identical streams to real prefills — which is precisely
+//! what the prefix-cache integration tests assert.
 //!
 //! Knobs:
 //! - [`step_delay`](MockBackend::step_delay): per-decode-step latency, so
@@ -36,8 +50,55 @@
 
 use crate::serve::engine::EngineBackend;
 use crate::serve::kvcache::KvRowState;
+use crate::serve::kvcodec::PlaneGeom;
 use anyhow::Result;
 use std::time::Duration;
+
+/// Columns of the mock KV planes: each window token expands into one
+/// `MOCK_KV_COLS`-wide plane row (see the module docs for the encoding).
+pub const MOCK_KV_COLS: usize = 16;
+
+/// Direction vector carrying the token's low byte (`U[0] = 1`).
+fn dir_u(c: usize) -> f32 {
+    match c {
+        0 => 1.0,
+        1 => 0.0,
+        _ => 1.0 / c as f32,
+    }
+}
+
+/// Direction vector carrying the token's high byte (`W[1] = 1`).
+fn dir_w(c: usize) -> f32 {
+    match c {
+        0 => 0.0,
+        1 => 1.0,
+        _ => 1.0 / (c * c) as f32,
+    }
+}
+
+/// Noise direction: zero on the token-carrying columns 0 and 1, so the
+/// pseudo-noise can never corrupt token recovery.
+fn dir_z(c: usize) -> f32 {
+    match c {
+        0 | 1 => 0.0,
+        _ => 1.0 / (c + 1) as f32,
+    }
+}
+
+/// Deterministic pseudo-noise in [-4, 4) per (token, position) — a
+/// splitmix64-style scramble, so identical windows always produce identical
+/// planes while distinct tokens get visibly distinct spectra.
+fn plane_noise(t: i32, j: usize) -> f32 {
+    let mut z = (t as u64)
+        .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+        .wrapping_add((j as u64).wrapping_mul(0x85eb_ca6b_c2b2_ae63));
+    z ^= z >> 30;
+    z = z.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z ^= z >> 27;
+    z = z.wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^= z >> 31;
+    ((z >> 40) as f32 / (1u64 << 24) as f32) * 8.0 - 4.0
+}
 
 /// Deterministic scripted backend (see module docs). `Clone` so one
 /// configured instance can serve as the template for every worker in a
@@ -195,7 +256,11 @@ impl EngineBackend for MockBackend {
     }
 
     fn kv_row_elems(&self) -> usize {
-        self.prompt_len
+        self.prompt_len * MOCK_KV_COLS
+    }
+
+    fn kv_row_geom(&self) -> PlaneGeom {
+        PlaneGeom { layers: 1, rows: self.prompt_len, cols: MOCK_KV_COLS }
     }
 
     fn export_kv_rows(&mut self, rows: &[usize]) -> Result<Vec<KvRowState>> {
@@ -204,10 +269,18 @@ impl EngineBackend for MockBackend {
             .map(|&r| {
                 anyhow::ensure!(r < self.batch, "export row {r} out of range");
                 let w = &self.windows[r * self.prompt_len..(r + 1) * self.prompt_len];
-                Ok(KvRowState {
-                    k: w.iter().map(|&t| t as f32).collect(),
-                    v: w.iter().map(|&t| t as f32 + 0.5).collect(),
-                })
+                let mut k = Vec::with_capacity(self.prompt_len * MOCK_KV_COLS);
+                let mut v = Vec::with_capacity(self.prompt_len * MOCK_KV_COLS);
+                for (j, &t) in w.iter().enumerate() {
+                    let lo = (t & 0xff) as f32;
+                    let hi = (t >> 8) as f32;
+                    let n = plane_noise(t, j);
+                    for c in 0..MOCK_KV_COLS {
+                        k.push(lo * dir_u(c) + hi * dir_w(c) + n * dir_z(c));
+                        v.push(hi * dir_u(c) + lo * dir_w(c) + n * dir_z(c));
+                    }
+                }
+                Ok(KvRowState { k, v })
             })
             .collect()
     }
@@ -221,21 +294,28 @@ impl EngineBackend for MockBackend {
         );
         // rebuild the mock KV state from the snapshots, exactly as if the
         // snapshotted windows had just been prefilled (free rows → pad)
+        let elems = self.prompt_len * MOCK_KV_COLS;
         let mut windows = vec![crate::data::tokenizer::PAD; self.batch * self.prompt_len];
         for (r, state) in rows.iter().enumerate() {
             let Some(s) = state else { continue };
             anyhow::ensure!(
-                s.k.len() == self.prompt_len && s.v.len() == self.prompt_len,
-                "KV row snapshot has {} elems, mock wants {}",
+                s.k.len() == elems && s.v.len() == elems,
+                "KV row snapshot has {} elems, mock wants {elems}",
                 s.k.len(),
-                self.prompt_len
             );
-            for (j, &kf) in s.k.iter().enumerate() {
+            for j in 0..self.prompt_len {
+                let (k0, k1) = (s.k[j * MOCK_KV_COLS], s.k[j * MOCK_KV_COLS + 1]);
+                let (v0, v1) = (s.v[j * MOCK_KV_COLS], s.v[j * MOCK_KV_COLS + 1]);
+                let (lo, hi) = (k0.round(), k1.round());
                 anyhow::ensure!(
-                    s.v[j] == kf + 0.5,
-                    "mock KV snapshot violates the k/v encoding invariant"
+                    (k0 - lo).abs() <= 0.25 && (k1 - hi).abs() <= 0.25,
+                    "KV snapshot too lossy to recover tokens (row {r} pos {j}: k = ({k0}, {k1}))"
                 );
-                windows[r * self.prompt_len + j] = kf as i32;
+                anyhow::ensure!(
+                    (v0 - hi).abs() <= 0.25 && (v1 - lo).abs() <= 0.25,
+                    "mock KV snapshot violates the k/v cross-encoding invariant"
+                );
+                windows[r * self.prompt_len + j] = (hi as i32) * 256 + lo as i32;
             }
         }
         self.windows = windows;
@@ -287,32 +367,60 @@ mod tests {
     fn kv_rows_round_trip_deterministically() {
         let mut b = MockBackend::new(2, 3, 8);
         assert!(b.export_kv_rows(&[0]).is_err(), "no KV state before prefill");
-        b.prefill(&[0, 5, 6, 1, 2, 3]).unwrap();
+        b.prefill(&[0, 5, 6, 1, 2, 300]).unwrap();
         let rows = b.export_kv_rows(&[0, 1]).unwrap();
-        assert_eq!(rows[0].k, vec![0.0, 5.0, 6.0]);
-        assert_eq!(rows[0].v, vec![0.5, 5.5, 6.5]);
-        assert_eq!(rows[1].k, vec![1.0, 2.0, 3.0]);
+        // columns 0/1 of each plane row carry the token's lo/hi bytes
+        assert_eq!(rows[0].k[MOCK_KV_COLS], 5.0, "row 0 pos 1: lo = 5");
+        assert_eq!(rows[0].k[MOCK_KV_COLS + 1], 0.0, "row 0 pos 1: hi = 0");
+        assert_eq!(rows[1].k[2 * MOCK_KV_COLS], 44.0, "300 & 0xff");
+        assert_eq!(rows[1].k[2 * MOCK_KV_COLS + 1], 1.0, "300 >> 8");
+        assert_eq!(rows[1].v[2 * MOCK_KV_COLS], 1.0, "v swaps hi into column 0");
+        // the tail columns are non-constant: the plane is spectrum-rich,
+        // not all-equal data a codec could compress for free
+        let tail: Vec<f32> =
+            (2..MOCK_KV_COLS).map(|c| rows[1].k[2 * MOCK_KV_COLS + c]).collect();
+        assert!(tail.iter().any(|&x| x != tail[0]), "tail must vary: {tail:?}");
         // import into swapped slots, then export again: pure function of rows
         let imported = vec![Some(&rows[1]), None];
         b.import_kv_rows(&imported).unwrap();
         let back = b.export_kv_rows(&[0, 1]).unwrap();
         assert_eq!(back[0], rows[1], "row snapshot survives the round trip");
-        assert_eq!(back[1].k, vec![0.0, 0.0, 0.0], "free row imports as padding");
-        // identical export from identical windows (determinism)
-        let again = b.export_kv_rows(&[0]).unwrap();
-        assert_eq!(again[0], rows[1]);
+        assert_eq!(back[1].k[0], 0.0, "free row imports as padding");
+        assert_eq!(back[1], b.export_kv_rows(&[1]).unwrap()[0], "determinism");
     }
 
     #[test]
     fn import_validates_shape_and_encoding() {
         let mut b = MockBackend::new(2, 3, 8);
-        let good = KvRowState { k: vec![1.0, 2.0, 3.0], v: vec![1.5, 2.5, 3.5] };
+        assert_eq!(b.kv_row_elems(), 3 * MOCK_KV_COLS);
+        b.prefill(&[0, 5, 6, 1, 2, 3]).unwrap();
+        let good = b.export_kv_rows(&[0]).unwrap().remove(0);
         assert!(b.import_kv_rows(&[Some(&good)]).is_err(), "wrong row count");
         let short = KvRowState { k: vec![1.0], v: vec![1.5] };
         assert!(b.import_kv_rows(&[Some(&short), None]).is_err(), "wrong row length");
-        let corrupt = KvRowState { k: vec![1.0, 2.0, 3.0], v: vec![9.0, 2.5, 3.5] };
-        assert!(b.import_kv_rows(&[Some(&corrupt), None]).is_err(), "k/v invariant");
+        let mut lossy = good.clone();
+        lossy.k[0] += 0.3; // beyond the 0.25 token-recovery tolerance
+        assert!(b.import_kv_rows(&[Some(&lossy), None]).is_err(), "over-lossy k");
+        let mut corrupt = good.clone();
+        corrupt.v[0] += 7.0; // k says one token, v says another
+        assert!(b.import_kv_rows(&[Some(&corrupt), None]).is_err(), "k/v cross-check");
         assert!(b.import_kv_rows(&[Some(&good), None]).is_ok());
-        assert_eq!(b.kv_row_elems(), 3);
+    }
+
+    #[test]
+    fn planes_survive_lossy_codecs_token_exactly() {
+        use crate::serve::kvcodec::{encode_row, KvCodec};
+        let mut b = MockBackend::new(1, 4, 8).vocab(50_021);
+        b.prefill(&[1009, 2, 300, 49_999]).unwrap();
+        let rows = b.export_kv_rows(&[0]).unwrap();
+        let geom = b.kv_row_geom();
+        for codec in [KvCodec::F16, KvCodec::RankR { rank: 3 }] {
+            let enc = encode_row(&rows[0], codec, geom).unwrap();
+            let mut dec = KvRowState::default();
+            enc.decode_into(&mut dec);
+            b.import_kv_rows(&[Some(&dec)]).unwrap();
+            let back = b.export_kv_rows(&[0]).unwrap();
+            assert_eq!(back[0], rows[0], "{codec:?} must recover every token exactly");
+        }
     }
 }

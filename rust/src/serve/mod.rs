@@ -71,6 +71,22 @@
 //!   (Mid-flight rows whose window shifted need a per-row-position decode
 //!   artifact to reuse KV across the shift — the RoPE rotation is
 //!   position-dependent — so those still re-encode; see ROADMAP.)
+//! - **Compressed, byte-budgeted caching** ([`kvcodec`]): cache entries are
+//!   stored *encoded* under a pluggable codec (`kv_codec=f32|f16|rankr`,
+//!   with `kv_rank` for the low-rank mode) and the cache evicts by encoded
+//!   **bytes** (`kv_cache_bytes`) as well as entry count. The codec
+//!   contract is explicit: `f32` is lossless (cache on/off streams stay
+//!   byte-identical); `f16` rounds to nearest-even, so f16-exact payloads
+//!   (like the mock backend's small-integer planes) also stay
+//!   byte-identical; `rankr` reconstructs each plane with max-abs error
+//!   bounded by the truncated spectral tail √(Σ_{i>r} σᵢ²) — lossy in
+//!   general, token-identical whenever the backend's argmax margins exceed
+//!   that bound. Byte accounting is exact (`encoded_bytes()` ==
+//!   serialized size; `bytes_inserted − bytes_released == bytes_resident`)
+//!   and surfaced as `kv_bytes_resident` / `kv_bytes_saved`, with decode
+//!   cost timed as `kv_decode_nanos`. Encode/decode runs only at
+//!   prefill/import boundaries — never inside the decode hot loop, which
+//!   the `cola lint` hot-path pass keeps allocation-free.
 //! - **Chunked, priority-aware admission**: at most
 //!   `ServeConfig::join_chunk` Normal-priority rows join per prefill
 //!   boundary, while High-priority requests pop first and are never
@@ -115,6 +131,7 @@
 
 pub mod engine;
 pub mod kvcache;
+pub mod kvcodec;
 pub mod mock;
 pub mod model;
 pub mod queue;
@@ -124,7 +141,8 @@ pub mod slots;
 pub mod sync;
 
 pub use engine::{EngineBackend, PjrtBackend};
-pub use kvcache::{KvPrefixCache, KvRowState};
+pub use kvcache::{InsertOutcome, KvPrefixCache, KvRowState};
+pub use kvcodec::{EncodedKvRow, EncodedPlane, KvCodec, KvCodecKind, PlaneGeom};
 pub use mock::MockBackend;
 pub use queue::BoundedQueue;
 pub use router::{ModelRouter, RouteError};

@@ -31,6 +31,7 @@
 //! (3) drive it from `tests/serve_interleave.rs`. See `docs/concurrency.md`.
 
 use crate::serve::kvcache::{hash_tokens, KvPrefixCache, KvRowState};
+use crate::serve::kvcodec;
 use crate::serve::queue::{BoundedQueue, PushError};
 use std::collections::VecDeque;
 
@@ -289,37 +290,87 @@ pub enum CacheOp {
     Insert(usize, i32),
     /// `probe(windows[w])` + `peek` on a hit.
     Probe(usize),
+    /// `evict_lru()` — drop the least-recently-used entry, if any.
+    EvictLru,
 }
 
 /// What a [`CacheOp`] observed.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CacheObs {
-    /// Insert completed, evicting this many entries (0 or 1).
-    Inserted(u64),
+    /// Insert completed: how many entries it evicted, and how many encoded
+    /// bytes it released (evicted payloads plus, on a refresh, the replaced
+    /// payload — see `InsertOutcome::bytes_released`).
+    Inserted { evicted: u64, released: u64 },
     /// Probe hit; the stored next token.
     Hit(i32),
     /// Probe missed.
     Miss,
+    /// Explicit eviction freed this many bytes (`None`: cache was empty).
+    Evicted(Option<u64>),
+    /// Pseudo-observation used by the budgeted checker when the SUT's
+    /// resident byte count disagrees with the model's after a step.
+    Bytes(u64),
+}
+
+/// Canonical per-window KV payload shared by the cache SUT and the model's
+/// cost function: window index `w` gets `w + 1`-element planes, so windows
+/// have *distinct* encoded sizes and a byte budget evicts differently from
+/// an entry cap.
+pub fn model_row(w: usize) -> KvRowState {
+    KvRowState { k: vec![w as f32; w + 1], v: vec![-(w as f32); w + 1] }
+}
+
+/// Exact encoded size of [`model_row`]`(w)` under the lossless `f32` codec —
+/// the model prices windows with the same function the real cache meters.
+pub fn model_row_bytes(w: usize) -> u64 {
+    kvcodec::f32_row_bytes(&model_row(w))
 }
 
 /// Executable specification of [`KvPrefixCache`] semantics: a bounded
 /// MRU-first list — probes and inserts both promote to the front, inserts
-/// at capacity evict the back.
+/// at capacity evict the back, and with a byte budget inserts keep evicting
+/// the back until the encoded payloads fit (an oversized entry is still
+/// admitted once the cache is empty, mirroring the `capacity >= 1` floor).
 #[derive(Clone, Debug)]
 pub struct CacheModel {
     cap: usize,
-    /// MRU-first `(window index, next token)`.
-    entries: Vec<(usize, i32)>,
+    /// Byte budget over encoded payloads; 0 = unlimited.
+    max_bytes: u64,
+    /// MRU-first `(window index, next token, encoded bytes)`.
+    entries: Vec<(usize, i32, u64)>,
 }
 
 impl CacheModel {
     pub fn new(capacity: usize) -> Self {
-        Self { cap: capacity.max(1), entries: Vec::new() }
+        Self::with_bytes(capacity, 0)
+    }
+
+    /// A model with a byte budget, pricing window `w` at
+    /// [`model_row_bytes`]`(w)` exactly like the SUT's canonical rows.
+    pub fn with_bytes(capacity: usize, max_bytes: u64) -> Self {
+        Self { cap: capacity.max(1), max_bytes, entries: Vec::new() }
+    }
+
+    /// Sum of encoded payload bytes over resident entries.
+    pub fn bytes_resident(&self) -> u64 {
+        self.entries.iter().map(|&(_, _, b)| b).sum()
+    }
+
+    fn over_budget(&self) -> bool {
+        self.max_bytes > 0 && self.bytes_resident() > self.max_bytes
+    }
+
+    /// Pop the LRU entry into the `(evicted, released)` tally.
+    fn pop_lru(&mut self, evicted: &mut u64, released: &mut u64) {
+        if let Some((_, _, b)) = self.entries.pop() {
+            *evicted += 1;
+            *released += b;
+        }
     }
 
     pub fn apply(&mut self, op: CacheOp) -> CacheObs {
         match op {
-            CacheOp::Probe(w) => match self.entries.iter().position(|&(e, _)| e == w) {
+            CacheOp::Probe(w) => match self.entries.iter().position(|&(e, _, _)| e == w) {
                 Some(i) => {
                     let e = self.entries.remove(i);
                     self.entries.insert(0, e);
@@ -328,19 +379,35 @@ impl CacheModel {
                 None => CacheObs::Miss,
             },
             CacheOp::Insert(w, tok) => {
-                if let Some(i) = self.entries.iter().position(|&(e, _)| e == w) {
+                let cost = model_row_bytes(w);
+                let (mut evicted, mut released) = (0u64, 0u64);
+                if let Some(i) = self.entries.iter().position(|&(e, _, _)| e == w) {
+                    released += self.entries[i].2;
                     self.entries.remove(i);
-                    self.entries.insert(0, (w, tok));
-                    return CacheObs::Inserted(0);
+                    self.entries.insert(0, (w, tok, cost));
+                    // a grown payload can overflow the budget; never evict
+                    // the just-refreshed MRU entry
+                    while self.over_budget() && self.entries.len() > 1 {
+                        self.pop_lru(&mut evicted, &mut released);
+                    }
+                    return CacheObs::Inserted { evicted, released };
                 }
-                let mut evicted = 0;
-                if self.entries.len() >= self.cap {
-                    self.entries.pop();
-                    evicted = 1;
+                while self.entries.len() >= self.cap {
+                    self.pop_lru(&mut evicted, &mut released);
                 }
-                self.entries.insert(0, (w, tok));
-                CacheObs::Inserted(evicted)
+                while self.max_bytes > 0
+                    && !self.entries.is_empty()
+                    && self.bytes_resident() + cost > self.max_bytes
+                {
+                    self.pop_lru(&mut evicted, &mut released);
+                }
+                self.entries.insert(0, (w, tok, cost));
+                CacheObs::Inserted { evicted, released }
             }
+            CacheOp::EvictLru => match self.entries.pop() {
+                Some((_, _, b)) => CacheObs::Evicted(Some(b)),
+                None => CacheObs::Evicted(None),
+            },
         }
     }
 }
@@ -348,6 +415,10 @@ impl CacheModel {
 /// System-under-test seam for the cache model.
 pub trait CacheSut {
     fn apply(&mut self, op: CacheOp, windows: &[Vec<i32>]) -> CacheObs;
+
+    /// Resident encoded bytes — compared step-by-step against the model by
+    /// [`check_cache_sequences_budgeted`].
+    fn bytes_resident(&self) -> u64;
 }
 
 impl CacheSut for KvPrefixCache {
@@ -362,10 +433,18 @@ impl CacheSut for KvPrefixCache {
             }
             CacheOp::Insert(w, tok) => {
                 let win = windows[w].clone();
-                let kv = KvRowState { k: vec![w as f32], v: vec![tok as f32] };
-                CacheObs::Inserted(self.insert(hash_tokens(&win), win, kv, tok))
+                let kv = model_row(w);
+                // the f32 codec cannot fail; a codec error would surface as
+                // an all-zero outcome and diverge from the model
+                let out = self.insert(hash_tokens(&win), win, &kv, tok).unwrap_or_default();
+                CacheObs::Inserted { evicted: out.evicted, released: out.bytes_released }
             }
+            CacheOp::EvictLru => CacheObs::Evicted(self.evict_lru()),
         }
+    }
+
+    fn bytes_resident(&self) -> u64 {
+        KvPrefixCache::bytes_resident(self)
     }
 }
 
@@ -394,12 +473,40 @@ pub fn check_cache_sequences<S: CacheSut>(
     depth: usize,
     mk: &dyn Fn() -> S,
 ) -> (usize, Option<CacheDivergence>) {
+    check_sequences_impl(capacity, 0, false, windows, alphabet, depth, mk)
+}
+
+/// [`check_cache_sequences`] with a byte budget: the model runs with
+/// `max_bytes`, and after every step the SUT's
+/// [`bytes_resident`](CacheSut::bytes_resident) must equal the model's —
+/// a byte-ledger divergence is reported as [`CacheObs::Bytes`].
+pub fn check_cache_sequences_budgeted<S: CacheSut>(
+    capacity: usize,
+    max_bytes: u64,
+    windows: &[Vec<i32>],
+    alphabet: &[CacheOp],
+    depth: usize,
+    mk: &dyn Fn() -> S,
+) -> (usize, Option<CacheDivergence>) {
+    check_sequences_impl(capacity, max_bytes, true, windows, alphabet, depth, mk)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn check_sequences_impl<S: CacheSut>(
+    capacity: usize,
+    max_bytes: u64,
+    compare_bytes: bool,
+    windows: &[Vec<i32>],
+    alphabet: &[CacheOp],
+    depth: usize,
+    mk: &dyn Fn() -> S,
+) -> (usize, Option<CacheDivergence>) {
     let mut checked = 0usize;
     let mut seq = vec![0usize; depth]; // odometer over alphabet indices
     loop {
         checked += 1;
         let ops: Vec<CacheOp> = seq.iter().map(|&i| alphabet[i]).collect();
-        let mut model = CacheModel::new(capacity);
+        let mut model = CacheModel::with_bytes(capacity, max_bytes);
         let mut sut = mk();
         for (step, &op) in ops.iter().enumerate() {
             let expected = model.apply(op);
@@ -408,6 +515,17 @@ pub fn check_cache_sequences<S: CacheSut>(
                 return (
                     checked,
                     Some(CacheDivergence { sequence: ops, step, expected, actual }),
+                );
+            }
+            if compare_bytes && model.bytes_resident() != sut.bytes_resident() {
+                return (
+                    checked,
+                    Some(CacheDivergence {
+                        sequence: ops,
+                        step,
+                        expected: CacheObs::Bytes(model.bytes_resident()),
+                        actual: CacheObs::Bytes(sut.bytes_resident()),
+                    }),
                 );
             }
         }
@@ -452,16 +570,65 @@ mod tests {
         assert!(m.ready(QueueOp::TryPop), "non-blocking ops are always ready");
     }
 
+    /// `Inserted` with no evictions and no refresh releases nothing.
+    const CLEAN: CacheObs = CacheObs::Inserted { evicted: 0, released: 0 };
+
     #[test]
     fn cache_model_promotes_on_probe_and_evicts_lru() {
         let mut m = CacheModel::new(2);
-        assert_eq!(m.apply(CacheOp::Insert(0, 10)), CacheObs::Inserted(0));
-        assert_eq!(m.apply(CacheOp::Insert(1, 11)), CacheObs::Inserted(0));
+        assert_eq!(m.apply(CacheOp::Insert(0, 10)), CLEAN);
+        assert_eq!(m.apply(CacheOp::Insert(1, 11)), CLEAN);
         // probe 0 promotes it, so inserting 2 evicts 1 (LRU), not 0
         assert_eq!(m.apply(CacheOp::Probe(0)), CacheObs::Hit(10));
-        assert_eq!(m.apply(CacheOp::Insert(2, 12)), CacheObs::Inserted(1));
+        assert_eq!(
+            m.apply(CacheOp::Insert(2, 12)),
+            CacheObs::Inserted { evicted: 1, released: model_row_bytes(1) }
+        );
         assert_eq!(m.apply(CacheOp::Probe(1)), CacheObs::Miss);
         assert_eq!(m.apply(CacheOp::Probe(0)), CacheObs::Hit(10));
+        assert_eq!(m.bytes_resident(), model_row_bytes(0) + model_row_bytes(2));
+    }
+
+    #[test]
+    fn cache_model_byte_budget_evicts_differently_from_entry_cap() {
+        // windows 0..3 cost 18, 26, 34, 42 bytes; a 64-byte budget holds
+        // {0,1} (44) or {2} + {0} (52) but never {2,3} (76)
+        assert_eq!(model_row_bytes(0), 18);
+        assert_eq!(model_row_bytes(3), 42);
+        let mut m = CacheModel::with_bytes(16, 64);
+        assert_eq!(m.apply(CacheOp::Insert(0, 10)), CLEAN);
+        assert_eq!(m.apply(CacheOp::Insert(1, 11)), CLEAN);
+        assert_eq!(m.bytes_resident(), 44);
+        // window 3 (42 B) forces both residents out: 44 + 42 > 64, 26 + 42 > 64
+        assert_eq!(
+            m.apply(CacheOp::Insert(3, 13)),
+            CacheObs::Inserted { evicted: 2, released: 44 }
+        );
+        assert_eq!(m.bytes_resident(), 42);
+        // a refresh releases the replaced payload without evicting
+        assert_eq!(
+            m.apply(CacheOp::Insert(3, 14)),
+            CacheObs::Inserted { evicted: 0, released: 42 }
+        );
+        assert_eq!(m.apply(CacheOp::Probe(3)), CacheObs::Hit(14));
+        // explicit eviction reports the freed bytes; empty reports None
+        assert_eq!(m.apply(CacheOp::EvictLru), CacheObs::Evicted(Some(42)));
+        assert_eq!(m.apply(CacheOp::EvictLru), CacheObs::Evicted(None));
+        assert_eq!(m.bytes_resident(), 0);
+    }
+
+    #[test]
+    fn cache_model_admits_oversized_entry_when_empty() {
+        let mut m = CacheModel::with_bytes(4, 20);
+        // 26 B > 20 B budget, but the cache is empty: admitted (soft floor)
+        assert_eq!(m.apply(CacheOp::Insert(1, 11)), CLEAN);
+        assert_eq!(m.bytes_resident(), 26);
+        // the next insert clears the oversized resident first
+        assert_eq!(
+            m.apply(CacheOp::Insert(0, 10)),
+            CacheObs::Inserted { evicted: 1, released: 26 }
+        );
+        assert_eq!(m.bytes_resident(), 18);
     }
 
     #[test]

@@ -162,6 +162,9 @@ impl ModelRouter {
             kv_cache_hits: 0,
             kv_cache_misses: 0,
             kv_cache_evictions: 0,
+            kv_bytes_resident: 0,
+            kv_bytes_saved: 0,
+            kv_decode_nanos: 0,
         };
         let mut busy_secs = 0.0;
         for (_, pool) in &self.pools {
@@ -183,6 +186,9 @@ impl ModelRouter {
             agg.kv_cache_hits += s.kv_cache_hits;
             agg.kv_cache_misses += s.kv_cache_misses;
             agg.kv_cache_evictions += s.kv_cache_evictions;
+            agg.kv_bytes_resident += s.kv_bytes_resident;
+            agg.kv_bytes_saved += s.kv_bytes_saved;
+            agg.kv_decode_nanos += s.kv_decode_nanos;
             if s.decode_tokens_per_sec > 0.0 {
                 busy_secs += s.decoded_tokens as f64 / s.decode_tokens_per_sec;
             }

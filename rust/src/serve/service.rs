@@ -240,8 +240,17 @@ pub struct ServiceStats {
     pub kv_cache_hits: u64,
     /// Per-row KV prefix-cache lookups that missed.
     pub kv_cache_misses: u64,
-    /// Rows evicted from the KV prefix cache (LRU, bounded capacity).
+    /// Rows evicted from the KV prefix cache (LRU, bounded capacity and/or
+    /// byte budget).
     pub kv_cache_evictions: u64,
+    /// Encoded bytes currently resident in the KV prefix caches across all
+    /// workers (exact: `encoded_bytes()` of every live entry).
+    pub kv_bytes_resident: u64,
+    /// Cumulative bytes saved by the KV codec versus raw f32 snapshots
+    /// (`f32_row_bytes − encoded_bytes`, summed over inserts).
+    pub kv_bytes_saved: u64,
+    /// Worker busy-time spent decoding cached KV rows on elided prefills.
+    pub kv_decode_nanos: u64,
 }
 
 #[derive(Default)]
@@ -260,6 +269,9 @@ pub(crate) struct Counters {
     pub(crate) kv_cache_hits: Counter,
     pub(crate) kv_cache_misses: Counter,
     pub(crate) kv_cache_evictions: Counter,
+    pub(crate) kv_bytes_saved: Counter,
+    pub(crate) kv_decode_nanos: Counter,
+    pub(crate) kv_bytes_resident: Gauge,
     pub(crate) active: Gauge,
     pub(crate) live_workers: Countdown,
 }
@@ -336,6 +348,8 @@ impl ServicePool {
             let shared = shared.clone();
             let eopts = engine::EngineOptions {
                 kv_cache_entries: cfg.kv_cache_entries,
+                kv_cache_bytes: cfg.kv_cache_bytes,
+                kv_codec: cfg.kv_codec.with_rank(cfg.kv_rank),
                 join_chunk: cfg.join_chunk,
             };
             handles.push(sync::spawn_named(&format!("cola-serve-{w}"), move || {
@@ -454,6 +468,9 @@ impl InferenceService for ServicePool {
             kv_cache_hits: c.kv_cache_hits.get(),
             kv_cache_misses: c.kv_cache_misses.get(),
             kv_cache_evictions: c.kv_cache_evictions.get(),
+            kv_bytes_resident: c.kv_bytes_resident.get() as u64,
+            kv_bytes_saved: c.kv_bytes_saved.get(),
+            kv_decode_nanos: c.kv_decode_nanos.get(),
         }
     }
 

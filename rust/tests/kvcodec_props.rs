@@ -1,0 +1,256 @@
+//! Property tests for the KV snapshot codecs (`serve::kvcodec`): seeded
+//! random planes across shapes and ranks, checking each codec's documented
+//! error contract plus exact byte accounting.
+//!
+//! - `F32` round-trips byte-identically (bit-level, including negative
+//!   zero and subnormals).
+//! - `F16` reconstructs every finite value within half an f16 ulp (the
+//!   round-to-nearest-even bound), and payloads that are f16-exact
+//!   round-trip bit-identically.
+//! - `RankR` reconstructs each plane with max-abs error bounded by the
+//!   truncated spectral tail √(Σ_{i>r} σᵢ²) — the Eckart–Young Frobenius
+//!   bound, which dominates the per-entry error — and is *exact* (to float
+//!   tolerance) on planes whose true rank is ≤ r.
+//! - For every codec, `encoded_bytes()` equals the serialized size and
+//!   serialize → deserialize is the identity.
+
+use cola::linalg::{singular_values, Mat};
+use cola::serve::kvcodec::{
+    encode_row, f16_to_f32, f32_row_bytes, f32_to_f16, EncodedKvRow, KvCodec, PlaneGeom,
+};
+use cola::serve::KvRowState;
+use cola::util::rng::Rng;
+
+/// Shapes swept by every property: (layers, rows, cols).
+const SHAPES: [(usize, usize, usize); 4] = [(1, 4, 6), (1, 8, 16), (2, 5, 3), (3, 7, 7)];
+
+/// A random full-spectrum plane set for `geom`, values in roughly [-4, 4].
+fn random_row(rng: &mut Rng, geom: PlaneGeom) -> KvRowState {
+    let n = geom.elems();
+    let mk = |rng: &mut Rng| (0..n).map(|_| (rng.f64() * 8.0 - 4.0) as f32).collect::<Vec<f32>>();
+    KvRowState { k: mk(rng), v: mk(rng) }
+}
+
+/// A plane set of exact rank ≤ `r` per (layer) plane: sum of r outer
+/// products with random factors.
+fn low_rank_row(rng: &mut Rng, geom: PlaneGeom, r: usize) -> KvRowState {
+    let mk = |rng: &mut Rng| {
+        let mut data = vec![0.0f32; geom.elems()];
+        for plane in data.chunks_mut(geom.rows * geom.cols) {
+            for _ in 0..r {
+                let u: Vec<f64> = (0..geom.rows).map(|_| rng.normal()).collect();
+                let w: Vec<f64> = (0..geom.cols).map(|_| rng.normal()).collect();
+                for i in 0..geom.rows {
+                    for j in 0..geom.cols {
+                        plane[i * geom.cols + j] += (u[i] * w[j]) as f32;
+                    }
+                }
+            }
+        }
+        data
+    };
+    KvRowState { k: mk(rng), v: mk(rng) }
+}
+
+fn decode(enc: &EncodedKvRow) -> KvRowState {
+    let mut out = KvRowState::default();
+    enc.decode_into(&mut out);
+    out
+}
+
+/// Serialized size must match `encoded_bytes()` exactly, and the serialized
+/// form must deserialize back to the same encoding.
+fn assert_bytes_exact(enc: &EncodedKvRow) {
+    let buf = enc.serialize();
+    assert_eq!(
+        buf.len() as u64,
+        enc.encoded_bytes(),
+        "encoded_bytes must equal the serialized size"
+    );
+    let back = EncodedKvRow::deserialize(&buf).expect("round-trip deserialize");
+    assert_eq!(&back, enc, "serialize → deserialize must be the identity");
+}
+
+#[test]
+fn f32_codec_is_byte_identical_on_random_planes() {
+    let mut rng = Rng::new(0xF32_001);
+    for (layers, rows, cols) in SHAPES {
+        let geom = PlaneGeom { layers, rows, cols };
+        for _ in 0..8 {
+            let kv = random_row(&mut rng, geom);
+            let enc = encode_row(&kv, KvCodec::F32, geom).unwrap();
+            let dec = decode(&enc);
+            // bit-level identity, not just PartialEq (which is fine for
+            // NaN-free data but weaker in principle)
+            let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&dec.k), bits(&kv.k));
+            assert_eq!(bits(&dec.v), bits(&kv.v));
+            assert_eq!(enc.encoded_bytes(), f32_row_bytes(&kv), "f32 saves nothing");
+            assert_bytes_exact(&enc);
+        }
+    }
+}
+
+#[test]
+fn f16_codec_is_within_half_ulp_on_random_planes() {
+    let mut rng = Rng::new(0xF16_002);
+    for (layers, rows, cols) in SHAPES {
+        let geom = PlaneGeom { layers, rows, cols };
+        for _ in 0..8 {
+            let kv = random_row(&mut rng, geom);
+            let enc = encode_row(&kv, KvCodec::F16, geom).unwrap();
+            let dec = decode(&enc);
+            for (orig, got) in kv.k.iter().chain(&kv.v).zip(dec.k.iter().chain(&dec.v)) {
+                // RNE error bound: half the spacing of f16 at this magnitude.
+                // Values here are in [-4, 4], normal f16 range, so the ulp is
+                // 2^(floor(log2 |x|) - 10); use the next power of two above
+                // |x| for a safe (slightly loose at exact powers) bound.
+                let ulp = (orig.abs().max(f16_min_normal()) * 2.0) / 1024.0;
+                assert!(
+                    (orig - got).abs() <= 0.5 * ulp + f32::EPSILON,
+                    "f16 error above half ulp: {orig} -> {got}"
+                );
+            }
+            assert!(
+                enc.encoded_bytes() < f32_row_bytes(&kv),
+                "f16 must compress the f32 baseline"
+            );
+            assert_bytes_exact(&enc);
+        }
+    }
+}
+
+fn f16_min_normal() -> f32 {
+    1.0 / 16384.0 // 2^-14
+}
+
+#[test]
+fn f16_exact_payloads_round_trip_bit_identically() {
+    // Small integers are exactly representable in f16, so the codec must
+    // reproduce them bit-for-bit (the mock backend's token planes rely on
+    // this for the cache-on/off byte-identity gate).
+    let geom = PlaneGeom { layers: 1, rows: 2, cols: 4 };
+    let vals: Vec<f32> = vec![0.0, 1.0, -1.0, 255.0, 256.0, 2048.0, -2048.0, 0.5];
+    let kv = KvRowState { k: vals.clone(), v: vals.iter().map(|x| -x).collect() };
+    let enc = encode_row(&kv, KvCodec::F16, geom).unwrap();
+    let dec = decode(&enc);
+    assert_eq!(dec, kv, "f16-exact payload must survive bit-identically");
+    // and the scalar conversions agree with a brute-force nearest search
+    let mut rng = Rng::new(0xF16_003);
+    for _ in 0..2000 {
+        let x = (rng.f64() * 8.0 - 4.0) as f32;
+        let h = f32_to_f16(x);
+        let y = f16_to_f32(h);
+        let d = (x - y).abs();
+        // y must be at least as close to x as its same-sign f16 neighbours
+        for nb in [h.wrapping_add(1), h.wrapping_sub(1)] {
+            if nb & 0x8000 != h & 0x8000 {
+                continue; // crossed the sign boundary in bit order
+            }
+            let z = f16_to_f32(nb);
+            if !z.is_finite() {
+                continue;
+            }
+            assert!(
+                d <= (x - z).abs() + f32::EPSILON,
+                "{x} encoded to {h:#06x} ({y}) but neighbour {z} is closer"
+            );
+        }
+    }
+}
+
+/// Max-abs reconstruction error of `enc` against `kv`.
+fn max_abs_err(kv: &KvRowState, dec: &KvRowState) -> f64 {
+    kv.k.iter()
+        .chain(&kv.v)
+        .zip(dec.k.iter().chain(&dec.v))
+        .map(|(a, b)| (a - b).abs() as f64)
+        .fold(0.0, f64::max)
+}
+
+/// √(Σ_{i>r} σᵢ²) maximised over the planes of both the k and v payloads —
+/// the Eckart–Young Frobenius norm of the optimal rank-r residual, which
+/// upper-bounds every entry of the actual residual.
+fn spectral_tail(kv: &KvRowState, geom: PlaneGeom, r: usize) -> f64 {
+    let mut worst = 0.0f64;
+    for data in [&kv.k, &kv.v] {
+        for plane in data.chunks(geom.rows * geom.cols) {
+            let m = Mat::from_f32(geom.rows, geom.cols, plane);
+            let sv = singular_values(&m);
+            let tail: f64 = sv.iter().skip(r).map(|s| s * s).sum();
+            worst = worst.max(tail.sqrt());
+        }
+    }
+    worst
+}
+
+#[test]
+fn rankr_error_is_bounded_by_the_spectral_tail() {
+    let mut rng = Rng::new(0x9A_4C);
+    for (layers, rows, cols) in SHAPES {
+        let geom = PlaneGeom { layers, rows, cols };
+        for r in 1..=rows.min(cols) {
+            let kv = random_row(&mut rng, geom);
+            let enc = encode_row(&kv, KvCodec::RankR { rank: r }, geom).unwrap();
+            let dec = decode(&enc);
+            let bound = spectral_tail(&kv, geom, r);
+            let err = max_abs_err(&kv, &dec);
+            // f32 factor storage adds rounding on top of the exact bound
+            let slack = 1e-4 * (1.0 + bound);
+            assert!(
+                err <= bound + slack,
+                "rank-{r} {rows}x{cols}: max abs {err} above spectral tail {bound}"
+            );
+            assert_bytes_exact(&enc);
+        }
+    }
+}
+
+#[test]
+fn rankr_is_exact_on_low_rank_planes_and_compresses() {
+    let mut rng = Rng::new(0x10_44);
+    for (layers, rows, cols) in SHAPES {
+        let geom = PlaneGeom { layers, rows, cols };
+        let true_rank = 2.min(rows).min(cols);
+        let kv = low_rank_row(&mut rng, geom, true_rank);
+        for r in true_rank..=rows.min(cols) {
+            let enc = encode_row(&kv, KvCodec::RankR { rank: r }, geom).unwrap();
+            let err = max_abs_err(&kv, &decode(&enc));
+            assert!(
+                err <= 1e-4,
+                "rank-{r} must be exact on rank-{true_rank} {rows}x{cols} planes, got {err}"
+            );
+        }
+        // and at a compressing rank the bytes actually shrink for shapes
+        // where r(rows + cols) < rows * cols
+        if true_rank * (rows + cols) < rows * cols {
+            let enc = encode_row(&kv, KvCodec::RankR { rank: true_rank }, geom).unwrap();
+            assert!(
+                enc.encoded_bytes() < f32_row_bytes(&kv),
+                "rank-{true_rank} must compress {rows}x{cols}"
+            );
+        }
+    }
+}
+
+#[test]
+fn encoded_bytes_formula_matches_across_codecs_and_shapes() {
+    let mut rng = Rng::new(0xBE_7E5);
+    for (layers, rows, cols) in SHAPES {
+        let geom = PlaneGeom { layers, rows, cols };
+        let n = geom.elems() as u64;
+        let kv = random_row(&mut rng, geom);
+        for (codec, want_plane) in [
+            (KvCodec::F32, 5 + 4 * n),
+            (KvCodec::F16, 5 + 2 * n),
+            (
+                KvCodec::RankR { rank: 2 },
+                17 + 4 * (layers as u64) * 2 * (rows as u64 + cols as u64),
+            ),
+        ] {
+            let enc = encode_row(&kv, codec, geom).unwrap();
+            assert_eq!(enc.encoded_bytes(), 2 * want_plane, "codec {codec:?} on {geom:?}");
+            assert_bytes_exact(&enc);
+        }
+    }
+}

@@ -15,10 +15,11 @@
 
 use cola::serve::kvcache::hash_tokens;
 use cola::serve::model::{
-    CacheDivergence, CacheModel, CacheObs, CacheOp, CacheSut, check_cache_sequences, Divergence,
-    explore_queue, QueueModel, QueueObs, QueueOp, QueueSut,
+    check_cache_sequences, check_cache_sequences_budgeted, explore_queue, model_row_bytes,
+    CacheDivergence, CacheModel, CacheObs, CacheOp, CacheSut, Divergence, QueueModel, QueueObs,
+    QueueOp, QueueSut,
 };
-use cola::serve::{BoundedQueue, KvPrefixCache};
+use cola::serve::{BoundedQueue, KvCodec, KvPrefixCache, PlaneGeom};
 
 /// n! / (k1! k2! ... ) — the number of distinct merges of the per-thread
 /// sequences, used to prove the explorer's enumeration is exhaustive.
@@ -222,6 +223,10 @@ impl CacheSut for NoPromoteCache {
             insert => self.model.apply(insert),
         }
     }
+
+    fn bytes_resident(&self) -> u64 {
+        self.model.bytes_resident()
+    }
 }
 
 #[test]
@@ -231,8 +236,10 @@ fn checker_catches_probe_without_promotion() {
     // Failing seed, pinned: fill to capacity, probe-hit the LRU entry
     // (promoting it — but not in the buggy cache), insert a third window.
     // Correct semantics evict window 1 (demoted by the promotion); the
-    // buggy cache evicts window 0. Both *observe* `Inserted(1)`, so the
-    // divergence surfaces at the next probe: window 1 must be gone.
+    // buggy cache evicts window 0. Windows have distinct encoded sizes, so
+    // the wrong victim shows up immediately in the insert's released-bytes
+    // observation — one step *before* the probe-of-the-ghost would flip
+    // hit/miss.
     let seed = [
         CacheOp::Insert(0, 10),
         CacheOp::Insert(1, 11),
@@ -252,8 +259,12 @@ fn checker_catches_probe_without_promotion() {
     }
     assert_eq!(
         first_divergence,
-        Some((4, CacheObs::Miss, CacheObs::Hit(11))),
-        "probe of the wrongly-kept entry exposes the missing promotion"
+        Some((
+            3,
+            CacheObs::Inserted { evicted: 1, released: model_row_bytes(1) },
+            CacheObs::Inserted { evicted: 1, released: model_row_bytes(0) },
+        )),
+        "the eviction's released bytes betray the wrong LRU victim"
     );
     // And the exhaustive driver finds the bug on its own from the same
     // alphabet, without being handed the seed.
@@ -271,12 +282,137 @@ fn checker_catches_probe_without_promotion() {
     assert!(
         matches!(
             (&d.expected, &d.actual),
-            (CacheObs::Hit(_), CacheObs::Miss) | (CacheObs::Miss, CacheObs::Hit(_))
+            (CacheObs::Hit(_), CacheObs::Miss)
+                | (CacheObs::Miss, CacheObs::Hit(_))
+                | (CacheObs::Inserted { .. }, CacheObs::Inserted { .. })
         ),
-        "divergence must be a hit/miss flip, got {:?} vs {:?}",
+        "divergence must be a hit/miss flip or a wrong-victim eviction, got {:?} vs {:?}",
         d.expected,
         d.actual
     );
+}
+
+// ---------------------------------------------------------------------------
+// KV cache: byte accounting under exhaustive insert/probe/evict sequences
+// ---------------------------------------------------------------------------
+
+/// SUT wrapper that re-derives resident bytes from the observations alone
+/// (`bytes_in − bytes_out`), asserting the conservation law against the real
+/// cache's own meter after *every* op of *every* exhaustive sequence.
+struct LedgerCache {
+    inner: KvPrefixCache,
+    bytes_in: u64,
+    bytes_out: u64,
+}
+
+impl CacheSut for LedgerCache {
+    fn apply(&mut self, op: CacheOp, windows: &[Vec<i32>]) -> CacheObs {
+        let obs = self.inner.apply(op, windows);
+        match (op, obs) {
+            (CacheOp::Insert(w, _), CacheObs::Inserted { released, .. }) => {
+                self.bytes_in += model_row_bytes(w);
+                self.bytes_out += released;
+            }
+            (CacheOp::EvictLru, CacheObs::Evicted(Some(b))) => self.bytes_out += b,
+            _ => {}
+        }
+        assert_eq!(
+            self.bytes_in - self.bytes_out,
+            self.inner.bytes_resident(),
+            "bytes_inserted − bytes_released must equal bytes_resident"
+        );
+        obs
+    }
+
+    fn bytes_resident(&self) -> u64 {
+        self.inner.bytes_resident()
+    }
+}
+
+#[test]
+fn kvcache_byte_budget_exhaustive_matches_model() {
+    let ws = windows();
+    assert_collision_free(&ws);
+    // Windows 0..=2 cost 18/26/34 encoded bytes. A 64-byte budget under a
+    // slack entry cap (8) makes eviction *byte-driven*: windows 0+1 fit
+    // (44 B) but adding window 2 forces evictions an entry cap of 8 would
+    // never make — and EvictLru exercises the explicit path. Every step of
+    // every sequence also checks the conservation ledger via `LedgerCache`.
+    let alphabet = vec![
+        CacheOp::Insert(0, 100),
+        CacheOp::Insert(1, 101),
+        CacheOp::Insert(2, 102),
+        CacheOp::Insert(1, 201), // refresh: releases the replaced payload
+        CacheOp::Probe(0),
+        CacheOp::Probe(2),
+        CacheOp::EvictLru,
+    ];
+    let (checked, div) = check_cache_sequences_budgeted(8, 64, &ws, &alphabet, 5, &|| {
+        LedgerCache {
+            inner: KvPrefixCache::with_codec(8, 64, KvCodec::F32, PlaneGeom::flat(0)),
+            bytes_in: 0,
+            bytes_out: 0,
+        }
+    });
+    assert_eq!(checked, 7usize.pow(5), "odometer covered the full 7^5 space");
+    assert!(div.is_none(), "divergence: {div:?}");
+}
+
+/// Bug injection: a byte ledger that forgets a refresh releases the replaced
+/// payload (the double-count the `bytes_released` field exists to prevent).
+struct DoubleCountRefreshCache {
+    inner: KvPrefixCache,
+    ledger: u64,
+}
+
+impl CacheSut for DoubleCountRefreshCache {
+    fn apply(&mut self, op: CacheOp, windows: &[Vec<i32>]) -> CacheObs {
+        let obs = self.inner.apply(op, windows);
+        match (op, obs) {
+            (CacheOp::Insert(w, _), CacheObs::Inserted { evicted, released }) => {
+                self.ledger += model_row_bytes(w);
+                // BUG: only subtracts when entries were evicted, so a pure
+                // refresh double-counts the window's payload
+                if evicted > 0 {
+                    self.ledger -= released;
+                }
+            }
+            (CacheOp::EvictLru, CacheObs::Evicted(Some(b))) => self.ledger -= b,
+            _ => {}
+        }
+        obs
+    }
+
+    fn bytes_resident(&self) -> u64 {
+        self.ledger
+    }
+}
+
+#[test]
+fn budgeted_checker_catches_refresh_double_count() {
+    let ws = windows();
+    assert_collision_free(&ws);
+    let alphabet = vec![
+        CacheOp::Insert(0, 100),
+        CacheOp::Insert(0, 200), // the refresh the buggy ledger fumbles
+        CacheOp::Probe(0),
+        CacheOp::EvictLru,
+    ];
+    let (_, div) = check_cache_sequences_budgeted(4, 0, &ws, &alphabet, 3, &|| {
+        DoubleCountRefreshCache { inner: KvPrefixCache::new(4), ledger: 0 }
+    });
+    let d = div.expect("the ledger bug must be found");
+    // Minimal counterexample: insert then refresh (the odometer's very
+    // first sequence repeats `Insert(0, 100)`) — the buggy ledger holds two
+    // payloads' worth of bytes for one resident entry.
+    assert_eq!(d.step, 1, "found past the minimal refresh counterexample: {d:?}");
+    assert!(
+        matches!(d.sequence[0], CacheOp::Insert(0, _))
+            && matches!(d.sequence[1], CacheOp::Insert(0, _)),
+        "counterexample must be an insert followed by its refresh: {d:?}"
+    );
+    assert_eq!(d.expected, CacheObs::Bytes(model_row_bytes(0)));
+    assert_eq!(d.actual, CacheObs::Bytes(2 * model_row_bytes(0)));
 }
 
 // ---------------------------------------------------------------------------

@@ -12,7 +12,8 @@
 
 use cola::config::ServeConfig;
 use cola::serve::{
-    FinishReason, InferenceService, MockBackend, Priority, ServicePool, SubmitOptions,
+    FinishReason, InferenceService, KvCodecKind, MockBackend, Priority, ServicePool,
+    SubmitOptions,
 };
 use std::time::Duration;
 
@@ -119,6 +120,65 @@ fn streams_are_byte_identical_with_cache_on_and_off() {
         s_on.kv_cache_hits + s_on.kv_cache_misses > 0,
         "enabled cache probes at every boundary"
     );
+}
+
+#[test]
+fn lossy_codecs_preserve_streams_and_save_bytes() {
+    // The mock's planes are rank-≤3 with token bytes at f16-exact
+    // magnitudes, so both lossy codecs must reproduce every stream the
+    // lossless pool produces — while `kv_bytes_saved` proves the resident
+    // payloads actually shrank against the f32 baseline.
+    let mock = MockBackend::new(2, 6, 10).vocab(20_000).prefill_delay(Duration::from_millis(1));
+    let run = |codec: KvCodecKind, rank: usize| -> (Vec<Vec<i32>>, cola::serve::ServiceStats) {
+        let mut c = cfg(1, 8);
+        c.kv_cache_entries = 64;
+        c.kv_codec = codec;
+        c.kv_rank = rank;
+        let pool = ServicePool::start_with(c, mock.clone().factory()).unwrap();
+        let mut outs = Vec::new();
+        for round in 0..3 {
+            for p in [21, 22, 23] {
+                let done = pool.generate(vec![p, p + 1], opts(10)).unwrap();
+                assert_eq!(done.finish_reason, FinishReason::Length, "round {round} prompt {p}");
+                outs.push(done.tokens);
+            }
+        }
+        eventually("completions tallied", || pool.stats().completed == 9);
+        let stats = pool.stats();
+        assert!(stats.kv_bytes_resident > 0, "{codec:?}: encoded rows are resident");
+        pool.shutdown();
+        (outs, stats)
+    };
+    let (base, s_f32) = run(KvCodecKind::F32, 0);
+    for (codec, rank) in [(KvCodecKind::F16, 0), (KvCodecKind::RankR, 3)] {
+        let (outs, s) = run(codec, rank);
+        assert_eq!(outs, base, "{codec:?} altered streamed outputs");
+        assert!(s.prefills_elided > 0, "{codec:?}: retries must still be cache-served");
+        assert!(
+            s.kv_bytes_saved > 0,
+            "{codec:?} must store fewer bytes than the f32 baseline"
+        );
+        assert!(
+            s.kv_bytes_resident < s_f32.kv_bytes_resident,
+            "{codec:?}: same rows, smaller residency ({} vs f32's {})",
+            s.kv_bytes_resident,
+            s_f32.kv_bytes_resident
+        );
+        assert!(s.kv_decode_nanos > 0, "{codec:?}: cached-row decode is timed");
+    }
+    assert_eq!(s_f32.kv_bytes_saved, 0, "f32 is the baseline — it saves nothing");
+    pool_parity_sanity(&base, &mock);
+}
+
+/// The parity baseline itself must match the mock's closed-form streams.
+fn pool_parity_sanity(base: &[Vec<i32>], mock: &MockBackend) {
+    let mut i = 0;
+    for _round in 0..3 {
+        for p in [21, 22, 23] {
+            assert_eq!(base[i], mock.expected_stream(p + 1, 10), "prompt {p} exact");
+            i += 1;
+        }
+    }
 }
 
 #[test]

@@ -36,13 +36,23 @@ fi
 if [ "${SKIP_SMOKE:-0}" != "1" ]; then
     # Hermetic serving-throughput smoke: MockBackend pools behind the real
     # router, repeated-prefix workload, prefix cache on vs off. The binary
-    # itself asserts byte-identical streams and the >=50% prefill-elision
-    # floor (ISSUE 5), and BENCH_serve.json records tokens/s + prefill
-    # counters + cache hit rate so the serving perf trajectory is tracked
-    # across PRs.
+    # itself asserts byte-identical streams, the >=50% prefill-elision
+    # floor (ISSUE 5, measured in lossless f32 mode), and the fixed-memory
+    # codec sweep (ISSUE 8: f16/rank-r hit rates at a byte budget that
+    # thrashes f32). BENCH_serve.json records tokens/s + prefill counters +
+    # cache hit rate + bytes/entry per codec so the serving perf trajectory
+    # is tracked across PRs.
     echo "== serve smoke: cargo run --release -- serve --mock =="
     cargo run --release -- serve --mock --requests 48 --distinct 4 \
         --bench-json ../BENCH_serve.json
+    # The codec sweep must actually have run: the report carries per-codec
+    # encoded sizes and hit-rate-at-fixed-memory sections.
+    for key in bytes_per_entry hit_rate_fixed_mem; do
+        if ! grep -q "\"$key\"" ../BENCH_serve.json; then
+            echo "BENCH_serve.json missing '$key' — codec sweep did not run" >&2
+            exit 1
+        fi
+    done
 fi
 
 if [ "${SKIP_LINT:-0}" != "1" ]; then
