@@ -14,7 +14,11 @@ Artifact contract with the rust runtime (rust/src/runtime/artifact.rs):
   eval_step.hlo.txt  : (params..., tokens i32[B,T+1]) -> (sum_nll, count)
   activations.hlo.txt: (params..., tokens i32[B,T+1]) -> (tap_0..tap_L)
   prefill.hlo.txt    : (params..., prompt i32[B,Tp]) -> (next, kc, vc)
-  decode_step.hlo.txt: (params..., kc, vc, tok i32[B], pos i32) -> (next, kc', vc')
+  decode_step.hlo.txt: (params..., kc, vc, tok i32[B], pos i32[B])
+                       -> (next, kc', vc')   # per-row positions
+  prefill_row.hlo.txt: (params..., kc, vc, window i32[Tp], row i32,
+                       len i32, keep i32) -> (next i32, kc', vc')
+                       # single-row prefill spliced into a live batch
   refresh_proj.hlo.txt (galore): (state..., seed i32) -> (state'...)
   cls_train.hlo.txt / cls_eval.hlo.txt (encoder presets): GLUE-proxy head.
 
@@ -183,6 +187,15 @@ def build_decode(cfg: M.ModelCfg, layout: StateLayout):
     return dec
 
 
+def build_prefill_row(cfg: M.ModelCfg, layout: StateLayout):
+    def pfr(*args):
+        params = dict(zip(layout.param_names, args[:layout.n_params]))
+        kc, vc, window, row, length, keep = \
+            args[layout.n_params:layout.n_params + 6]
+        return M.prefill_row(cfg, params, kc, vc, window, row, length, keep)
+    return pfr
+
+
 def build_refresh(cfg: M.ModelCfg, layout: StateLayout):
     def refresh(*args):
         flat = list(args[:layout.n_state])
@@ -331,10 +344,20 @@ def emit(cfg: M.ModelCfg, out_root: str, serve: bool = False,
         kv = jax.ShapeDtypeStruct(
             (p.n_layers, serve_bs, max_len, p.n_heads, p.head_dim),
             jnp.float32)
+        # pos is a per-row vector: every batch row decodes at its own KV
+        # depth (barrier-free continuous batching; rust/src/serve/engine.rs).
         sizes["decode_step"] = lower_to_file(
             build_decode(cfg, layout),
-            param_specs + [kv, kv, i32((serve_bs,)), i32(())],
+            param_specs + [kv, kv, i32((serve_bs,)), i32((serve_bs,))],
             os.path.join(adir, "decode_step.hlo.txt"))
+        # single-row admission: prefill one left-aligned window and splice
+        # it into row `row` of the live caches (positions < keep retain the
+        # row's imported prefix) without disturbing the other rows.
+        sizes["prefill_row"] = lower_to_file(
+            build_prefill_row(cfg, layout),
+            param_specs + [kv, kv, i32((prompt_len,)), i32(()), i32(()),
+                           i32(())],
+            os.path.join(adir, "prefill_row.hlo.txt"))
         serve_geom = {"serve_batch": serve_bs, "prompt_len": prompt_len,
                       "max_len": max_len}
 

@@ -383,6 +383,53 @@ def cls_logits(cfg: ModelCfg, params, tokens, n_classes_w):
 # KV-cache serving path
 # ---------------------------------------------------------------------------
 
+def _rope_rows(x, pos):
+    """Per-row rotary for one-token decode: x [B, 1, H, hd]; pos [B] i32 —
+    each batch row rotates by its *own* position (barrier-free continuous
+    batching: rows are at independent depths of their KV windows)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = pos[:, None].astype(jnp.float32) * freqs        # [B, half]
+    cos = jnp.cos(ang)[:, None, None, :]
+    sin = jnp.sin(ang)[:, None, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+def _attn_decode_rows(cfg: ModelCfg, params, lname: str, x, pos, kv_cache):
+    """One-token decode attention at per-row positions.
+
+    x: [B, 1, d] (already normed); pos: [B] i32 (each row's KV write
+    index); kv_cache: (k, v) each [B, maxT, H, hd]. The new k/v land at
+    position pos[b] of row b (a per-row scatter), and row b's query attends
+    exactly the keys j <= pos[b] — its own live prefix, nothing staler.
+    Returns (out [B, 1, d_model], (ck, cv)).
+    """
+    p = cfg.preset
+    B = x.shape[0]
+    H, hd = p.n_heads, p.head_dim
+    q = linear(cfg, params, f"{lname}.q", x).reshape(B, 1, H, hd)
+    k = linear(cfg, params, f"{lname}.k", x).reshape(B, 1, H, hd)
+    v = linear(cfg, params, f"{lname}.v", x).reshape(B, 1, H, hd)
+    q = _rope_rows(q, pos)
+    k = _rope_rows(k, pos)
+    ck, cv = kv_cache
+
+    def upd(cache_row, new_row, p_):              # [maxT,H,hd], [1,H,hd], i32
+        return jax.lax.dynamic_update_slice(cache_row, new_row, (p_, 0, 0))
+
+    ck = jax.vmap(upd)(ck, k, pos)
+    cv = jax.vmap(upd)(cv, v, pos)
+    maxT = ck.shape[1]
+    att = jnp.einsum("bqhd,bkhd->bhqk", q, ck) / jnp.sqrt(float(hd))
+    valid = jnp.arange(maxT)[None, :] <= pos[:, None]      # [B, maxT]
+    att = jnp.where(valid[:, None, None, :], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", att, cv).reshape(B, 1, H * hd)
+    return linear(cfg, params, f"{lname}.o", out), (ck, cv)
+
+
 def prefill(cfg: ModelCfg, params, tokens, max_len: int):
     """tokens [B, Tp] → (next_token [B] i32, k_caches, v_caches [L,B,maxT,H,hd])."""
     p = cfg.preset
@@ -410,17 +457,18 @@ def prefill(cfg: ModelCfg, params, tokens, max_len: int):
 def decode_step(cfg: ModelCfg, params, kc, vc, tok, pos):
     """One greedy decode step with device-resident KV cache.
 
-    kc, vc: [L, B, maxT, H, hd]; tok: [B] i32; pos: scalar i32 (index of the
-    token being fed). Returns (next_tok, kc', vc')."""
+    kc, vc: [L, B, maxT, H, hd]; tok: [B] i32; pos: [B] i32 — *per-row*
+    positions: row b's token is written at kc[:, b, pos[b]] and attends keys
+    j <= pos[b]. Rows advance independently, so a freshly admitted row can
+    decode from its own (short) prefix while its neighbours are deep into
+    theirs — no batch-wide position barrier. Returns (next_tok, kc', vc')."""
     p = cfg.preset
-    B = tok.shape[0]
     x = params["emb.tok"][tok][:, None, :]          # [B, 1, d]
-    posv = jnp.asarray(pos)[None]
     nk, nv = [], []
     for i in range(p.n_layers):
-        h, (ck, cv) = attention(cfg, params, f"l{i}.attn",
-                                rmsnorm(params, f"l{i}.norm1", x), posv, True,
-                                linear, (kc[i], vc[i]), pos)
+        h, (ck, cv) = _attn_decode_rows(cfg, params, f"l{i}.attn",
+                                        rmsnorm(params, f"l{i}.norm1", x),
+                                        pos, (kc[i], vc[i]))
         x = x + h
         x = x + mlp(cfg, params, f"l{i}.mlp",
                     rmsnorm(params, f"l{i}.norm2", x), linear)
@@ -430,6 +478,62 @@ def decode_step(cfg: ModelCfg, params, kc, vc, tok, pos):
     lg = x[:, 0] @ params["head.W"]
     nxt = jnp.argmax(lg, -1).astype(jnp.int32)
     return nxt, jnp.stack(nk), jnp.stack(nv)
+
+
+def prefill_row(cfg: ModelCfg, params, kc, vc, window, row, length, keep):
+    """Single-row prefill spliced into a *live* batch KV cache.
+
+    kc, vc: [L, B, maxT, H, hd] — the batch's resident caches, other rows
+    mid-decode; window: [Tp] i32, left-aligned (real tokens at 0..length,
+    PAD after); row / length / keep: scalar i32. Runs the full-window
+    forward for one sequence, then rewrites only row `row`: positions
+    < keep retain the row's current state (an imported cached prefix),
+    positions keep..length-1 take the freshly computed k/v, positions
+    >= length are zeroed (so exported rows are byte-deterministic). Every
+    other row's KV is untouched — admission is a row scatter, not a batch
+    barrier. Returns (next_token scalar i32 from the logits at length-1,
+    kc', vc')."""
+    p = cfg.preset
+    T = window.shape[0]
+    H, hd = p.n_heads, p.head_dim
+    maxT = kc.shape[2]
+    x = params["emb.tok"][window][None]             # [1, T, d]
+    pos = jnp.arange(T)
+    causal = jnp.tril(jnp.ones((T, T), bool))[None, None]
+    nk, nv = [], []
+    for i in range(p.n_layers):
+        lname = f"l{i}.attn"
+        xn = rmsnorm(params, f"l{i}.norm1", x)
+        q = linear(cfg, params, f"{lname}.q", xn).reshape(1, T, H, hd)
+        k = linear(cfg, params, f"{lname}.k", xn).reshape(1, T, H, hd)
+        v = linear(cfg, params, f"{lname}.v", xn).reshape(1, T, H, hd)
+        q, k = _rope(q, pos), _rope(k, pos)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(float(hd))
+        att = jax.nn.softmax(jnp.where(causal, att, -1e30), -1)
+        h = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(1, T, H * hd)
+        x = x + linear(cfg, params, f"{lname}.o", h)
+        x = x + mlp(cfg, params, f"l{i}.mlp",
+                    rmsnorm(params, f"l{i}.norm2", x), linear)
+        nk.append(k[0])                              # [T, H, hd]
+        nv.append(v[0])
+    x = rmsnorm(params, "normf", x)
+    lg = x[0] @ params["head.W"]                     # [T, vocab]
+    last = jax.lax.dynamic_index_in_dim(lg, length - 1, 0, keepdims=False)
+    nxt = jnp.argmax(last, -1).astype(jnp.int32)
+
+    tpos = jnp.arange(maxT)[:, None, None]           # [maxT, 1, 1]
+
+    def splice(cache, fresh_tl):                     # [B,maxT,H,hd], [T,H,hd]
+        old_row = jax.lax.dynamic_index_in_dim(cache, row, 0, keepdims=False)
+        new_row = jnp.zeros_like(old_row).at[:T].set(fresh_tl)
+        merged = jnp.where(tpos < keep, old_row,
+                           jnp.where(tpos < length, new_row, 0.0))
+        return jax.lax.dynamic_update_slice(cache, merged[None],
+                                            (row, 0, 0, 0))
+
+    kc2 = jnp.stack([splice(kc[i], nk[i]) for i in range(p.n_layers)])
+    vc2 = jnp.stack([splice(vc[i], nv[i]) for i in range(p.n_layers)])
+    return nxt, kc2, vc2
 
 
 def count_params(cfg: ModelCfg) -> dict:

@@ -22,8 +22,8 @@ def tiny_cola_dir():
 
 def test_files_exist(tiny_cola_dir):
     for f in ("train_step.hlo.txt", "eval_step.hlo.txt", "activations.hlo.txt",
-              "prefill.hlo.txt", "decode_step.hlo.txt", "state0.npz",
-              "manifest.json"):
+              "prefill.hlo.txt", "decode_step.hlo.txt", "prefill_row.hlo.txt",
+              "state0.npz", "manifest.json"):
         assert os.path.exists(os.path.join(tiny_cola_dir, f)), f
 
 

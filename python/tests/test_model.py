@@ -171,7 +171,8 @@ def test_decode_matches_full_forward(variant):
     cur = prompt
     for s in range(steps):
         cur = jnp.concatenate([cur, nxt[:, None]], axis=1)
-        nxt, kc, vc = M.decode_step(cfg, p, kc, vc, cur[:, -1], Tp + s)
+        pos = jnp.full((B,), Tp + s, jnp.int32)          # per-row positions
+        nxt, kc, vc = M.decode_step(cfg, p, kc, vc, cur[:, -1], pos)
         got.append(np.asarray(nxt))
 
     # oracle: argmax of the full forward at each length
@@ -181,6 +182,73 @@ def test_decode_matches_full_forward(variant):
         want = np.asarray(jnp.argmax(lg[:, -1], -1))
         np.testing.assert_array_equal(got[s], want, err_msg=f"step {s}")
         cur = jnp.concatenate([cur, jnp.asarray(got[s])[:, None]], 1)
+
+
+def test_prefill_row_splices_without_touching_neighbours():
+    """prefill_row rebuilds exactly one row of a live cache: the other rows'
+    KV is byte-identical before/after, the spliced row matches a from-scratch
+    batch prefill of the same window, and positions < keep retain whatever
+    the row already held (an imported cached prefix)."""
+    cfg = make_cfg("tiny", "full")
+    p = M.init_params(cfg, 0)
+    pr = cfg.preset
+    B, Tp, max_len = 2, 8, 16
+    prompt = jax.random.randint(jax.random.PRNGKey(5), (B, Tp), 0, pr.vocab)
+    _, kc, vc = M.prefill(cfg, p, prompt, max_len)
+
+    w = jax.random.randint(jax.random.PRNGKey(7), (Tp,), 0, pr.vocab)
+    nxt, kc2, vc2 = M.prefill_row(cfg, p, kc, vc, w, 1, Tp, 0)
+    # neighbour row untouched
+    np.testing.assert_array_equal(np.asarray(kc2[:, 0]), np.asarray(kc[:, 0]))
+    np.testing.assert_array_equal(np.asarray(vc2[:, 0]), np.asarray(vc[:, 0]))
+    # spliced row == batch prefill of the same window
+    nref, kref, vref = M.prefill(cfg, p, w[None], max_len)
+    np.testing.assert_allclose(np.asarray(kc2[:, 1]), np.asarray(kref[:, 0]),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(vc2[:, 1]), np.asarray(vref[:, 0]),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(nxt), np.asarray(nref[0]))
+    # keep: positions < keep survive verbatim (here: a sentinel-filled row)
+    sk = kc.at[:, 1].set(7.0)
+    sv = vc.at[:, 1].set(7.0)
+    _, kc3, _ = M.prefill_row(cfg, p, sk, sv, w, 1, Tp, 3)
+    np.testing.assert_array_equal(np.asarray(kc3[:, 1, :3]),
+                                  np.full_like(np.asarray(kc3[:, 1, :3]), 7.0))
+    np.testing.assert_allclose(np.asarray(kc3[:, 1, 3:Tp]),
+                               np.asarray(kref[:, 0, 3:Tp]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_decode_rows_advance_at_independent_positions():
+    """A freshly admitted short row and a deep row decode in one batch: each
+    row's next token must equal its own single-sequence reference chain."""
+    cfg = make_cfg("tiny", "full")
+    p = M.init_params(cfg, 0)
+    pr = cfg.preset
+    Tp, Ls, max_len = 8, 5, 16
+    prompt = jax.random.randint(jax.random.PRNGKey(9), (2, Tp), 0, pr.vocab)
+    n0, kc, vc = M.prefill(cfg, p, prompt, max_len)
+
+    # admit a 5-token request into row 1 mid-flight (left-aligned window)
+    short = jax.random.randint(jax.random.PRNGKey(11), (Ls,), 0, pr.vocab)
+    w = jnp.concatenate([short, jnp.zeros((Tp - Ls,), short.dtype)])
+    n1, kc, vc = M.prefill_row(cfg, p, kc, vc, w, 1, Ls, 0)
+
+    feed = jnp.stack([n0[0], n1]).astype(jnp.int32)
+    pos = jnp.asarray([Tp, Ls], jnp.int32)               # rows at depths 8, 5
+    nxt, _, _ = M.decode_step(cfg, p, kc, vc, feed, pos)
+
+    # row-0 reference: its own B=1 chain at position Tp
+    r0n, r0k, r0v = M.prefill(cfg, p, prompt[:1], max_len)
+    ref0, _, _ = M.decode_step(cfg, p, r0k, r0v, r0n,
+                               jnp.asarray([Tp], jnp.int32))
+    # row-1 reference: the short prompt's own B=1 chain at position Ls
+    r1n, r1k, r1v = M.prefill(cfg, p, short[None], max_len)
+    ref1, _, _ = M.decode_step(cfg, p, r1k, r1v, r1n,
+                               jnp.asarray([Ls], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(n1), np.asarray(r1n[0]))
+    np.testing.assert_array_equal(np.asarray(nxt),
+                                  np.asarray([ref0[0], ref1[0]]))
 
 
 # ---------------------------------------------------------------------------

@@ -81,9 +81,9 @@ pub struct ServeConfig {
     /// factorization rank for `kv_codec=rankr` (clamped to ≥ 1; ignored by
     /// the other codecs)
     pub kv_rank: usize,
-    /// at most this many Normal-priority admissions per join-prefill
-    /// boundary (High-priority admissions are never chunk-limited); 0 =
-    /// unlimited, i.e. fill every free slot at each boundary
+    /// at most this many Normal-priority admissions per decode step
+    /// (High-priority admissions are never chunk-limited); 0 = unlimited,
+    /// i.e. fill every free slot as soon as it vacates
     pub join_chunk: usize,
 }
 

@@ -287,6 +287,17 @@ fn cmd_serve(
             metrics::stat_line("serve_kv_bytes_saved", &label, s.kv_bytes_saved),
             metrics::stat_line("serve_kv_decode_nanos", &label, s.kv_decode_nanos),
         );
+        println!(
+            "{} {} {} {}",
+            metrics::stat_line("serve_rows_joined_midflight", &label, s.rows_joined_midflight),
+            metrics::stat_line("serve_partial_prefix_hits", &label, s.partial_prefix_hits),
+            metrics::stat_line(
+                "serve_partial_prefix_tokens_saved",
+                &label,
+                s.partial_prefix_tokens_saved
+            ),
+            metrics::stat_line("serve_join_wait_nanos", &label, s.join_wait_nanos),
+        );
     }
     println!(
         "queue: peak depth {max_queue}/{} full-retries {retries} | \
@@ -313,6 +324,14 @@ fn cmd_serve(
         agg.kv_bytes_saved,
         agg.kv_decode_nanos as f64 * 1e-6,
     );
+    println!(
+        "joins: {} mid-flight | partial-prefix hits {} ({} window tokens re-used) | \
+         admission->live wait {:.2}ms total",
+        agg.rows_joined_midflight,
+        agg.partial_prefix_hits,
+        agg.partial_prefix_tokens_saved,
+        agg.join_wait_nanos as f64 * 1e-6,
+    );
     router.shutdown();
     Ok(())
 }
@@ -322,8 +341,12 @@ fn cmd_serve(
 /// artifact, no tokenizer — driven with a repeated-prefix workload that
 /// exercises prefill avoidance. Runs the workload twice, prefix cache on
 /// then off, proves the streamed outputs are byte-identical, reports the
-/// prefill/elision counters, and (with `--bench-json PATH`) records a
-/// one-line JSON benchmark so CI can track the serving perf trajectory.
+/// prefill/elision counters, then adds the per-row-engine proofs: a
+/// mixed-length shared-system-prompt workload must produce partial-prefix
+/// hits (again byte-identical cache on/off), and an occupancy sweep pins
+/// joining-row TTFT as O(1) in batch occupancy (one prefill per join, ratio
+/// gate ≤ 1.5×). With `--bench-json PATH` it records a one-line JSON
+/// benchmark so CI can track the serving perf trajectory.
 fn cmd_serve_mock(
     flags: &std::collections::HashMap<String, String>,
     models: &[(String, cola::config::ServeConfig)],
@@ -345,11 +368,9 @@ fn cmd_serve_mock(
     let prompts: Vec<Vec<i32>> =
         (0..distinct).map(|d| (0..6).map(|j| 100 + 17 * d as i32 + j).collect()).collect();
 
-    let run = |mutate: &dyn Fn(&mut cola::config::ServeConfig)| -> Result<(
-        Vec<Vec<i32>>,
-        ServiceStats,
-        f64,
-    )> {
+    let run = |mutate: &dyn Fn(&mut cola::config::ServeConfig),
+               workload: &[Vec<i32>]|
+     -> Result<(Vec<Vec<i32>>, ServiceStats, f64)> {
         let mut pools = Vec::new();
         for (name, cfg) in models {
             let mut cfg = cfg.clone();
@@ -361,7 +382,7 @@ fn cmd_serve_mock(
         let mut outs = Vec::with_capacity(n_requests);
         for r in 0..n_requests {
             let name = &models[r % models.len()].0;
-            let prompt = prompts[r % distinct].clone();
+            let prompt = workload[r % workload.len()].clone();
             let c = router.generate(name, prompt, SubmitOptions::default())?;
             anyhow::ensure!(
                 matches!(c.finish_reason, FinishReason::Length | FinishReason::Stop),
@@ -370,14 +391,16 @@ fn cmd_serve_mock(
             );
             outs.push(c.tokens);
         }
-        let secs = t0.elapsed().as_secs_f64();
+        // nanos → f64 seconds with a floor: sub-resolution runs must never
+        // divide by zero and record a spurious 0 tok/s in BENCH_serve.json
+        let secs = (t0.elapsed().as_nanos() as f64 / 1e9).max(1e-9);
         let agg = router.aggregate_stats();
         router.shutdown();
         Ok((outs, agg, secs))
     };
 
-    let (outs_on, on, secs_on) = run(&|_| {})?;
-    let (outs_off, off, secs_off) = run(&|c| c.kv_cache_entries = 0)?;
+    let (outs_on, on, secs_on) = run(&|_| {}, &prompts)?;
+    let (outs_off, off, secs_off) = run(&|c| c.kv_cache_entries = 0, &prompts)?;
     anyhow::ensure!(
         outs_on == outs_off,
         "prefix cache changed streamed outputs — elision is broken"
@@ -393,7 +416,7 @@ fn cmd_serve_mock(
     );
     println!(
         "  cache on : {:.0} tok/s wall | prefills {} real + {} elided ({} of {} boundaries)",
-        tokens as f64 / secs_on.max(1e-9),
+        tokens as f64 / secs_on,
         on.prefill_calls,
         on.prefills_elided,
         metrics::fmt_pct(on.prefills_elided, boundaries),
@@ -401,7 +424,7 @@ fn cmd_serve_mock(
     );
     println!(
         "  cache off: {:.0} tok/s wall | prefills {} real (baseline, outputs identical)",
-        tokens as f64 / secs_off.max(1e-9),
+        tokens as f64 / secs_off,
         off.prefill_calls,
     );
     println!(
@@ -449,11 +472,14 @@ fn cmd_serve_mock(
     let mut fixed_mem = [(0.0f64, 0u64, 0u64); 3]; // (hit rate, bytes resident, bytes saved)
     if cache_enabled {
         for (i, (kind, rank, _)) in codecs.iter().enumerate() {
-            let (outs, s, _) = run(&|c| {
-                c.kv_cache_bytes = budget as usize;
-                c.kv_codec = *kind;
-                c.kv_rank = *rank;
-            })?;
+            let (outs, s, _) = run(
+                &|c| {
+                    c.kv_cache_bytes = budget as usize;
+                    c.kv_codec = *kind;
+                    c.kv_rank = *rank;
+                },
+                &prompts,
+            )?;
             anyhow::ensure!(
                 outs == outs_on,
                 "kv_codec={} changed streamed outputs under a byte budget",
@@ -496,6 +522,120 @@ fn cmd_serve_mock(
         }
     }
 
+    // Partial-prefix workload: every prompt opens with the same 4-token
+    // system prefix (= the engine's prefix-chunk size at prompt_len 8) but
+    // continues with tails of *different lengths*, so whole-window lookups
+    // miss while the shared chunk hits — the mixed-length
+    // shared-system-prompt case the chunked prefix chain exists for. Run it
+    // cache on and off: streams must stay byte-identical, and with the
+    // cache on the misses must recover the shared prefix.
+    let sys = [900, 901, 902, 903];
+    let pp_prompts: Vec<Vec<i32>> = (0..distinct)
+        .map(|d| {
+            let mut p = sys.to_vec();
+            p.extend((0..1 + d % 3).map(|j| 950 + 10 * d as i32 + j as i32));
+            p
+        })
+        .collect();
+    let (pp_outs_on, pp, _) = run(&|_| {}, &pp_prompts)?;
+    let (pp_outs_off, _, _) = run(&|c| c.kv_cache_entries = 0, &pp_prompts)?;
+    anyhow::ensure!(
+        pp_outs_on == pp_outs_off,
+        "partial-prefix reuse changed streamed outputs — tail prefill is broken"
+    );
+    let pp_hit_rate = if pp.kv_cache_misses > 0 {
+        pp.partial_prefix_hits as f64 / pp.kv_cache_misses as f64
+    } else {
+        0.0
+    };
+    println!(
+        "  partial prefix: {} hits on {} whole-window misses ({:.0}%) | {} window tokens re-used",
+        pp.partial_prefix_hits,
+        pp.kv_cache_misses,
+        pp_hit_rate * 100.0,
+        pp.partial_prefix_tokens_saved,
+    );
+    if cache_enabled && distinct >= 2 {
+        anyhow::ensure!(
+            pp.partial_prefix_hits > 0,
+            "mixed-length shared-system-prompt workload produced no partial-prefix hits"
+        );
+    }
+
+    // Occupancy sweep: the tentpole's O(1)-admission proof. Fill a slow
+    // 1-worker pool with `occ` long-running background rows, then time a
+    // probe request's TTFT. Under the per-row engine the join is one
+    // single-row encode regardless of occupancy (the stats delta below
+    // pins that); under the old barrier engine the probe would wait for a
+    // whole-batch re-prefill, scaling TTFT with occupancy.
+    use cola::serve::InferenceService;
+    let slow = MockBackend::new(4, 8, 24)
+        .vocab(50_021)
+        .prefill_delay(std::time::Duration::from_millis(10))
+        .step_delay(std::time::Duration::from_millis(2));
+    let probe_ttft = |occ: usize| -> Result<f64> {
+        // min of 3 independent sessions — robust to scheduler hiccups
+        let mut best = f64::INFINITY;
+        for round in 0..3 {
+            let mut cfg = models[0].1.clone();
+            cfg.workers = 1;
+            cfg.kv_cache_entries = 0; // every join pays its real encode
+            let pool = ServicePool::start_with(cfg, slow.clone().factory())?;
+            let mut bg = Vec::new();
+            for b in 0..occ {
+                // 18 tokens: encode + 17 decode steps, dying at pos 23 —
+                // outlives the probe without ever rolling over (which would
+                // add prefill calls and break the O(1) assertion below)
+                bg.push(pool.submit(
+                    vec![500 + 31 * (b as i32 + 1); 6],
+                    SubmitOptions { max_new_tokens: Some(18), ..Default::default() },
+                )?);
+            }
+            // background rows are live once each has streamed a token
+            for s in &mut bg {
+                anyhow::ensure!(
+                    matches!(s.recv(), Some(cola::serve::StreamEvent::Token(_))),
+                    "background row died before going live"
+                );
+            }
+            let s0 = pool.stats();
+            let c = pool.generate(
+                vec![700 + round, 701, 702, 703, 704, 705],
+                SubmitOptions { max_new_tokens: Some(2), ..Default::default() },
+            )?;
+            let s1 = pool.stats();
+            anyhow::ensure!(
+                s1.prefill_calls - s0.prefill_calls == 1,
+                "joining at occupancy {occ} cost {} prefills — occupied rows were re-encoded",
+                s1.prefill_calls - s0.prefill_calls
+            );
+            anyhow::ensure!(
+                occ == 0 || s1.rows_joined_midflight > s0.rows_joined_midflight,
+                "probe at occupancy {occ} was not counted as a mid-flight join"
+            );
+            let ttft =
+                c.timing.first_token.context("probe produced no token")?.as_secs_f64() * 1e3;
+            best = best.min(ttft);
+            for s in bg {
+                let _ = s.wait();
+            }
+        }
+        Ok(best)
+    };
+    let serve_bs = 4usize; // MockBackend::new(4, ...) above
+    let (ttft_low, ttft_high) = (probe_ttft(1)?, probe_ttft(serve_bs - 1)?);
+    let ttft_ratio = ttft_high / ttft_low.max(1e-9);
+    println!(
+        "  join ttft: occupancy 1 = {ttft_low:.2}ms, occupancy {} = {ttft_high:.2}ms \
+         (ratio {ttft_ratio:.2}x, gate <= 1.5x)",
+        serve_bs - 1,
+    );
+    anyhow::ensure!(
+        ttft_ratio <= 1.5,
+        "joining-row TTFT scales with occupancy ({ttft_ratio:.2}x > 1.5x) — \
+         the barrier is back"
+    );
+
     if let Some(path) = flags.get("bench-json") {
         use cola::util::json::Json;
         let j = Json::obj(vec![
@@ -506,8 +646,8 @@ fn cmd_serve_mock(
             ("requests", Json::num(n_requests as f64)),
             ("distinct_prompts", Json::num(distinct as f64)),
             ("tokens", Json::num(tokens as f64)),
-            ("tokens_per_sec", Json::num(tokens as f64 / secs_on.max(1e-9))),
-            ("tokens_per_sec_nocache", Json::num(tokens as f64 / secs_off.max(1e-9))),
+            ("tokens_per_sec", Json::num(tokens as f64 / secs_on)),
+            ("tokens_per_sec_nocache", Json::num(tokens as f64 / secs_off)),
             ("prefill_calls", Json::num(on.prefill_calls as f64)),
             ("prefills_elided", Json::num(on.prefills_elided as f64)),
             ("kv_cache_hits", Json::num(on.kv_cache_hits as f64)),
@@ -521,6 +661,22 @@ fn cmd_serve_mock(
                 }),
             ),
             ("kv_decode_nanos", Json::num(on.kv_decode_nanos as f64)),
+            // partial-prefix workload: shared system prefix, mixed lengths
+            ("partial_prefix_hits", Json::num(pp.partial_prefix_hits as f64)),
+            (
+                "partial_prefix_tokens_saved",
+                Json::num(pp.partial_prefix_tokens_saved as f64),
+            ),
+            ("partial_prefix_hit_rate", Json::num(pp_hit_rate)),
+            // occupancy sweep: joining-row TTFT must not scale with batch fill
+            (
+                "join_ttft_by_occupancy",
+                Json::obj(vec![
+                    ("occ1", Json::num(ttft_low)),
+                    ("occ3", Json::num(ttft_high)),
+                ]),
+            ),
+            ("join_ttft_occupancy_ratio", Json::num(ttft_ratio)),
             ("kv_budget_bytes", Json::num(budget as f64)),
             (
                 "bytes_per_entry",

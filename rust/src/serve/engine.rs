@@ -1,10 +1,10 @@
-//! The engine worker: slot-based continuous batching behind the
+//! The engine worker: barrier-free continuous batching behind the
 //! [`EngineBackend`] trait.
 //!
-//! The worker loop is pure scheduling — admission, join prefills, lockstep
-//! decode, vacate/refill — and talks to the model through [`EngineBackend`],
-//! which owns everything stateful about *how* a batch is encoded and
-//! decoded. Two implementations exist:
+//! The worker loop is pure scheduling — admission, per-row encodes,
+//! lockstep decode, vacate/refill — and talks to the model through
+//! [`EngineBackend`], which owns everything stateful about *how* a row is
+//! encoded and a batch is decoded. Two implementations exist:
 //!
 //! - [`PjrtBackend`]: the AOT prefill/decode artifacts on the PJRT CPU
 //!   client. Each worker owns its client, compiled executables,
@@ -15,45 +15,43 @@
 //!   table, queue, streaming, cancellation, deadlines) runs hermetically
 //!   under `cargo test -q`.
 //!
+//! Every row carries its **own decode position** (`pos: i32[serve_bs]` in
+//! the decode artifact), so there is no join-prefill barrier: a vacated
+//! slot is refilled *mid-flight* by a **single-row prefill**
+//! ([`EngineBackend::prefill_row`], a row-scatter into the live batch KV)
+//! — or by a cache restore ([`EngineBackend::import_kv_row`]) — while
+//! every other row keeps decoding from its own position. Joining-row
+//! admission latency is therefore O(1) in batch occupancy: one row encode,
+//! zero re-prefills of occupied rows. KV-window rollover is a *per-row*
+//! event too — the row whose `pos` hits `max_len` re-encodes its own
+//! sliding window; its neighbours never notice.
+//!
 //! The loop:
 //!
 //! 1. park on the admission queue while the slot table is idle;
-//! 2. top up free slots from the queue — **chunked admission**: at most
-//!    `join_chunk` Normal-priority rows join per prefill boundary, while
-//!    High-priority rows are popped first and are never chunk-limited, so
-//!    one burst of new requests can neither stall every in-flight decode
-//!    nor saturate the table before urgent work lands (expired/cancelled/
-//!    zero-budget requests resolve immediately without burning a slot);
-//! 3. **join prefill**: re-encode the merged batch — every occupied row's
-//!    right-aligned context window — in one `[batch, prompt_len]` call,
-//!    producing fresh KV state and one next-token per row. The decode step
-//!    shares a single `pos` scalar across the batch, so rows can only join
-//!    at a prefill boundary; re-encoding restarts positions at 0, which
-//!    RoPE's shift-equivariance makes attention-equivalent for the tokens
-//!    inside the window. **Prefill avoidance**: a row's post-prefill KV
-//!    slice is a pure function of its window (rows never attend across the
-//!    batch), so each worker keeps a host-side
-//!    [`KvPrefixCache`](crate::serve::kvcache::KvPrefixCache) of per-row KV
-//!    snapshots keyed by window hash. When *every* occupied row hits —
-//!    repeated prefixes (system prompts, retries), or rows whose window is
-//!    unchanged since the prefill that inserted it — the join prefill is
-//!    elided entirely: rows are restored through
-//!    [`EngineBackend::import_kv_rows`] instead of re-encoded. Real
-//!    prefills are timed (`prefill_nanos`) and export their missing rows
-//!    into the cache via [`EngineBackend::export_kv_rows`];
-//! 4. decode in lockstep, streaming each row's token as it lands, vacating
-//!    rows that finish/cancel/expire — and break back to (3) when an
-//!    admission into a vacated slot actually lands, or when the KV window
-//!    is exhausted (`pos == max_len`, a sliding-window rollover that lets
-//!    generations run past the backend's static window). Deterministic
-//!    decoding makes even rollover windows repeat across retries of the
-//!    same prompt, so rollover prefills of repeated traffic hit the cache
-//!    too.
+//! 2. top up free slots from the queue (expired/cancelled/zero-budget
+//!    requests resolve immediately without burning a slot). Admissions are
+//!    paced: at most `join_chunk` Normal-priority rows join per decode
+//!    step, while High-priority rows are popped first and are never
+//!    chunk-limited, so a burst of new requests cannot stall in-flight
+//!    decodes behind a wall of back-to-back row encodes;
+//! 3. **encode** each fresh or rolled-over row individually: probe the
+//!    worker's host-side
+//!    [`KvPrefixCache`](crate::serve::kvcache::KvPrefixCache) first — a
+//!    whole-window hit restores the row without any forward pass (an
+//!    **elided** prefill); a chunked **partial-prefix** hit imports the
+//!    longest cached prefix and prefills only the tail (`keep` positions
+//!    retained — shared system prompts across requests of different
+//!    lengths); a miss runs the timed single-row prefill and exports the
+//!    fresh row back into the cache;
+//! 4. decode in lockstep at per-row positions, streaming each row's token
+//!    as it lands, vacating rows that finish/cancel/expire (releasing
+//!    their backend rows via [`EngineBackend::vacate_row`]) and breaking
+//!    back to (3) whenever an admission lands or a row needs its rollover.
 //!
-//! Rows that sit empty while the queue is dry still decode junk (the shapes
-//! are static), but unlike the retired flush-and-wait batcher they are
-//! refilled the instant work arrives instead of after the whole batch
-//! drains.
+//! Rows that sit empty while the queue is dry still decode junk (the
+//! shapes are static), but they cost no encodes and are refilled the
+//! instant work arrives.
 
 use crate::data::tokenizer;
 use crate::metrics;
@@ -71,9 +69,10 @@ use std::time::Instant;
 // Backend trait
 // ---------------------------------------------------------------------------
 
-/// What the scheduling loop needs from a model: static batch geometry plus
-/// the two batched ops (join prefill, lockstep decode step), and — for
-/// prefill avoidance — per-row KV state transfer between device and host.
+/// What the scheduling loop needs from a model: static batch geometry, a
+/// **single-row** encode that splices one row into the live batch KV, a
+/// lockstep decode step at **per-row positions**, and — for prefill
+/// avoidance — per-row KV state transfer between device and host.
 ///
 /// Implementations are constructed *inside* the worker thread (see
 /// `ServicePool::start_with`), so they may hold thread-local, non-`Send`
@@ -82,30 +81,35 @@ pub trait EngineBackend {
     /// Rows decoded in lockstep (the artifact's `serve_bs`).
     fn batch_size(&self) -> usize;
 
-    /// Join-prefill window length: how many trailing context tokens each row
-    /// re-encodes when the merged batch is rebuilt.
+    /// Encode-window length: how many context tokens a single-row prefill
+    /// encodes (the static width of `prefill_row`'s window input).
     fn prompt_len(&self) -> usize;
 
-    /// Static KV window: decode positions available after one prefill. When
-    /// `pos` reaches this, the worker re-prefills (sliding-window rollover).
+    /// Static KV window: decode positions available to a row after one
+    /// encode. When a row's `pos` reaches this, the worker re-encodes that
+    /// row (a per-row sliding-window rollover).
     fn max_len(&self) -> usize;
 
     /// Human-readable identity for worker-up log lines.
     fn describe(&self) -> String;
 
-    /// Re-encode the merged batch: `tokens` is `[batch_size * prompt_len]`
-    /// row-major (each row right-aligned, pad-filled). Rebuilds the KV state
-    /// and returns one next-token per row.
-    fn prefill(&mut self, tokens: &[i32]) -> Result<Vec<i32>>;
+    /// Encode one row into the live batch: `window` is `[prompt_len]`
+    /// left-aligned (real tokens at `0..len`, trailing pad). Rebuilds the
+    /// row's KV at positions `0..len` — except positions `0..keep`, which
+    /// retain the row's existing (imported) KV state, so a partial-prefix
+    /// restore only pays for the tail — and returns the row's next token
+    /// (decoded from position `len - 1`). Other rows' KV state must be
+    /// left untouched.
+    fn prefill_row(&mut self, row: usize, window: &[i32], len: usize, keep: usize) -> Result<i32>;
 
-    /// One lockstep decode step at position `pos`: `feed` is one token per
-    /// row (pad for free rows, whose output is ignored). Returns one
-    /// next-token per row and advances the KV state.
-    fn decode_step(&mut self, feed: &[i32], pos: usize) -> Result<Vec<i32>>;
+    /// One lockstep decode step: `feed` is one token per row (pad for free
+    /// rows, whose output is ignored) and `pos` is each row's own KV write
+    /// position. Returns one next-token per row and advances the KV state.
+    fn decode_step(&mut self, feed: &[i32], pos: &[usize]) -> Result<Vec<i32>>;
 
     /// f32 elements per plane (`k` or `v`) of one row's KV snapshot, or 0
     /// when the backend cannot export/import KV rows — the engine then
-    /// disables the prefix cache instead of failing at the first boundary.
+    /// disables the prefix cache instead of failing at the first encode.
     fn kv_row_elems(&self) -> usize {
         0
     }
@@ -119,44 +123,50 @@ pub trait EngineBackend {
         PlaneGeom::flat(self.kv_row_elems())
     }
 
-    /// Snapshot the post-prefill KV state of the given rows to the host
-    /// (one [`KvRowState`] per requested row, in order). Only called after
-    /// a successful [`prefill`](Self::prefill) and only when
-    /// [`kv_row_elems`](Self::kv_row_elems) is non-zero.
-    fn export_kv_rows(&mut self, _rows: &[usize]) -> Result<Vec<KvRowState>> {
+    /// Snapshot one row's post-encode KV state to the host. Only called
+    /// after a successful [`prefill_row`](Self::prefill_row) on that row
+    /// and only when [`kv_row_elems`](Self::kv_row_elems) is non-zero.
+    fn export_kv_row(&mut self, _row: usize) -> Result<KvRowState> {
         anyhow::bail!("backend `{}` does not support KV row export", self.describe())
     }
 
-    /// Replace the batch KV state from per-row host snapshots (`None` =
-    /// free row, which gets a zero slice — its decode output is junk the
-    /// scheduler ignores). `rows.len() == batch_size()`. After this call
-    /// the backend must behave exactly as if a prefill of the snapshotted
-    /// windows had just run.
-    fn import_kv_rows(&mut self, _rows: &[Option<&KvRowState>]) -> Result<()> {
+    /// Restore one row's KV state from a host snapshot whose first `len`
+    /// positions are real. After this call the backend must behave exactly
+    /// as if an encode of the snapshotted window had just run on that row;
+    /// other rows must be left untouched.
+    fn import_kv_row(&mut self, _row: usize, _kv: &KvRowState, _len: usize) -> Result<()> {
         anyhow::bail!("backend `{}` does not support KV row import", self.describe())
     }
+
+    /// The scheduler no longer tracks this row (finished, cancelled,
+    /// expired, or batch failure). Backends with per-row liveness models
+    /// (the mock's position oracle) release the row here; stateless
+    /// backends ignore it.
+    fn vacate_row(&mut self, _row: usize) {}
 }
 
 // ---------------------------------------------------------------------------
 // PJRT artifact backend
 // ---------------------------------------------------------------------------
 
-/// [`EngineBackend`] over the AOT prefill/decode artifacts. Owns the
-/// compiled executables, device-resident params, and the KV cache buffers
-/// that thread from one call to the next. All PJRT objects are `Rc`-based
-/// and stay on the constructing thread.
+/// [`EngineBackend`] over the AOT single-row-prefill/decode artifacts.
+/// Owns the compiled executables, device-resident params, and the KV cache
+/// buffers that thread from one call to the next. All PJRT objects are
+/// `Rc`-based and stay on the constructing thread.
 pub struct PjrtBackend {
-    prefill: Rc<Executor>,
+    prefill_row: Rc<Executor>,
     decode: Rc<Executor>,
     /// Model params only (the first `n_params` of state0); optimizer state
     /// is not needed to serve.
     params: Vec<xla::PjRtBuffer>,
-    /// `(kc, vc)` produced by the last prefill/decode call.
+    /// `(kc, vc)` produced by the last prefill_row/decode call.
     kv: Option<(xla::PjRtBuffer, xla::PjRtBuffer)>,
     /// Reusable argument scratch: params + per-call inputs as raw pointers,
     /// so the hot loop stops re-collecting a `Vec` of borrows every step
     /// (see `Executor::run_b_ptr`).
     scratch: Vec<*const xla::PjRtBuffer>,
+    /// Reusable i32 staging for the per-row position vector.
+    pos_i32: Vec<i32>,
     batch: usize,
     prompt_len: usize,
     max_len: usize,
@@ -177,12 +187,15 @@ impl PjrtBackend {
         let batch = man.serve_batch.context("artifact not built with --serve")?;
         let prompt_len = man.prompt_len.unwrap_or(8);
         let max_len = man.max_len.unwrap_or(man.preset.seq_len);
-        let prefill = art.step("prefill")?;
+        let prefill_row = art.step("prefill_row").context(
+            "artifact lacks the prefill_row step (pre-per-row-position build?) — \
+             regenerate it with python/compile/aot.py --serve",
+        )?;
         let decode = art.step("decode_step")?;
         // params stay on device for the backend's lifetime
         let mut params = art.load_state0_buffers()?;
         params.truncate(man.n_params);
-        let scratch = Vec::with_capacity(params.len() + 4);
+        let scratch = Vec::with_capacity(params.len() + 8);
         anyhow::ensure!(
             man.preset.n_heads > 0 && man.preset.d % man.preset.n_heads == 0,
             "preset head geometry (d={}, n_heads={})",
@@ -190,11 +203,12 @@ impl PjrtBackend {
             man.preset.n_heads
         );
         Ok(Self {
-            prefill,
+            prefill_row,
             decode,
             params,
             kv: None,
             scratch,
+            pos_i32: Vec::with_capacity(batch),
             batch,
             prompt_len,
             max_len,
@@ -220,6 +234,23 @@ impl PjrtBackend {
             self.n_heads as i64,
             self.head_dim as i64,
         ]
+    }
+
+    /// Make sure `self.kv` holds a live buffer pair — a worker that has
+    /// never encoded a row (or whose last step failed) starts from zeroed
+    /// KV, the same state a fresh batch prefill used to produce.
+    fn ensure_kv(&mut self) -> Result<()> {
+        if self.kv.is_some() {
+            return Ok(());
+        }
+        let full = self.n_layers * self.batch * self.layer_row_elems();
+        let zeros = vec![0f32; full];
+        let dims = self.kv_dims();
+        self.kv = Some((
+            to_device(&lit_f32_vec(&zeros, &dims)?)?,
+            to_device(&lit_f32_vec(&zeros, &dims)?)?,
+        ));
+        Ok(())
     }
 
     /// Rebuild `self.scratch` as params ++ `extra` and run `exe` over it.
@@ -259,26 +290,47 @@ impl EngineBackend for PjrtBackend {
         )
     }
 
-    fn prefill(&mut self, tokens: &[i32]) -> Result<Vec<i32>> {
-        let tok_buf =
-            to_device(&lit_i32(tokens, &[self.batch as i64, self.prompt_len as i64])?)?;
-        let exe = self.prefill.clone();
-        let mut out = self.run_step(&exe, &[&tok_buf])?;
-        anyhow::ensure!(out.len() == 3, "prefill returns (next, kc, vc)");
-        let vcb = out.pop().context("prefill output vc")?;
-        let kcb = out.pop().context("prefill output kc")?;
-        self.kv = Some((kcb, vcb));
-        buf_i32_vec(&out[0])
+    fn prefill_row(&mut self, row: usize, window: &[i32], len: usize, keep: usize) -> Result<i32> {
+        anyhow::ensure!(row < self.batch, "prefill_row row {row} out of range");
+        anyhow::ensure!(
+            window.len() == self.prompt_len,
+            "prefill_row window has {} tokens, artifact wants {}",
+            window.len(),
+            self.prompt_len
+        );
+        anyhow::ensure!(
+            0 < len && len <= self.prompt_len && keep <= len,
+            "prefill_row wants 0 < len <= prompt_len and keep <= len (len {len}, keep {keep})"
+        );
+        self.ensure_kv()?;
+        // Take the KV pair; a failed step leaves `kv` empty, and ensure_kv
+        // rebuilds zeroed state on the next encode after a batch failure.
+        let (kcb, vcb) = self.kv.take().context("prefill_row KV state")?;
+        let win_b = to_device(&lit_i32(window, &[self.prompt_len as i64])?)?;
+        let row_b = to_device(&xla::Literal::scalar(row as i32))?;
+        let len_b = to_device(&xla::Literal::scalar(len as i32))?;
+        let keep_b = to_device(&xla::Literal::scalar(keep as i32))?;
+        let exe = self.prefill_row.clone();
+        let mut out = self.run_step(&exe, &[&kcb, &vcb, &win_b, &row_b, &len_b, &keep_b])?;
+        anyhow::ensure!(out.len() == 3, "prefill_row returns (next, kc, vc)");
+        let vcb2 = out.pop().context("prefill_row output vc")?;
+        let kcb2 = out.pop().context("prefill_row output kc")?;
+        self.kv = Some((kcb2, vcb2));
+        let next = buf_i32_vec(&out[0])?;
+        next.first().copied().context("prefill_row returned an empty next token")
     }
 
     // lint: hot-path-end — the backend step is the model-execution cost the
     // benchmark measures; its device transfers are not scheduler overhead.
-    fn decode_step(&mut self, feed: &[i32], pos: usize) -> Result<Vec<i32>> {
+    fn decode_step(&mut self, feed: &[i32], pos: &[usize]) -> Result<Vec<i32>> {
+        anyhow::ensure!(pos.len() == self.batch, "decode pos is one position per row");
         // Take the KV pair; a failed step leaves `kv` empty, and the worker
-        // always re-prefills after a batch failure, which restores it.
-        let (kcb, vcb) = self.kv.take().context("decode_step before prefill")?;
+        // always re-encodes after a batch failure, which restores it.
+        let (kcb, vcb) = self.kv.take().context("decode_step before any encode")?;
         let tok_b = to_device(&lit_i32(feed, &[self.batch as i64])?)?;
-        let pos_b = to_device(&xla::Literal::scalar(pos as i32))?;
+        self.pos_i32.clear();
+        self.pos_i32.extend(pos.iter().map(|&p| p as i32));
+        let pos_b = to_device(&lit_i32(&self.pos_i32, &[self.batch as i64])?)?;
         let exe = self.decode.clone();
         let mut out = self.run_step(&exe, &[&kcb, &vcb, &tok_b, &pos_b])?;
         anyhow::ensure!(out.len() == 3, "decode returns (next, kc, vc)");
@@ -294,7 +346,7 @@ impl EngineBackend for PjrtBackend {
 
     fn kv_row_geom(&self) -> PlaneGeom {
         // per layer, a row's plane is [max_len, n_heads * head_dim] — the
-        // contiguous slice export_kv_rows gathers per (layer, row)
+        // contiguous slice export_kv_row gathers per (layer, row)
         PlaneGeom {
             layers: self.n_layers,
             rows: self.max_len,
@@ -302,55 +354,46 @@ impl EngineBackend for PjrtBackend {
         }
     }
 
-    fn export_kv_rows(&mut self, rows: &[usize]) -> Result<Vec<KvRowState>> {
-        let (kcb, vcb) = self.kv.as_ref().context("export_kv_rows before prefill")?;
-        // one host transfer for the whole batch, then per-row gather — the
-        // [L, B, T, H, hd] layout scatters a row across layers
+    fn export_kv_row(&mut self, row: usize) -> Result<KvRowState> {
+        anyhow::ensure!(row < self.batch, "export row {row} out of range (batch {})", self.batch);
+        let (kcb, vcb) = self.kv.as_ref().context("export_kv_row before any encode")?;
+        // one host transfer, then a per-layer gather — the [L, B, T, H, hd]
+        // layout scatters a row across layers
         let k_host = buf_f32_vec(kcb)?;
         let v_host = buf_f32_vec(vcb)?;
         let lr = self.layer_row_elems();
         let row_elems = self.kv_row_elems();
-        let mut out = Vec::with_capacity(rows.len());
-        for &r in rows {
-            anyhow::ensure!(r < self.batch, "export row {r} out of range (batch {})", self.batch);
-            let mut k = Vec::with_capacity(row_elems);
-            let mut v = Vec::with_capacity(row_elems);
-            for l in 0..self.n_layers {
-                let off = (l * self.batch + r) * lr;
-                k.extend_from_slice(&k_host[off..off + lr]);
-                v.extend_from_slice(&v_host[off..off + lr]);
-            }
-            out.push(KvRowState { k, v });
+        let mut k = Vec::with_capacity(row_elems);
+        let mut v = Vec::with_capacity(row_elems);
+        for l in 0..self.n_layers {
+            let off = (l * self.batch + row) * lr;
+            k.extend_from_slice(&k_host[off..off + lr]);
+            v.extend_from_slice(&v_host[off..off + lr]);
         }
-        Ok(out)
+        Ok(KvRowState { k, v })
     }
 
-    fn import_kv_rows(&mut self, rows: &[Option<&KvRowState>]) -> Result<()> {
-        anyhow::ensure!(
-            rows.len() == self.batch,
-            "import_kv_rows wants one entry per row ({} != {})",
-            rows.len(),
-            self.batch
-        );
+    fn import_kv_row(&mut self, row: usize, kv: &KvRowState, _len: usize) -> Result<()> {
+        anyhow::ensure!(row < self.batch, "import row {row} out of range (batch {})", self.batch);
         let lr = self.layer_row_elems();
         let row_elems = self.kv_row_elems();
-        let full = self.n_layers * self.batch * lr;
-        // free rows stay zero — the same state a fresh prefill gives padding
-        let mut k_host = vec![0f32; full];
-        let mut v_host = vec![0f32; full];
-        for (r, state) in rows.iter().enumerate() {
-            let Some(s) = state else { continue };
-            anyhow::ensure!(
-                s.k.len() == row_elems && s.v.len() == row_elems,
-                "KV row snapshot has {} elems, backend wants {row_elems}",
-                s.k.len()
-            );
-            for l in 0..self.n_layers {
-                let dst = (l * self.batch + r) * lr;
-                let src = l * lr;
-                k_host[dst..dst + lr].copy_from_slice(&s.k[src..src + lr]);
-                v_host[dst..dst + lr].copy_from_slice(&s.v[src..src + lr]);
-            }
+        anyhow::ensure!(
+            kv.k.len() == row_elems && kv.v.len() == row_elems,
+            "KV row snapshot has {} elems, backend wants {row_elems}",
+            kv.k.len()
+        );
+        self.ensure_kv()?;
+        // read-modify-write: splice the row into the live planes without
+        // touching any other row's state (the whole point of a mid-flight
+        // join), then re-upload
+        let (kcb, vcb) = self.kv.take().context("import_kv_row KV state")?;
+        let mut k_host = buf_f32_vec(&kcb)?;
+        let mut v_host = buf_f32_vec(&vcb)?;
+        for l in 0..self.n_layers {
+            let dst = (l * self.batch + row) * lr;
+            let src = l * lr;
+            k_host[dst..dst + lr].copy_from_slice(&kv.k[src..src + lr]);
+            v_host[dst..dst + lr].copy_from_slice(&kv.v[src..src + lr]);
         }
         let dims = self.kv_dims();
         self.kv = Some((
@@ -374,8 +417,17 @@ pub(crate) struct EngineOptions {
     /// Codec the cache stores entries under (`ServeConfig::kv_codec` joined
     /// with `kv_rank`).
     pub(crate) kv_codec: KvCodec,
-    /// Normal-priority admissions per join boundary; 0 = unlimited.
+    /// Normal-priority admissions per decode step; 0 = unlimited.
     pub(crate) join_chunk: usize,
+}
+
+/// Why the hot decode loop handed control back to [`serve_batch`].
+enum LoopEvent {
+    /// No occupied rows remain — the caller parks on the queue.
+    Drained,
+    /// A fresh admission or a per-row rollover needs an encode (heap work
+    /// the hot loop refuses to do itself).
+    Encode,
 }
 
 /// Per-worker scratch and cache state that persists across decode rounds.
@@ -384,18 +436,21 @@ struct WorkerState {
     /// export-incapable backend).
     cache: Option<KvPrefixCache>,
     join_chunk: usize,
-    /// Merged `[batch * prompt_len]` prefill input, rebuilt in place.
-    toks: Vec<i32>,
+    /// Single-row `[prompt_len]` window scratch, rebuilt per encode.
+    window: Vec<i32>,
     /// Occupied-row snapshot reused every decode step.
     occ: Vec<usize>,
     /// Per-row decode feed reused every decode step.
     feed: Vec<i32>,
-    /// `(row, probe result)` per occupied row at the current boundary.
-    probes: Vec<(usize, Option<usize>)>,
-    /// Per-slot decode scratch for elided prefills: cache entries are
-    /// stored encoded, so each hit is decoded here before import. Reused
-    /// across boundaries — decode is codec work, not per-call allocation.
-    decoded: Vec<KvRowState>,
+    /// Per-row decode positions reused every decode step.
+    pos: Vec<usize>,
+    /// Rows vacated by the last sweep, whose backend state must be
+    /// released. Reused across steps.
+    vacated: Vec<usize>,
+    /// Decode scratch for cache-restored rows: entries are stored encoded,
+    /// so each hit is decoded here before import. Reused across encodes —
+    /// decode is codec work, not per-call allocation.
+    decoded: KvRowState,
     /// Last published value of the `kv_bytes_resident` gauge, so cache
     /// byte-occupancy changes sync as deltas (same pattern as the `active`
     /// gauge in `sync_gauge`).
@@ -414,6 +469,10 @@ pub(crate) fn run_worker(
     let mut table = SlotTable::new(backend.batch_size());
     let mut gauge = 0usize; // this worker's contribution to stats.active
     let cache_rows = if backend.kv_row_elems() > 0 { opts.kv_cache_entries } else { 0 };
+    // Prefix-chain granularity: half the window is coarse enough to keep
+    // per-entry key counts tiny yet catches the dominant real-traffic case
+    // (a shared system prompt filling the front of the window).
+    let chunk = (backend.prompt_len() / 2).max(1);
     let mut st = WorkerState {
         cache: (cache_rows > 0).then(|| {
             KvPrefixCache::with_codec(
@@ -422,22 +481,25 @@ pub(crate) fn run_worker(
                 opts.kv_codec,
                 backend.kv_row_geom(),
             )
+            .with_chunk(chunk)
         }),
         join_chunk: opts.join_chunk,
-        toks: vec![tokenizer::PAD; backend.batch_size() * backend.prompt_len()],
+        window: vec![tokenizer::PAD; backend.prompt_len()],
         occ: Vec::with_capacity(backend.batch_size()),
         feed: Vec::with_capacity(backend.batch_size()),
-        probes: Vec::with_capacity(backend.batch_size()),
-        decoded: vec![KvRowState::default(); backend.batch_size()],
+        pos: Vec::with_capacity(backend.batch_size()),
+        vacated: Vec::with_capacity(backend.batch_size()),
+        decoded: KvRowState::default(),
         kv_bytes: 0,
         dead: Vec::with_capacity(8),
     };
     metrics::log_info(&format!(
-        "serve worker up: {} kv_cache={} kv_bytes={} kv_codec={:?} join_chunk={}",
+        "serve worker up: {} kv_cache={} kv_bytes={} kv_codec={:?} prefix_chunk={} join_chunk={}",
         backend.describe(),
         cache_rows,
         opts.kv_cache_bytes,
         opts.kv_codec,
+        chunk,
         if st.join_chunk == 0 { "off".into() } else { st.join_chunk.to_string() }
     ));
 
@@ -460,7 +522,13 @@ pub(crate) fn run_worker(
         }
         sync_gauge(shared, &mut gauge, table.active());
 
-        if let Err(e) = decode_rounds(shared, backend, &mut table, &mut gauge, &mut st) {
+        if let Err(e) = serve_batch(shared, backend, &mut table, &mut gauge, &mut st) {
+            // release every backend row before failing the batch, so the
+            // backend's liveness model matches the now-empty table
+            table.occupied_into(&mut st.occ);
+            for &i in &st.occ {
+                backend.vacate_row(i);
+            }
             let n = table.fail_all(Instant::now());
             shared.counters.failed.add(n as u64);
             sync_gauge(shared, &mut gauge, 0);
@@ -488,7 +556,7 @@ fn admit_one(table: &mut SlotTable, shared: &Shared, req: QueuedRequest) -> bool
         shared.counters.expired.add(1);
     } else if req.max_new_tokens == 0 {
         // zero generation budget: complete empty instead of emitting the
-        // prefill token
+        // encode token
         slots::complete_unstarted(req, FinishReason::Length, now);
         shared.counters.completed.add(1);
     } else if table.admit(req, now).is_none() {
@@ -503,7 +571,8 @@ fn admit_one(table: &mut SlotTable, shared: &Shared, req: QueuedRequest) -> bool
 /// popped first and never chunk-limited; at most `join_chunk` Normal rows
 /// are admitted per call (0 = unlimited). Returns whether any admission
 /// actually landed (dead queued requests resolve without costing a slot or
-/// a prefill).
+/// an encode). Admitted rows are `fresh` — the caller owes them a
+/// single-row encode before the next decode step.
 fn refill_slots(table: &mut SlotTable, shared: &Shared, join_chunk: usize) -> bool {
     let mut admitted = false;
     let mut normal_left = if join_chunk == 0 { usize::MAX } else { join_chunk };
@@ -549,95 +618,67 @@ fn shed_dead_queued(shared: &Shared, now: Instant, scratch: &mut Vec<QueuedReque
     }
 }
 
-/// The join boundary: restore every occupied row from the KV prefix cache
-/// when possible (an **elided** prefill), otherwise run the real prefill —
-/// timed — and export the rows the cache was missing. Expects `st.occ` and
-/// `st.toks` to be current. Returns one next-token per row.
-fn join_prefill(
+/// Encode one row into the live batch — admission (`fresh`) or per-row
+/// rollover. Cache order: whole-window hit → restore, no forward pass
+/// (elided); chunked partial-prefix hit → import the longest cached prefix
+/// and prefill only the tail; miss → full single-row prefill. Real encodes
+/// are timed, exported, and inserted back into the cache. The encode's
+/// produced token is pushed to the row (finishing it when it was the last
+/// of its budget).
+fn encode_row(
     shared: &Shared,
     backend: &mut dyn EngineBackend,
     table: &mut SlotTable,
     st: &mut WorkerState,
-    serve_bs: usize,
+    i: usize,
     prompt_len: usize,
-) -> Result<Vec<i32>> {
+    fresh: bool,
+) -> Result<()> {
     let c = &shared.counters;
-    let WorkerState { cache, toks, occ, probes, decoded, kv_bytes, .. } = st;
+    let WorkerState { cache, window, decoded, kv_bytes, .. } = st;
+    // an empty prompt encodes its all-pad window as one real pad token, so
+    // the row still gets a position to decode from
+    let len = table.real_len(i, prompt_len).max(1).min(prompt_len);
+    table.write_window(i, tokenizer::PAD, window);
+    let h = table.window_hash(i, prompt_len, tokenizer::PAD);
 
+    let mut restored = false;
+    let mut produced = tokenizer::PAD;
     if let Some(cache) = cache.as_mut() {
-        probes.clear();
-        let mut misses = 0u64;
-        for &i in occ.iter() {
-            let h = table.window_hash(i, prompt_len, tokenizer::PAD);
-            let p = cache.probe(h, &toks[i * prompt_len..(i + 1) * prompt_len]);
-            misses += u64::from(p.is_none());
-            probes.push((i, p));
-        }
-        c.kv_cache_hits.add(occ.len() as u64 - misses);
-        c.kv_cache_misses.add(misses);
-        if misses == 0 && !occ.is_empty() {
-            // Every window is known: skip the forward pass, decode the
-            // encoded snapshots into per-slot scratch (timed — this is the
-            // codec's cost on the elision path), rebuild the batch KV from
-            // them, and replay the cached next tokens (free rows get zero
-            // KV; their output is junk anyway).
+        if let Some(idx) = cache.probe(h, window) {
+            // whole-window hit: no forward pass at all — decode the
+            // encoded snapshot (timed: the codec's cost on the elision
+            // path), splice it in, replay the cached next token
             let t0 = Instant::now();
-            let mut next = vec![tokenizer::PAD; serve_bs];
-            for &(i, p) in probes.iter() {
-                // `misses == 0` makes every probe `Some`; a `None` here
-                // would mean serving a zero KV row, so bail to the real
-                // prefill path below instead of trusting it.
-                let Some(idx) = p else { anyhow::bail!("probe/miss accounting diverged") };
-                cache.decode_into(idx, &mut decoded[i]);
-                next[i] = cache.peek(idx).1;
-            }
+            cache.decode_into(idx, decoded);
+            produced = cache.peek(idx).1;
             c.kv_decode_nanos.add(t0.elapsed().as_nanos() as u64);
-            let mut rows: Vec<Option<&KvRowState>> = vec![None; serve_bs];
-            for &(i, p) in probes.iter() {
-                if p.is_some() {
-                    rows[i] = Some(&decoded[i]);
-                }
-            }
-            backend.import_kv_rows(&rows)?;
+            backend.import_kv_row(i, decoded, len)?;
+            c.kv_cache_hits.add(1);
             c.prefills_elided.add(1);
-            return Ok(next);
-        }
-    }
-
-    let t0 = Instant::now();
-    let next = backend.prefill(toks)?;
-    c.prefill_calls.add(1);
-    c.prefill_nanos.add(t0.elapsed().as_nanos() as u64);
-    anyhow::ensure!(
-        next.len() == serve_bs,
-        "prefill returned {} rows, want {serve_bs}",
-        next.len()
-    );
-
-    if let Some(cache) = cache.as_mut() {
-        // export only the rows the probe missed — hit rows are already
-        // resident (and were LRU-touched by the probe)
-        let miss_rows: Vec<usize> =
-            probes.iter().filter(|(_, p)| p.is_none()).map(|&(i, _)| i).collect();
-        if !miss_rows.is_empty() {
-            let states = backend.export_kv_rows(&miss_rows)?;
-            anyhow::ensure!(
-                states.len() == miss_rows.len(),
-                "export returned {} rows, want {}",
-                states.len(),
-                miss_rows.len()
-            );
-            let mut evicted = 0u64;
-            let mut bytes_saved = 0u64;
-            for (&i, kv) in miss_rows.iter().zip(states) {
-                let h = table.window_hash(i, prompt_len, tokenizer::PAD);
-                let window = toks[i * prompt_len..(i + 1) * prompt_len].to_vec();
-                let out = cache.insert(h, window, &kv, next[i])?;
-                evicted += out.evicted;
-                bytes_saved += out.bytes_saved;
+            restored = true;
+        } else {
+            c.kv_cache_misses.add(1);
+            // partial-prefix: splice in the longest cached prefix so the
+            // prefill only has to rebuild the tail
+            let mut keep = 0usize;
+            if let Some((idx, plen)) = cache.probe_prefix(window, len) {
+                let t0 = Instant::now();
+                cache.decode_into(idx, decoded);
+                c.kv_decode_nanos.add(t0.elapsed().as_nanos() as u64);
+                backend.import_kv_row(i, decoded, plen)?;
+                keep = plen;
+                c.partial_prefix_hits.add(1);
+                c.partial_prefix_tokens_saved.add(plen as u64);
             }
-            c.kv_cache_evictions.add(evicted);
-            c.kv_bytes_saved.add(bytes_saved);
+            let t0 = Instant::now();
+            produced = backend.prefill_row(i, window, len, keep)?;
+            c.prefill_calls.add(1);
+            c.prefill_nanos.add(t0.elapsed().as_nanos() as u64);
+            let kv = backend.export_kv_row(i)?;
+            let out = cache.insert(h, window.clone(), len, &kv, produced)?;
+            c.kv_cache_evictions.add(out.evicted);
+            c.kv_bytes_saved.add(out.bytes_saved);
             // Gauge tracks the *resident* encoded bytes across all workers;
             // sync it by delta against this worker's last observation so
             // evictions (including budget-driven ones) are reflected too.
@@ -648,15 +689,41 @@ fn join_prefill(
                 c.kv_bytes_resident.sub(*kv_bytes - cur);
             }
             *kv_bytes = cur;
+            restored = true;
         }
     }
-    Ok(next)
+    if !restored {
+        let t0 = Instant::now();
+        produced = backend.prefill_row(i, window, len, 0)?;
+        c.prefill_calls.add(1);
+        c.prefill_nanos.add(t0.elapsed().as_nanos() as u64);
+    }
+
+    let now = Instant::now();
+    if fresh {
+        // stats for the tentpole claim: how long an admitted request held
+        // a slot before its row went live, and whether other rows kept
+        // decoding state while it joined (the barrier the per-row design
+        // removed would have re-encoded all of them)
+        if table.live_rows() > 0 {
+            c.rows_joined_midflight.add(1);
+        }
+        c.join_wait_nanos.add(table.admission_wait(i, now).as_nanos() as u64);
+    }
+    table.set_row_live(i, len);
+    if let Some(reason) = table.push_token(i, produced, now) {
+        tally_finish(shared, reason);
+        backend.vacate_row(i);
+    }
+    Ok(())
 }
 
-/// One join-prefill plus the lockstep decode rounds that follow it. Returns
-/// when the table drained, a refill opportunity appeared, or the KV window
-/// rolled over — the caller re-enters after topping up slots.
-fn decode_rounds(
+/// Drive the batch until it drains: encode whatever rows need encoding
+/// (fresh admissions first, then per-row rollovers), then hand control to
+/// the hot decode loop until it reports more encode work or the table
+/// empties. All heap work (window assembly, cache codec traffic, KV
+/// import/export) lives here, outside the lint-pinned hot set.
+fn serve_batch(
     shared: &Shared,
     backend: &mut dyn EngineBackend,
     table: &mut SlotTable,
@@ -665,24 +732,19 @@ fn decode_rounds(
 ) -> Result<()> {
     let (serve_bs, prompt_len, max_len) =
         (backend.batch_size(), backend.prompt_len(), backend.max_len());
-
-    // --- join prefill over the merged batch (elided when fully cached) ------
-    table.occupied_into(&mut st.occ);
-    for i in 0..serve_bs {
-        let row = &mut st.toks[i * prompt_len..(i + 1) * prompt_len];
-        table.write_window(i, tokenizer::PAD, row);
-    }
-    let next = join_prefill(shared, backend, table, st, serve_bs, prompt_len)?;
-
-    let now = Instant::now();
-    for &i in &st.occ {
-        if let Some(reason) = table.push_token(i, next[i], now) {
-            tally_finish(shared, reason);
+    loop {
+        while let Some(i) = table.first_fresh() {
+            encode_row(shared, backend, table, st, i, prompt_len, true)?;
+        }
+        while let Some(i) = table.first_rollover(max_len) {
+            encode_row(shared, backend, table, st, i, prompt_len, false)?;
+        }
+        sync_gauge(shared, gauge, table.active());
+        match decode_loop(shared, backend, table, gauge, st, serve_bs, max_len)? {
+            LoopEvent::Drained => return Ok(()),
+            LoopEvent::Encode => {}
         }
     }
-    sync_gauge(shared, gauge, table.active());
-
-    decode_loop(shared, backend, table, gauge, st, serve_bs, max_len, prompt_len)
 }
 
 /// The steady-state lockstep decode loop — the tightest loop in serving.
@@ -691,9 +753,11 @@ fn decode_rounds(
 /// the heap, reusing the scratch buffers in [`WorkerState`]. The backend
 /// `decode_step` implementations are the boundary (`lint: hot-path-end`) —
 /// their internals are model-execution cost, not scheduler overhead.
-/// Returns when the table drains, a refill lands, or the KV window rolls
-/// over; the caller re-enters through the join prefill.
-#[allow(clippy::too_many_arguments)]
+/// Returns [`LoopEvent::Drained`] when the table empties, or
+/// [`LoopEvent::Encode`] when a fresh admission or a per-row rollover
+/// needs heap-side encode work — admissions are checked *after* each
+/// decode step, so `join_chunk` paces row encodes against decode progress
+/// instead of letting a burst encode back-to-back.
 // lint: hot-path
 fn decode_loop(
     shared: &Shared,
@@ -703,14 +767,16 @@ fn decode_loop(
     st: &mut WorkerState,
     serve_bs: usize,
     max_len: usize,
-    mut pos: usize,
-) -> Result<()> {
+) -> Result<LoopEvent> {
     let mut step = 0usize;
     loop {
         let mut now = Instant::now();
-        let (cancelled, expired) = table.sweep(now);
+        let (cancelled, expired) = table.sweep(now, &mut st.vacated);
         shared.counters.cancelled.add(cancelled as u64);
         shared.counters.expired.add(expired as u64);
+        for &r in &st.vacated {
+            backend.vacate_row(r);
+        }
         // Periodically shed cancelled/expired entries still queued, so dead
         // work frees admission capacity without waiting for a pop. Throttled:
         // an O(queue) scan under the shared lock is not for every step.
@@ -720,41 +786,42 @@ fn decode_loop(
         step += 1;
         if table.active() == 0 {
             sync_gauge(shared, gauge, 0);
-            return Ok(()); // drained → caller parks or admits
+            return Ok(LoopEvent::Drained); // caller parks or admits
         }
-        // Refill vacated slots eagerly — but only pay the join prefill when
-        // an admission actually lands (a dead queued request, or another
-        // worker winning the race for it, must not cost us a prefill).
-        if table.free() > 0 && refill_slots(table, shared, st.join_chunk) {
+        // Fresh rows (admitted below, or by run_worker) and rolled-over
+        // rows must not decode — their KV rows are not live. Hand them
+        // back for their single-row encode.
+        if table.has_fresh() || table.first_rollover(max_len).is_some() {
             sync_gauge(shared, gauge, table.active());
-            return Ok(()); // caller re-enters via join prefill
+            return Ok(LoopEvent::Encode);
         }
         sync_gauge(shared, gauge, table.active());
-        if pos >= max_len {
-            return Ok(()); // KV window exhausted → sliding-window rollover
-        }
 
         table.feed_tokens_into(tokenizer::PAD, &mut st.feed);
+        table.positions_into(&mut st.pos);
         let t_step = Instant::now();
-        let next = backend.decode_step(&st.feed, pos)?;
+        let next = backend.decode_step(&st.feed, &st.pos)?;
         let rows = next.len();
         anyhow::ensure!(rows == serve_bs, "decode returned {rows} rows, want {serve_bs}");
-        pos += 1;
 
         table.occupied_into(&mut st.occ);
-        shared
-            .counters
-            .decoded_tokens
-            .add(st.occ.len() as u64);
-        shared
-            .counters
-            .decode_nanos
-            .add(t_step.elapsed().as_nanos() as u64);
+        shared.counters.decoded_tokens.add(st.occ.len() as u64);
+        shared.counters.decode_nanos.add(t_step.elapsed().as_nanos() as u64);
         now = Instant::now();
         for &i in &st.occ {
+            table.bump_pos(i);
             if let Some(reason) = table.push_token(i, next[i], now) {
                 tally_finish(shared, reason);
+                backend.vacate_row(i);
             }
+        }
+        // Refill vacated slots *after* the step, so chunked admission paces
+        // joins against decode progress — and only report encode work when
+        // an admission actually lands (a dead queued request, or another
+        // worker winning the race for it, must not interrupt decoding).
+        if table.free() > 0 && refill_slots(table, shared, st.join_chunk) {
+            sync_gauge(shared, gauge, table.active());
+            return Ok(LoopEvent::Encode);
         }
     }
 }

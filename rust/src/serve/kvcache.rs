@@ -1,22 +1,38 @@
 //! Host-side KV prefix cache: prefill avoidance for the serving engine.
 //!
-//! Every join prefill re-encodes each occupied row's full context window —
-//! compute the paper's low-rank activations already halved, re-spent at
-//! every admission and KV-window rollover. But a row's post-prefill KV
-//! state is a pure function of its window tokens (the prefill initialises
-//! each row's cache from zeros, and causal attention never crosses rows),
-//! so identical windows always produce identical per-row KV slices and the
-//! same next token. [`KvPrefixCache`] exploits that: a bounded LRU from
-//! window-token hash to `(encoded KV row snapshot, next token)`, filled
-//! after real prefills via [`EngineBackend::export_kv_rows`] and consulted
-//! at every join boundary. When *all* occupied rows hit, the engine skips
-//! the prefill entirely and restores the rows with
-//! [`EngineBackend::import_kv_rows`] — repeated prefixes (system prompts,
+//! Every single-row encode (admission or per-row rollover) re-encodes that
+//! row's full context window — compute the paper's low-rank activations
+//! already halved, re-spent at every join and KV-window rollover. But a
+//! row's post-encode KV state is a pure function of its window tokens (the
+//! encode rebuilds the row from zeros, and causal attention never crosses
+//! rows), so identical windows always produce identical per-row KV slices
+//! and the same next token. [`KvPrefixCache`] exploits that: a bounded LRU
+//! from window-token hash to `(encoded KV row snapshot, next token)`,
+//! filled after real encodes via [`EngineBackend::export_kv_row`] and
+//! consulted before every encode. A whole-window hit skips the forward
+//! pass entirely and restores the row with
+//! [`EngineBackend::import_kv_row`] — repeated prefixes (system prompts,
 //! retries, deterministic re-generations after a rollover) cost one host
-//! transfer instead of one full forward pass.
+//! transfer instead of one forward pass. Windows are **left-aligned**
+//! (real tokens at offsets `0..len`, trailing pad), so causality gives a
+//! second, partial reuse axis: the KV at positions `< b` depends only on
+//! tokens `0..b`, and the chunked prefix index below turns that into
+//! longest-cached-prefix lookups across requests of *different* lengths.
 //!
-//! [`EngineBackend::export_kv_rows`]: crate::serve::engine::EngineBackend::export_kv_rows
-//! [`EngineBackend::import_kv_rows`]: crate::serve::engine::EngineBackend::import_kv_rows
+//! [`EngineBackend::export_kv_row`]: crate::serve::engine::EngineBackend::export_kv_row
+//! [`EngineBackend::import_kv_row`]: crate::serve::engine::EngineBackend::import_kv_row
+//!
+//! # Chunked prefix hash chain
+//!
+//! With [`with_chunk`](KvPrefixCache::with_chunk) enabled, every resident
+//! entry is additionally indexed under `hash(window[..b])` at each chunk
+//! boundary `b ≤ len`. [`probe_prefix`](KvPrefixCache::probe_prefix) walks
+//! boundaries longest-first and returns `(entry, b)` for the longest
+//! *verified* cached prefix — the engine then imports that prefix's KV and
+//! prefills only the tail (`keep = b`). Collisions in the boundary index
+//! are resolved latest-insert-wins and every candidate is verified
+//! token-by-token against the probing window, so a collision degrades to a
+//! shorter hit or a miss, never to another prompt's KV.
 //!
 //! # Byte budgeting and codecs
 //!
@@ -41,11 +57,11 @@
 //! - The cache is worker-local (constructed inside the engine loop), so it
 //!   needs no locking and its lifetime matches the backend whose geometry
 //!   produced the snapshots.
-//! - Probing and reading are split ([`probe`](KvPrefixCache::probe) touches
-//!   the LRU order and returns an index;
-//!   [`decode_into`](KvPrefixCache::decode_into) is a shared borrow) so the
-//!   engine can decode every occupied row's entry before handing the batch
-//!   to `import_kv_rows`.
+//! - Probing and reading are split ([`probe`](KvPrefixCache::probe) and
+//!   [`probe_prefix`](KvPrefixCache::probe_prefix) touch the LRU order and
+//!   return an index; [`decode_into`](KvPrefixCache::decode_into) is a
+//!   shared borrow) so the engine decodes into one reused scratch row
+//!   before each `import_kv_row`.
 
 use crate::serve::kvcodec::{self, EncodedKvRow, EncodedPlane, KvCodec, PlaneGeom};
 use anyhow::Result;
@@ -91,10 +107,18 @@ pub fn hash_tokens(tokens: &[i32]) -> u64 {
 struct Entry {
     hash: u64,
     window: Vec<i32>,
+    /// Real (non-pad) tokens at the head of `window` — the prefix of the
+    /// row's KV snapshot that is valid for *any* window sharing those
+    /// tokens (causal attention: KV at position `p` depends only on tokens
+    /// `0..=p`). Everything past `len` is padding state.
+    len: usize,
     enc: EncodedKvRow,
     next_token: i32,
     /// Exact serialized size of `enc` — the unit of the byte budget.
     bytes: u64,
+    /// Chunk-boundary hashes of `window[..b]` registered in `prefix_map`
+    /// while this entry is resident, so eviction can unregister them.
+    prefix_hashes: Vec<u64>,
     /// Towards MRU (the entry more recently used than this one).
     prev: usize,
     /// Towards LRU.
@@ -139,6 +163,15 @@ pub struct KvPrefixCache {
     /// hash → slab index. One entry per hash: a colliding insert replaces
     /// the resident entry (verified windows make this safe, merely lossy).
     map: HashMap<u64, usize>,
+    /// Prefix-chain granularity in tokens; 0 disables prefix keying (the
+    /// pre-chunking behaviour, and what the exhaustive interleaving model
+    /// in `serve::model` checks against).
+    chunk: usize,
+    /// `hash(window[..b]) → slab index` for every chunk boundary `b` of
+    /// every resident entry (latest insert wins on collision). Lookups are
+    /// verified token-by-token, so a collision degrades to a shorter hit
+    /// or a miss, never to serving another prompt's KV prefix.
+    prefix_map: HashMap<u64, usize>,
     slab: Vec<Entry>,
     free: Vec<usize>,
     head: usize,
@@ -166,11 +199,22 @@ impl KvPrefixCache {
             geom,
             bytes: 0,
             map: HashMap::with_capacity(cap),
+            chunk: 0,
+            prefix_map: HashMap::new(),
             slab: Vec::with_capacity(cap),
             free: Vec::new(),
             head: NIL,
             tail: NIL,
         }
+    }
+
+    /// Enable chunked prefix keying: every resident entry is additionally
+    /// indexed at real-token boundaries `chunk, 2·chunk, …` so
+    /// [`probe_prefix`](Self::probe_prefix) can return the longest cached
+    /// prefix of a window that misses whole. 0 disables (the default).
+    pub fn with_chunk(mut self, chunk: usize) -> Self {
+        self.chunk = chunk;
+        self
     }
 
     pub fn capacity(&self) -> usize {
@@ -235,6 +279,37 @@ impl KvPrefixCache {
         Some(i)
     }
 
+    /// Longest-cached-prefix lookup for a window that missed whole: walk
+    /// the chunk boundaries of `window[..len]` from longest to shortest and
+    /// return `(slab index, prefix_len)` for the first resident entry whose
+    /// real tokens verifiably share that prefix. The engine then imports
+    /// the cached row and prefills only the tail (`keep = prefix_len`). A
+    /// hit promotes the donor entry to MRU — it proved itself useful even
+    /// though its own window differs. Returns `None` when chunking is
+    /// disabled, `len < chunk`, or no boundary matches.
+    pub fn probe_prefix(&mut self, window: &[i32], len: usize) -> Option<(usize, usize)> {
+        if self.chunk == 0 || len < self.chunk {
+            return None;
+        }
+        let len = len.min(window.len());
+        let mut b = (len / self.chunk) * self.chunk;
+        while b >= self.chunk {
+            let h = hash_tokens(&window[..b]);
+            if let Some(&i) = self.prefix_map.get(&h) {
+                let e = &self.slab[i];
+                if e.len >= b && e.window[..b] == window[..b] {
+                    if self.head != i {
+                        self.unlink(i);
+                        self.push_front(i);
+                    }
+                    return Some((i, b));
+                }
+            }
+            b -= self.chunk;
+        }
+        None
+    }
+
     /// The encoded snapshot and next token behind a [`probe`](Self::probe)d
     /// index. Indices stay valid until the next `insert`.
     pub fn peek(&self, idx: usize) -> (&EncodedKvRow, i32) {
@@ -260,14 +335,29 @@ impl KvPrefixCache {
         Some(self.evict_index(lru))
     }
 
+    /// Unregister `i`'s chunk-boundary hashes, but only where the prefix
+    /// map still points at `i` — a later insert may have claimed a shared
+    /// boundary (latest wins), and that claim must survive `i`'s eviction.
+    fn drop_prefix_keys(&mut self, i: usize) {
+        for h_idx in 0..self.slab[i].prefix_hashes.len() {
+            let h = self.slab[i].prefix_hashes[h_idx];
+            if self.prefix_map.get(&h) == Some(&i) {
+                self.prefix_map.remove(&h);
+            }
+        }
+        self.slab[i].prefix_hashes.clear();
+    }
+
     fn evict_index(&mut self, i: usize) -> u64 {
         self.unlink(i);
         self.map.remove(&self.slab[i].hash);
+        self.drop_prefix_keys(i);
         let e = &mut self.slab[i];
         let freed = e.bytes;
         // drop the payload now — a slot can sit on the free list for a
         // while, and the byte budget is about real resident memory
         e.window = Vec::new();
+        e.len = 0;
         e.enc = EncodedKvRow { k: EncodedPlane::F32(Vec::new()), v: EncodedPlane::F32(Vec::new()) };
         e.bytes = 0;
         self.free.push(i);
@@ -279,19 +369,38 @@ impl KvPrefixCache {
         self.max_bytes > 0 && self.bytes > self.max_bytes
     }
 
-    /// Insert (or refresh) the snapshot for a window, encoding it under the
-    /// cache's codec and evicting LRU entries until both the entry cap and
-    /// the byte budget fit. Errors only on codec misuse (a rank-r geometry
+    /// Register `i`'s chunk boundaries in the prefix map (latest insert
+    /// wins a shared boundary) and remember them on the entry for eviction.
+    fn register_prefix_keys(&mut self, i: usize) {
+        if self.chunk == 0 {
+            return;
+        }
+        let len = self.slab[i].len.min(self.slab[i].window.len());
+        let mut b = self.chunk;
+        while b <= len {
+            let h = hash_tokens(&self.slab[i].window[..b]);
+            self.prefix_map.insert(h, i);
+            self.slab[i].prefix_hashes.push(h);
+            b += self.chunk;
+        }
+    }
+
+    /// Insert (or refresh) the snapshot for a window whose first `len`
+    /// tokens are real (the rest padding), encoding it under the cache's
+    /// codec and evicting LRU entries until both the entry cap and the
+    /// byte budget fit. Errors only on codec misuse (a rank-r geometry
     /// that does not match the payload), never on capacity.
     pub fn insert(
         &mut self,
         hash: u64,
         window: Vec<i32>,
+        len: usize,
         kv: &KvRowState,
         next_token: i32,
     ) -> Result<InsertOutcome> {
         let enc = kvcodec::encode_row(kv, self.codec, self.geom)?;
         let new_bytes = enc.encoded_bytes();
+        let len = len.min(window.len());
         let mut out = InsertOutcome {
             evicted: 0,
             bytes_released: 0,
@@ -299,11 +408,14 @@ impl KvPrefixCache {
             bytes_saved: kvcodec::f32_row_bytes(kv).saturating_sub(new_bytes),
         };
         if let Some(&i) = self.map.get(&hash) {
-            // refresh (or hash-collision replacement — last writer wins)
+            // refresh (or hash-collision replacement — last writer wins):
+            // the window (and so its chunk boundaries) may have changed
+            self.drop_prefix_keys(i);
             let e = &mut self.slab[i];
             out.bytes_released += e.bytes;
             self.bytes = self.bytes - e.bytes + new_bytes;
             e.window = window;
+            e.len = len;
             e.enc = enc;
             e.next_token = next_token;
             e.bytes = new_bytes;
@@ -311,6 +423,7 @@ impl KvPrefixCache {
                 self.unlink(i);
                 self.push_front(i);
             }
+            self.register_prefix_keys(i);
             // a grown payload can overflow the budget: shrink, but never
             // evict the entry just refreshed (it is the MRU head anyway)
             while self.over_budget() && self.tail != i {
@@ -330,7 +443,17 @@ impl KvPrefixCache {
             out.bytes_released += self.evict_index(self.tail);
             out.evicted += 1;
         }
-        let entry = Entry { hash, window, enc, next_token, bytes: new_bytes, prev: NIL, next: NIL };
+        let entry = Entry {
+            hash,
+            window,
+            len,
+            enc,
+            next_token,
+            bytes: new_bytes,
+            prefix_hashes: Vec::new(),
+            prev: NIL,
+            next: NIL,
+        };
         let i = match self.free.pop() {
             Some(i) => {
                 self.slab[i] = entry;
@@ -344,6 +467,7 @@ impl KvPrefixCache {
         self.map.insert(hash, i);
         self.push_front(i);
         self.bytes += new_bytes;
+        self.register_prefix_keys(i);
         Ok(out)
     }
 
@@ -372,7 +496,7 @@ mod tests {
     const ROW_BYTES: u64 = 2 * (5 + 4 * 4);
 
     fn put(c: &mut KvPrefixCache, w: &[i32], next: i32) -> u64 {
-        c.insert(hash_tokens(w), w.to_vec(), &row(next as f32), next).unwrap().evicted
+        c.insert(hash_tokens(w), w.to_vec(), w.len(), &row(next as f32), next).unwrap().evicted
     }
 
     fn get(c: &mut KvPrefixCache, w: &[i32]) -> Option<i32> {
@@ -419,7 +543,7 @@ mod tests {
     fn refresh_updates_payload_without_eviction() {
         let mut c = KvPrefixCache::new(2);
         put(&mut c, &[5], 1);
-        let out = c.insert(hash_tokens(&[5]), vec![5], &row(2.0), 2).unwrap();
+        let out = c.insert(hash_tokens(&[5]), vec![5], 1, &row(2.0), 2).unwrap();
         assert_eq!(out.evicted, 0, "same window refreshes in place");
         assert_eq!(out.bytes_released, ROW_BYTES, "the replaced payload is released");
         assert_eq!(c.len(), 1);
@@ -442,7 +566,7 @@ mod tests {
     fn collision_with_different_window_is_a_verified_miss() {
         let mut c = KvPrefixCache::new(2);
         let h = hash_tokens(&[7, 8]);
-        c.insert(h, vec![7, 8], &row(1.0), 1).unwrap();
+        c.insert(h, vec![7, 8], 2, &row(1.0), 1).unwrap();
         // same hash, different tokens: must NOT serve the resident entry
         assert!(c.probe(h, &[9, 9]).is_none());
         assert!(c.probe(h, &[7, 8]).is_some(), "the real window still hits");
@@ -492,7 +616,7 @@ mod tests {
         let mut c = KvPrefixCache::with_codec(16, ROW_BYTES / 2, KvCodec::F32, PlaneGeom::flat(4));
         assert_eq!(put(&mut c, &[1], 1), 0);
         assert_eq!(c.len(), 1, "oversized row admitted while empty");
-        let out = c.insert(hash_tokens(&[2]), vec![2], &row(2.0), 2).unwrap();
+        let out = c.insert(hash_tokens(&[2]), vec![2], 1, &row(2.0), 2).unwrap();
         assert_eq!(out.evicted, 1, "the resident oversized row makes room first");
         assert_eq!(c.len(), 1);
         assert_eq!(c.bytes_resident(), ROW_BYTES);
@@ -521,12 +645,71 @@ mod tests {
         }
         assert_eq!(c.len(), 4, "the f16 budget holds twice the f32 rows");
         assert_eq!(c.bytes_resident(), 4 * f16_row);
-        let out = c.insert(hash_tokens(&[9]), vec![9], &row(9.0), 9).unwrap();
+        let out = c.insert(hash_tokens(&[9]), vec![9], 1, &row(9.0), 9).unwrap();
         assert_eq!(out.bytes_saved, ROW_BYTES - f16_row);
         let i = c.probe(hash_tokens(&[2]), &[2]).unwrap();
         let mut kv = KvRowState::default();
         c.decode_into(i, &mut kv);
         assert_eq!(kv, row(2.0), "small integers survive f16 exactly");
+    }
+
+    #[test]
+    fn prefix_probe_returns_longest_verified_prefix() {
+        let mut c = KvPrefixCache::new(8).with_chunk(2);
+        // entry: 6 real tokens, chunk boundaries at 2/4/6
+        put(&mut c, &[10, 11, 12, 13, 14, 15], 1);
+        // shorter window sharing 4 real tokens → longest boundary ≤ 4 is 4
+        assert_eq!(c.probe_prefix(&[10, 11, 12, 13, 99, 0], 4), Some((0, 4)));
+        // only the first chunk shared → falls back to boundary 2
+        assert_eq!(c.probe_prefix(&[10, 11, 99, 98, 97, 0], 5), Some((0, 2)));
+        // nothing shared → miss
+        assert!(c.probe_prefix(&[77, 78, 79, 0, 0, 0], 3).is_none());
+        // below one chunk of real tokens → no boundary to try
+        assert!(c.probe_prefix(&[10, 11, 12, 0, 0, 0], 1).is_none());
+        // a probe len past the window clamps instead of slicing out of range
+        assert_eq!(c.probe_prefix(&[10, 11], 9), Some((0, 2)));
+    }
+
+    #[test]
+    fn prefix_probe_never_matches_into_padding_state() {
+        let mut c = KvPrefixCache::new(8).with_chunk(2);
+        // entry has only 3 real tokens; window[3] is padding state
+        c.insert(
+            hash_tokens(&[10, 11, 12, 0]),
+            vec![10, 11, 12, 0],
+            3,
+            &row(1.0),
+            1,
+        )
+        .unwrap();
+        // boundary 4 would need 4 real tokens — only boundary 2 may hit,
+        // even when the probed window matches the stored one byte-for-byte
+        assert_eq!(c.probe_prefix(&[10, 11, 12, 0], 4), Some((0, 2)));
+    }
+
+    #[test]
+    fn prefix_keys_follow_eviction_and_latest_insert_wins() {
+        let mut c = KvPrefixCache::new(2).with_chunk(2);
+        put(&mut c, &[1, 2, 3, 4], 10);
+        // same first chunk: the newer entry claims boundary 2
+        put(&mut c, &[1, 2, 9, 9], 20);
+        let (i, b) = c.probe_prefix(&[1, 2, 5, 5], 2).unwrap();
+        assert_eq!(b, 2);
+        assert_eq!(c.peek(i).1, 20, "latest insert owns the shared boundary");
+        // boundary 4 of the older entry still resolves to it
+        assert_eq!(c.probe_prefix(&[1, 2, 3, 4], 4).map(|(i, b)| (c.peek(i).1, b)), Some((10, 4)));
+        // evicting both (capacity 2) must unregister their boundaries
+        put(&mut c, &[7, 7, 7, 7], 30);
+        put(&mut c, &[8, 8, 8, 8], 40);
+        assert!(c.probe_prefix(&[1, 2, 3, 4], 4).is_none(), "evicted prefixes are gone");
+        assert_eq!(c.probe_prefix(&[8, 8, 1, 1], 2).map(|(_, b)| b), Some(2));
+    }
+
+    #[test]
+    fn prefix_probe_is_disabled_at_chunk_zero() {
+        let mut c = KvPrefixCache::new(4);
+        put(&mut c, &[1, 2, 3, 4], 10);
+        assert!(c.probe_prefix(&[1, 2, 3, 4], 4).is_none(), "chunk 0 = whole-window only");
     }
 
     /// Eviction-accounting conservation under random thrash: across a long
@@ -574,7 +757,7 @@ mod tests {
             } else {
                 let pre_len = c.len();
                 let tok = step as i32;
-                let out = c.insert(h, w.clone(), &row(tok as f32), tok).unwrap();
+                let out = c.insert(h, w.clone(), w.len(), &row(tok as f32), tok).unwrap();
                 bytes_in += out.bytes_inserted;
                 bytes_out += out.bytes_released;
                 latest.insert(h, tok);

@@ -24,7 +24,7 @@
 //! to the byte — a property test in `tests/kvcodec_props.rs` pins this), so
 //! the cache's byte accounting is exact, not estimated.
 //!
-//! The codec runs only at prefill/import boundaries (`join_prefill` in the
+//! The codec runs only at row-encode boundaries (`encode_row` in the
 //! engine), never inside the decode hot loop — the `cola lint` hot-path
 //! pass keeps it that way.
 

@@ -3,15 +3,23 @@
 //!
 //! `MockBackend` generates scripted token streams with a pure arithmetic
 //! rule — the token after `t` is `(t + stride) % vocab` — evaluated on
-//! whatever the scheduler feeds it. Because the engine's join prefill
-//! right-aligns each row's window, the last window token is always the
-//! row's most recent real token, so a row's stream is the arithmetic
-//! progression `p + stride, p + 2·stride, …` (mod `vocab`) from its last
-//! prompt token `p`, *regardless* of when neighbours join, vacate, or the
-//! KV window rolls over. Tests can therefore predict exact outputs while
-//! exercising the real continuous-batching machinery: router dispatch,
-//! slot refills, streaming, cancellation, deadlines, and backpressure —
-//! all under `cargo test -q` with no PJRT artifact on disk.
+//! whatever the scheduler feeds it. The engine's single-row prefill hands
+//! over each row's left-aligned window plus its real length, so the window
+//! token at `len - 1` is always the row's most recent real token and a
+//! row's stream is the arithmetic progression `p + stride, p + 2·stride, …`
+//! (mod `vocab`) from its last prompt token `p`, *regardless* of when
+//! neighbours join, vacate, or the row's own KV window rolls over. Tests
+//! can therefore predict exact outputs while exercising the real
+//! continuous-batching machinery: router dispatch, mid-flight slot joins,
+//! streaming, cancellation, deadlines, and backpressure — all under
+//! `cargo test -q` with no PJRT artifact on disk.
+//!
+//! The mock also keeps its **own** per-row position model (`row_pos`,
+//! advanced on every decode step of a live row) and asserts the
+//! scheduler-supplied per-row `pos` vector against it, erroring on any
+//! divergence — a scheduler that feeds a stale position, decodes a fresh
+//! row before its encode, or runs a row past `max_len` without a rollover
+//! fails tests instead of passing silently.
 //!
 //! The KV-row seam is implemented deterministically too: a row's
 //! "KV snapshot" is a pure function of its last prefilled window. Each
@@ -30,10 +38,12 @@
 //! encoding — so a corrupted or over-lossy snapshot is rejected instead of
 //! silently serving wrong KV state. Export → import therefore round-trips
 //! exactly under `f32`/`f16` and within the documented token-level contract
-//! under `rankr`, and the engine's **elided** join prefills (served from
-//! the [`KvPrefixCache`](crate::serve::kvcache::KvPrefixCache)) must
-//! reproduce byte-identical streams to real prefills — which is precisely
-//! what the prefix-cache integration tests assert.
+//! under `rankr`, and the engine's **elided** row encodes (restored from
+//! the [`KvPrefixCache`](crate::serve::kvcache::KvPrefixCache) instead of
+//! re-prefilled) must reproduce byte-identical streams to real encodes —
+//! which is precisely what the prefix-cache integration tests assert.
+//! Partial-prefix splices (`prefill_row` with `keep > 0`) additionally
+//! verify the kept tokens against the row's resident state.
 //!
 //! Knobs:
 //! - [`step_delay`](MockBackend::step_delay): per-decode-step latency, so
@@ -114,9 +124,16 @@ pub struct MockBackend {
     prefill_delay: Duration,
     fail_after: Option<u64>,
     decode_calls: u64,
-    /// Last prefilled (or imported) `[batch * prompt_len]` windows — the
-    /// mock's entire "KV state", exported/imported per row.
+    /// Last encoded (or imported) `[batch * prompt_len]` windows — the
+    /// mock's entire "KV state", encoded/exported/imported per row.
     windows: Vec<i32>,
+    /// Whether each row holds real encoded state (a vacated row goes back
+    /// to `false` and is ignored by the position checks).
+    live: Vec<bool>,
+    /// The mock's own per-row position model: where the next decode step
+    /// of each live row *must* write. `prefill_row`/`import_kv_row` reset
+    /// it to the row's real length; every decode step advances it.
+    row_pos: Vec<usize>,
 }
 
 impl MockBackend {
@@ -134,7 +151,9 @@ impl MockBackend {
             prefill_delay: Duration::ZERO,
             fail_after: None,
             decode_calls: 0,
-            windows: Vec::new(),
+            windows: vec![crate::data::tokenizer::PAD; batch * prompt_len],
+            live: vec![false; batch],
+            row_pos: vec![0; batch],
         }
     }
 
@@ -159,8 +178,9 @@ impl MockBackend {
         self
     }
 
-    /// Sleep this long inside every *real* prefill — elided prefills skip
-    /// it, which is how the hermetic benchmarks make prefill avoidance
+    /// Sleep this long inside every *real* row encode (`prefill_row`) —
+    /// cache-restored rows skip it, which is how the hermetic benchmarks
+    /// make prefill avoidance (and the O(1)-in-occupancy join cost)
     /// measurable.
     pub fn prefill_delay(mut self, d: Duration) -> Self {
         self.prefill_delay = d;
@@ -169,7 +189,7 @@ impl MockBackend {
 
     /// Make the Nth decode call (1-based, counted across the backend's
     /// lifetime) return an error — once. The trigger then clears, so the
-    /// worker's next join prefill serves normally: tests cover both the
+    /// worker's next row encode serves normally: tests cover both the
     /// `FinishReason::Error` path and recovery.
     pub fn fail_after(mut self, nth_call: u64) -> Self {
         assert!(nth_call > 0, "fail_after is 1-based");
@@ -222,28 +242,43 @@ impl EngineBackend for MockBackend {
         )
     }
 
-    fn prefill(&mut self, tokens: &[i32]) -> Result<Vec<i32>> {
+    fn prefill_row(&mut self, row: usize, window: &[i32], len: usize, keep: usize) -> Result<i32> {
+        anyhow::ensure!(row < self.batch, "prefill_row row {row} out of range");
         anyhow::ensure!(
-            tokens.len() == self.batch * self.prompt_len,
-            "prefill batch is [batch, prompt_len]"
+            window.len() == self.prompt_len,
+            "prefill_row window is [prompt_len] ({} != {})",
+            window.len(),
+            self.prompt_len
         );
+        anyhow::ensure!(
+            0 < len && len <= self.prompt_len && keep <= len,
+            "prefill_row wants 0 < len <= prompt_len and keep <= len (len {len}, keep {keep})"
+        );
+        if keep > 0 {
+            // partial-prefix splice: the retained KV positions must belong
+            // to this row and agree with the new window token-for-token
+            anyhow::ensure!(self.live[row], "prefill_row keeps KV of a row that holds none");
+            let stored = &self.windows[row * self.prompt_len..row * self.prompt_len + keep];
+            anyhow::ensure!(
+                stored == &window[..keep],
+                "partial-prefix splice mismatch on row {row}: kept {stored:?} vs {:?}",
+                &window[..keep]
+            );
+        }
         if !self.prefill_delay.is_zero() {
             crate::serve::sync::sleep(self.prefill_delay);
         }
-        self.windows = tokens.to_vec();
-        // Right-aligned windows: the last column is each row's most recent
-        // real token (or pad for an empty row — its output is junk the
-        // scheduler ignores, same as the artifact path).
-        Ok(tokens
-            .chunks_exact(self.prompt_len)
-            .map(|row| self.next_token(row[self.prompt_len - 1]))
-            .collect())
+        self.windows[row * self.prompt_len..(row + 1) * self.prompt_len].copy_from_slice(window);
+        self.live[row] = true;
+        self.row_pos[row] = len;
+        Ok(self.next_token(window[len - 1]))
     }
 
     // lint: hot-path-end — stands in for the model-execution boundary; its
     // paced sleep and per-step collect model backend cost, not scheduling.
-    fn decode_step(&mut self, feed: &[i32], _pos: usize) -> Result<Vec<i32>> {
+    fn decode_step(&mut self, feed: &[i32], pos: &[usize]) -> Result<Vec<i32>> {
         anyhow::ensure!(feed.len() == self.batch, "decode feed is one token per row");
+        anyhow::ensure!(pos.len() == self.batch, "decode pos is one position per row");
         if !self.step_delay.is_zero() {
             crate::serve::sync::sleep(self.step_delay);
         }
@@ -251,6 +286,27 @@ impl EngineBackend for MockBackend {
         if self.fail_after.is_some_and(|n| self.decode_calls >= n) {
             self.fail_after = None; // one-shot: recover on the next prefill
             anyhow::bail!("injected mock decode failure at call {}", self.decode_calls);
+        }
+        // The position checks are the mock's whole point as a test oracle:
+        // a scheduler position that disagrees with the mock's own per-row
+        // model is a scheduling bug, surfaced as a batch failure.
+        for r in 0..self.batch {
+            if !self.live[r] {
+                continue; // vacated/never-encoded rows decode junk the scheduler ignores
+            }
+            anyhow::ensure!(
+                pos[r] == self.row_pos[r],
+                "row {r} decodes at position {} but its KV state is at {}",
+                pos[r],
+                self.row_pos[r]
+            );
+            anyhow::ensure!(
+                pos[r] < self.max_len,
+                "row {r} decodes at position {} past max_len {} without a rollover",
+                pos[r],
+                self.max_len
+            );
+            self.row_pos[r] += 1;
         }
         Ok(feed.iter().map(|&t| self.next_token(t)).collect())
     }
@@ -263,63 +319,61 @@ impl EngineBackend for MockBackend {
         PlaneGeom { layers: 1, rows: self.prompt_len, cols: MOCK_KV_COLS }
     }
 
-    fn export_kv_rows(&mut self, rows: &[usize]) -> Result<Vec<KvRowState>> {
-        anyhow::ensure!(!self.windows.is_empty(), "export_kv_rows before prefill");
-        rows.iter()
-            .map(|&r| {
-                anyhow::ensure!(r < self.batch, "export row {r} out of range");
-                let w = &self.windows[r * self.prompt_len..(r + 1) * self.prompt_len];
-                let mut k = Vec::with_capacity(self.prompt_len * MOCK_KV_COLS);
-                let mut v = Vec::with_capacity(self.prompt_len * MOCK_KV_COLS);
-                for (j, &t) in w.iter().enumerate() {
-                    let lo = (t & 0xff) as f32;
-                    let hi = (t >> 8) as f32;
-                    let n = plane_noise(t, j);
-                    for c in 0..MOCK_KV_COLS {
-                        k.push(lo * dir_u(c) + hi * dir_w(c) + n * dir_z(c));
-                        v.push(hi * dir_u(c) + lo * dir_w(c) + n * dir_z(c));
-                    }
-                }
-                Ok(KvRowState { k, v })
-            })
-            .collect()
-    }
-
-    fn import_kv_rows(&mut self, rows: &[Option<&KvRowState>]) -> Result<()> {
-        anyhow::ensure!(
-            rows.len() == self.batch,
-            "import_kv_rows wants one entry per row ({} != {})",
-            rows.len(),
-            self.batch
-        );
-        // rebuild the mock KV state from the snapshots, exactly as if the
-        // snapshotted windows had just been prefilled (free rows → pad)
-        let elems = self.prompt_len * MOCK_KV_COLS;
-        let mut windows = vec![crate::data::tokenizer::PAD; self.batch * self.prompt_len];
-        for (r, state) in rows.iter().enumerate() {
-            let Some(s) = state else { continue };
-            anyhow::ensure!(
-                s.k.len() == elems && s.v.len() == elems,
-                "KV row snapshot has {} elems, mock wants {elems}",
-                s.k.len(),
-            );
-            for j in 0..self.prompt_len {
-                let (k0, k1) = (s.k[j * MOCK_KV_COLS], s.k[j * MOCK_KV_COLS + 1]);
-                let (v0, v1) = (s.v[j * MOCK_KV_COLS], s.v[j * MOCK_KV_COLS + 1]);
-                let (lo, hi) = (k0.round(), k1.round());
-                anyhow::ensure!(
-                    (k0 - lo).abs() <= 0.25 && (k1 - hi).abs() <= 0.25,
-                    "KV snapshot too lossy to recover tokens (row {r} pos {j}: k = ({k0}, {k1}))"
-                );
-                anyhow::ensure!(
-                    (v0 - hi).abs() <= 0.25 && (v1 - lo).abs() <= 0.25,
-                    "mock KV snapshot violates the k/v cross-encoding invariant"
-                );
-                windows[r * self.prompt_len + j] = (hi as i32) * 256 + lo as i32;
+    fn export_kv_row(&mut self, row: usize) -> Result<KvRowState> {
+        anyhow::ensure!(row < self.batch, "export row {row} out of range");
+        anyhow::ensure!(self.live[row], "export_kv_row of a row that holds no KV state");
+        let w = &self.windows[row * self.prompt_len..(row + 1) * self.prompt_len];
+        let mut k = Vec::with_capacity(self.prompt_len * MOCK_KV_COLS);
+        let mut v = Vec::with_capacity(self.prompt_len * MOCK_KV_COLS);
+        for (j, &t) in w.iter().enumerate() {
+            let lo = (t & 0xff) as f32;
+            let hi = (t >> 8) as f32;
+            let n = plane_noise(t, j);
+            for c in 0..MOCK_KV_COLS {
+                k.push(lo * dir_u(c) + hi * dir_w(c) + n * dir_z(c));
+                v.push(hi * dir_u(c) + lo * dir_w(c) + n * dir_z(c));
             }
         }
-        self.windows = windows;
+        Ok(KvRowState { k, v })
+    }
+
+    fn import_kv_row(&mut self, row: usize, kv: &KvRowState, len: usize) -> Result<()> {
+        anyhow::ensure!(row < self.batch, "import row {row} out of range");
+        anyhow::ensure!(
+            0 < len && len <= self.prompt_len,
+            "import_kv_row wants 0 < len <= prompt_len (len {len})"
+        );
+        let elems = self.prompt_len * MOCK_KV_COLS;
+        anyhow::ensure!(
+            kv.k.len() == elems && kv.v.len() == elems,
+            "KV row snapshot has {} elems, mock wants {elems}",
+            kv.k.len(),
+        );
+        // recover the snapshotted window, exactly as if it had just been
+        // encoded into this row
+        for j in 0..self.prompt_len {
+            let (k0, k1) = (kv.k[j * MOCK_KV_COLS], kv.k[j * MOCK_KV_COLS + 1]);
+            let (v0, v1) = (kv.v[j * MOCK_KV_COLS], kv.v[j * MOCK_KV_COLS + 1]);
+            let (lo, hi) = (k0.round(), k1.round());
+            anyhow::ensure!(
+                (k0 - lo).abs() <= 0.25 && (k1 - hi).abs() <= 0.25,
+                "KV snapshot too lossy to recover tokens (row {row} pos {j}: k = ({k0}, {k1}))"
+            );
+            anyhow::ensure!(
+                (v0 - hi).abs() <= 0.25 && (v1 - lo).abs() <= 0.25,
+                "mock KV snapshot violates the k/v cross-encoding invariant"
+            );
+            self.windows[row * self.prompt_len + j] = (hi as i32) * 256 + lo as i32;
+        }
+        self.live[row] = true;
+        self.row_pos[row] = len;
         Ok(())
+    }
+
+    fn vacate_row(&mut self, row: usize) {
+        if row < self.batch {
+            self.live[row] = false;
+        }
     }
 }
 
@@ -328,17 +382,20 @@ mod tests {
     use super::*;
 
     #[test]
-    fn prefill_reads_last_window_column() {
+    fn prefill_row_reads_the_token_at_len() {
         let mut b = MockBackend::new(2, 3, 8);
-        // rows right-aligned: [pad, 5, 6] and [1, 2, 3]
-        let next = b.prefill(&[0, 5, 6, 1, 2, 3]).unwrap();
-        assert_eq!(next, vec![7, 4]);
+        // left-aligned windows: [5, 6, pad] (len 2) and [1, 2, 3] (len 3)
+        assert_eq!(b.prefill_row(0, &[5, 6, 0], 2, 0).unwrap(), 7);
+        assert_eq!(b.prefill_row(1, &[1, 2, 3], 3, 0).unwrap(), 4);
     }
 
     #[test]
     fn decode_applies_rule_per_row() {
         let mut b = MockBackend::new(3, 2, 4).stride(10).vocab(25);
-        let next = b.decode_step(&[1, 20, 0], 2).unwrap();
+        b.prefill_row(0, &[1, 0], 1, 0).unwrap();
+        b.prefill_row(1, &[20, 0], 1, 0).unwrap();
+        // row 2 stays vacant: junk in, junk out, no position check
+        let next = b.decode_step(&[1, 20, 0], &[1, 1, 0]).unwrap();
         assert_eq!(next, vec![11, 5, 10], "wraps at vocab");
     }
 
@@ -351,76 +408,110 @@ mod tests {
     #[test]
     fn fail_after_is_one_shot() {
         let mut b = MockBackend::new(1, 2, 8).fail_after(2);
-        assert!(b.decode_step(&[1], 2).is_ok());
-        assert!(b.decode_step(&[2], 3).is_err());
-        assert!(b.decode_step(&[3], 4).is_ok(), "trigger clears after firing");
+        assert!(b.decode_step(&[1], &[0]).is_ok());
+        assert!(b.decode_step(&[2], &[0]).is_err());
+        assert!(b.decode_step(&[3], &[0]).is_ok(), "trigger clears after firing");
     }
 
     #[test]
     fn shape_mismatches_are_errors_not_panics() {
         let mut b = MockBackend::new(2, 3, 8);
-        assert!(b.prefill(&[1, 2, 3]).is_err());
-        assert!(b.decode_step(&[1], 3).is_err());
+        assert!(b.prefill_row(0, &[1, 2], 2, 0).is_err(), "short window");
+        assert!(b.prefill_row(2, &[1, 2, 3], 3, 0).is_err(), "row out of range");
+        assert!(b.prefill_row(0, &[1, 2, 3], 0, 0).is_err(), "empty row");
+        assert!(b.prefill_row(0, &[1, 2, 3], 2, 3).is_err(), "keep > len");
+        assert!(b.decode_step(&[1], &[0, 0]).is_err(), "short feed");
+        assert!(b.decode_step(&[1, 2], &[0]).is_err(), "short pos");
+    }
+
+    #[test]
+    fn scheduler_positions_are_asserted_per_row() {
+        let mut b = MockBackend::new(2, 3, 4);
+        b.prefill_row(0, &[1, 2, 0], 2, 0).unwrap();
+        assert!(b.decode_step(&[5, 0], &[1, 0]).is_err(), "stale position must fail");
+        assert!(b.decode_step(&[5, 0], &[2, 0]).is_ok());
+        assert!(b.decode_step(&[6, 0], &[3, 0]).is_ok());
+        // the row's KV window is exhausted: decoding on demands a rollover
+        assert!(b.decode_step(&[7, 0], &[4, 0]).is_err(), "past max_len without rollover");
+        // the rollover re-encode resets the row's position model
+        b.prefill_row(0, &[5, 6, 7], 3, 0).unwrap();
+        assert!(b.decode_step(&[8, 0], &[3, 0]).is_ok());
+        // vacated rows are exempt from the checks
+        b.vacate_row(0);
+        assert!(b.decode_step(&[9, 0], &[0, 0]).is_ok());
+    }
+
+    #[test]
+    fn partial_prefix_splice_is_verified() {
+        let mut b = MockBackend::new(1, 4, 8);
+        b.prefill_row(0, &[1, 2, 3, 0], 3, 0).unwrap();
+        assert!(b.prefill_row(0, &[1, 9, 4, 5], 4, 2).is_err(), "kept prefix must match");
+        assert_eq!(b.prefill_row(0, &[1, 2, 4, 5], 4, 2).unwrap(), 6);
+        // keeping KV of a vacated row is a scheduling bug
+        b.vacate_row(0);
+        assert!(b.prefill_row(0, &[1, 2, 4, 5], 4, 2).is_err());
+        assert!(b.prefill_row(0, &[1, 2, 4, 5], 4, 0).is_ok(), "fresh encode recovers");
     }
 
     #[test]
     fn kv_rows_round_trip_deterministically() {
         let mut b = MockBackend::new(2, 3, 8);
-        assert!(b.export_kv_rows(&[0]).is_err(), "no KV state before prefill");
-        b.prefill(&[0, 5, 6, 1, 2, 300]).unwrap();
-        let rows = b.export_kv_rows(&[0, 1]).unwrap();
+        assert!(b.export_kv_row(0).is_err(), "no KV state before an encode");
+        b.prefill_row(0, &[5, 6, 0], 2, 0).unwrap();
+        b.prefill_row(1, &[1, 2, 300], 3, 0).unwrap();
+        let r0 = b.export_kv_row(0).unwrap();
+        let r1 = b.export_kv_row(1).unwrap();
         // columns 0/1 of each plane row carry the token's lo/hi bytes
-        assert_eq!(rows[0].k[MOCK_KV_COLS], 5.0, "row 0 pos 1: lo = 5");
-        assert_eq!(rows[0].k[MOCK_KV_COLS + 1], 0.0, "row 0 pos 1: hi = 0");
-        assert_eq!(rows[1].k[2 * MOCK_KV_COLS], 44.0, "300 & 0xff");
-        assert_eq!(rows[1].k[2 * MOCK_KV_COLS + 1], 1.0, "300 >> 8");
-        assert_eq!(rows[1].v[2 * MOCK_KV_COLS], 1.0, "v swaps hi into column 0");
+        assert_eq!(r0.k[0], 5.0, "row 0 pos 0: lo = 5");
+        assert_eq!(r0.k[1], 0.0, "row 0 pos 0: hi = 0");
+        assert_eq!(r1.k[2 * MOCK_KV_COLS], 44.0, "300 & 0xff");
+        assert_eq!(r1.k[2 * MOCK_KV_COLS + 1], 1.0, "300 >> 8");
+        assert_eq!(r1.v[2 * MOCK_KV_COLS], 1.0, "v swaps hi into column 0");
         // the tail columns are non-constant: the plane is spectrum-rich,
         // not all-equal data a codec could compress for free
-        let tail: Vec<f32> =
-            (2..MOCK_KV_COLS).map(|c| rows[1].k[2 * MOCK_KV_COLS + c]).collect();
+        let tail: Vec<f32> = (2..MOCK_KV_COLS).map(|c| r1.k[2 * MOCK_KV_COLS + c]).collect();
         assert!(tail.iter().any(|&x| x != tail[0]), "tail must vary: {tail:?}");
-        // import into swapped slots, then export again: pure function of rows
-        let imported = vec![Some(&rows[1]), None];
-        b.import_kv_rows(&imported).unwrap();
-        let back = b.export_kv_rows(&[0, 1]).unwrap();
-        assert_eq!(back[0], rows[1], "row snapshot survives the round trip");
-        assert_eq!(back[1].k[0], 0.0, "free row imports as padding");
-        assert_eq!(back[1], b.export_kv_rows(&[1]).unwrap()[0], "determinism");
+        // import row 1's snapshot into row 0: a pure function of the snapshot
+        b.import_kv_row(0, &r1, 3).unwrap();
+        assert_eq!(b.export_kv_row(0).unwrap(), r1, "snapshot survives the round trip");
+        assert_eq!(b.export_kv_row(1).unwrap(), r1, "determinism");
+        // vacating releases the row's state
+        b.vacate_row(0);
+        assert!(b.export_kv_row(0).is_err(), "vacated rows hold nothing to export");
     }
 
     #[test]
     fn import_validates_shape_and_encoding() {
         let mut b = MockBackend::new(2, 3, 8);
         assert_eq!(b.kv_row_elems(), 3 * MOCK_KV_COLS);
-        b.prefill(&[0, 5, 6, 1, 2, 3]).unwrap();
-        let good = b.export_kv_rows(&[0]).unwrap().remove(0);
-        assert!(b.import_kv_rows(&[Some(&good)]).is_err(), "wrong row count");
+        b.prefill_row(0, &[5, 6, 0], 2, 0).unwrap();
+        let good = b.export_kv_row(0).unwrap();
         let short = KvRowState { k: vec![1.0], v: vec![1.5] };
-        assert!(b.import_kv_rows(&[Some(&short), None]).is_err(), "wrong row length");
+        assert!(b.import_kv_row(1, &short, 2).is_err(), "wrong row length");
         let mut lossy = good.clone();
         lossy.k[0] += 0.3; // beyond the 0.25 token-recovery tolerance
-        assert!(b.import_kv_rows(&[Some(&lossy), None]).is_err(), "over-lossy k");
+        assert!(b.import_kv_row(1, &lossy, 2).is_err(), "over-lossy k");
         let mut corrupt = good.clone();
         corrupt.v[0] += 7.0; // k says one token, v says another
-        assert!(b.import_kv_rows(&[Some(&corrupt), None]).is_err(), "k/v cross-check");
-        assert!(b.import_kv_rows(&[Some(&good), None]).is_ok());
+        assert!(b.import_kv_row(1, &corrupt, 2).is_err(), "k/v cross-check");
+        assert!(b.import_kv_row(2, &good, 2).is_err(), "row out of range");
+        assert!(b.import_kv_row(1, &good, 0).is_err(), "zero-length import");
+        assert!(b.import_kv_row(1, &good, 2).is_ok());
     }
 
     #[test]
     fn planes_survive_lossy_codecs_token_exactly() {
         use crate::serve::kvcodec::{encode_row, KvCodec};
         let mut b = MockBackend::new(1, 4, 8).vocab(50_021);
-        b.prefill(&[1009, 2, 300, 49_999]).unwrap();
-        let rows = b.export_kv_rows(&[0]).unwrap();
+        b.prefill_row(0, &[1009, 2, 300, 49_999], 4, 0).unwrap();
+        let row = b.export_kv_row(0).unwrap();
         let geom = b.kv_row_geom();
         for codec in [KvCodec::F16, KvCodec::RankR { rank: 3 }] {
-            let enc = encode_row(&rows[0], codec, geom).unwrap();
+            let enc = encode_row(&row, codec, geom).unwrap();
             let mut dec = KvRowState::default();
             enc.decode_into(&mut dec);
-            b.import_kv_rows(&[Some(&dec)]).unwrap();
-            let back = b.export_kv_rows(&[0]).unwrap();
-            assert_eq!(back[0], rows[0], "{codec:?} must recover every token exactly");
+            b.import_kv_row(0, &dec, 4).unwrap();
+            assert_eq!(b.export_kv_row(0).unwrap(), row, "{codec:?} must recover every token");
         }
     }
 }

@@ -16,15 +16,18 @@
 //!        │
 //!        ├── BoundedQueue (priority bands, queue_depth cap
 //!        │                 → SubmitError::QueueFull, per-model backpressure)
-//!        │        │ pop between decode steps
+//!        │        │ pop after every decode step
 //!        ▼        ▼
 //!   TokenStream ◄── stream events ── engine workers (1..N threads)
 //!   .recv()/.cancel()                     │
 //!   .wait() → Completion             SlotTable[bs] — continuous batching:
-//!                                    vacated rows refill from the queue at
-//!                                    the next join-prefill boundary
-//!                                         │ prefill / decode_step
-//!                                         │ export_kv_rows / import_kv_rows
+//!                                    every row carries its own KV write
+//!                                    position; a vacated row refills from
+//!                                    the queue and is prefilled *alone*,
+//!                                    spliced into the live batch while its
+//!                                    neighbours keep decoding
+//!                                         │ prefill_row / decode_step(pos[])
+//!                                         │ export_kv_row / import_kv_row
 //!                                         ▼
 //!                                    EngineBackend (trait)
 //!                                    ├─ PjrtBackend: AOT artifacts on the
@@ -35,10 +38,44 @@
 //!                                         ▲
 //!                                         │ per-row KV snapshots
 //!                                    KvPrefixCache (per worker, host-side
-//!                                    bounded LRU keyed by window hash —
-//!                                    join prefills whose windows are all
-//!                                    cached are *elided* entirely)
+//!                                    bounded LRU keyed by window hash plus
+//!                                    a chunked prefix hash chain — a row
+//!                                    prefill is elided on a full-window
+//!                                    hit, or shortened to its tail on a
+//!                                    partial-prefix hit)
 //! ```
+//!
+//! # Batching lifecycle (per-row state machine)
+//!
+//! There is no batch-wide prefill barrier. Each slot row moves through its
+//! own state machine, independent of its neighbours:
+//!
+//! ```text
+//!   vacant ──admit──► fresh ──encode_row──► live(pos = real_len)
+//!                                               │ decode_step bumps pos
+//!                                               ├─ pos == max_len ──► rollover:
+//!                                               │    re-encode this row only
+//!                                               ├─ stop/budget/cancel/deadline
+//!                                               │        ──► finish → vacant
+//!                                               ▼
+//!                                           live(pos+1)
+//! ```
+//!
+//! `encode_row` admits one row into a *live* batch: a full-window cache hit
+//! imports the snapshot (prefill elided entirely); a partial-prefix hit
+//! imports the longest cached prefix and `prefill_row` recomputes only from
+//! there (`keep = prefix_len`); a miss runs `prefill_row` from scratch. In
+//! every case the resulting KV row is row-scattered into the batch cache at
+//! that row's slot while the other rows' entries are untouched — their
+//! decode streams are byte-identical whether or not a neighbour joined
+//! mid-flight. `decode_step` then takes a *vector* of positions
+//! (`pos: &[usize]`, one per row), so rows at different depths advance in
+//! one lockstep launch, and rollover (`pos == max_len`) is a per-row event:
+//! only the row that hit the window edge re-encodes, at its own position,
+//! while the rest keep decoding. Joining latency is therefore O(1) in batch
+//! occupancy — exactly one `prefill_row` (or zero, on a cache hit) per
+//! admission, never a re-prefill of occupied rows
+//! (`tests/serve_prefix_cache.rs`, `cola serve --mock` occupancy sweep).
 //!
 //! - [`ModelRouter`] owns several named [`ServicePool`]s (the Table 11
 //!   full/SLTrain/CoLA variants served from one process), dispatches by
@@ -48,11 +85,12 @@
 //!   `shutdown`. [`ServicePool`] implements it over N engine workers
 //!   sharing one bounded admission queue.
 //! - [`EngineBackend`](engine::EngineBackend) is the seam between
-//!   scheduling and model execution: the worker loop (admission, join
-//!   prefills, lockstep decode, vacate/refill) is backend-agnostic, so the
-//!   whole serving tier — router, slots, queue, streaming, cancellation,
-//!   deadlines — tests hermetically on [`MockBackend`] under
-//!   `cargo test -q`.
+//!   scheduling and model execution: the worker loop (admission, single-row
+//!   prefills, per-row-position decode, vacate/refill) is backend-agnostic,
+//!   so the whole serving tier — router, slots, queue, streaming,
+//!   cancellation, deadlines — tests hermetically on [`MockBackend`] under
+//!   `cargo test -q`, including an oracle that asserts the scheduler feeds
+//!   each live row its true position every step.
 //! - Requests carry typed [`SubmitOptions`] (token budget, stop tokens,
 //!   deadline, priority) and resolve through a [`TokenStream`] that yields
 //!   tokens as they decode, supports mid-flight [`TokenStream::cancel`], and
@@ -63,14 +101,20 @@
 //! - **Prefill avoidance** ([`kvcache`]): each worker keeps a bounded LRU
 //!   of host-side per-row KV snapshots keyed by window-token hash, filled
 //!   through the [`EngineBackend`](engine::EngineBackend) KV-row seam
-//!   (`export_kv_rows` / `import_kv_rows`). A join prefill whose occupied
-//!   windows are all cached — repeated prefixes like system prompts and
-//!   retries, or deterministic re-generations after a rollover — is elided
-//!   entirely; stats surface it as `prefill_calls` / `prefills_elided` /
-//!   `kv_cache_{hits,misses,evictions}` plus `prefill_nanos` timing.
-//!   (Mid-flight rows whose window shifted need a per-row-position decode
-//!   artifact to reuse KV across the shift — the RoPE rotation is
-//!   position-dependent — so those still re-encode; see ROADMAP.)
+//!   (`export_kv_row` / `import_kv_row`). A row whose full window is cached
+//!   — repeated prefixes like system prompts and retries, or deterministic
+//!   re-generations after a rollover — skips `prefill_row` entirely. On a
+//!   miss, a **chunked prefix hash chain** is probed: every insert also
+//!   registers hashes of the window's prefixes at chunk-multiple lengths,
+//!   so a lookup returns the *longest cached prefix* of the new window
+//!   (think shared system prompts under different user tails); the prefix
+//!   KV is imported and `prefill_row` keeps it (`keep = prefix_len`),
+//!   recomputing only the tail. Windows are left-aligned (real tokens at
+//!   offsets `0..len`, trailing PAD) precisely so shared prefixes land at
+//!   identical offsets regardless of request length. Stats surface all of
+//!   it: `prefill_calls` / `prefills_elided` / `kv_cache_{hits,misses,
+//!   evictions}` / `partial_prefix_hits` / `partial_prefix_tokens_saved`
+//!   plus `prefill_nanos` timing.
 //! - **Compressed, byte-budgeted caching** ([`kvcodec`]): cache entries are
 //!   stored *encoded* under a pluggable codec (`kv_codec=f32|f16|rankr`,
 //!   with `kv_rank` for the low-rank mode) and the cache evicts by encoded
@@ -87,11 +131,14 @@
 //!   cost timed as `kv_decode_nanos`. Encode/decode runs only at
 //!   prefill/import boundaries — never inside the decode hot loop, which
 //!   the `cola lint` hot-path pass keeps allocation-free.
-//! - **Chunked, priority-aware admission**: at most
-//!   `ServeConfig::join_chunk` Normal-priority rows join per prefill
-//!   boundary, while High-priority requests pop first and are never
-//!   chunk-limited — one burst cannot stall every in-flight decode or
-//!   saturate the slot table before urgent work lands.
+//! - **Paced, priority-aware admission**: refill runs after every decode
+//!   step, admitting at most `ServeConfig::join_chunk` Normal-priority rows
+//!   per step, while High-priority requests pop first and are never
+//!   chunk-limited — one burst cannot monopolise vacated slots or starve
+//!   urgent work, and because admission is a single-row splice there is no
+//!   in-flight decode for it to stall. Per-request admission latency is
+//!   surfaced as [`Timing`] `queued` and aggregated as `join_wait_nanos` /
+//!   `rows_joined_midflight`.
 //!
 //! # Concurrency correctness tooling
 //!

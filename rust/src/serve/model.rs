@@ -433,10 +433,11 @@ impl CacheSut for KvPrefixCache {
             }
             CacheOp::Insert(w, tok) => {
                 let win = windows[w].clone();
+                let len = win.len();
                 let kv = model_row(w);
                 // the f32 codec cannot fail; a codec error would surface as
                 // an all-zero outcome and diverge from the model
-                let out = self.insert(hash_tokens(&win), win, &kv, tok).unwrap_or_default();
+                let out = self.insert(hash_tokens(&win), win, len, &kv, tok).unwrap_or_default();
                 CacheObs::Inserted { evicted: out.evicted, released: out.bytes_released }
             }
             CacheOp::EvictLru => CacheObs::Evicted(self.evict_lru()),

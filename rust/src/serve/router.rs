@@ -159,6 +159,10 @@ impl ModelRouter {
             prefill_calls: 0,
             prefills_elided: 0,
             prefill_nanos: 0,
+            rows_joined_midflight: 0,
+            partial_prefix_hits: 0,
+            partial_prefix_tokens_saved: 0,
+            join_wait_nanos: 0,
             kv_cache_hits: 0,
             kv_cache_misses: 0,
             kv_cache_evictions: 0,
@@ -183,6 +187,10 @@ impl ModelRouter {
             agg.prefill_calls += s.prefill_calls;
             agg.prefills_elided += s.prefills_elided;
             agg.prefill_nanos += s.prefill_nanos;
+            agg.rows_joined_midflight += s.rows_joined_midflight;
+            agg.partial_prefix_hits += s.partial_prefix_hits;
+            agg.partial_prefix_tokens_saved += s.partial_prefix_tokens_saved;
+            agg.join_wait_nanos += s.join_wait_nanos;
             agg.kv_cache_hits += s.kv_cache_hits;
             agg.kv_cache_misses += s.kv_cache_misses;
             agg.kv_cache_evictions += s.kv_cache_evictions;

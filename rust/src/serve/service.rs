@@ -229,13 +229,27 @@ pub struct ServiceStats {
     /// per-worker average, not wall-clock pool throughput (with N busy
     /// workers, wall-clock throughput is up to N× this).
     pub decode_tokens_per_sec: f64,
-    /// Real (non-elided) join prefills executed by the backend.
+    /// Real (non-elided) single-row prefills executed by the backend.
     pub prefill_calls: u64,
-    /// Join boundaries served entirely from the KV prefix cache — no
-    /// forward pass ran (see `serve::kvcache`).
+    /// Row encodes served entirely from the KV prefix cache — no forward
+    /// pass ran (see `serve::kvcache`).
     pub prefills_elided: u64,
     /// Worker busy-time spent inside real prefill calls.
     pub prefill_nanos: u64,
+    /// Rows admitted and encoded while at least one other row of the same
+    /// batch kept its decode state — the barrier-free joins that would each
+    /// have forced a whole-batch re-prefill under the shared-`pos` engine.
+    pub rows_joined_midflight: u64,
+    /// Whole-window cache misses whose longest cached prefix chunk hit, so
+    /// only the window tail was prefilled (see `serve::kvcache`).
+    pub partial_prefix_hits: u64,
+    /// Window positions restored from cached prefixes instead of being
+    /// re-prefilled, summed over partial-prefix hits.
+    pub partial_prefix_tokens_saved: u64,
+    /// Total admission→row-live latency, summed over fresh joins: how long
+    /// admitted requests waited for their single-row encode (queue wait
+    /// before admission is reported per-request via `Timing::queued`).
+    pub join_wait_nanos: u64,
     /// Per-row KV prefix-cache lookups that found the window.
     pub kv_cache_hits: u64,
     /// Per-row KV prefix-cache lookups that missed.
@@ -266,6 +280,10 @@ pub(crate) struct Counters {
     pub(crate) prefill_calls: Counter,
     pub(crate) prefills_elided: Counter,
     pub(crate) prefill_nanos: Counter,
+    pub(crate) rows_joined_midflight: Counter,
+    pub(crate) partial_prefix_hits: Counter,
+    pub(crate) partial_prefix_tokens_saved: Counter,
+    pub(crate) join_wait_nanos: Counter,
     pub(crate) kv_cache_hits: Counter,
     pub(crate) kv_cache_misses: Counter,
     pub(crate) kv_cache_evictions: Counter,
@@ -465,6 +483,10 @@ impl InferenceService for ServicePool {
             prefill_calls: c.prefill_calls.get(),
             prefills_elided: c.prefills_elided.get(),
             prefill_nanos: c.prefill_nanos.get(),
+            rows_joined_midflight: c.rows_joined_midflight.get(),
+            partial_prefix_hits: c.partial_prefix_hits.get(),
+            partial_prefix_tokens_saved: c.partial_prefix_tokens_saved.get(),
+            join_wait_nanos: c.join_wait_nanos.get(),
             kv_cache_hits: c.kv_cache_hits.get(),
             kv_cache_misses: c.kv_cache_misses.get(),
             kv_cache_evictions: c.kv_cache_evictions.get(),

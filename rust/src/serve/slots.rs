@@ -4,11 +4,19 @@
 //! slots spend their time on real requests instead of dummy rows decoding
 //! into the void.
 //!
-//! The table is pure bookkeeping (no PJRT): the engine asks it for the
-//! right-aligned context window of each row (to rebuild a merged batch via a
-//! "join prefill") and for the per-row feed tokens of the next decode step,
-//! and reports decoded tokens back via [`SlotTable::push_token`]. Stream
-//! events go out on each request's channel as they happen.
+//! The table is pure bookkeeping (no PJRT): it tracks, per row, the request,
+//! its generated tokens, and its **decode position** — the next KV write
+//! index for that row, independent of every other row. A freshly admitted
+//! row is `fresh` until the engine encodes it into a backend row
+//! ([`SlotTable::set_row_live`]); from then on its position advances one per
+//! decode step ([`SlotTable::bump_pos`]) and rolls over *individually* when
+//! it exhausts the backend's static KV window — no batch-wide barrier. The
+//! engine asks the table for each row's left-aligned context window (real
+//! tokens first, trailing pad) when it single-row-prefills an admission or
+//! a rollover, and for the per-row feed tokens / positions of the next
+//! decode step; decoded tokens are reported back via
+//! [`SlotTable::push_token`]. Stream events go out on each request's
+//! channel as they happen.
 
 use crate::serve::kvcache;
 use crate::serve::service::{Completion, FinishReason, QueuedRequest, StreamEvent, Timing};
@@ -25,8 +33,15 @@ struct ActiveRequest {
     window_dirty: bool,
     /// `(prompt_len, pad, hash)` of the last hashed window — both inputs
     /// fold into the hash, so both key the cache — letting clean rows skip
-    /// rehashing at every join-prefill boundary.
+    /// rehashing at every encode boundary.
     window_hash: (usize, i32, u64),
+    /// Next KV write position for this row's decode step. Starts at the
+    /// row's real window length after an encode; bumped once per decode
+    /// step; meaningless while `fresh`.
+    pos: usize,
+    /// Admitted but not yet encoded into a backend row — the engine must
+    /// single-row-prefill (or cache-restore) it before the row may decode.
+    fresh: bool,
 }
 
 /// Fixed-capacity row table; one per engine worker.
@@ -84,42 +99,57 @@ impl SlotTable {
             first_token_at: None,
             window_dirty: true,
             window_hash: (0, 0, 0),
+            pos: 0,
+            fresh: true,
         });
         Some(i)
     }
 
-    /// The three segments of row `i`'s right-aligned window: leading pad
-    /// count, the prompt tail, and the generated tail. Single source of
-    /// truth for [`window`](Self::window), [`write_window`](Self::write_window)
-    /// and [`window_hash`](Self::window_hash).
-    fn window_segments(&self, i: usize, prompt_len: usize) -> (usize, &[i32], &[i32]) {
-        let Some(ent) = self.slots[i].as_ref() else { return (prompt_len, &[], &[]) };
+    /// The three segments of row `i`'s **left-aligned** window: the prompt
+    /// tail, the generated tail, and the trailing pad count. Single source
+    /// of truth for [`window`](Self::window),
+    /// [`write_window`](Self::write_window) and
+    /// [`window_hash`](Self::window_hash). Left alignment puts a shared
+    /// prefix at the *same* window offsets regardless of each request's
+    /// total length — the property the KV cache's chunked prefix keying
+    /// relies on (right-aligned windows would shift a shared system prompt
+    /// by each request's pad count).
+    fn window_segments(&self, i: usize, prompt_len: usize) -> (&[i32], &[i32], usize) {
+        let Some(ent) = self.slots[i].as_ref() else { return (&[], &[], prompt_len) };
         let take = (ent.req.prompt.len() + ent.generated.len()).min(prompt_len);
         let from_gen = take.min(ent.generated.len());
         let from_prompt = take - from_gen;
         (
-            prompt_len - take,
             &ent.req.prompt[ent.req.prompt.len() - from_prompt..],
             &ent.generated[ent.generated.len() - from_gen..],
+            prompt_len - take,
         )
     }
 
-    /// Write row `i`'s window into `out` (`out.len() == prompt_len`)
-    /// without allocating — the engine assembles the merged `[batch,
-    /// prompt_len]` prefill input row by row into one reused buffer.
-    pub fn write_window(&self, i: usize, pad: i32, out: &mut [i32]) {
-        let (n_pad, prompt, gen) = self.window_segments(i, out.len());
-        out[..n_pad].fill(pad);
-        out[n_pad..n_pad + prompt.len()].copy_from_slice(prompt);
-        out[n_pad + prompt.len()..].copy_from_slice(gen);
+    /// Number of real (non-pad) tokens in row `i`'s window: `min(prompt +
+    /// generated, prompt_len)`. This is the position a row decodes from
+    /// right after an encode. 0 for vacant rows.
+    pub fn real_len(&self, i: usize, prompt_len: usize) -> usize {
+        let (prompt, gen, _) = self.window_segments(i, prompt_len);
+        prompt.len() + gen.len()
     }
 
-    /// Right-aligned context window for row `i`: the most recent
-    /// `prompt_len` tokens of `prompt ++ generated`, left-padded with `pad`.
-    /// This is what a join prefill re-encodes when the merged batch is
-    /// rebuilt; RoPE is shift-equivariant, so restarting positions at 0
-    /// preserves attention geometry *within* the window — anything older is
-    /// dropped (sliding-window truncation, same as the engine's rollover).
+    /// Write row `i`'s window into `out` (`out.len() == prompt_len`)
+    /// without allocating — the engine assembles single-row prefill inputs
+    /// into one reused buffer.
+    pub fn write_window(&self, i: usize, pad: i32, out: &mut [i32]) {
+        let (prompt, gen, n_pad) = self.window_segments(i, out.len());
+        out[..prompt.len()].copy_from_slice(prompt);
+        out[prompt.len()..prompt.len() + gen.len()].copy_from_slice(gen);
+        out[out.len() - n_pad..].fill(pad);
+    }
+
+    /// Left-aligned context window for row `i`: the most recent
+    /// `prompt_len` tokens of `prompt ++ generated` at offsets `0..len`,
+    /// right-padded with `pad`. This is what a single-row prefill encodes
+    /// on admission or rollover; RoPE is shift-equivariant, so restarting
+    /// positions at 0 preserves attention geometry *within* the window —
+    /// anything older is dropped (sliding-window truncation).
     pub fn window(&self, i: usize, prompt_len: usize, pad: i32) -> Vec<i32> {
         let mut w = vec![pad; prompt_len];
         self.write_window(i, pad, &mut w);
@@ -129,20 +159,20 @@ impl SlotTable {
     /// Hash of row `i`'s window under [`kvcache::hash_tokens`] — the KV
     /// prefix-cache key. Cached per row and recomputed only when the window
     /// changed (dirty tracking), so clean rows cost one comparison per
-    /// join-prefill boundary. Free rows hash their all-pad window.
+    /// lookup. Free rows hash their all-pad window.
     pub fn window_hash(&mut self, i: usize, prompt_len: usize, pad: i32) -> u64 {
         if let Some(ent) = self.slots[i].as_ref() {
             if !ent.window_dirty && ent.window_hash.0 == prompt_len && ent.window_hash.1 == pad {
                 return ent.window_hash.2;
             }
         }
-        let (n_pad, prompt, gen) = self.window_segments(i, prompt_len);
+        let (prompt, gen, n_pad) = self.window_segments(i, prompt_len);
         let mut h = kvcache::hash_tokens(&[]);
-        for _ in 0..n_pad {
-            h = kvcache::fold_token(h, pad);
-        }
         for &t in prompt.iter().chain(gen) {
             h = kvcache::fold_token(h, t);
+        }
+        for _ in 0..n_pad {
+            h = kvcache::fold_token(h, pad);
         }
         if let Some(ent) = self.slots[i].as_mut() {
             ent.window_dirty = false;
@@ -156,6 +186,75 @@ impl SlotTable {
     /// whose pad window never changes).
     pub fn window_dirty(&self, i: usize) -> bool {
         self.slots[i].as_ref().is_some_and(|e| e.window_dirty)
+    }
+
+    /// Row `i`'s next KV write position (0 for vacant or fresh rows).
+    pub fn pos(&self, i: usize) -> usize {
+        self.slots[i].as_ref().map_or(0, |e| e.pos)
+    }
+
+    /// Snapshot every row's decode position into a caller-owned scratch vec
+    /// (vacant rows report 0; their decode output is junk the scheduler
+    /// ignores). One entry per slot, in row order — the `pos` vector the
+    /// backend's per-row decode step consumes.
+    pub fn positions_into(&self, out: &mut Vec<usize>) {
+        out.clear();
+        out.extend(self.slots.iter().map(|s| s.as_ref().map_or(0, |e| e.pos)));
+    }
+
+    /// Mark row `i` live after the engine encoded it into a backend row:
+    /// clears `fresh` and starts the row's decode position at `len` (its
+    /// real window length — the first KV index the encode did not fill).
+    pub fn set_row_live(&mut self, i: usize, len: usize) {
+        if let Some(ent) = self.slots[i].as_mut() {
+            ent.fresh = false;
+            ent.pos = len;
+        } else {
+            debug_assert!(false, "set_row_live({i}) on a vacant slot");
+        }
+    }
+
+    /// Advance row `i`'s decode position by one (after a decode step wrote
+    /// KV at the old position). No-op for vacant rows.
+    pub fn bump_pos(&mut self, i: usize) {
+        if let Some(ent) = self.slots[i].as_mut() {
+            ent.pos += 1;
+        }
+    }
+
+    /// Whether any occupied row is still awaiting its first encode.
+    pub fn has_fresh(&self) -> bool {
+        self.slots.iter().any(|s| s.as_ref().is_some_and(|e| e.fresh))
+    }
+
+    /// Lowest fresh row, if any — the next single-row prefill target.
+    pub fn first_fresh(&self) -> Option<usize> {
+        self.slots.iter().position(|s| s.as_ref().is_some_and(|e| e.fresh))
+    }
+
+    /// Lowest live row whose position exhausted the backend's static KV
+    /// window (`pos >= max_len`) — it must be re-encoded (a *per-row*
+    /// sliding-window rollover) before the batch can step again.
+    pub fn first_rollover(&self, max_len: usize) -> Option<usize> {
+        self.slots
+            .iter()
+            .position(|s| s.as_ref().is_some_and(|e| !e.fresh && e.pos >= max_len))
+    }
+
+    /// Occupied rows that are already encoded (`!fresh`) — the rows that
+    /// keep decoding while a fresh admission joins. The engine counts a
+    /// join as "mid-flight" when this is non-zero at encode time.
+    pub fn live_rows(&self) -> usize {
+        self.slots.iter().filter(|s| s.as_ref().is_some_and(|e| !e.fresh)).count()
+    }
+
+    /// How long row `i` has held its slot since admission (zero for vacant
+    /// rows). Sampled by the engine when a fresh row goes live — the
+    /// admission→live gap behind the `join_wait_nanos` stat.
+    pub fn admission_wait(&self, i: usize, now: Instant) -> std::time::Duration {
+        self.slots[i]
+            .as_ref()
+            .map_or(std::time::Duration::ZERO, |e| now.saturating_duration_since(e.admitted_at))
     }
 
     /// Per-row input tokens for the next decode step: each active row feeds
@@ -203,17 +302,23 @@ impl SlotTable {
     }
 
     /// Vacate rows whose cancel flag is set or whose deadline has passed.
-    /// Returns `(cancelled, expired)` counts.
-    pub fn sweep(&mut self, now: Instant) -> (usize, usize) {
+    /// Returns `(cancelled, expired)` counts; the vacated row indices are
+    /// appended to `vacated` (cleared first — a caller-owned scratch vec,
+    /// so the engine can release the matching backend rows without
+    /// allocating in its decode loop).
+    pub fn sweep(&mut self, now: Instant, vacated: &mut Vec<usize>) -> (usize, usize) {
+        vacated.clear();
         let (mut cancelled, mut expired) = (0, 0);
         for i in 0..self.slots.len() {
             let Some(ent) = self.slots[i].as_ref() else { continue };
             if ent.req.cancel.poll() {
                 self.finish(i, FinishReason::Cancelled, now);
                 cancelled += 1;
+                vacated.push(i);
             } else if ent.req.deadline.is_some_and(|d| now >= d) {
                 self.finish(i, FinishReason::DeadlineExpired, now);
                 expired += 1;
+                vacated.push(i);
             }
         }
         (cancelled, expired)
@@ -371,9 +476,12 @@ mod tests {
         let (req, rx, cancel) = mk_req(vec![1], 100, vec![], None);
         tbl.admit(req, now).unwrap();
         tbl.push_token(0, 3, now);
-        assert_eq!(tbl.sweep(now), (0, 0), "no flags set yet");
+        let mut vac = Vec::new();
+        assert_eq!(tbl.sweep(now, &mut vac), (0, 0), "no flags set yet");
+        assert!(vac.is_empty());
         cancel.set();
-        assert_eq!(tbl.sweep(now), (1, 0));
+        assert_eq!(tbl.sweep(now, &mut vac), (1, 0));
+        assert_eq!(vac, vec![0], "sweep reports the vacated row");
         assert_eq!(tbl.active(), 0);
         let (_, done) = drain(&rx);
         let c = done.unwrap();
@@ -387,28 +495,33 @@ mod tests {
         let mut tbl = SlotTable::new(1);
         let (req, rx, _) = mk_req(vec![1], 100, vec![], Some(now + Duration::from_millis(5)));
         tbl.admit(req, now).unwrap();
-        assert_eq!(tbl.sweep(now), (0, 0), "deadline still in the future");
-        assert_eq!(tbl.sweep(now + Duration::from_millis(6)), (0, 1));
+        let mut vac = Vec::new();
+        assert_eq!(tbl.sweep(now, &mut vac), (0, 0), "deadline still in the future");
+        assert_eq!(tbl.sweep(now + Duration::from_millis(6), &mut vac), (0, 1));
+        assert_eq!(vac, vec![0]);
         let (_, done) = drain(&rx);
         assert_eq!(done.unwrap().finish_reason, FinishReason::DeadlineExpired);
     }
 
     #[test]
-    fn window_is_right_aligned_and_slides_over_generated() {
+    fn window_is_left_aligned_and_slides_over_generated() {
         let now = Instant::now();
         let mut tbl = SlotTable::new(1);
         let (req, _rx, _) = mk_req(vec![1, 2, 3], 100, vec![], None);
         tbl.admit(req, now).unwrap();
-        assert_eq!(tbl.window(0, 5, 0), vec![0, 0, 1, 2, 3], "left-padded");
+        assert_eq!(tbl.window(0, 5, 0), vec![1, 2, 3, 0, 0], "right-padded");
+        assert_eq!(tbl.real_len(0, 5), 3);
         for t in [4, 5, 6] {
             tbl.push_token(0, t, now);
         }
         // context 1,2,3,4,5,6 → keep the most recent 5
         assert_eq!(tbl.window(0, 5, 0), vec![2, 3, 4, 5, 6]);
+        assert_eq!(tbl.real_len(0, 5), 5);
         assert_eq!(tbl.feed_tokens(0), vec![6]);
         // free rows window/feed as pure padding
         let tbl2 = SlotTable::new(2);
         assert_eq!(tbl2.window(1, 3, 0), vec![0, 0, 0]);
+        assert_eq!(tbl2.real_len(1, 3), 0);
         assert_eq!(tbl2.feed_tokens(0), vec![0, 0]);
     }
 
@@ -422,10 +535,46 @@ mod tests {
         let mut buf = vec![-1; 5];
         tbl.write_window(0, 0, &mut buf);
         assert_eq!(buf, tbl.window(0, 5, 0));
-        assert_eq!(buf, vec![0, 1, 2, 3, 4]);
+        assert_eq!(buf, vec![1, 2, 3, 4, 0]);
         // free row: pure padding, buffer fully overwritten
         tbl.write_window(1, 9, &mut buf);
         assert_eq!(buf, vec![9; 5]);
+    }
+
+    #[test]
+    fn per_row_positions_track_encode_and_decode_independently() {
+        let now = Instant::now();
+        let mut tbl = SlotTable::new(3);
+        let (r0, _a, _) = mk_req(vec![1, 2], 100, vec![], None);
+        let (r1, _b, _) = mk_req(vec![1, 2, 3, 4], 100, vec![], None);
+        tbl.admit(r0, now).unwrap();
+        tbl.admit(r1, now).unwrap();
+        assert!(tbl.has_fresh());
+        assert_eq!(tbl.first_fresh(), Some(0));
+        assert_eq!(tbl.pos(0), 0, "fresh rows report position 0");
+        assert_eq!(tbl.live_rows(), 0, "fresh rows are not live");
+        // encode row 0 at its real length; row 1 stays fresh
+        tbl.set_row_live(0, tbl.real_len(0, 5));
+        assert_eq!(tbl.pos(0), 2);
+        assert_eq!(tbl.live_rows(), 1, "row 0 decodes while row 1 joins");
+        assert!(tbl.admission_wait(0, now + Duration::from_millis(3)) >= Duration::from_millis(3));
+        assert_eq!(tbl.admission_wait(2, now), Duration::ZERO, "vacant rows report zero wait");
+        assert_eq!(tbl.first_fresh(), Some(1));
+        tbl.set_row_live(1, tbl.real_len(1, 5));
+        assert_eq!(tbl.pos(1), 4);
+        assert!(!tbl.has_fresh());
+        // positions advance per row, vacant rows report 0
+        tbl.bump_pos(0);
+        let mut pos = Vec::new();
+        tbl.positions_into(&mut pos);
+        assert_eq!(pos, vec![3, 4, 0]);
+        // rollover is a per-row predicate: only row 1 exhausts max_len 4
+        assert_eq!(tbl.first_rollover(4), Some(1));
+        assert_eq!(tbl.first_rollover(5), None);
+        // fresh rows never report as rollovers even at pos 0 < max_len
+        let (r2, _c, _) = mk_req(vec![9], 100, vec![], None);
+        tbl.admit(r2, now).unwrap();
+        assert_eq!(tbl.first_rollover(4), Some(1), "fresh row 2 is not a rollover");
     }
 
     #[test]
@@ -442,7 +591,7 @@ mod tests {
         assert_eq!(tbl.window_hash(0, 5, 0), h, "cached hash is stable");
         // pad folds into the hash, so it must key the cache too (the row is
         // clean here — a stale pad-0 hash must not be served for pad 9)
-        assert_eq!(tbl.window_hash(0, 5, 9), hash_tokens(&[9, 9, 1, 2, 3]));
+        assert_eq!(tbl.window_hash(0, 5, 9), hash_tokens(&[1, 2, 3, 9, 9]));
         assert_eq!(tbl.window_hash(0, 5, 0), h, "switching back re-keys correctly");
         tbl.push_token(0, 4, now);
         assert!(tbl.window_dirty(0), "a generated token dirties the window");

@@ -7,13 +7,13 @@
 //! outputs are byte-identical with the cache on and off**, while the
 //! `prefill_calls` / `prefills_elided` / `kv_cache_*` counters prove the
 //! forward passes were actually avoided. Chunked admission is pinned the
-//! same way — deterministic prefill delays turn admission races into
-//! observable boundary counts.
+//! same way — deterministic per-step delays turn admission pacing into
+//! observable queue-wait gaps in each completion's timing.
 
 use cola::config::ServeConfig;
 use cola::serve::{
     FinishReason, InferenceService, KvCodecKind, MockBackend, Priority, ServicePool,
-    SubmitOptions,
+    StreamEvent, SubmitOptions,
 };
 use std::time::Duration;
 
@@ -220,38 +220,101 @@ fn tiny_cache_evicts_and_stays_correct() {
 }
 
 #[test]
-fn join_chunk_paces_normal_admissions_per_boundary() {
-    // A slow prefill (30ms) acts as a deterministic barrier: all four
-    // requests are queued while the first boundary runs. join_chunk=1 then
-    // forces (at least) one boundary per remaining admission, where
-    // unchunked admission merges them into a single follow-up join.
-    let run = |join_chunk: usize| -> u64 {
-        let mock = MockBackend::new(4, 4, 64)
-            .vocab(9_000)
-            .prefill_delay(Duration::from_millis(30));
+fn join_chunk_paces_normal_admissions_per_decode_step() {
+    // Per-row admission leaves no batch prefill to count, so chunk pacing
+    // shows up in *queue wait*: join_chunk=1 admits one Normal request per
+    // decode step, so of three requests queued behind a live row, the third
+    // is admitted two full (step-delayed) decode steps after the first.
+    // join_chunk=0 admits the whole burst at the first post-step refill, so
+    // their admission times collapse onto one boundary.
+    const STEP: Duration = Duration::from_millis(15);
+    let run = |join_chunk: usize| -> Vec<Duration> {
+        let mock = MockBackend::new(4, 4, 64).vocab(9_000).step_delay(STEP);
         let mut c = cfg(1, 16);
         c.join_chunk = join_chunk;
-        c.kv_cache_entries = 0; // count real prefills only
+        c.kv_cache_entries = 0;
         let pool = ServicePool::start_with(c, mock.clone().factory()).unwrap();
-        let streams: Vec<_> =
-            (0..4).map(|i| pool.submit(vec![50 + 100 * i], opts(4)).unwrap()).collect();
-        for (i, s) in streams.into_iter().enumerate() {
+        // A occupies a row and keeps decoding while the burst queues behind
+        // it (24-token budget ≫ the burst's admission horizon).
+        let mut a = pool.submit(vec![50], opts(24)).unwrap();
+        assert!(matches!(a.recv(), Some(StreamEvent::Token(_))), "A went live");
+        let burst: Vec<_> =
+            (1..4).map(|i| pool.submit(vec![50 + 100 * i], opts(4)).unwrap()).collect();
+        let mut queued = Vec::new();
+        for (i, s) in burst.into_iter().enumerate() {
             let done = s.wait().unwrap();
             assert_eq!(
                 done.tokens,
-                mock.expected_stream(50 + 100 * i as i32, 4),
+                mock.expected_stream(50 + 100 * (i as i32 + 1), 4),
                 "chunked admission must not alter streams"
             );
+            queued.push(done.timing.queued);
         }
-        eventually("completions tallied", || pool.stats().completed == 4);
-        let calls = pool.stats().prefill_calls;
+        a.cancel();
+        eventually("A cancelled", || {
+            let st = pool.stats();
+            st.cancelled + st.completed >= 4
+        });
         pool.shutdown();
-        calls
+        queued
     };
-    let chunked = run(1);
-    let unchunked = run(0);
-    assert!(chunked >= 3, "join_chunk=1 spreads the burst over boundaries (got {chunked})");
-    assert!(unchunked <= 2, "join_chunk=0 merges the queued burst (got {unchunked})");
+    let paced = run(1);
+    let merged = run(0);
+    assert!(
+        paced[2] >= paced[0] + 2 * STEP - Duration::from_millis(5),
+        "join_chunk=1 spaces admissions by full decode steps ({paced:?})"
+    );
+    assert!(
+        merged[2] <= merged[0] + STEP,
+        "join_chunk=0 admits the queued burst at one boundary ({merged:?})"
+    );
+}
+
+#[test]
+fn shared_system_prefix_is_reused_across_request_lengths() {
+    // prompt_len 8 → the engine keys cached rows in chunks of 4: requests
+    // that share a 4-token system prefix but continue differently (and have
+    // *different total lengths*) splice the cached chunk at import and
+    // prefill only their tail. Left-aligned windows put the shared prefix
+    // at the same offsets for every length — the property this relies on.
+    let mock = MockBackend::new(2, 8, 20).vocab(40_000);
+    let sys = [900, 901, 902, 903];
+    let prompts: Vec<Vec<i32>> = [vec![910], vec![920, 921], vec![930, 931, 932]]
+        .into_iter()
+        .map(|tail| sys.iter().copied().chain(tail).collect())
+        .collect();
+    let run = |entries: usize| -> (Vec<Vec<i32>>, cola::serve::ServiceStats) {
+        let mut c = cfg(1, 8);
+        c.kv_cache_entries = entries;
+        let pool = ServicePool::start_with(c, mock.clone().factory()).unwrap();
+        let outs: Vec<Vec<i32>> = prompts
+            .iter()
+            .map(|p| pool.generate(p.clone(), opts(5)).unwrap().tokens)
+            .collect();
+        eventually("completions tallied", || pool.stats().completed == 3);
+        let stats = pool.stats();
+        pool.shutdown();
+        (outs, stats)
+    };
+    let (on, s_on) = run(64);
+    let (off, s_off) = run(0);
+    assert_eq!(on, off, "partial-prefix splices changed streamed outputs");
+    for (i, p) in prompts.iter().enumerate() {
+        assert_eq!(on[i], mock.expected_stream(*p.last().unwrap(), 5), "request {i} exact");
+    }
+    assert!(
+        s_on.partial_prefix_hits >= 2,
+        "both longer requests reuse the shared chunk (got {})",
+        s_on.partial_prefix_hits
+    );
+    assert!(
+        s_on.partial_prefix_tokens_saved >= 8,
+        "each splice imports the 4-token system chunk (got {})",
+        s_on.partial_prefix_tokens_saved
+    );
+    assert_eq!(s_on.prefill_calls, 3, "every distinct tail still pays its own prefill");
+    assert_eq!(s_on.prefills_elided, 0, "no window repeats exactly — only partial reuse");
+    assert_eq!(s_off.partial_prefix_hits, 0, "disabled cache never probes prefixes");
 }
 
 #[test]

@@ -1,9 +1,12 @@
 //! Property-style tests for `SlotTable` invariants: whatever sequence of
 //! admit / push_token / sweep / fail_all the engine throws at it, the table
 //! must keep `active + free == size`, refill the lowest free slot first,
-//! resolve every admitted request exactly once, and produce right-aligned
-//! context windows that match `prompt ++ generated` — including past the
-//! `pos == max_len` rollover where the window is all that survives.
+//! resolve every admitted request exactly once, and produce left-aligned
+//! context windows (real tokens at offsets `0..len`, trailing pad) that
+//! match the tail of `prompt ++ generated` — including past each row's own
+//! `pos == max_len` rollover, where the window is all that survives. Decode
+//! positions are *per row*: one row's encode, decode or rollover never
+//! moves a neighbour's position.
 //!
 //! Hermetic: no artifact, no PJRT — the table is pure bookkeeping.
 
@@ -118,9 +121,11 @@ fn random_op_sequences_keep_invariants_and_resolve_every_request() {
                     if !live.is_empty() {
                         let k = rng.below(live.len());
                         live[k].2.set();
-                        let (cancelled, expired) = tbl.sweep(t);
+                        let mut vac = Vec::new();
+                        let (cancelled, expired) = tbl.sweep(t, &mut vac);
                         assert_eq!(expired, 0, "no deadlines in this sequence");
                         assert_eq!(cancelled, 1, "exactly the flagged row vacates");
+                        assert_eq!(vac, vec![live[k].0], "sweep reports the vacated row");
                         let (_, rx, _) = live.swap_remove(k);
                         resolved_rxs.push(rx);
                     }
@@ -177,7 +182,9 @@ fn refill_always_takes_the_lowest_free_slot() {
                 freed.push(i);
             }
         }
-        tbl.sweep(now);
+        let mut vac = Vec::new();
+        tbl.sweep(now, &mut vac);
+        assert_eq!(vac, freed, "sweep reports the vacated rows in index order");
         assert_eq!(tbl.free(), freed.len());
         // refills land lowest-first, in order
         for &want in &freed {
@@ -190,10 +197,11 @@ fn refill_always_takes_the_lowest_free_slot() {
 
 #[test]
 fn window_matches_prompt_plus_generated_at_every_length() {
-    // Covers the join-prefill math the engine relies on at the
-    // `pos == max_len` rollover: the window must be the most recent
-    // `prompt_len` tokens of `prompt ++ generated`, left-padded while the
-    // context is still short.
+    // Covers the single-row prefill math the engine relies on at admission
+    // and at each row's own `pos == max_len` rollover: the window must be
+    // the most recent `prompt_len` tokens of `prompt ++ generated`,
+    // left-aligned (real tokens at offsets 0..len, trailing pad — the
+    // alignment the KV prefix cache's chunked keying depends on).
     const PAD: i32 = 0;
     let mut rng = Rng::new(7);
     let now = Instant::now();
@@ -206,11 +214,12 @@ fn window_matches_prompt_plus_generated_at_every_length() {
 
         let mut context = prompt.clone();
         for step in 0..40 {
-            // expected: right-aligned tail of the context, left-padded
+            // expected: tail of the context at offsets 0..take, then pad
             let take = context.len().min(prompt_len);
-            let mut want = vec![PAD; prompt_len - take];
-            want.extend_from_slice(&context[context.len() - take..]);
+            let mut want: Vec<i32> = context[context.len() - take..].to_vec();
+            want.resize(prompt_len, PAD);
             assert_eq!(tbl.window(0, prompt_len, PAD), want, "step {step}");
+            assert_eq!(tbl.real_len(0, prompt_len), take, "step {step}");
             // feed is the last generated token (or pad before any decode)
             let want_feed =
                 if context.len() > prompt.len() { *context.last().unwrap() } else { PAD };
@@ -221,6 +230,90 @@ fn window_matches_prompt_plus_generated_at_every_length() {
             context.push(tok);
         }
     }
+}
+
+#[test]
+fn rows_roll_over_independently_under_random_decode_schedules() {
+    // Per-row position invariant: whatever interleaving of encodes and
+    // per-row decode bumps happens, each row's position is exactly
+    // `len + its own bump count`, and `first_rollover` fires for precisely
+    // the rows that individually exhausted `max_len` — a neighbour deep
+    // into its window never drags a shallow row over the barrier.
+    let now = Instant::now();
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(seed);
+        let size = rng.range(2, 5);
+        let max_len = rng.range(6, 12);
+        let mut tbl = SlotTable::new(size);
+        let mut want_pos = vec![0usize; size];
+        for i in 0..size {
+            let plen = rng.range(1, 4);
+            let (req, _rx, _) = mk_req(vec![5; plen], 1000, vec![], None);
+            tbl.admit(req, now).unwrap();
+            tbl.set_row_live(i, plen);
+            want_pos[i] = plen;
+        }
+        for _ in 0..60 {
+            let i = rng.below(size);
+            if want_pos[i] < max_len {
+                tbl.bump_pos(i);
+                want_pos[i] += 1;
+            }
+            let mut got = Vec::new();
+            tbl.positions_into(&mut got);
+            assert_eq!(got, want_pos, "seed {seed}");
+            let want_roll = want_pos.iter().position(|&p| p >= max_len);
+            assert_eq!(tbl.first_rollover(max_len), want_roll, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn refill_into_lowest_slot_leaves_neighbour_positions_untouched() {
+    // Admission is barrier-free: vacating and refilling one row must not
+    // move any other row's decode position, window, or live status.
+    let now = Instant::now();
+    let mut tbl = SlotTable::new(3);
+    let mut cancels = Vec::new();
+    for i in 0..3 {
+        let (req, _rx, cancel) = mk_req(vec![10 + i as i32, 20 + i as i32], 100, vec![], None);
+        tbl.admit(req, now).unwrap();
+        tbl.set_row_live(i, 2); // prompt is 2 tokens; all rows live at pos 2
+        cancels.push((cancel, _rx));
+    }
+    // stagger the depths: rows end at positions 2, 3, 5
+    tbl.bump_pos(1);
+    tbl.bump_pos(2);
+    tbl.bump_pos(2);
+    tbl.bump_pos(2);
+    let mut before = Vec::new();
+    tbl.positions_into(&mut before);
+    assert_eq!(before, vec![2, 3, 5]);
+    let w1_before = tbl.window(1, 4, 0);
+    let w2_before = tbl.window(2, 4, 0);
+
+    // vacate row 0 (cancel + sweep), refill it with a fresh admission
+    cancels[0].0.set();
+    let mut vac = Vec::new();
+    assert_eq!(tbl.sweep(now, &mut vac), (1, 0));
+    assert_eq!(vac, vec![0]);
+    let (req, _rx, _c) = mk_req(vec![7, 8, 9], 100, vec![], None);
+    assert_eq!(tbl.admit(req, now), Some(0), "lowest free slot refills first");
+    assert!(tbl.has_fresh());
+    assert_eq!(tbl.first_fresh(), Some(0), "the refill is fresh until encoded");
+
+    // neighbours: positions, windows, and live status are untouched
+    let mut after = Vec::new();
+    tbl.positions_into(&mut after);
+    assert_eq!(after, vec![0, 3, 5], "only row 0's position reset");
+    assert_eq!(tbl.window(1, 4, 0), w1_before);
+    assert_eq!(tbl.window(2, 4, 0), w2_before);
+    assert_eq!(tbl.live_rows(), 2, "rows 1 and 2 stayed live through the refill");
+
+    // encoding the refill starts its own position without touching others
+    tbl.set_row_live(0, tbl.real_len(0, 4));
+    tbl.positions_into(&mut after);
+    assert_eq!(after, vec![3, 3, 5]);
 }
 
 #[test]
@@ -256,7 +349,9 @@ fn sweep_prefers_cancel_over_deadline_and_counts_both() {
     tbl.admit(r1, now).unwrap();
     tbl.admit(r2, now).unwrap();
     c0.set();
-    assert_eq!(tbl.sweep(now), (1, 1));
+    let mut vac = Vec::new();
+    assert_eq!(tbl.sweep(now, &mut vac), (1, 1));
+    assert_eq!(vac, vec![0, 1], "both vacated rows reported");
     assert_eq!(tbl.occupied(), vec![2], "healthy row survives");
     assert_eq!(drain(&rx0).1, vec![FinishReason::Cancelled]);
     assert_eq!(drain(&rx1).1, vec![FinishReason::DeadlineExpired]);

@@ -45,14 +45,26 @@ if [ "${SKIP_SMOKE:-0}" != "1" ]; then
     echo "== serve smoke: cargo run --release -- serve --mock =="
     cargo run --release -- serve --mock --requests 48 --distinct 4 \
         --bench-json ../BENCH_serve.json
-    # The codec sweep must actually have run: the report carries per-codec
-    # encoded sizes and hit-rate-at-fixed-memory sections.
-    for key in bytes_per_entry hit_rate_fixed_mem; do
+    # Every sweep must actually have run: codec sizes + fixed-memory hit
+    # rates (ISSUE 8), partial-prefix reuse and the join-TTFT occupancy
+    # sweep (ISSUE 9).
+    for key in bytes_per_entry hit_rate_fixed_mem join_ttft_by_occupancy \
+        partial_prefix_hit_rate; do
         if ! grep -q "\"$key\"" ../BENCH_serve.json; then
-            echo "BENCH_serve.json missing '$key' — codec sweep did not run" >&2
+            echo "BENCH_serve.json missing '$key' — a smoke sweep did not run" >&2
             exit 1
         fi
     done
+    # Occupancy-independence gate: a joining row's TTFT at occupancy
+    # serve_bs-1 may not exceed 1.5x its TTFT at occupancy 1 (the binary
+    # asserts this too; re-check the recorded number so a stale or
+    # hand-edited report cannot hide a regression).
+    ratio=$(sed -n 's/.*"join_ttft_occupancy_ratio":\([0-9.eE+-]*\).*/\1/p' \
+        ../BENCH_serve.json)
+    if [ -z "$ratio" ] || ! awk -v r="$ratio" 'BEGIN { exit !(r <= 1.5) }'; then
+        echo "join TTFT scales with occupancy (ratio ${ratio:-missing} > 1.5)" >&2
+        exit 1
+    fi
 fi
 
 if [ "${SKIP_LINT:-0}" != "1" ]; then
