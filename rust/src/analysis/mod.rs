@@ -427,6 +427,15 @@ mod tests {
         assert!(count("queue-inner") >= 4, "queue lock sites seen: {:?}", an.lock_graph);
         assert!(count("pool-workers") >= 1, "pool lock sites seen: {:?}", an.lock_graph);
         assert!(count("runtime-compile-cache") >= 1, "compile cache seen: {:?}", an.lock_graph);
+        // PR 10's supervision locks: the breaker state machine takes its
+        // lock in record_success/record_failure/admit_with/try_admit/state/
+        // snapshot; the supervisor lifecycle in try_restart/restarts_used
+        assert!(count("breaker-state") >= 4, "breaker lock sites seen: {:?}", an.lock_graph);
+        assert!(
+            count("supervisor-lifecycle") >= 1,
+            "lifecycle lock sites seen: {:?}",
+            an.lock_graph
+        );
         // the compile cache is held across Executor::compile_file
         assert!(
             an.lock_graph.called_under_lock.iter().any(|f| f == "compile_file"),

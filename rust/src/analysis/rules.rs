@@ -30,6 +30,7 @@ use super::{diag, Diagnostic, Profile, Waivers};
 /// (reference models driven only by tests).
 const NO_PANIC_FILES: &[&str] = &[
     "serve/engine.rs",
+    "serve/fault.rs",
     "serve/kvcache.rs",
     "serve/kvcodec.rs",
     "serve/mod.rs",
@@ -37,6 +38,7 @@ const NO_PANIC_FILES: &[&str] = &[
     "serve/router.rs",
     "serve/service.rs",
     "serve/slots.rs",
+    "serve/supervisor.rs",
     "serve/sync.rs",
 ];
 
@@ -55,7 +57,9 @@ pub(crate) const LOCK_CLASSES: &[(&str, u8, &str)] = &[
     ("workers", 0, "pool-workers"),
     ("inner", 1, "queue-inner"),
     ("shard", 2, "kv-shard"),
-    ("compiled", 3, "runtime-compile-cache"),
+    ("lifecycle", 3, "supervisor-lifecycle"),
+    ("breaker", 4, "breaker-state"),
+    ("compiled", 5, "runtime-compile-cache"),
 ];
 
 /// How far above a `Ordering::Relaxed` use its `relaxed:` justification may

@@ -85,6 +85,22 @@ pub struct ServeConfig {
     /// (High-priority admissions are never chunk-limited); 0 = unlimited,
     /// i.e. fill every free slot as soon as it vacates
     pub join_chunk: usize,
+    /// how many times a request salvaged from a dead worker is
+    /// re-dispatched before it fails with `FinishReason::Error`; 0 = fail
+    /// on the first worker fault
+    pub retry_budget: u32,
+    /// pool-wide worker respawn budget after panics/fatal backend errors;
+    /// 0 = never respawn (a dead worker stays dead)
+    pub restart_budget: u32,
+    /// consecutive worker faults that trip the circuit breaker open
+    /// (router-level submits then fail fast with `CircuitOpen`); 0
+    /// disables the breaker entirely
+    pub breaker_open_after: u32,
+    /// consecutive successes (while Degraded) that restore Healthy
+    pub breaker_recover_after: u32,
+    /// how long an Open breaker refuses before admitting one half-open
+    /// probe request
+    pub breaker_cooldown_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -100,6 +116,11 @@ impl Default for ServeConfig {
             kv_codec: KvCodecKind::F32,
             kv_rank: 8,
             join_chunk: 0,
+            retry_budget: 2,
+            restart_budget: 3,
+            breaker_open_after: 3,
+            breaker_recover_after: 2,
+            breaker_cooldown_ms: 100,
         }
     }
 }
@@ -182,6 +203,17 @@ pub fn apply_serve_overrides(cfg: &mut ServeConfig, kvs: &[(String, String)]) ->
             "kv_codec" => cfg.kv_codec = KvCodecKind::parse(v).context("kv_codec")?,
             "kv_rank" => cfg.kv_rank = v.parse().context("kv_rank")?,
             "join_chunk" => cfg.join_chunk = v.parse().context("join_chunk")?,
+            "retry_budget" => cfg.retry_budget = v.parse().context("retry_budget")?,
+            "restart_budget" => cfg.restart_budget = v.parse().context("restart_budget")?,
+            "breaker_open_after" => {
+                cfg.breaker_open_after = v.parse().context("breaker_open_after")?
+            }
+            "breaker_recover_after" => {
+                cfg.breaker_recover_after = v.parse().context("breaker_recover_after")?
+            }
+            "breaker_cooldown_ms" => {
+                cfg.breaker_cooldown_ms = v.parse().context("breaker_cooldown_ms")?
+            }
             _ => anyhow::bail!("unknown serve config key `{k}`"),
         }
     }
@@ -367,6 +399,11 @@ mod tests {
                 ("kv_codec".into(), "f16".into()),
                 ("kv_rank".into(), "3".into()),
                 ("join_chunk".into(), "2".into()),
+                ("retry_budget".into(), "5".into()),
+                ("restart_budget".into(), "7".into()),
+                ("breaker_open_after".into(), "4".into()),
+                ("breaker_recover_after".into(), "6".into()),
+                ("breaker_cooldown_ms".into(), "333".into()),
             ],
         )
         .unwrap();
@@ -380,6 +417,23 @@ mod tests {
         assert_eq!(cfg.kv_codec, KvCodecKind::F16);
         assert_eq!(cfg.kv_rank, 3);
         assert_eq!(cfg.join_chunk, 2);
+        assert_eq!(cfg.retry_budget, 5);
+        assert_eq!(cfg.restart_budget, 7);
+        assert_eq!(cfg.breaker_open_after, 4);
+        assert_eq!(cfg.breaker_recover_after, 6);
+        assert_eq!(cfg.breaker_cooldown_ms, 333);
+    }
+
+    #[test]
+    fn robustness_knobs_have_live_defaults() {
+        // retries, restarts and the breaker are on out of the box — a
+        // default pool survives worker faults without any configuration
+        let cfg = ServeConfig::default();
+        assert_eq!(cfg.retry_budget, 2);
+        assert_eq!(cfg.restart_budget, 3);
+        assert_eq!(cfg.breaker_open_after, 3, "breaker enabled by default");
+        assert_eq!(cfg.breaker_recover_after, 2);
+        assert_eq!(cfg.breaker_cooldown_ms, 100);
     }
 
     #[test]
@@ -410,6 +464,8 @@ mod tests {
                 ("b.kv_codec".into(), "rankr".into()),
                 ("b.kv_rank".into(), "4".into()),
                 ("b.kv_cache_bytes".into(), "1024".into()),
+                ("b.retry_budget".into(), "0".into()),
+                ("b.breaker_open_after".into(), "0".into()),
             ],
         )
         .unwrap();
@@ -421,6 +477,9 @@ mod tests {
         assert_eq!(cfg.models[1].1.kv_codec, KvCodecKind::RankR, "dotted codec override");
         assert_eq!(cfg.models[1].1.kv_rank, 4);
         assert_eq!(cfg.models[1].1.kv_cache_bytes, 1024);
+        assert_eq!(cfg.models[0].1.retry_budget, 2, "robustness defaults inherited");
+        assert_eq!(cfg.models[1].1.retry_budget, 0, "dotted retry override");
+        assert_eq!(cfg.models[1].1.breaker_open_after, 0, "dotted breaker disable");
     }
 
     #[test]

@@ -9,12 +9,16 @@
 //!             Flags: --requests N, --config file.json, --model NAME
 //!             (restrict load to one model), --mock (hermetic MockBackend
 //!             smoke with a repeated-prefix workload — no artifact needed;
-//!             add --distinct D for prompt variety and --bench-json PATH
+//!             add --distinct D for prompt variety, --chaos for a seeded
+//!             fault-injection soak proving transparent redispatch, worker
+//!             restart, and circuit-breaker recovery, and --bench-json PATH
 //!             to record a BENCH_serve.json line); key=value overrides:
 //!             artifact, max_new_tokens, workers, queue_depth,
 //!             default_deadline_ms, kv_cache_entries, kv_cache_bytes,
-//!             kv_codec (f32|f16|rankr), kv_rank, join_chunk,
-//!             models=name:artifact,... and name.key=value per model.
+//!             kv_codec (f32|f16|rankr), kv_rank, join_chunk, retry_budget,
+//!             restart_budget, breaker_open_after, breaker_recover_after,
+//!             breaker_cooldown_ms, models=name:artifact,... and
+//!             name.key=value per model.
 //!             Prints per-model p50/p95/p99 latency, time-to-first-token,
 //!             and labeled queue/counter/prefill-cache stats plus a fleet
 //!             aggregate.
@@ -42,11 +46,15 @@ fn usage() -> ! {
     eprintln!(
         "usage: cola <train|eval|serve|rank|cost|data-gen|lint> [--artifact NAME] [key=value ...]\n\
          serve: cola serve [--artifact NAME] [--requests N] [--config f.json] [--model NAME]\n\
-                [--mock] [--distinct D] [--bench-json PATH]\n\
+                [--mock] [--distinct D] [--chaos] [--bench-json PATH]\n\
                 [max_new_tokens=K] [workers=N] [queue_depth=D] [default_deadline_ms=MS]\n\
                 [kv_cache_entries=E] [kv_cache_bytes=B] [kv_codec=f32|f16|rankr]\n\
-                [kv_rank=R] [join_chunk=J]\n\
+                [kv_rank=R] [join_chunk=J] [retry_budget=R] [restart_budget=R]\n\
+                [breaker_open_after=N] [breaker_recover_after=N] [breaker_cooldown_ms=MS]\n\
                 [models=name:artifact,...] [name.key=value ...]\n\
+                --chaos (with --mock): seeded fault soak — injected decode/prefill\n\
+                errors, latency spikes, and a worker panic must lose zero requests,\n\
+                keep streams byte-identical, and recover the circuit breaker\n\
          lint:  cola lint [--root DIR] [--format text|json] [--baseline FILE]\n\
                 [--write-baseline FILE] [--dump-lock-graph]\n\
                 whole-crate static concurrency/safety checks over rust/src (strict)\n\
@@ -298,6 +306,22 @@ fn cmd_serve(
             ),
             metrics::stat_line("serve_join_wait_nanos", &label, s.join_wait_nanos),
         );
+        println!(
+            "{} {} {} {} {}",
+            metrics::stat_line("serve_worker_restarts", &label, s.worker_restarts),
+            metrics::stat_line("serve_worker_panics", &label, s.worker_panics),
+            metrics::stat_line("serve_requests_redispatched", &label, s.requests_redispatched),
+            metrics::stat_line("serve_retries", &label, s.retries),
+            metrics::stat_line("serve_failed", &label, s.failed),
+        );
+        println!(
+            "{} {} {} {} {}",
+            metrics::stat_line("serve_shed_infeasible", &label, s.shed_infeasible),
+            metrics::stat_line("serve_shed_expired", &label, s.shed_expired),
+            metrics::stat_line("serve_breaker_state", &label, s.breaker_state.as_str()),
+            metrics::stat_line("serve_breaker_opens", &label, s.breaker_opens),
+            metrics::stat_line("serve_breaker_recoveries", &label, s.breaker_recoveries),
+        );
     }
     println!(
         "queue: peak depth {max_queue}/{} full-retries {retries} | \
@@ -331,6 +355,20 @@ fn cmd_serve(
         agg.partial_prefix_hits,
         agg.partial_prefix_tokens_saved,
         agg.join_wait_nanos as f64 * 1e-6,
+    );
+    println!(
+        "robustness: restarts {} (panics {}) redispatched {} retries {} failed {} | \
+         shed infeasible {} expired {} | breaker {} (opens {} recoveries {})",
+        agg.worker_restarts,
+        agg.worker_panics,
+        agg.requests_redispatched,
+        agg.retries,
+        agg.failed,
+        agg.shed_infeasible,
+        agg.shed_expired,
+        agg.breaker_state.as_str(),
+        agg.breaker_opens,
+        agg.breaker_recoveries,
     );
     router.shutdown();
     Ok(())
@@ -636,9 +674,18 @@ fn cmd_serve_mock(
          the barrier is back"
     );
 
+    // Chaos soak (--chaos): scripted faults against the same serving surface
+    // must lose zero requests, keep streams byte-identical, restart panicked
+    // workers, and walk the circuit breaker through open → probe → healthy.
+    let chaos = if flags.contains_key("chaos") {
+        Some(cmd_serve_chaos(models, &prompts, n_requests)?)
+    } else {
+        None
+    };
+
     if let Some(path) = flags.get("bench-json") {
         use cola::util::json::Json;
-        let j = Json::obj(vec![
+        let mut fields = vec![
             ("bench", Json::s("serve_mock")),
             // distinguishes a real run from the statically-derived baseline
             // committed as BENCH_serve.json (provenance "derived-static")
@@ -702,12 +749,269 @@ fn cmd_serve_mock(
                     ("rankr", Json::num(fixed_mem[2].2 as f64)),
                 ]),
             ),
-        ]);
+        ];
+        if let Some(ch) = &chaos {
+            fields.extend([
+                ("chaos_requests", Json::num(ch.requests as f64)),
+                ("chaos_lost", Json::num(ch.lost as f64)),
+                ("chaos_redispatched", Json::num(ch.redispatched as f64)),
+                ("chaos_retries", Json::num(ch.retries as f64)),
+                ("chaos_worker_restarts", Json::num(ch.worker_restarts as f64)),
+                ("chaos_worker_panics", Json::num(ch.worker_panics as f64)),
+                ("chaos_breaker_opens", Json::num(ch.breaker_opens as f64)),
+                ("chaos_breaker_recoveries", Json::num(ch.breaker_recoveries as f64)),
+            ]);
+        }
+        let j = Json::obj(fields);
         std::fs::write(path, format!("{j}\n"))
             .with_context(|| format!("writing {path}"))?;
         println!("  wrote {path}");
     }
     Ok(())
+}
+
+/// What the `--chaos` soak observed, for the printed summary and the
+/// `chaos_*` fields of `--bench-json`.
+struct ChaosReport {
+    /// Requests submitted across all three scenarios.
+    requests: usize,
+    /// Requests that never resolved — any non-zero value fails the soak
+    /// before this report is built, so a written report always says 0.
+    lost: usize,
+    redispatched: u64,
+    retries: u64,
+    worker_restarts: u64,
+    worker_panics: u64,
+    breaker_opens: u64,
+    breaker_recoveries: u64,
+}
+
+/// `cola serve --mock --chaos`: a deterministic fault soak over the same
+/// router/pool surface the smoke uses, in three scenarios (docs/robustness.md):
+///
+/// 1. **Transient-fault soak** — injected prefill/decode errors and latency
+///    spikes while `n` requests stream. Every request must resolve
+///    (`Length`/`Stop`), streams must be byte-identical to a fault-free
+///    baseline (redispatch is transparent), and at least one request must
+///    have been salvaged and redispatched.
+/// 2. **Worker panic** — a scripted `decode_step` panic kills the worker
+///    mid-stream; the supervisor must salvage the request, respawn the
+///    worker (twice — the one-shot schedule re-arms per respawned backend),
+///    and the stream must complete byte-identical to the fault-free run.
+/// 3. **Breaker walk** — with `retry_budget=0` and `breaker_open_after=1`,
+///    one injected fault fails a request and opens the breaker; a routed
+///    submit must be refused with `CircuitOpen`; after the cooldown, a
+///    probe request must be admitted half-open, complete, and restore
+///    `Healthy`.
+fn cmd_serve_chaos(
+    models: &[(String, cola::config::ServeConfig)],
+    prompts: &[Vec<i32>],
+    n_requests: usize,
+) -> Result<ChaosReport> {
+    use cola::serve::engine::EngineBackend;
+    use cola::serve::{
+        BreakerState, FaultKind, FaultPlan, FaultSchedule, FinishReason, InferenceService,
+        MockBackend, ServicePool, ServiceStats,
+    };
+    use std::time::{Duration, Instant};
+
+    let name = models[0].0.clone();
+    let base_cfg = models[0].1.clone();
+    let fault_pool =
+        |cfg: cola::config::ServeConfig, mock: MockBackend, plan: FaultPlan| -> Result<ServicePool> {
+            ServicePool::start_with(cfg, move |w| {
+                Ok(Box::new(plan.wrap(mock.clone(), w)) as Box<dyn EngineBackend>)
+            })
+        };
+    let await_state = |pool: &ServicePool, want: BreakerState| -> Result<()> {
+        let t0 = Instant::now();
+        while pool.breaker_state() != want {
+            anyhow::ensure!(
+                t0.elapsed() < Duration::from_secs(5),
+                "chaos: breaker stuck at {:?} waiting for {want:?}",
+                pool.breaker_state()
+            );
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        Ok(())
+    };
+
+    // -- scenario 1: transient-fault soak, zero lost, byte-identical --------
+    let n = n_requests.max(8);
+    let mut cfg = base_cfg.clone();
+    // transient faults must never exhaust a retry budget: each worker's
+    // one-shot error faults fire at most twice per backend instance, so a
+    // budget past 2 faults/worker makes exhaustion impossible by schedule
+    cfg.retry_budget = 2 * cfg.workers.max(1) as u32 + 4;
+    cfg.breaker_open_after = 0; // breaker behaviour is scenario 3's subject
+    cfg.default_deadline_ms = 0; // latency spikes must not expire anything
+    let mock = MockBackend::new(4, 8, 24).vocab(50_021);
+    let soak = |plan: FaultPlan| -> Result<(Vec<Vec<i32>>, ServiceStats)> {
+        let pool = fault_pool(cfg.clone(), mock.clone(), plan)?;
+        let router = ModelRouter::from_pools(vec![(name.clone(), pool)])?;
+        let mut streams = Vec::with_capacity(n);
+        for r in 0..n {
+            let prompt = prompts[r % prompts.len()].clone();
+            loop {
+                let opts = SubmitOptions { max_new_tokens: Some(12), ..Default::default() };
+                match router.submit(&name, prompt.clone(), opts) {
+                    Ok(s) => break streams.push(s),
+                    Err(RouteError::Submit(SubmitError::QueueFull)) => {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                    Err(e) => anyhow::bail!("chaos soak submit failed: {e}"),
+                }
+            }
+        }
+        let mut outs = Vec::with_capacity(streams.len());
+        for (r, s) in streams.into_iter().enumerate() {
+            let c = s.wait()?;
+            anyhow::ensure!(
+                matches!(c.finish_reason, FinishReason::Length | FinishReason::Stop),
+                "chaos soak lost request {r} to {:?}",
+                c.finish_reason
+            );
+            outs.push(c.tokens);
+        }
+        let stats = router.aggregate_stats();
+        router.shutdown();
+        Ok((outs, stats))
+    };
+    let (baseline, _) = soak(FaultPlan::default())?;
+    let plan = FaultPlan::seeded(42)
+        .inject(FaultKind::PrefillError, FaultSchedule::Once(3))
+        .inject(FaultKind::DecodeError, FaultSchedule::Once(5))
+        .inject(
+            FaultKind::LatencySpike(Duration::from_millis(2)),
+            FaultSchedule::EveryNth(9),
+        );
+    let (outs, soak_stats) = soak(plan)?;
+    anyhow::ensure!(
+        outs == baseline,
+        "chaos soak changed streamed outputs — redispatch is not transparent"
+    );
+    anyhow::ensure!(
+        soak_stats.failed == 0 && soak_stats.completed == n as u64,
+        "chaos soak dropped requests: completed {} of {n}, failed {}",
+        soak_stats.completed,
+        soak_stats.failed
+    );
+    anyhow::ensure!(
+        soak_stats.requests_redispatched >= 1,
+        "chaos soak injected faults but salvaged nothing — the faults never landed"
+    );
+    println!(
+        "  chaos soak: {n} requests, 0 lost | {} redispatched ({} retries) | \
+         streams byte-identical to fault-free baseline",
+        soak_stats.requests_redispatched, soak_stats.retries,
+    );
+
+    // -- scenario 2: worker panic → supervised restart, stream survives -----
+    let mut pcfg = base_cfg.clone();
+    pcfg.workers = 1;
+    pcfg.retry_budget = 2;
+    pcfg.restart_budget = 3;
+    pcfg.breaker_open_after = 0;
+    pcfg.default_deadline_ms = 0;
+    let pmock = MockBackend::new(1, 8, 64).vocab(50_021);
+    let popts = || SubmitOptions { max_new_tokens: Some(10), ..Default::default() };
+    let clean = fault_pool(pcfg.clone(), pmock.clone(), FaultPlan::default())?;
+    let want = clean.generate(prompts[0].clone(), popts())?;
+    clean.shutdown();
+    // Once(4) re-arms on every respawned backend: panic at the 4th decode
+    // call of each incarnation → 4 + 4 + 2 tokens across exactly 2 restarts,
+    // inside retry_budget=2 and restart_budget=3
+    let pplan = FaultPlan::seeded(7).inject(FaultKind::WorkerPanic, FaultSchedule::Once(4));
+    let ppool = fault_pool(pcfg, pmock, pplan)?;
+    let got = ppool.generate(prompts[0].clone(), popts())?;
+    let ps = ppool.stats();
+    ppool.shutdown();
+    anyhow::ensure!(
+        matches!(got.finish_reason, FinishReason::Length) && got.tokens == want.tokens,
+        "chaos: stream did not survive the worker panics byte-identically \
+         ({:?}, {} tokens vs {})",
+        got.finish_reason,
+        got.tokens.len(),
+        want.tokens.len()
+    );
+    anyhow::ensure!(
+        ps.worker_restarts == 2 && ps.worker_panics == 2 && ps.failed == 0,
+        "chaos: panic supervision off-script: restarts {} panics {} failed {}",
+        ps.worker_restarts,
+        ps.worker_panics,
+        ps.failed
+    );
+    println!(
+        "  chaos panic: worker panicked x{} -> {} supervised restarts, \
+         stream survived byte-identical ({} redispatches)",
+        ps.worker_panics, ps.worker_restarts, ps.requests_redispatched,
+    );
+
+    // -- scenario 3: breaker opens, denies, probes half-open, recovers ------
+    let mut bcfg = base_cfg.clone();
+    bcfg.workers = 1;
+    bcfg.retry_budget = 0; // the injected fault must fail its request
+    bcfg.restart_budget = 3;
+    bcfg.breaker_open_after = 1;
+    bcfg.breaker_recover_after = 1;
+    // wide enough that the deny-while-open assertion cannot race the
+    // cooldown on a stalled CI machine
+    bcfg.breaker_cooldown_ms = 250;
+    bcfg.default_deadline_ms = 0;
+    let bmock = MockBackend::new(1, 8, 64).vocab(50_021);
+    let bplan = FaultPlan::seeded(3).inject(FaultKind::DecodeError, FaultSchedule::Once(2));
+    let bpool = fault_pool(bcfg, bmock, bplan)?;
+    let router = ModelRouter::from_pools(vec![(name.clone(), bpool)])?;
+    let bopts = || SubmitOptions { max_new_tokens: Some(4), ..Default::default() };
+    let c = router.generate(&name, prompts[0].clone(), bopts())?;
+    anyhow::ensure!(
+        matches!(c.finish_reason, FinishReason::Error { .. }),
+        "chaos: injected fault with retry_budget=0 should fail typed, got {:?}",
+        c.finish_reason
+    );
+    let pool = router.pool(&name).context("chaos pool vanished")?;
+    await_state(pool, BreakerState::Open)?;
+    match router.submit(&name, prompts[0].clone(), bopts()) {
+        Err(RouteError::CircuitOpen(m)) => anyhow::ensure!(m == name, "wrong model in CircuitOpen"),
+        Err(e) => anyhow::bail!("chaos: open breaker refused with the wrong error: {e}"),
+        Ok(_) => anyhow::bail!("chaos: open breaker admitted a request before its cooldown"),
+    }
+    std::thread::sleep(Duration::from_millis(300));
+    let probe = router.generate(&name, prompts[1 % prompts.len()].clone(), bopts())?;
+    anyhow::ensure!(
+        matches!(probe.finish_reason, FinishReason::Length | FinishReason::Stop),
+        "chaos: half-open probe failed with {:?}",
+        probe.finish_reason
+    );
+    await_state(pool, BreakerState::Healthy)?;
+    let bs = router.aggregate_stats();
+    router.shutdown();
+    anyhow::ensure!(
+        bs.breaker_opens >= 1 && bs.breaker_recoveries >= 1,
+        "chaos: breaker walk left no transition evidence (opens {}, recoveries {})",
+        bs.breaker_opens,
+        bs.breaker_recoveries
+    );
+    println!(
+        "  chaos breaker: opened on fault, denied while open, probe recovered -> healthy \
+         (opens {}, recoveries {})",
+        bs.breaker_opens, bs.breaker_recoveries,
+    );
+
+    // scenario 3 submits 2 resolvable requests (the denied CircuitOpen
+    // submit never queues); every wait() above returned, so nothing is lost
+    let requests = n + 1 + 2;
+    let resolved = outs.len() + 1 + 2;
+    Ok(ChaosReport {
+        requests,
+        lost: requests - resolved,
+        redispatched: soak_stats.requests_redispatched + ps.requests_redispatched,
+        retries: soak_stats.retries + ps.retries,
+        worker_restarts: ps.worker_restarts,
+        worker_panics: ps.worker_panics,
+        breaker_opens: bs.breaker_opens,
+        breaker_recoveries: bs.breaker_recoveries,
+    })
 }
 
 fn cmd_rank(

@@ -59,6 +59,7 @@ use crate::runtime::executor::{buf_f32_vec, buf_i32_vec, lit_f32_vec, lit_i32, t
 use crate::runtime::{ArtifactDir, Executor};
 use crate::serve::kvcache::{KvPrefixCache, KvRowState};
 use crate::serve::kvcodec::{KvCodec, PlaneGeom};
+use crate::serve::queue::PushError;
 use crate::serve::service::{FinishReason, QueuedRequest, Shared};
 use crate::serve::slots::{self, SlotTable};
 use anyhow::{Context, Result};
@@ -143,6 +144,57 @@ pub trait EngineBackend {
     /// (the mock's position oracle) release the row here; stateless
     /// backends ignore it.
     fn vacate_row(&mut self, _row: usize) {}
+}
+
+/// Forwarding impl so wrappers generic over `B: EngineBackend` — the fault
+/// injector in `serve::fault` — compose with factories that hand out boxed
+/// backends without re-monomorphizing per concrete type.
+impl EngineBackend for Box<dyn EngineBackend> {
+    fn batch_size(&self) -> usize {
+        (**self).batch_size()
+    }
+
+    fn prompt_len(&self) -> usize {
+        (**self).prompt_len()
+    }
+
+    fn max_len(&self) -> usize {
+        (**self).max_len()
+    }
+
+    fn describe(&self) -> String {
+        (**self).describe()
+    }
+
+    fn prefill_row(&mut self, row: usize, window: &[i32], len: usize, keep: usize) -> Result<i32> {
+        (**self).prefill_row(row, window, len, keep)
+    }
+
+    // lint: hot-path-end — pure dynamic dispatch into the wrapped backend,
+    // which carries its own boundary marker.
+    fn decode_step(&mut self, feed: &[i32], pos: &[usize]) -> Result<Vec<i32>> {
+        (**self).decode_step(feed, pos)
+    }
+
+    fn kv_row_elems(&self) -> usize {
+        (**self).kv_row_elems()
+    }
+
+    fn kv_row_geom(&self) -> PlaneGeom {
+        (**self).kv_row_geom()
+    }
+
+    fn export_kv_row(&mut self, row: usize) -> Result<KvRowState> {
+        (**self).export_kv_row(row)
+    }
+
+    fn import_kv_row(&mut self, row: usize, kv: &KvRowState, len: usize) -> Result<()> {
+        (**self).import_kv_row(row, kv, len)
+    }
+
+    fn vacate_row(&mut self, row: usize) {
+        (**self).vacate_row(row);
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -419,7 +471,16 @@ pub(crate) struct EngineOptions {
     pub(crate) kv_codec: KvCodec,
     /// Normal-priority admissions per decode step; 0 = unlimited.
     pub(crate) join_chunk: usize,
+    /// How many times an in-flight request may be salvaged and redispatched
+    /// after worker faults before it resolves as `Error { retries }`.
+    pub(crate) retry_budget: u32,
 }
+
+/// Consecutive `serve_batch` failures after which a worker stops trusting
+/// its backend and dies (the supervision loop in `ServicePool::start_with`
+/// then respawns it with a *fresh* backend, restart budget permitting).
+/// Transient single-step faults never hit this; a wedged backend does.
+const FATAL_CONSEC_FAILURES: u32 = 3;
 
 /// Why the hot decode loop handed control back to [`serve_batch`].
 enum LoopEvent {
@@ -503,6 +564,8 @@ pub(crate) fn run_worker(
         if st.join_chunk == 0 { "off".into() } else { st.join_chunk.to_string() }
     ));
 
+    let mut consec_failures = 0u32;
+    let mut exit_err: Option<anyhow::Error> = None;
     loop {
         // Park while idle; `None` = queue closed and drained → exit.
         if table.active() == 0 {
@@ -522,17 +585,47 @@ pub(crate) fn run_worker(
         }
         sync_gauge(shared, &mut gauge, table.active());
 
-        if let Err(e) = serve_batch(shared, backend, &mut table, &mut gauge, &mut st) {
-            // release every backend row before failing the batch, so the
-            // backend's liveness model matches the now-empty table
-            table.occupied_into(&mut st.occ);
-            for &i in &st.occ {
-                backend.vacate_row(i);
+        // `catch_unwind` turns a panicking backend (or a scheduler bug)
+        // into a supervised worker death instead of a silently shrunken
+        // fleet; on every failure path the in-flight batch is *salvaged*
+        // back into the queue rather than failed wholesale.
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            serve_batch(shared, backend, &mut table, &mut gauge, &mut st)
+        }));
+        match outcome {
+            Ok(Ok(())) => {
+                consec_failures = 0; // the batch drained cleanly
             }
-            let n = table.fail_all(Instant::now());
-            shared.counters.failed.add(n as u64);
-            sync_gauge(shared, &mut gauge, 0);
-            metrics::log_info(&format!("serve batch failed ({n} requests): {e:#}"));
+            Ok(Err(e)) => {
+                consec_failures += 1;
+                let n = salvage_batch(backend, &mut table, shared, &mut st, opts.retry_budget);
+                sync_gauge(shared, &mut gauge, 0);
+                shared.supervisor.breaker.record_failure();
+                metrics::log_info(&format!(
+                    "serve batch failed ({n} requests salvaged, \
+                     consecutive failure {consec_failures}): {e:#}"
+                ));
+                if consec_failures >= FATAL_CONSEC_FAILURES {
+                    exit_err = Some(e.context(format!(
+                        "{consec_failures} consecutive batch failures; \
+                         worker gives up its backend"
+                    )));
+                    break;
+                }
+            }
+            Err(payload) => {
+                shared.counters.worker_panics.add(1);
+                let n = salvage_batch(backend, &mut table, shared, &mut st, opts.retry_budget);
+                sync_gauge(shared, &mut gauge, 0);
+                let msg = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| (*s).to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "non-string panic payload".to_string());
+                exit_err =
+                    Some(anyhow::anyhow!("worker panicked mid-batch ({n} salvaged): {msg}"));
+                break;
+            }
         }
     }
     sync_gauge(shared, &mut gauge, 0);
@@ -540,31 +633,113 @@ pub(crate) fn run_worker(
     if st.kv_bytes > 0 {
         shared.counters.kv_bytes_resident.sub(st.kv_bytes);
     }
-    Ok(())
+    match exit_err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+/// Pull every in-flight request out of a faulted batch and put it back in
+/// the queue. Requests within their retry budget are requeued at the front
+/// of the high band (`BoundedQueue::requeue` — capacity-exempt, so a fault
+/// cannot turn into load shedding); the rest resolve with
+/// `Error { retries }` carrying their partial tokens. Returns how many rows
+/// were salvaged off the table.
+fn salvage_batch(
+    backend: &mut dyn EngineBackend,
+    table: &mut SlotTable,
+    shared: &Shared,
+    st: &mut WorkerState,
+    retry_budget: u32,
+) -> usize {
+    // release every backend row first, so the backend's liveness model
+    // matches the now-empty table (harmless on a dead backend — the
+    // supervisor hands the respawned worker a fresh one)
+    table.occupied_into(&mut st.occ);
+    for &i in &st.occ {
+        backend.vacate_row(i);
+    }
+    st.dead.clear();
+    let n = table.salvage_all(&mut st.dead);
+    let now = Instant::now();
+    for mut req in st.dead.drain(..) {
+        if req.retries < retry_budget {
+            req.retries += 1;
+            shared.counters.retries.add(1);
+            match shared.queue.requeue(req) {
+                Ok(()) => {
+                    shared.counters.requests_redispatched.add(1);
+                }
+                // Closed (or, defensively, Full): the pool is draining —
+                // resolve the request here instead of losing it.
+                Err(PushError::Closed(req) | PushError::Full(req)) => {
+                    let retries = req.retries;
+                    slots::complete_unstarted(req, FinishReason::Error { retries }, now);
+                    shared.counters.failed.add(1);
+                }
+            }
+        } else {
+            let retries = req.retries;
+            slots::complete_unstarted(req, FinishReason::Error { retries }, now);
+            shared.counters.failed.add(1);
+        }
+    }
+    n
 }
 
 /// Pop-side resolution: requests that should never occupy a slot complete
 /// immediately; the rest are admitted (the caller guarantees a free slot).
 /// Returns whether a slot was actually occupied.
+///
+/// Shedding happens here, *before* any prefill is burned: a deadline that
+/// already passed while queued resolves as `DeadlineExpired` (also counted
+/// under `shed_expired`), and a deadline the pool's measured rates say is
+/// unreachable resolves as `Shed` (counted under `shed_infeasible`).
 fn admit_one(table: &mut SlotTable, shared: &Shared, req: QueuedRequest) -> bool {
     let now = Instant::now();
     if req.cancel.poll() {
         slots::complete_unstarted(req, FinishReason::Cancelled, now);
         shared.counters.cancelled.add(1);
     } else if req.deadline.is_some_and(|d| now >= d) {
+        // expired while queued: shed at pop time — the request never cost
+        // a slot or a prefill
         slots::complete_unstarted(req, FinishReason::DeadlineExpired, now);
         shared.counters.expired.add(1);
+        shared.counters.shed_expired.add(1);
     } else if req.max_new_tokens == 0 {
         // zero generation budget: complete empty instead of emitting the
         // encode token
         slots::complete_unstarted(req, FinishReason::Length, now);
         shared.counters.completed.add(1);
+    } else if deadline_infeasible(shared, &req, now) {
+        slots::complete_unstarted(req, FinishReason::Shed, now);
+        shared.counters.shed_infeasible.add(1);
     } else if table.admit(req, now).is_none() {
         debug_assert!(false, "admit_one called with a full slot table");
     } else {
         return true;
     }
     false
+}
+
+/// SLO feasibility check against the pool's EWMA-measured rates: one
+/// prefill plus `max_new_tokens` decode steps must fit in the deadline's
+/// remaining budget. Both estimators must be seeded (a fresh pool has no
+/// evidence and sheds nothing), and requests without deadlines are always
+/// feasible. Pure saturating integer arithmetic — this runs on the decode
+/// hot path via `refill_slots`.
+fn deadline_infeasible(shared: &Shared, req: &QueuedRequest, now: Instant) -> bool {
+    let Some(deadline) = req.deadline else { return false };
+    let prefill = shared.counters.prefill_ewma.estimate();
+    let decode = shared.counters.decode_ewma.estimate();
+    if prefill == 0 || decode == 0 {
+        return false;
+    }
+    let remaining = deadline.saturating_duration_since(now).as_nanos() as u64;
+    // a salvaged request already spent part of its token budget
+    let tokens_left = req.max_new_tokens.saturating_sub(req.emitted.len()) as u64;
+    let need = prefill.saturating_add(decode.saturating_mul(tokens_left));
+    need > remaining
 }
 
 /// Chunked, priority-aware top-up of free slots: High-priority requests are
@@ -673,8 +848,10 @@ fn encode_row(
             }
             let t0 = Instant::now();
             produced = backend.prefill_row(i, window, len, keep)?;
+            let dt = t0.elapsed().as_nanos() as u64;
             c.prefill_calls.add(1);
-            c.prefill_nanos.add(t0.elapsed().as_nanos() as u64);
+            c.prefill_nanos.add(dt);
+            c.prefill_ewma.observe(dt);
             let kv = backend.export_kv_row(i)?;
             let out = cache.insert(h, window.clone(), len, &kv, produced)?;
             c.kv_cache_evictions.add(out.evicted);
@@ -695,8 +872,10 @@ fn encode_row(
     if !restored {
         let t0 = Instant::now();
         produced = backend.prefill_row(i, window, len, 0)?;
+        let dt = t0.elapsed().as_nanos() as u64;
         c.prefill_calls.add(1);
-        c.prefill_nanos.add(t0.elapsed().as_nanos() as u64);
+        c.prefill_nanos.add(dt);
+        c.prefill_ewma.observe(dt);
     }
 
     let now = Instant::now();
@@ -805,8 +984,13 @@ fn decode_loop(
         anyhow::ensure!(rows == serve_bs, "decode returned {rows} rows, want {serve_bs}");
 
         table.occupied_into(&mut st.occ);
+        let step_nanos = t_step.elapsed().as_nanos() as u64;
         shared.counters.decoded_tokens.add(st.occ.len() as u64);
-        shared.counters.decode_nanos.add(t_step.elapsed().as_nanos() as u64);
+        shared.counters.decode_nanos.add(step_nanos);
+        if !st.occ.is_empty() {
+            // per-useful-token cost feeds the admission feasibility check
+            shared.counters.decode_ewma.observe(step_nanos / st.occ.len() as u64);
+        }
         now = Instant::now();
         for &i in &st.occ {
             table.bump_pos(i);
@@ -830,6 +1014,9 @@ fn tally_finish(shared: &Shared, reason: FinishReason) {
     match reason {
         FinishReason::Length | FinishReason::Stop => {
             shared.counters.completed.add(1);
+            // completions are the circuit breaker's success signal (one
+            // short lock-free-of-allocation transition; hot-path safe)
+            shared.supervisor.breaker.record_success();
         }
         // cancellations/expiries are tallied where they are detected
         _ => {}

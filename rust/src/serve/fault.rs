@@ -1,0 +1,416 @@
+//! Scripted fault injection: a deterministic, seeded [`FaultPlan`] plus a
+//! [`FaultInjectingBackend`] wrapper that turns any [`EngineBackend`] (mock
+//! or PJRT) into a misbehaving one — on a script, not by accident.
+//!
+//! The plan is a list of `(fault kind, schedule)` pairs. Schedules count
+//! calls **per injection site** (prefill / decode / export / import), so
+//! "fail the 5th prefill" and "fail every 7th decode step" compose without
+//! interfering. Probabilistic schedules draw from a splitmix64 stream
+//! seeded by `(plan seed, worker index)`, so a chaos soak is byte-for-byte
+//! reproducible across runs while different workers still see different
+//! fault timings.
+//!
+//! Fault taxonomy (see `docs/robustness.md`):
+//!
+//! | kind              | site    | surfaces as                               |
+//! |-------------------|---------|-------------------------------------------|
+//! | `DecodeError`     | decode  | `Err` from `decode_step` → batch failure  |
+//! | `PrefillError`    | prefill | `Err` from `prefill_row` → batch failure  |
+//! | `ExportCorrupt`   | export  | sign-flipped KV snapshot → poisoned cache |
+//! | `ImportError`     | import  | `Err` from `import_kv_row`                |
+//! | `LatencySpike`    | decode  | bounded stall before the step runs        |
+//! | `WorkerHang`      | decode  | longer bounded stall (SLO pressure)       |
+//! | `WorkerPanic`     | decode  | thread panic → supervisor restart path    |
+//!
+//! `LatencySpike` and `WorkerHang` differ only in intent and typical
+//! duration: both are *bounded* stalls (an unbounded hang would wedge the
+//! chaos soak itself); the hang is long enough to blow deadlines and feed
+//! the EWMA shedding path, the spike is jitter.
+//!
+//! This module replaces `MockBackend::fail_after` — a single hard-coded
+//! one-shot decode error — with a composable plan any backend can carry.
+
+use crate::metrics;
+use crate::serve::engine::EngineBackend;
+use crate::serve::kvcache::KvRowState;
+use crate::serve::kvcodec::PlaneGeom;
+use crate::serve::sync;
+use anyhow::Result;
+use std::time::Duration;
+
+/// What goes wrong when a scheduled fault fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// `decode_step` returns an error (the whole batch fails over to the
+    /// salvage path).
+    DecodeError,
+    /// `prefill_row` returns an error (a single-row encode fails, which the
+    /// worker treats as a batch failure for that round).
+    PrefillError,
+    /// `export_kv_row` silently returns a sign-flipped snapshot — the
+    /// corruption is only observable when the poisoned cache entry is later
+    /// imported and the backend's cross-checks (or the model's outputs)
+    /// disagree.
+    ExportCorrupt,
+    /// `import_kv_row` returns an error (a cache restore fails mid-join).
+    ImportError,
+    /// A bounded stall before the decode step runs.
+    LatencySpike(Duration),
+    /// A longer bounded stall — long enough to blow deadlines, not long
+    /// enough to wedge a test harness.
+    WorkerHang(Duration),
+    /// The worker thread panics inside `decode_step` — the supervision /
+    /// restart path's trigger.
+    WorkerPanic,
+}
+
+/// Which backend entry point a fault kind intercepts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Site {
+    Prefill = 0,
+    Decode = 1,
+    Export = 2,
+    Import = 3,
+}
+
+impl FaultKind {
+    fn site(self) -> Site {
+        match self {
+            FaultKind::PrefillError => Site::Prefill,
+            FaultKind::ExportCorrupt => Site::Export,
+            FaultKind::ImportError => Site::Import,
+            FaultKind::DecodeError
+            | FaultKind::LatencySpike(_)
+            | FaultKind::WorkerHang(_)
+            | FaultKind::WorkerPanic => Site::Decode,
+        }
+    }
+}
+
+/// When a fault fires, counted in calls to its site (1-based).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSchedule {
+    /// Fire on exactly the `n`th call to the site (1-based; 0 ≡ 1), once.
+    Once(u64),
+    /// Fire on every `n`th call (n = 0 never fires).
+    EveryNth(u64),
+    /// Fire on each call with probability `num/den`, drawn from the plan's
+    /// seeded splitmix64 stream (`den` = 0 never fires).
+    Probabilistic { num: u32, den: u32 },
+}
+
+/// A deterministic fault script: seed + `(kind, schedule)` list. `Clone` so
+/// one plan can arm every worker of a pool (each worker's stream is
+/// re-seeded with its index).
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    seed: u64,
+    faults: Vec<(FaultKind, FaultSchedule)>,
+}
+
+impl FaultPlan {
+    /// An empty plan drawing from `seed`.
+    pub fn seeded(seed: u64) -> Self {
+        Self { seed, faults: Vec::new() }
+    }
+
+    /// Add one scheduled fault (builder-style).
+    pub fn inject(mut self, kind: FaultKind, schedule: FaultSchedule) -> Self {
+        self.faults.push((kind, schedule));
+        self
+    }
+
+    /// No faults scheduled at all?
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Arm this plan around a backend for worker `worker`. The worker index
+    /// perturbs the probabilistic stream only — call-count schedules stay
+    /// identical across workers.
+    pub fn wrap<B: EngineBackend>(&self, inner: B, worker: usize) -> FaultInjectingBackend<B> {
+        FaultInjectingBackend {
+            inner,
+            faults: self.faults.iter().map(|&(kind, schedule)| Armed {
+                kind,
+                schedule,
+                fired: false,
+            }).collect(),
+            calls: [0; 4],
+            rng: splitmix64(self.seed ^ splitmix64(worker as u64 + 1)),
+        }
+    }
+}
+
+/// One scheduled fault plus its per-backend firing state.
+struct Armed {
+    kind: FaultKind,
+    schedule: FaultSchedule,
+    fired: bool,
+}
+
+/// An [`EngineBackend`] that forwards to `inner` but consults its armed
+/// fault list at every entry point. Wrap a `Box<dyn EngineBackend>` to slot
+/// into an existing backend factory unchanged.
+pub struct FaultInjectingBackend<B: EngineBackend> {
+    inner: B,
+    faults: Vec<Armed>,
+    /// Per-site call counters, indexed by [`Site`].
+    calls: [u64; 4],
+    /// splitmix64 state for probabilistic schedules.
+    rng: u64,
+}
+
+/// The splitmix64 mixer (same house PRNG as the mock backend's noise):
+/// full-period, seedable, and good enough for fault schedules.
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+impl<B: EngineBackend> FaultInjectingBackend<B> {
+    /// Count one call to `site` and return the first armed fault that fires
+    /// on it, if any. Evaluation order is the plan's insertion order, so
+    /// firing is deterministic given (seed, worker, call history).
+    fn trip(&mut self, site: Site) -> Option<FaultKind> {
+        let n = {
+            let c = &mut self.calls[site as usize];
+            *c += 1;
+            *c
+        };
+        for f in self.faults.iter_mut() {
+            if f.kind.site() != site {
+                continue;
+            }
+            let fire = match f.schedule {
+                FaultSchedule::Once(at) => !f.fired && n == at.max(1),
+                FaultSchedule::EveryNth(k) => k > 0 && n % k == 0,
+                FaultSchedule::Probabilistic { num, den } => {
+                    self.rng = splitmix64(self.rng);
+                    den > 0 && self.rng % u64::from(den) < u64::from(num)
+                }
+            };
+            if fire {
+                f.fired = true;
+                metrics::log_info(&format!(
+                    "fault injected: {:?} at {site:?} call {n}",
+                    f.kind
+                ));
+                return Some(f.kind);
+            }
+        }
+        None
+    }
+}
+
+impl<B: EngineBackend> EngineBackend for FaultInjectingBackend<B> {
+    fn batch_size(&self) -> usize {
+        self.inner.batch_size()
+    }
+
+    fn prompt_len(&self) -> usize {
+        self.inner.prompt_len()
+    }
+
+    fn max_len(&self) -> usize {
+        self.inner.max_len()
+    }
+
+    fn describe(&self) -> String {
+        format!("faulty({})", self.inner.describe())
+    }
+
+    fn prefill_row(&mut self, row: usize, window: &[i32], len: usize, keep: usize) -> Result<i32> {
+        if let Some(FaultKind::PrefillError) = self.trip(Site::Prefill) {
+            anyhow::bail!("injected fault: prefill error (row {row})");
+        }
+        self.inner.prefill_row(row, window, len, keep)
+    }
+
+    // lint: hot-path-end — fault bookkeeping is chaos-harness overhead, not
+    // scheduler cost; the wrapped backend's decode_step is its own boundary.
+    fn decode_step(&mut self, feed: &[i32], pos: &[usize]) -> Result<Vec<i32>> {
+        match self.trip(Site::Decode) {
+            Some(FaultKind::DecodeError) => {
+                anyhow::bail!("injected fault: decode error");
+            }
+            Some(FaultKind::LatencySpike(d)) | Some(FaultKind::WorkerHang(d)) => {
+                sync::sleep(d);
+            }
+            Some(FaultKind::WorkerPanic) => {
+                // lint: allow(no-panic): the entire point of this fault kind
+                // is to exercise the supervisor's catch_unwind/restart path.
+                panic!("injected fault: worker panic");
+            }
+            _ => {}
+        }
+        self.inner.decode_step(feed, pos)
+    }
+
+    fn kv_row_elems(&self) -> usize {
+        self.inner.kv_row_elems()
+    }
+
+    fn kv_row_geom(&self) -> PlaneGeom {
+        self.inner.kv_row_geom()
+    }
+
+    fn export_kv_row(&mut self, row: usize) -> Result<KvRowState> {
+        let mut kv = self.inner.export_kv_row(row)?;
+        if let Some(FaultKind::ExportCorrupt) = self.trip(Site::Export) {
+            // Sign-flip both planes: numerically loud enough that any
+            // backend cross-check (the mock verifies restored content) or
+            // downstream output comparison catches the poisoned entry.
+            for x in kv.k.iter_mut().chain(kv.v.iter_mut()) {
+                *x = -*x;
+            }
+        }
+        Ok(kv)
+    }
+
+    fn import_kv_row(&mut self, row: usize, kv: &KvRowState, len: usize) -> Result<()> {
+        if let Some(FaultKind::ImportError) = self.trip(Site::Import) {
+            anyhow::bail!("injected fault: KV import error (row {row})");
+        }
+        self.inner.import_kv_row(row, kv, len)
+    }
+
+    fn vacate_row(&mut self, row: usize) {
+        self.inner.vacate_row(row);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal backend for schedule tests: succeeds at everything.
+    struct NullBackend;
+
+    impl EngineBackend for NullBackend {
+        fn batch_size(&self) -> usize {
+            2
+        }
+        fn prompt_len(&self) -> usize {
+            4
+        }
+        fn max_len(&self) -> usize {
+            8
+        }
+        fn describe(&self) -> String {
+            "null".into()
+        }
+        fn prefill_row(&mut self, _r: usize, _w: &[i32], _l: usize, _k: usize) -> Result<i32> {
+            Ok(1)
+        }
+        fn decode_step(&mut self, feed: &[i32], _pos: &[usize]) -> Result<Vec<i32>> {
+            Ok(vec![0; feed.len()])
+        }
+        fn kv_row_elems(&self) -> usize {
+            4
+        }
+        fn export_kv_row(&mut self, _row: usize) -> Result<KvRowState> {
+            Ok(KvRowState { k: vec![1.0; 4], v: vec![2.0; 4] })
+        }
+        fn import_kv_row(&mut self, _row: usize, _kv: &KvRowState, _len: usize) -> Result<()> {
+            Ok(())
+        }
+    }
+
+    fn step(b: &mut FaultInjectingBackend<NullBackend>) -> Result<Vec<i32>> {
+        b.decode_step(&[0, 0], &[0, 0])
+    }
+
+    #[test]
+    fn once_fires_exactly_once_at_the_scheduled_call() {
+        let plan = FaultPlan::seeded(7)
+            .inject(FaultKind::DecodeError, FaultSchedule::Once(3));
+        let mut b = plan.wrap(NullBackend, 0);
+        assert!(step(&mut b).is_ok());
+        assert!(step(&mut b).is_ok());
+        assert!(step(&mut b).is_err(), "third decode call fires");
+        for _ in 0..10 {
+            assert!(step(&mut b).is_ok(), "one-shot never re-fires");
+        }
+    }
+
+    #[test]
+    fn every_nth_fires_periodically_per_site() {
+        let plan = FaultPlan::seeded(7)
+            .inject(FaultKind::DecodeError, FaultSchedule::EveryNth(4));
+        let mut b = plan.wrap(NullBackend, 0);
+        let outcomes: Vec<bool> = (0..12).map(|_| step(&mut b).is_err()).collect();
+        let expect: Vec<bool> = (1..=12u64).map(|n| n % 4 == 0).collect();
+        assert_eq!(outcomes, expect);
+        // the decode schedule never counts prefill calls
+        assert!(b.prefill_row(0, &[0; 4], 1, 0).is_ok());
+    }
+
+    #[test]
+    fn probabilistic_stream_is_deterministic_per_seed_and_worker() {
+        let plan = FaultPlan::seeded(42)
+            .inject(FaultKind::DecodeError, FaultSchedule::Probabilistic { num: 1, den: 3 });
+        let run = |worker: usize| -> Vec<bool> {
+            let mut b = plan.wrap(NullBackend, worker);
+            (0..64).map(|_| step(&mut b).is_err()).collect()
+        };
+        assert_eq!(run(0), run(0), "same seed + worker → identical script");
+        assert!(run(0).iter().any(|&f| f), "1/3 odds fire within 64 calls");
+        assert!(run(0).iter().any(|&f| !f), "…but not on every call");
+        assert_ne!(run(0), run(1), "workers draw from distinct streams");
+    }
+
+    #[test]
+    fn export_corruption_flips_planes_and_import_fault_errors() {
+        let plan = FaultPlan::seeded(1)
+            .inject(FaultKind::ExportCorrupt, FaultSchedule::Once(1))
+            .inject(FaultKind::ImportError, FaultSchedule::Once(2));
+        let mut b = plan.wrap(NullBackend, 0);
+        let kv = b.export_kv_row(0).unwrap();
+        assert!(kv.k.iter().all(|&x| x == -1.0), "k plane sign-flipped");
+        assert!(kv.v.iter().all(|&x| x == -2.0), "v plane sign-flipped");
+        let clean = b.export_kv_row(0).unwrap();
+        assert!(clean.k.iter().all(|&x| x == 1.0), "one-shot corruption");
+        assert!(b.import_kv_row(0, &clean, 1).is_ok());
+        assert!(b.import_kv_row(0, &clean, 1).is_err(), "second import fires");
+    }
+
+    #[test]
+    fn prefill_fault_errors_and_spike_only_delays() {
+        let plan = FaultPlan::seeded(1)
+            .inject(FaultKind::PrefillError, FaultSchedule::Once(2))
+            .inject(
+                FaultKind::LatencySpike(Duration::from_millis(1)),
+                FaultSchedule::Once(1),
+            );
+        let mut b = plan.wrap(NullBackend, 0);
+        assert!(b.prefill_row(0, &[0; 4], 1, 0).is_ok());
+        assert!(b.prefill_row(0, &[0; 4], 1, 0).is_err());
+        assert!(step(&mut b).is_ok(), "a spike stalls but succeeds");
+    }
+
+    #[test]
+    fn worker_panic_fault_panics_for_the_supervisor_to_catch() {
+        let plan =
+            FaultPlan::seeded(1).inject(FaultKind::WorkerPanic, FaultSchedule::Once(1));
+        let mut b = plan.wrap(NullBackend, 0);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = step(&mut b);
+        }));
+        assert!(caught.is_err(), "WorkerPanic panics out of decode_step");
+    }
+
+    #[test]
+    fn empty_plan_is_transparent() {
+        let plan = FaultPlan::default();
+        assert!(plan.is_empty());
+        let mut b = plan.wrap(NullBackend, 0);
+        assert_eq!(b.describe(), "faulty(null)");
+        assert_eq!(b.batch_size(), 2);
+        for _ in 0..32 {
+            assert!(step(&mut b).is_ok());
+        }
+    }
+}

@@ -51,12 +51,15 @@
 //! - [`prefill_delay`](MockBackend::prefill_delay): per-prefill latency, so
 //!   prefill avoidance shows up in throughput and `prefill_nanos`, and so
 //!   bursts deterministically queue up during a join boundary;
-//! - [`fail_after`](MockBackend::fail_after): one-shot decode failure, to
-//!   exercise the engine's batch-failure path (`FinishReason::Error`) and
-//!   its recovery on the next join prefill;
 //! - [`stride`](MockBackend::stride) / [`vocab`](MockBackend::vocab): make
 //!   streams distinguishable per model when several mock pools sit behind
 //!   one `ModelRouter`.
+//!
+//! Fault injection is *not* a mock knob: wrap any backend (this one
+//! included) in a [`FaultInjectingBackend`](crate::serve::fault) driven by
+//! a seeded `FaultPlan` — scripted decode/prefill errors, KV corruption,
+//! latency spikes, hangs, and worker panics, with one-shot/every-Nth/
+//! probabilistic schedules.
 
 use crate::serve::engine::EngineBackend;
 use crate::serve::kvcache::KvRowState;
@@ -122,8 +125,6 @@ pub struct MockBackend {
     vocab: i32,
     step_delay: Duration,
     prefill_delay: Duration,
-    fail_after: Option<u64>,
-    decode_calls: u64,
     /// Last encoded (or imported) `[batch * prompt_len]` windows — the
     /// mock's entire "KV state", encoded/exported/imported per row.
     windows: Vec<i32>,
@@ -149,8 +150,6 @@ impl MockBackend {
             vocab: 1009,
             step_delay: Duration::ZERO,
             prefill_delay: Duration::ZERO,
-            fail_after: None,
-            decode_calls: 0,
             windows: vec![crate::data::tokenizer::PAD; batch * prompt_len],
             live: vec![false; batch],
             row_pos: vec![0; batch],
@@ -184,16 +183,6 @@ impl MockBackend {
     /// measurable.
     pub fn prefill_delay(mut self, d: Duration) -> Self {
         self.prefill_delay = d;
-        self
-    }
-
-    /// Make the Nth decode call (1-based, counted across the backend's
-    /// lifetime) return an error — once. The trigger then clears, so the
-    /// worker's next row encode serves normally: tests cover both the
-    /// `FinishReason::Error` path and recovery.
-    pub fn fail_after(mut self, nth_call: u64) -> Self {
-        assert!(nth_call > 0, "fail_after is 1-based");
-        self.fail_after = Some(nth_call);
         self
     }
 
@@ -281,11 +270,6 @@ impl EngineBackend for MockBackend {
         anyhow::ensure!(pos.len() == self.batch, "decode pos is one position per row");
         if !self.step_delay.is_zero() {
             crate::serve::sync::sleep(self.step_delay);
-        }
-        self.decode_calls += 1;
-        if self.fail_after.is_some_and(|n| self.decode_calls >= n) {
-            self.fail_after = None; // one-shot: recover on the next prefill
-            anyhow::bail!("injected mock decode failure at call {}", self.decode_calls);
         }
         // The position checks are the mock's whole point as a test oracle:
         // a scheduler position that disagrees with the mock's own per-row
@@ -406,11 +390,17 @@ mod tests {
     }
 
     #[test]
-    fn fail_after_is_one_shot() {
-        let mut b = MockBackend::new(1, 2, 8).fail_after(2);
-        assert!(b.decode_step(&[1], &[0]).is_ok());
-        assert!(b.decode_step(&[2], &[0]).is_err());
-        assert!(b.decode_step(&[3], &[0]).is_ok(), "trigger clears after firing");
+    fn fault_wrapper_injects_into_the_mock() {
+        // Failure injection moved out of the mock into `serve::fault`; this
+        // pins the composition: a wrapped mock still position-checks, and
+        // the scripted decode fault fires exactly once.
+        use crate::serve::fault::{FaultKind, FaultPlan, FaultSchedule};
+        let plan = FaultPlan::seeded(7).inject(FaultKind::DecodeError, FaultSchedule::Once(2));
+        let mut b = plan.wrap(MockBackend::new(1, 2, 8), 0);
+        b.prefill_row(0, &[1, 0], 1, 0).unwrap();
+        assert!(b.decode_step(&[1], &[1]).is_ok());
+        assert!(b.decode_step(&[2], &[2]).is_err(), "scripted fault fires on call 2");
+        assert!(b.decode_step(&[2], &[2]).is_ok(), "one-shot: clears after firing");
     }
 
     #[test]

@@ -171,12 +171,44 @@
 //!   `docs/concurrency.md` for rule codes, waiver syntax, and the baseline
 //!   ratchet workflow.
 //! - **Interleaving checks** ([`model`] + `tests/serve_interleave.rs`): the
-//!   queue and KV-cache semantics are extracted into pure reference models
-//!   and checked against the real types under *exhaustive* enumeration of
-//!   small-thread interleavings — linearizability by construction, not by
-//!   stress-test luck.
+//!   queue, KV-cache, and circuit-breaker semantics are extracted into pure
+//!   reference models and checked against the real types under *exhaustive*
+//!   enumeration of small-thread interleavings — linearizability by
+//!   construction, not by stress-test luck.
+//!
+//! # Fault tolerance
+//!
+//! Workers fail; requests shouldn't (see `docs/robustness.md` for the full
+//! treatment):
+//!
+//! - **Scripted fault injection** ([`fault`]): a seeded, deterministic
+//!   [`FaultPlan`] arms a [`FaultInjectingBackend`] wrapper around *any*
+//!   backend with decode/prefill errors, KV export corruption and import
+//!   errors, latency spikes, hangs, and worker panics, on one-shot,
+//!   every-Nth, or seeded-probabilistic schedules. The `cola serve --mock
+//!   --chaos` harness drives a whole soak off one plan and asserts zero
+//!   lost requests.
+//! - **Worker supervision and salvage** ([`supervisor`] + the worker loop):
+//!   `serve_batch` runs under `catch_unwind`; on a panic or a persistent
+//!   batch error the dead worker's in-flight rows are *salvaged* — each
+//!   request folds its already-streamed tokens back in and is requeued at
+//!   the front of the queue (capacity-exempt), to resume on another worker
+//!   exactly where its stream paused, byte-identical for the client — up to
+//!   `retry_budget` times, after which it finishes with
+//!   [`FinishReason::Error`]. The pool respawns dead workers from a
+//!   pool-wide `restart_budget`.
+//! - **Circuit breaker** ([`supervisor::CircuitBreaker`]): consecutive
+//!   worker faults walk Healthy → Degraded → Open; `ModelRouter::submit`
+//!   consults it and refuses with `RouteError::CircuitOpen` instead of
+//!   queueing into a known-dead pool, and after a cooldown a single
+//!   half-open probe decides reopen-vs-recover.
+//! - **SLO-aware shedding**: at pop time a request is shed *before* burning
+//!   a prefill if its deadline already expired (`shed_expired`) or if EWMA
+//!   prefill/decode rates say it cannot finish in time
+//!   ([`FinishReason::Shed`], `shed_infeasible`).
 
 pub mod engine;
+pub mod fault;
 pub mod kvcache;
 pub mod kvcodec;
 pub mod mock;
@@ -185,9 +217,11 @@ pub mod queue;
 pub mod router;
 pub mod service;
 pub mod slots;
+pub mod supervisor;
 pub mod sync;
 
 pub use engine::{EngineBackend, PjrtBackend};
+pub use fault::{FaultInjectingBackend, FaultKind, FaultPlan, FaultSchedule};
 pub use kvcache::{InsertOutcome, KvPrefixCache, KvRowState};
 pub use kvcodec::{EncodedKvRow, EncodedPlane, KvCodec, KvCodecKind, PlaneGeom};
 pub use mock::MockBackend;
@@ -198,3 +232,4 @@ pub use service::{
     ServicePool, ServiceStats, StreamEvent, SubmitError, SubmitOptions, Timing, TokenStream,
 };
 pub use slots::SlotTable;
+pub use supervisor::{BreakerSnapshot, BreakerState, CircuitBreaker, Supervisor};

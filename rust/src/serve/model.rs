@@ -3,9 +3,10 @@
 //!
 //! # Why this works
 //!
-//! Both checked primitives serialise every operation under one lock
+//! Every checked primitive serialises each operation under one lock
 //! ([`BoundedQueue`] holds its `Mutex` for the whole op; [`KvPrefixCache`]
-//! is `&mut self` behind a worker), so any concurrent execution is
+//! is `&mut self` behind a worker; [`CircuitBreaker`] takes its state lock
+//! per transition), so any concurrent execution is
 //! equivalent to *some* total order of the individual ops. Linearizability
 //! therefore reduces to: **for every schedulable total order of the ops,
 //! the real type's observations match the reference model's.** The
@@ -33,6 +34,7 @@
 use crate::serve::kvcache::{hash_tokens, KvPrefixCache, KvRowState};
 use crate::serve::kvcodec;
 use crate::serve::queue::{BoundedQueue, PushError};
+use crate::serve::supervisor::{BreakerSnapshot, BreakerState, CircuitBreaker};
 use std::collections::VecDeque;
 
 // ---------------------------------------------------------------------------
@@ -546,6 +548,282 @@ fn check_sequences_impl<S: CacheSut>(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Circuit breaker: ops, observations, reference model
+// ---------------------------------------------------------------------------
+
+/// One breaker operation. All three are non-blocking, so every interleaving
+/// is schedulable and the explorer enumerates raw permutations — no
+/// `ready` predicate needed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerOp {
+    /// `record_success()` — a request completed normally.
+    Success,
+    /// `record_failure()` — a batch error, worker panic, or factory error.
+    Failure,
+    /// `admit_with(cooled)` — an admission decision with the cooldown
+    /// predicate pinned, since a wall clock is not schedulable.
+    Admit { cooled: bool },
+}
+
+/// What a [`BreakerOp`] observed: the admission verdict (for admits) plus
+/// the state the breaker was left in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerObs {
+    /// Success/failure recorded; the resulting state.
+    Recorded(BreakerState),
+    /// Admission decision: the verdict and the resulting state.
+    Admit { admitted: bool, state: BreakerState },
+    /// Pseudo-observation used when the end-of-schedule snapshots (state
+    /// plus transition tallies) disagree.
+    Snapshot(BreakerSnapshot),
+}
+
+/// Executable specification of [`CircuitBreaker`] transitions — the pure
+/// function of `(state, op, cooldown_elapsed)` drawn in the state diagram
+/// in `serve::supervisor`, including the transition tallies the snapshot
+/// reports.
+#[derive(Clone, Debug)]
+pub struct BreakerModel {
+    open_after: u32,
+    recover_after: u32,
+    state: BreakerState,
+    consec_failures: u32,
+    consec_successes: u32,
+    degraded: u64,
+    opens: u64,
+    half_opens: u64,
+    recoveries: u64,
+}
+
+impl BreakerModel {
+    pub fn new(open_after: u32, recover_after: u32) -> Self {
+        Self {
+            open_after,
+            // mirrors the real type's floor
+            recover_after: recover_after.max(1),
+            state: BreakerState::Healthy,
+            consec_failures: 0,
+            consec_successes: 0,
+            degraded: 0,
+            opens: 0,
+            half_opens: 0,
+            recoveries: 0,
+        }
+    }
+
+    /// State + tallies, for end-of-schedule comparison against the SUT's.
+    pub fn snapshot(&self) -> BreakerSnapshot {
+        BreakerSnapshot {
+            state: self.state,
+            degraded: self.degraded,
+            opens: self.opens,
+            half_opens: self.half_opens,
+            recoveries: self.recoveries,
+        }
+    }
+
+    pub fn apply(&mut self, op: BreakerOp) -> BreakerObs {
+        match op {
+            BreakerOp::Success => {
+                if self.open_after != 0 {
+                    self.consec_failures = 0;
+                    self.consec_successes = self.consec_successes.saturating_add(1);
+                    match self.state {
+                        BreakerState::Degraded
+                            if self.consec_successes >= self.recover_after =>
+                        {
+                            self.state = BreakerState::Healthy;
+                            self.recoveries += 1;
+                        }
+                        BreakerState::HalfOpen => {
+                            self.state = BreakerState::Healthy;
+                            self.recoveries += 1;
+                        }
+                        _ => {}
+                    }
+                }
+                BreakerObs::Recorded(self.state)
+            }
+            BreakerOp::Failure => {
+                if self.open_after != 0 {
+                    self.consec_successes = 0;
+                    self.consec_failures = self.consec_failures.saturating_add(1);
+                    match self.state {
+                        BreakerState::Healthy => {
+                            self.state = BreakerState::Degraded;
+                            self.degraded += 1;
+                            if self.consec_failures >= self.open_after {
+                                self.state = BreakerState::Open;
+                                self.opens += 1;
+                            }
+                        }
+                        BreakerState::Degraded
+                            if self.consec_failures >= self.open_after =>
+                        {
+                            self.state = BreakerState::Open;
+                            self.opens += 1;
+                        }
+                        BreakerState::HalfOpen => {
+                            self.state = BreakerState::Open;
+                            self.opens += 1;
+                        }
+                        _ => {}
+                    }
+                }
+                BreakerObs::Recorded(self.state)
+            }
+            BreakerOp::Admit { cooled } => {
+                let admitted = if self.open_after == 0 {
+                    true
+                } else {
+                    match self.state {
+                        BreakerState::Healthy | BreakerState::Degraded => true,
+                        BreakerState::Open if cooled => {
+                            self.state = BreakerState::HalfOpen;
+                            self.half_opens += 1;
+                            true
+                        }
+                        BreakerState::Open | BreakerState::HalfOpen => false,
+                    }
+                };
+                BreakerObs::Admit { admitted, state: self.state }
+            }
+        }
+    }
+}
+
+/// System-under-test seam for the breaker model. On the real type `apply`
+/// is two lock acquisitions (the transition, then `state()`), which is
+/// sound here: replays are single-threaded — the *schedule* carries the
+/// concurrency, exactly like the queue explorer.
+pub trait BreakerSut {
+    fn apply(&self, op: BreakerOp) -> BreakerObs;
+    fn snapshot(&self) -> BreakerSnapshot;
+}
+
+impl BreakerSut for CircuitBreaker {
+    fn apply(&self, op: BreakerOp) -> BreakerObs {
+        match op {
+            BreakerOp::Success => {
+                self.record_success();
+                BreakerObs::Recorded(self.state())
+            }
+            BreakerOp::Failure => {
+                self.record_failure();
+                BreakerObs::Recorded(self.state())
+            }
+            BreakerOp::Admit { cooled } => {
+                let admitted = self.admit_with(cooled);
+                BreakerObs::Admit { admitted, state: self.state() }
+            }
+        }
+    }
+
+    fn snapshot(&self) -> BreakerSnapshot {
+        CircuitBreaker::snapshot(self)
+    }
+}
+
+/// First disagreement between a breaker SUT and [`BreakerModel`].
+#[derive(Clone, Debug)]
+pub struct BreakerDivergence {
+    /// The full `(thread, op)` schedule that exposed it.
+    pub schedule: Vec<(usize, BreakerOp)>,
+    /// Index of the diverging op, or `schedule.len()` for an
+    /// end-of-schedule snapshot mismatch.
+    pub step: usize,
+    pub expected: BreakerObs,
+    pub actual: BreakerObs,
+}
+
+/// Result of exhaustively exploring every breaker interleaving.
+#[derive(Debug)]
+pub struct BreakerExploreReport {
+    /// Complete schedules enumerated (every thread ran every op).
+    pub schedules: usize,
+    /// First model/SUT disagreement found, if any.
+    pub divergence: Option<BreakerDivergence>,
+}
+
+/// Exhaustively enumerate every interleaving of the per-thread op
+/// sequences (all breaker ops are non-blocking, so all interleavings are
+/// schedulable), replay each on a fresh SUT from `mk`, and compare
+/// observations step by step — plus the final snapshot — against a fresh
+/// [`BreakerModel`].
+pub fn explore_breaker<S: BreakerSut>(
+    open_after: u32,
+    recover_after: u32,
+    threads: &[Vec<BreakerOp>],
+    mk: &dyn Fn() -> S,
+) -> BreakerExploreReport {
+    let mut report = BreakerExploreReport { schedules: 0, divergence: None };
+    let mut pos = vec![0usize; threads.len()];
+    let mut trace: Vec<(usize, BreakerOp)> = Vec::new();
+    breaker_dfs(open_after, recover_after, threads, &mut pos, &mut trace, mk, &mut report);
+    report
+}
+
+fn breaker_dfs<S: BreakerSut>(
+    open_after: u32,
+    recover_after: u32,
+    threads: &[Vec<BreakerOp>],
+    pos: &mut [usize],
+    trace: &mut Vec<(usize, BreakerOp)>,
+    mk: &dyn Fn() -> S,
+    report: &mut BreakerExploreReport,
+) {
+    let mut complete = true;
+    for t in 0..threads.len() {
+        if pos[t] >= threads[t].len() {
+            continue;
+        }
+        complete = false;
+        let op = threads[t][pos[t]];
+        pos[t] += 1;
+        trace.push((t, op));
+        breaker_dfs(open_after, recover_after, threads, pos, trace, mk, report);
+        trace.pop();
+        pos[t] -= 1;
+    }
+    if complete {
+        report.schedules += 1;
+        breaker_replay(open_after, recover_after, trace, mk, report);
+    }
+}
+
+fn breaker_replay<S: BreakerSut>(
+    open_after: u32,
+    recover_after: u32,
+    trace: &[(usize, BreakerOp)],
+    mk: &dyn Fn() -> S,
+    report: &mut BreakerExploreReport,
+) {
+    if report.divergence.is_some() {
+        return;
+    }
+    let sut = mk();
+    let mut model = BreakerModel::new(open_after, recover_after);
+    for (step, &(_, op)) in trace.iter().enumerate() {
+        let expected = model.apply(op);
+        let actual = sut.apply(op);
+        if expected != actual {
+            report.divergence =
+                Some(BreakerDivergence { schedule: trace.to_vec(), step, expected, actual });
+            return;
+        }
+    }
+    let (want, got) = (model.snapshot(), sut.snapshot());
+    if want != got {
+        report.divergence = Some(BreakerDivergence {
+            schedule: trace.to_vec(),
+            step: trace.len(),
+            expected: BreakerObs::Snapshot(want),
+            actual: BreakerObs::Snapshot(got),
+        });
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -653,5 +931,51 @@ mod tests {
         assert_eq!(report.schedules, 0);
         assert_eq!(report.deadlocks, 1);
         assert!(report.divergence.is_none());
+    }
+
+    #[test]
+    fn breaker_model_walks_the_state_machine() {
+        let mut m = BreakerModel::new(2, 2);
+        assert_eq!(m.apply(BreakerOp::Failure), BreakerObs::Recorded(BreakerState::Degraded));
+        assert_eq!(m.apply(BreakerOp::Failure), BreakerObs::Recorded(BreakerState::Open));
+        assert_eq!(
+            m.apply(BreakerOp::Admit { cooled: false }),
+            BreakerObs::Admit { admitted: false, state: BreakerState::Open }
+        );
+        assert_eq!(
+            m.apply(BreakerOp::Admit { cooled: true }),
+            BreakerObs::Admit { admitted: true, state: BreakerState::HalfOpen }
+        );
+        assert_eq!(m.apply(BreakerOp::Success), BreakerObs::Recorded(BreakerState::Healthy));
+        let s = m.snapshot();
+        assert_eq!((s.degraded, s.opens, s.half_opens, s.recoveries), (1, 1, 1, 1));
+    }
+
+    #[test]
+    fn breaker_model_with_open_after_zero_never_transitions() {
+        let mut m = BreakerModel::new(0, 1);
+        for _ in 0..5 {
+            assert_eq!(m.apply(BreakerOp::Failure), BreakerObs::Recorded(BreakerState::Healthy));
+        }
+        assert_eq!(
+            m.apply(BreakerOp::Admit { cooled: false }),
+            BreakerObs::Admit { admitted: true, state: BreakerState::Healthy }
+        );
+        assert_eq!(m.snapshot(), BreakerSnapshot::default());
+    }
+
+    #[test]
+    fn breaker_explorer_matches_the_real_breaker() {
+        use std::time::Duration;
+        // 2 failures || 1 success || 1 probe admit: 4!/2! = 12 schedules.
+        let threads = vec![
+            vec![BreakerOp::Failure, BreakerOp::Failure],
+            vec![BreakerOp::Success],
+            vec![BreakerOp::Admit { cooled: true }],
+        ];
+        let report =
+            explore_breaker(2, 1, &threads, &|| CircuitBreaker::new(2, 1, Duration::ZERO));
+        assert_eq!(report.schedules, 12);
+        assert!(report.divergence.is_none(), "{:?}", report.divergence);
     }
 }

@@ -111,6 +111,24 @@ impl<T> BoundedQueue<T> {
         }
     }
 
+    /// Re-enqueue a salvaged in-flight item at the *front* of the high band,
+    /// exempt from the capacity check: the item already held queue capacity
+    /// when it was first admitted, so bouncing it on `Full` would turn a
+    /// worker fault into load shedding. Front-of-band keeps redispatch
+    /// latency minimal (high pops first and is never chunk-limited). Fails
+    /// only when the queue is closed — the caller then resolves the request
+    /// itself (typed error completion) instead of losing it.
+    pub fn requeue(&self, item: T) -> Result<(), PushError<T>> {
+        let mut inner = self.inner.lock_or_poisoned();
+        if inner.closed {
+            return Err(PushError::Closed(item));
+        }
+        inner.high.push_front(item);
+        drop(inner);
+        self.cv.notify_one();
+        Ok(())
+    }
+
     /// Remove and return every queued item matching `pred`, freeing its
     /// capacity immediately (cancelled/expired requests must not block
     /// admission while they wait for a pop). Order within bands is kept.
@@ -298,6 +316,21 @@ mod tests {
             vec![0, 2, 4],
             "survivors keep band order across both sweeps"
         );
+    }
+
+    #[test]
+    fn requeue_jumps_the_line_and_ignores_capacity() {
+        let q = BoundedQueue::new(2);
+        q.push("n1", false).unwrap();
+        q.push("h1", true).unwrap();
+        assert!(matches!(q.push("n2", false), Err(PushError::Full("n2"))));
+        q.requeue("salvaged").unwrap(); // full queue still accepts it
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.try_pop(), Some("salvaged"), "front of the high band");
+        assert_eq!(q.try_pop(), Some("h1"));
+        assert_eq!(q.try_pop(), Some("n1"));
+        q.close();
+        assert!(matches!(q.requeue("late"), Err(PushError::Closed("late"))));
     }
 
     #[test]

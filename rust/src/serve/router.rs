@@ -27,6 +27,11 @@ pub enum RouteError {
     UnknownModel(String),
     /// The named pool refused the submit (backpressure or shutdown).
     Submit(SubmitError),
+    /// The named pool's circuit breaker is open (or a recovery probe is
+    /// already in flight): recent worker faults say the pool is unhealthy,
+    /// so the router refuses to queue into it. Retryable — the breaker
+    /// admits a probe once its cooldown elapses.
+    CircuitOpen(String),
 }
 
 impl std::fmt::Display for RouteError {
@@ -34,6 +39,9 @@ impl std::fmt::Display for RouteError {
         match self {
             RouteError::UnknownModel(m) => write!(f, "unknown model `{m}`"),
             RouteError::Submit(e) => write!(f, "{e}"),
+            RouteError::CircuitOpen(m) => {
+                write!(f, "circuit breaker open for model `{m}`")
+            }
         }
     }
 }
@@ -94,7 +102,11 @@ impl ModelRouter {
     }
 
     /// Route a submit to the named model's pool. Non-blocking; per-model
-    /// backpressure surfaces as `RouteError::Submit(QueueFull)`.
+    /// backpressure surfaces as `RouteError::Submit(QueueFull)`, and a pool
+    /// whose circuit breaker is open refuses with `RouteError::CircuitOpen`
+    /// before the request ever queues (direct `ServicePool::submit`
+    /// deliberately bypasses the breaker — the router is the fleet-facing
+    /// surface where refusing early is the right call).
     pub fn submit(
         &self,
         model: &str,
@@ -102,19 +114,23 @@ impl ModelRouter {
         opts: SubmitOptions,
     ) -> Result<TokenStream, RouteError> {
         let pool = self.pool_or_err(model)?;
+        if !pool.breaker_admit() {
+            return Err(RouteError::CircuitOpen(model.to_string()));
+        }
         pool.submit(prompt, opts).map_err(RouteError::from)
     }
 
     /// Blocking convenience: submit to the named model and wait for the
-    /// completion.
+    /// completion. Routes through [`submit`](Self::submit), so the pool's
+    /// circuit breaker applies here too — an admitted request on an `Open`
+    /// pool is the half-open probe.
     pub fn generate(
         &self,
         model: &str,
         prompt: Vec<i32>,
         opts: SubmitOptions,
     ) -> Result<Completion> {
-        let pool = self.pool_or_err(model).map_err(anyhow::Error::new)?;
-        pool.generate(prompt, opts)
+        self.submit(model, prompt, opts).map_err(anyhow::Error::new)?.wait()
     }
 
     /// Blocking submit to the named model, riding out `QueueFull` (see
@@ -169,6 +185,15 @@ impl ModelRouter {
             kv_bytes_resident: 0,
             kv_bytes_saved: 0,
             kv_decode_nanos: 0,
+            worker_panics: 0,
+            worker_restarts: 0,
+            requests_redispatched: 0,
+            retries: 0,
+            shed_infeasible: 0,
+            shed_expired: 0,
+            breaker_state: Default::default(),
+            breaker_opens: 0,
+            breaker_recoveries: 0,
         };
         let mut busy_secs = 0.0;
         for (_, pool) in &self.pools {
@@ -197,6 +222,16 @@ impl ModelRouter {
             agg.kv_bytes_resident += s.kv_bytes_resident;
             agg.kv_bytes_saved += s.kv_bytes_saved;
             agg.kv_decode_nanos += s.kv_decode_nanos;
+            agg.worker_panics += s.worker_panics;
+            agg.worker_restarts += s.worker_restarts;
+            agg.requests_redispatched += s.requests_redispatched;
+            agg.retries += s.retries;
+            agg.shed_infeasible += s.shed_infeasible;
+            agg.shed_expired += s.shed_expired;
+            // fleet breaker state is the *worst* pool's (severity order)
+            agg.breaker_state = agg.breaker_state.max(s.breaker_state);
+            agg.breaker_opens += s.breaker_opens;
+            agg.breaker_recoveries += s.breaker_recoveries;
             if s.decode_tokens_per_sec > 0.0 {
                 busy_secs += s.decoded_tokens as f64 / s.decode_tokens_per_sec;
             }

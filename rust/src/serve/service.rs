@@ -16,9 +16,10 @@ use crate::runtime::ArtifactDir;
 use crate::serve::engine;
 use crate::serve::queue::{BoundedQueue, PushError};
 use crate::serve::slots;
+use crate::serve::supervisor::{BreakerState, CircuitBreaker, Supervisor};
 use crate::serve::sync::{
-    self, Arc, channel, Countdown, Counter, Flag, Gauge, JoinHandle, LockRank, Mutex, Receiver,
-    Sender,
+    self, Arc, channel, Countdown, Counter, Ewma, Flag, Gauge, JoinHandle, LockRank, Mutex,
+    Receiver, Sender,
 };
 use anyhow::{Context, Result};
 use std::time::{Duration, Instant};
@@ -49,13 +50,18 @@ pub struct SubmitOptions {
     pub priority: Priority,
 }
 
-/// Why a submit was refused. Both cases are retryable by the caller.
+/// Why a submit was refused. `QueueFull` and `ShuttingDown` are retryable;
+/// `AdmissionOnly` is a configuration fact that never clears on its own.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SubmitError {
     /// The admission queue is at `queue_depth` — shed load or retry later.
     QueueFull,
     /// The pool is shutting down (or already shut down).
     ShuttingDown,
+    /// The pool has `workers == 0`: it admits and queues but never drains,
+    /// so a blocking submit could never return. Typed instead of a runtime
+    /// assert so a misconfigured pool cannot panic its caller.
+    AdmissionOnly,
 }
 
 impl std::fmt::Display for SubmitError {
@@ -63,6 +69,9 @@ impl std::fmt::Display for SubmitError {
         match self {
             SubmitError::QueueFull => write!(f, "admission queue full"),
             SubmitError::ShuttingDown => write!(f, "service shutting down"),
+            SubmitError::AdmissionOnly => {
+                write!(f, "admission-only pool (workers=0) never drains its queue")
+            }
         }
     }
 }
@@ -82,8 +91,15 @@ pub enum FinishReason {
     /// Its deadline passed (while queued or mid-decode; partial tokens are
     /// still delivered).
     DeadlineExpired,
-    /// The engine failed while this request was in flight.
-    Error,
+    /// Shed at admission: the pool's EWMA-measured prefill/decode rates say
+    /// the deadline cannot be met, so no prefill is burned on it.
+    Shed,
+    /// The engine failed while this request was in flight and its retry
+    /// budget is spent; `retries` says how many redispatches were attempted
+    /// before giving up (partial tokens are still delivered).
+    Error {
+        retries: u32,
+    },
 }
 
 /// Where the request's wall-clock went (all measured from submit).
@@ -199,6 +215,14 @@ pub struct QueuedRequest {
     pub tx: Sender<StreamEvent>,
     /// Cooperative cancel flag shared with the [`TokenStream`].
     pub cancel: Arc<Flag>,
+    /// Tokens already streamed to the client before a worker fault salvaged
+    /// this request (empty on first admission). `SlotTable::admit` folds
+    /// them back into the row's context so a redispatched request resumes
+    /// exactly where its stream paused instead of re-sending tokens.
+    pub emitted: Vec<i32>,
+    /// How many times this request has been redispatched after worker
+    /// faults; checked against `ServeConfig::retry_budget`.
+    pub retries: u32,
 }
 
 // ---------------------------------------------------------------------------
@@ -265,6 +289,28 @@ pub struct ServiceStats {
     pub kv_bytes_saved: u64,
     /// Worker busy-time spent decoding cached KV rows on elided prefills.
     pub kv_decode_nanos: u64,
+    /// Worker panics caught by the supervised worker loop or observed at
+    /// shutdown join time.
+    pub worker_panics: u64,
+    /// Workers respawned after a fatal worker error (restart budget).
+    pub worker_restarts: u64,
+    /// In-flight requests salvaged from a faulted worker and requeued.
+    pub requests_redispatched: u64,
+    /// Total redispatch attempts summed over requests (a request salvaged
+    /// twice counts twice).
+    pub retries: u64,
+    /// Requests shed at admission because the EWMA rate estimates said
+    /// their deadline was infeasible (`FinishReason::Shed`).
+    pub shed_infeasible: u64,
+    /// Requests whose deadline had already passed when a worker popped them
+    /// (subset of `expired`; they never burned a prefill).
+    pub shed_expired: u64,
+    /// Circuit-breaker state at snapshot time.
+    pub breaker_state: BreakerState,
+    /// Transitions into `Open` (including probe failures re-opening).
+    pub breaker_opens: u64,
+    /// Transitions back to `Healthy` from a non-healthy state.
+    pub breaker_recoveries: u64,
 }
 
 #[derive(Default)]
@@ -292,12 +338,23 @@ pub(crate) struct Counters {
     pub(crate) kv_bytes_resident: Gauge,
     pub(crate) active: Gauge,
     pub(crate) live_workers: Countdown,
+    pub(crate) worker_panics: Counter,
+    pub(crate) worker_restarts: Counter,
+    pub(crate) requests_redispatched: Counter,
+    pub(crate) retries: Counter,
+    pub(crate) shed_infeasible: Counter,
+    pub(crate) shed_expired: Counter,
+    /// EWMA nanoseconds per real prefill call (admission feasibility input).
+    pub(crate) prefill_ewma: Ewma,
+    /// EWMA nanoseconds per decoded token (admission feasibility input).
+    pub(crate) decode_ewma: Ewma,
 }
 
 /// State shared between the submit side and every worker thread.
 pub(crate) struct Shared {
     pub(crate) queue: BoundedQueue<QueuedRequest>,
     pub(crate) counters: Counters,
+    pub(crate) supervisor: Supervisor,
 }
 
 /// A generation service: submit prompts, observe load, shut down.
@@ -357,6 +414,14 @@ impl ServicePool {
         let shared = Arc::new(Shared {
             queue: BoundedQueue::new(cfg.queue_depth),
             counters: Counters::default(),
+            supervisor: Supervisor::new(
+                cfg.restart_budget,
+                CircuitBreaker::new(
+                    cfg.breaker_open_after,
+                    cfg.breaker_recover_after,
+                    Duration::from_millis(cfg.breaker_cooldown_ms),
+                ),
+            ),
         });
         shared.counters.live_workers.set(cfg.workers);
         let factory = Arc::new(factory);
@@ -369,12 +434,32 @@ impl ServicePool {
                 kv_cache_bytes: cfg.kv_cache_bytes,
                 kv_codec: cfg.kv_codec.with_rank(cfg.kv_rank),
                 join_chunk: cfg.join_chunk,
+                retry_budget: cfg.retry_budget,
             };
             handles.push(sync::spawn_named(&format!("cola-serve-{w}"), move || {
-                let res = (*factory)(w)
-                    .and_then(|mut backend| engine::run_worker(backend.as_mut(), &shared, &eopts));
-                if let Err(e) = res {
-                    metrics::log_info(&format!("serve worker {w} exited with error: {e:#}"));
+                // Supervision loop: a worker that dies (panic caught inside
+                // `run_worker`, persistent backend errors, or a factory
+                // failure) is respawned with a *fresh* backend while the
+                // pool-wide restart budget lasts. In-flight requests were
+                // already salvaged back into the queue by `run_worker`.
+                loop {
+                    let res = (*factory)(w).and_then(|mut backend| {
+                        engine::run_worker(backend.as_mut(), &shared, &eopts)
+                    });
+                    match res {
+                        Ok(()) => break, // queue closed: clean exit
+                        Err(e) => {
+                            metrics::log_info(&format!("serve worker {w} died: {e:#}"));
+                            shared.supervisor.breaker.record_failure();
+                            if !shared.supervisor.try_restart() {
+                                metrics::log_info(&format!(
+                                    "serve worker {w}: restart budget spent; not respawning"
+                                ));
+                                break;
+                            }
+                            shared.counters.worker_restarts.add(1);
+                        }
+                    }
                 }
                 // Last worker out closes the shop: otherwise a pool whose
                 // workers all died (e.g. artifact compile failure) would
@@ -383,7 +468,8 @@ impl ServicePool {
                 if shared.counters.live_workers.arrive() {
                     let now = Instant::now();
                     for req in shared.queue.close() {
-                        slots::complete_unstarted(req, FinishReason::Error, now);
+                        let retries = req.retries;
+                        slots::complete_unstarted(req, FinishReason::Error { retries }, now);
                         shared.counters.failed.add(1);
                     }
                 }
@@ -406,13 +492,13 @@ impl ServicePool {
 
     /// Blocking submit: rides out `QueueFull` backpressure (sleep + retry)
     /// until the request is admitted; fails if the pool is shutting down.
-    /// Refused outright on an admission-only pool (`workers == 0`), where
-    /// the queue never drains and the retry loop could never return.
+    /// Refused outright with the typed [`SubmitError::AdmissionOnly`] on a
+    /// `workers == 0` pool, where the queue never drains and the retry loop
+    /// could never return.
     pub fn submit_wait(&self, prompt: Vec<i32>, opts: SubmitOptions) -> Result<TokenStream> {
-        anyhow::ensure!(
-            self.cfg.workers > 0,
-            "submit_wait on an admission-only pool (workers=0) would never return"
-        );
+        if self.cfg.workers == 0 {
+            return Err(SubmitError::AdmissionOnly.into());
+        }
         loop {
             match self.submit(prompt.clone(), opts.clone()) {
                 Ok(s) => return Ok(s),
@@ -422,6 +508,20 @@ impl ServicePool {
                 Err(e) => anyhow::bail!("submit failed: {e}"),
             }
         }
+    }
+
+    /// Circuit-breaker admission check (may move `Open` → `HalfOpen` when
+    /// the cooldown has elapsed, admitting one probe). `ModelRouter`
+    /// consults this before queueing; direct `submit` on the pool
+    /// deliberately bypasses it so local harnesses can keep driving a pool
+    /// whose breaker is open.
+    pub fn breaker_admit(&self) -> bool {
+        self.shared.supervisor.breaker.try_admit()
+    }
+
+    /// Current circuit-breaker state.
+    pub fn breaker_state(&self) -> BreakerState {
+        self.shared.supervisor.breaker.state()
     }
 }
 
@@ -445,6 +545,8 @@ impl InferenceService for ServicePool {
             submitted_at: now,
             tx,
             cancel: cancel.clone(),
+            emitted: Vec::new(),
+            retries: 0,
         };
         match self.shared.queue.push(req, opts.priority == Priority::High) {
             Ok(()) => {
@@ -463,6 +565,7 @@ impl InferenceService for ServicePool {
         let c = &self.shared.counters;
         let decode_secs = c.decode_nanos.get() as f64 * 1e-9;
         let decoded = c.decoded_tokens.get();
+        let breaker = self.shared.supervisor.breaker.snapshot();
         ServiceStats {
             workers: self.cfg.workers,
             queue_depth: self.shared.queue.len(),
@@ -493,6 +596,15 @@ impl InferenceService for ServicePool {
             kv_bytes_resident: c.kv_bytes_resident.get() as u64,
             kv_bytes_saved: c.kv_bytes_saved.get(),
             kv_decode_nanos: c.kv_decode_nanos.get(),
+            worker_panics: c.worker_panics.get(),
+            worker_restarts: c.worker_restarts.get(),
+            requests_redispatched: c.requests_redispatched.get(),
+            retries: c.retries.get(),
+            shed_infeasible: c.shed_infeasible.get(),
+            shed_expired: c.shed_expired.get(),
+            breaker_state: breaker.state,
+            breaker_opens: breaker.opens,
+            breaker_recoveries: breaker.recoveries,
         }
     }
 
@@ -505,7 +617,18 @@ impl InferenceService for ServicePool {
         }
         let handles: Vec<_> = self.workers.lock_or_poisoned().drain(..).collect();
         for h in handles {
-            let _ = h.join();
+            // A panic that escaped the supervised loop (e.g. inside the
+            // backend factory) surfaces here: log the payload and count it
+            // instead of silently discarding the join result.
+            if let Err(payload) = h.join() {
+                let msg = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| (*s).to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "non-string panic payload".to_string());
+                metrics::log_info(&format!("serve worker panicked: {msg}"));
+                self.shared.counters.worker_panics.add(1);
+            }
         }
     }
 }
@@ -533,5 +656,17 @@ mod tests {
     fn submit_error_displays() {
         assert_eq!(SubmitError::QueueFull.to_string(), "admission queue full");
         assert_eq!(SubmitError::ShuttingDown.to_string(), "service shutting down");
+        assert_eq!(
+            SubmitError::AdmissionOnly.to_string(),
+            "admission-only pool (workers=0) never drains its queue"
+        );
+    }
+
+    #[test]
+    fn finish_reason_error_carries_the_retry_count() {
+        let a = FinishReason::Error { retries: 2 };
+        assert_eq!(a, FinishReason::Error { retries: 2 });
+        assert_ne!(a, FinishReason::Error { retries: 0 });
+        assert_ne!(a, FinishReason::Shed);
     }
 }

@@ -88,13 +88,19 @@ impl SlotTable {
 
     /// Place a request into the lowest free slot. `None` when the table is
     /// full (callers check `free()` first).
-    pub fn admit(&mut self, req: QueuedRequest, now: Instant) -> Option<usize> {
+    ///
+    /// A redispatched request re-enters with its previously streamed tokens
+    /// folded into `req.emitted` (see [`SlotTable::salvage`]); they seed
+    /// `generated` here — `mem::take` is a pointer swap, no allocation — so
+    /// the context window, stop scan and `max_new_tokens` budget all compose
+    /// across worker faults. Already-streamed tokens are *not* re-sent:
+    /// [`push_token`](Self::push_token) only streams newly decoded tokens.
+    pub fn admit(&mut self, mut req: QueuedRequest, now: Instant) -> Option<usize> {
         let i = self.slots.iter().position(|s| s.is_none())?;
+        let generated = std::mem::take(&mut req.emitted);
         self.slots[i] = Some(ActiveRequest {
             req,
-            // lint: allow(hot-path-alloc): capacity-0 Vec::new never touches
-            // the heap; the row grows on its first decoded token
-            generated: Vec::new(),
+            generated,
             admitted_at: now,
             first_token_at: None,
             window_dirty: true,
@@ -326,11 +332,42 @@ impl SlotTable {
 
     /// Vacate every row with `FinishReason::Error` (engine batch failure);
     /// partial tokens are delivered. Returns how many rows were failed.
+    /// The supervised worker loop prefers [`salvage_all`](Self::salvage_all)
+    /// — this is the terminal path for requests whose retry budget is spent
+    /// or whose queue has closed.
     pub fn fail_all(&mut self, now: Instant) -> usize {
         let mut n = 0;
         for i in 0..self.slots.len() {
-            if self.slots[i].is_some() {
-                self.finish(i, FinishReason::Error, now);
+            if let Some(ent) = self.slots[i].as_ref() {
+                let retries = ent.req.retries;
+                self.finish(i, FinishReason::Error { retries }, now);
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Extract row `i`'s request for redispatch after a worker fault: the
+    /// slot is vacated and everything generated so far is folded back into
+    /// `req.emitted` — **no** terminal event is sent, so from the client's
+    /// side the stream is simply pausing. The supervisor either requeues the
+    /// request (transparent retry; [`admit`](Self::admit) re-seeds the
+    /// context from `emitted`) or resolves it with [`complete_unstarted`]
+    /// once its retry budget is spent.
+    pub fn salvage(&mut self, i: usize) -> Option<QueuedRequest> {
+        let mut ent = self.slots[i].take()?;
+        ent.req.emitted = ent.generated;
+        Some(ent.req)
+    }
+
+    /// [`salvage`](Self::salvage) every occupied row (a worker fault takes
+    /// the whole batch out at once), appending the live requests to `out`.
+    /// Returns how many rows were salvaged.
+    pub fn salvage_all(&mut self, out: &mut Vec<QueuedRequest>) -> usize {
+        let mut n = 0;
+        for i in 0..self.slots.len() {
+            if let Some(req) = self.salvage(i) {
+                out.push(req);
                 n += 1;
             }
         }
@@ -360,9 +397,12 @@ impl SlotTable {
     }
 }
 
-/// Resolve a request that never reached a slot (expired/cancelled while
-/// queued, shed at shutdown, or admitted with `max_new_tokens == 0` — which
-/// completes with zero tokens rather than smuggling out the prefill token).
+/// Resolve a request outside a slot: never admitted (expired/cancelled while
+/// queued, shed, or `max_new_tokens == 0` — which completes with zero tokens
+/// rather than smuggling out the prefill token), or salvaged from a faulted
+/// worker with its retry budget spent. The completion delivers whatever the
+/// request already streamed (`req.emitted` — empty for requests that never
+/// ran; moving the vec out is allocation-free).
 pub fn complete_unstarted(req: QueuedRequest, reason: FinishReason, now: Instant) {
     let timing = Timing {
         queued: now.saturating_duration_since(req.submitted_at),
@@ -370,9 +410,7 @@ pub fn complete_unstarted(req: QueuedRequest, reason: FinishReason, now: Instant
         total: now.saturating_duration_since(req.submitted_at),
     };
     let _ = req.tx.send(StreamEvent::Done(Completion {
-        // lint: allow(hot-path-alloc): capacity-0 Vec::new never touches the
-        // heap — the completion is empty by definition here
-        tokens: Vec::new(),
+        tokens: req.emitted,
         finish_reason: reason,
         timing,
     }));
@@ -402,6 +440,8 @@ mod tests {
             submitted_at: Instant::now(),
             tx,
             cancel: cancel.clone(),
+            emitted: Vec::new(),
+            retries: 0,
         };
         (req, rx, cancel)
     }
@@ -631,5 +671,66 @@ mod tests {
         let c = done.unwrap();
         assert!(c.tokens.is_empty(), "max_new_tokens == 0 yields no prefill token");
         assert_eq!(c.finish_reason, FinishReason::Length);
+    }
+
+    #[test]
+    fn salvage_folds_generated_back_without_a_terminal_event() {
+        let now = Instant::now();
+        let mut tbl = SlotTable::new(2);
+        let (req, rx, _) = mk_req(vec![1, 2], 100, vec![], None);
+        tbl.admit(req, now).unwrap();
+        tbl.push_token(0, 7, now);
+        tbl.push_token(0, 8, now);
+        let req = tbl.salvage(0).expect("occupied row salvages");
+        assert_eq!(req.emitted, vec![7, 8], "generated folds into emitted");
+        assert_eq!(tbl.active(), 0, "the slot is vacated");
+        assert!(tbl.salvage(0).is_none(), "vacant rows have nothing to salvage");
+        let (toks, done) = drain(&rx);
+        assert_eq!(toks, vec![7, 8], "tokens streamed before the fault stay streamed");
+        assert!(done.is_none(), "no Done: the request is still live");
+        // spent retry budget → terminal completion carries the partial tokens
+        complete_unstarted(req, FinishReason::Error { retries: 2 }, now);
+        let (_, done) = drain(&rx);
+        let c = done.unwrap();
+        assert_eq!(c.tokens, vec![7, 8]);
+        assert_eq!(c.finish_reason, FinishReason::Error { retries: 2 });
+    }
+
+    #[test]
+    fn emitted_tokens_seed_readmission_window_feed_and_budget() {
+        let now = Instant::now();
+        let mut tbl = SlotTable::new(1);
+        let (mut req, rx, _) = mk_req(vec![1, 2], 4, vec![], None);
+        req.emitted = vec![3, 4]; // salvaged mid-stream with 2 of 4 tokens out
+        tbl.admit(req, now).unwrap();
+        // the context window composes prompt ++ emitted, and the next decode
+        // feeds the last emitted token — exactly where the stream paused
+        assert_eq!(tbl.window(0, 6, 0), vec![1, 2, 3, 4, 0, 0]);
+        assert_eq!(tbl.real_len(0, 6), 4);
+        assert_eq!(tbl.feed_tokens(0), vec![4]);
+        // the length budget counts the already-emitted tokens
+        assert_eq!(tbl.push_token(0, 5, now), None);
+        assert_eq!(tbl.push_token(0, 6, now), Some(FinishReason::Length));
+        let (toks, done) = drain(&rx);
+        assert_eq!(toks, vec![5, 6], "seeded tokens are not re-streamed");
+        let c = done.unwrap();
+        assert_eq!(c.tokens, vec![3, 4, 5, 6], "the completion carries the full output");
+    }
+
+    #[test]
+    fn salvage_all_sweeps_every_occupied_row() {
+        let now = Instant::now();
+        let mut tbl = SlotTable::new(3);
+        let (r0, _a, _) = mk_req(vec![1], 10, vec![], None);
+        let (r2, _b, _) = mk_req(vec![2], 10, vec![], None);
+        tbl.admit(r0, now).unwrap();
+        tbl.admit(r2, now).unwrap();
+        tbl.push_token(0, 5, now);
+        let mut out = Vec::new();
+        assert_eq!(tbl.salvage_all(&mut out), 2);
+        assert_eq!(tbl.active(), 0);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].emitted, vec![5]);
+        assert!(out[1].emitted.is_empty());
     }
 }

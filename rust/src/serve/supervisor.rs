@@ -1,0 +1,384 @@
+//! Pool supervision: the circuit breaker and worker restart budget.
+//!
+//! A [`Supervisor`] lives in each pool's shared state. Worker threads report
+//! outcomes to its [`CircuitBreaker`] (completions are successes; batch
+//! failures, panics, and factory errors are failures) and consult its
+//! restart budget when a worker dies; `ModelRouter` consults the breaker at
+//! submit time and returns `RouteError::CircuitOpen` instead of queueing
+//! into a pool that is known-dead (see `docs/robustness.md`).
+//!
+//! # Breaker state machine
+//!
+//! ```text
+//!            failure (×1)              failure (consec ≥ open_after)
+//!  Healthy ───────────────► Degraded ─────────────────────────────► Open
+//!     ▲                        │  ▲                                 │  ▲
+//!     │ success (consec ≥      │  │                cooldown elapsed │  │ probe
+//!     │   recover_after)       │  │ (admits stay                    ▼  │ fails
+//!     └────────────────────────┘  │  open)                       HalfOpen
+//!     ▲                           │                                 │
+//!     └───────────────────────────┴── probe succeeds ───────────────┘
+//! ```
+//!
+//! `Healthy` and `Degraded` admit every request (`Degraded` is an
+//! observability state: something is failing but the pool still serves).
+//! `Open` denies all traffic until `cooldown` has elapsed since it opened,
+//! then admits exactly one **probe**; while that probe is in flight further
+//! admits are denied (`HalfOpen`). The probe's outcome decides: success →
+//! `Healthy` (a recovery), failure → back to `Open` with a fresh cooldown.
+//! Any success also counts as probe resolution — a completion from an
+//! older in-flight request is just as much evidence of health.
+//!
+//! The transition rules are deliberately a pure function of
+//! `(state, op, cooldown_elapsed)` — `serve::model::BreakerModel` mirrors
+//! them exactly and `tests/serve_interleave.rs` checks the real type against
+//! the model under exhaustive interleavings of concurrent
+//! success/failure/probe ops.
+
+use crate::serve::sync::{self, LockRank};
+use std::time::{Duration, Instant};
+
+/// Observable breaker state, in increasing order of severity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum BreakerState {
+    /// Everything fine; all requests admitted.
+    Healthy,
+    /// Recent failures below the open threshold; still admitting.
+    Degraded,
+    /// A probe is in flight; all other requests denied.
+    HalfOpen,
+    /// Failure threshold crossed; all requests denied until cooldown.
+    Open,
+}
+
+impl BreakerState {
+    /// Stable lowercase label for stats output.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BreakerState::Healthy => "healthy",
+            BreakerState::Degraded => "degraded",
+            BreakerState::HalfOpen => "half-open",
+            BreakerState::Open => "open",
+        }
+    }
+}
+
+/// Point-in-time copy of the breaker's state and transition tallies, taken
+/// under the lock so the fields are mutually consistent.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BreakerSnapshot {
+    pub state: BreakerState,
+    /// Transitions into `Degraded`.
+    pub degraded: u64,
+    /// Transitions into `Open` (including probe failures re-opening).
+    pub opens: u64,
+    /// Transitions into `HalfOpen` (probes admitted).
+    pub half_opens: u64,
+    /// Transitions into `Healthy` from a non-healthy state.
+    pub recoveries: u64,
+}
+
+impl Default for BreakerState {
+    fn default() -> Self {
+        BreakerState::Healthy
+    }
+}
+
+struct BreakerInner {
+    state: BreakerState,
+    consec_failures: u32,
+    consec_successes: u32,
+    /// When the breaker last entered `Open` — the cooldown epoch.
+    opened_at: Option<Instant>,
+    degraded: u64,
+    opens: u64,
+    half_opens: u64,
+    recoveries: u64,
+}
+
+/// Per-pool circuit breaker. All methods are total and self-contained: each
+/// takes the state lock, applies one transition, and releases — the lock is
+/// never held across a call out of this module.
+pub struct CircuitBreaker {
+    breaker: sync::Mutex<BreakerInner>,
+    /// Consecutive failures that trip `Degraded` → `Open`. 0 disables the
+    /// breaker entirely (always `Healthy`, always admitting).
+    open_after: u32,
+    /// Consecutive successes that recover `Degraded` → `Healthy`.
+    recover_after: u32,
+    /// How long `Open` denies traffic before admitting a probe.
+    cooldown: Duration,
+}
+
+impl CircuitBreaker {
+    pub fn new(open_after: u32, recover_after: u32, cooldown: Duration) -> Self {
+        Self {
+            breaker: sync::Mutex::new(
+                LockRank::BreakerState,
+                BreakerInner {
+                    state: BreakerState::Healthy,
+                    consec_failures: 0,
+                    consec_successes: 0,
+                    opened_at: None,
+                    degraded: 0,
+                    opens: 0,
+                    half_opens: 0,
+                    recoveries: 0,
+                },
+            ),
+            open_after,
+            recover_after: recover_after.max(1),
+            cooldown,
+        }
+    }
+
+    /// Record a successful unit of work (a request completing normally).
+    pub fn record_success(&self) {
+        if self.open_after == 0 {
+            return;
+        }
+        let mut b = self.breaker.lock_or_poisoned();
+        b.consec_failures = 0;
+        b.consec_successes = b.consec_successes.saturating_add(1);
+        match b.state {
+            BreakerState::Degraded if b.consec_successes >= self.recover_after => {
+                b.state = BreakerState::Healthy;
+                b.recoveries += 1;
+            }
+            // A success while a probe is in flight resolves the probe —
+            // whether it came from the probe itself or an older request,
+            // the pool demonstrably completes work again.
+            BreakerState::HalfOpen => {
+                b.state = BreakerState::Healthy;
+                b.recoveries += 1;
+            }
+            _ => {}
+        }
+    }
+
+    /// Record a failure (batch error, worker panic, or factory error).
+    pub fn record_failure(&self) {
+        if self.open_after == 0 {
+            return;
+        }
+        let mut b = self.breaker.lock_or_poisoned();
+        b.consec_successes = 0;
+        b.consec_failures = b.consec_failures.saturating_add(1);
+        match b.state {
+            BreakerState::Healthy => {
+                b.state = BreakerState::Degraded;
+                b.degraded += 1;
+                if b.consec_failures >= self.open_after {
+                    b.state = BreakerState::Open;
+                    b.opens += 1;
+                    b.opened_at = Some(Instant::now());
+                }
+            }
+            BreakerState::Degraded if b.consec_failures >= self.open_after => {
+                b.state = BreakerState::Open;
+                b.opens += 1;
+                b.opened_at = Some(Instant::now());
+            }
+            // The probe failed: re-open with a fresh cooldown epoch.
+            BreakerState::HalfOpen => {
+                b.state = BreakerState::Open;
+                b.opens += 1;
+                b.opened_at = Some(Instant::now());
+            }
+            _ => {}
+        }
+    }
+
+    /// Should a new request be admitted right now? Wall-clock entry point:
+    /// computes cooldown expiry and defers to [`admit_with`](Self::admit_with).
+    pub fn try_admit(&self) -> bool {
+        if self.open_after == 0 {
+            return true;
+        }
+        let cooled = {
+            let b = self.breaker.lock_or_poisoned();
+            match (b.state, b.opened_at) {
+                (BreakerState::Open, Some(at)) => at.elapsed() >= self.cooldown,
+                (BreakerState::Open, None) => true,
+                _ => false,
+            }
+        };
+        self.admit_with(cooled)
+    }
+
+    /// The deterministic admission transition: a pure function of
+    /// `(state, cooldown_elapsed)`, exposed so the exhaustive interleaving
+    /// harness can drive it without a wall clock. `Open` + elapsed cooldown
+    /// admits one probe and moves to `HalfOpen`; `HalfOpen` denies until the
+    /// probe resolves; `Healthy`/`Degraded` always admit.
+    pub fn admit_with(&self, cooldown_elapsed: bool) -> bool {
+        if self.open_after == 0 {
+            return true;
+        }
+        let mut b = self.breaker.lock_or_poisoned();
+        match b.state {
+            BreakerState::Healthy | BreakerState::Degraded => true,
+            BreakerState::Open if cooldown_elapsed => {
+                b.state = BreakerState::HalfOpen;
+                b.half_opens += 1;
+                true
+            }
+            BreakerState::Open | BreakerState::HalfOpen => false,
+        }
+    }
+
+    /// Current state (one atomic-under-lock read).
+    pub fn state(&self) -> BreakerState {
+        self.breaker.lock_or_poisoned().state
+    }
+
+    /// Consistent copy of state + transition tallies for stats.
+    pub fn snapshot(&self) -> BreakerSnapshot {
+        let b = self.breaker.lock_or_poisoned();
+        BreakerSnapshot {
+            state: b.state,
+            degraded: b.degraded,
+            opens: b.opens,
+            half_opens: b.half_opens,
+            recoveries: b.recoveries,
+        }
+    }
+}
+
+struct Lifecycle {
+    restarts_used: u32,
+}
+
+/// Per-pool supervision state: the circuit breaker plus the worker restart
+/// budget. Worker threads call [`try_restart`](Self::try_restart) after a
+/// fatal worker error (panic or persistent backend failure); the budget is
+/// pool-wide, so a crash-looping fleet converges to a drained pool instead
+/// of spinning forever.
+pub struct Supervisor {
+    lifecycle: sync::Mutex<Lifecycle>,
+    restart_budget: u32,
+    pub breaker: CircuitBreaker,
+}
+
+impl Supervisor {
+    pub fn new(restart_budget: u32, breaker: CircuitBreaker) -> Self {
+        Self {
+            lifecycle: sync::Mutex::new(
+                LockRank::SupervisorLifecycle,
+                Lifecycle { restarts_used: 0 },
+            ),
+            restart_budget,
+            breaker,
+        }
+    }
+
+    /// Claim one restart from the pool-wide budget; `false` means the budget
+    /// is exhausted and the caller should let the worker die for good.
+    pub fn try_restart(&self) -> bool {
+        let mut l = self.lifecycle.lock_or_poisoned();
+        if l.restarts_used >= self.restart_budget {
+            return false;
+        }
+        l.restarts_used += 1;
+        true
+    }
+
+    /// Restarts claimed so far (stats).
+    pub fn restarts_used(&self) -> u32 {
+        self.lifecycle.lock_or_poisoned().restarts_used
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn breaker() -> CircuitBreaker {
+        CircuitBreaker::new(3, 2, Duration::from_millis(0))
+    }
+
+    #[test]
+    fn failures_walk_healthy_degraded_open_and_probe_recovers() {
+        let b = breaker();
+        assert_eq!(b.state(), BreakerState::Healthy);
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Degraded, "first failure degrades");
+        assert!(b.try_admit(), "degraded still admits");
+        b.record_failure();
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Open, "third consecutive failure opens");
+        assert!(!b.admit_with(false), "open + cooling denies");
+        assert!(b.admit_with(true), "cooldown elapsed admits one probe");
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert!(!b.admit_with(true), "second request denied while probe in flight");
+        b.record_success();
+        assert_eq!(b.state(), BreakerState::Healthy, "probe success closes");
+        let s = b.snapshot();
+        assert_eq!((s.degraded, s.opens, s.half_opens, s.recoveries), (1, 1, 1, 1));
+    }
+
+    #[test]
+    fn probe_failure_reopens() {
+        let b = breaker();
+        for _ in 0..3 {
+            b.record_failure();
+        }
+        assert!(b.admit_with(true));
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Open, "probe failure re-opens");
+        assert_eq!(b.snapshot().opens, 2);
+    }
+
+    #[test]
+    fn degraded_recovers_after_consecutive_successes() {
+        let b = breaker();
+        b.record_failure();
+        b.record_success();
+        assert_eq!(b.state(), BreakerState::Degraded, "one success is not enough");
+        b.record_success();
+        assert_eq!(b.state(), BreakerState::Healthy);
+        // and a failure in between resets the success streak
+        b.record_failure();
+        b.record_success();
+        b.record_failure();
+        b.record_success();
+        assert_eq!(b.state(), BreakerState::Degraded);
+    }
+
+    #[test]
+    fn open_after_zero_disables_the_breaker() {
+        let b = CircuitBreaker::new(0, 2, Duration::from_millis(0));
+        for _ in 0..10 {
+            b.record_failure();
+        }
+        assert_eq!(b.state(), BreakerState::Healthy);
+        assert!(b.try_admit());
+    }
+
+    #[test]
+    fn wall_clock_cooldown_gates_the_probe() {
+        let b = CircuitBreaker::new(1, 1, Duration::from_millis(50));
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Open, "open_after=1 opens immediately");
+        assert!(!b.try_admit(), "cooldown not elapsed");
+        sync::sleep(Duration::from_millis(60));
+        assert!(b.try_admit(), "cooldown elapsed admits the probe");
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+    }
+
+    #[test]
+    fn restart_budget_is_pool_wide_and_exhausts() {
+        let s = Supervisor::new(2, breaker());
+        assert!(s.try_restart());
+        assert!(s.try_restart());
+        assert!(!s.try_restart(), "budget of 2 exhausted");
+        assert_eq!(s.restarts_used(), 2);
+    }
+
+    #[test]
+    fn breaker_severity_order_supports_fleet_aggregation() {
+        assert!(BreakerState::Healthy < BreakerState::Degraded);
+        assert!(BreakerState::Degraded < BreakerState::HalfOpen);
+        assert!(BreakerState::HalfOpen < BreakerState::Open);
+    }
+}

@@ -8,18 +8,23 @@
 //! linearizability check rather than a sampling stress test.
 //!
 //! Alongside the real types, deliberately-broken SUT wrappers pin the
-//! *minimal counterexamples* the explorer found for two injected bugs
-//! (a band-confusion `try_pop_high` and a no-promotion LRU) — failing-seed
+//! *minimal counterexamples* the explorer found for three injected bugs
+//! (a band-confusion `try_pop_high`, a no-promotion LRU, and a circuit
+//! breaker that forgets to gate while a probe is in flight) — failing-seed
 //! regressions proving the checker detects real divergences, not just
 //! agreeing with everything.
 
 use cola::serve::kvcache::hash_tokens;
 use cola::serve::model::{
-    check_cache_sequences, check_cache_sequences_budgeted, explore_queue, model_row_bytes,
-    CacheDivergence, CacheModel, CacheObs, CacheOp, CacheSut, Divergence, QueueModel, QueueObs,
-    QueueOp, QueueSut,
+    check_cache_sequences, check_cache_sequences_budgeted, explore_breaker, explore_queue,
+    model_row_bytes, BreakerObs, BreakerOp, BreakerSut, CacheDivergence, CacheModel, CacheObs,
+    CacheOp, CacheSut, Divergence, QueueModel, QueueObs, QueueOp, QueueSut,
 };
-use cola::serve::{BoundedQueue, KvCodec, KvPrefixCache, PlaneGeom};
+use cola::serve::{
+    BoundedQueue, BreakerSnapshot, BreakerState, CircuitBreaker, KvCodec, KvPrefixCache,
+    PlaneGeom,
+};
+use std::time::Duration;
 
 /// n! / (k1! k2! ... ) — the number of distinct merges of the per-thread
 /// sequences, used to prove the explorer's enumeration is exhaustive.
@@ -413,6 +418,109 @@ fn budgeted_checker_catches_refresh_double_count() {
     );
     assert_eq!(d.expected, CacheObs::Bytes(model_row_bytes(0)));
     assert_eq!(d.actual, CacheObs::Bytes(2 * model_row_bytes(0)));
+}
+
+// ---------------------------------------------------------------------------
+// Circuit breaker: the real CircuitBreaker matches the transition model
+// ---------------------------------------------------------------------------
+
+fn mk_breaker(open_after: u32, recover_after: u32) -> CircuitBreaker {
+    // Cooldown is irrelevant under the model: `Admit { cooled }` pins the
+    // wall-clock predicate, so every admission path is schedulable.
+    CircuitBreaker::new(open_after, recover_after, Duration::ZERO)
+}
+
+#[test]
+fn breaker_probe_races_success_and_failure_exhaustive() {
+    // Two failures trip the breaker open; a probe admit races a success and
+    // a denied (still-cooling) admit. All ops non-blocking → the schedule
+    // count must equal the multinomial exactly: enumeration is exhaustive.
+    let threads = vec![
+        vec![BreakerOp::Failure, BreakerOp::Failure],
+        vec![BreakerOp::Admit { cooled: true }, BreakerOp::Success],
+        vec![BreakerOp::Admit { cooled: false }],
+    ];
+    let report = explore_breaker(2, 1, &threads, &|| mk_breaker(2, 1));
+    assert_eq!(report.schedules, multinomial(&[2, 2, 1]), "5!/(2!2!1!) = 30 merges");
+    assert!(report.divergence.is_none(), "divergence: {:?}", report.divergence);
+}
+
+#[test]
+fn breaker_recovery_streaks_race_failures_exhaustive() {
+    // recover_after=2 makes the Degraded → Healthy streak order-sensitive:
+    // a failure anywhere inside the success run resets it. Every one of the
+    // 10 merges must still linearise against the model.
+    let threads = vec![
+        vec![BreakerOp::Failure, BreakerOp::Success, BreakerOp::Failure],
+        vec![BreakerOp::Success, BreakerOp::Admit { cooled: true }],
+    ];
+    let report = explore_breaker(1, 2, &threads, &|| mk_breaker(1, 2));
+    assert_eq!(report.schedules, multinomial(&[3, 2]));
+    assert!(report.divergence.is_none(), "divergence: {:?}", report.divergence);
+}
+
+#[test]
+fn breaker_disabled_never_transitions_exhaustive() {
+    // open_after=0 disables the breaker: every op in every order must
+    // observe Healthy and admit, and the final tallies must all be zero.
+    let threads = vec![
+        vec![BreakerOp::Failure, BreakerOp::Failure],
+        vec![BreakerOp::Admit { cooled: true }, BreakerOp::Failure],
+    ];
+    let report = explore_breaker(0, 1, &threads, &|| mk_breaker(0, 1));
+    assert_eq!(report.schedules, multinomial(&[2, 2]));
+    assert!(report.divergence.is_none(), "divergence: {:?}", report.divergence);
+}
+
+// ---------------------------------------------------------------------------
+// Circuit breaker: failing-seed regression — a buggy SUT must be caught
+// ---------------------------------------------------------------------------
+
+/// Bug injection: admission forgets the `HalfOpen` gate, so a second
+/// request is admitted while the probe is still in flight (the classic
+/// thundering-probe bug half-open state exists to prevent).
+struct DoubleProbeBreaker(CircuitBreaker);
+
+impl BreakerSut for DoubleProbeBreaker {
+    fn apply(&self, op: BreakerOp) -> BreakerObs {
+        if let BreakerOp::Admit { cooled } = op {
+            if self.0.state() == BreakerState::HalfOpen {
+                // BUG: should deny until the probe resolves
+                return BreakerObs::Admit { admitted: true, state: BreakerState::HalfOpen };
+            }
+            let admitted = self.0.admit_with(cooled);
+            return BreakerObs::Admit { admitted, state: self.0.state() };
+        }
+        self.0.apply(op)
+    }
+
+    fn snapshot(&self) -> BreakerSnapshot {
+        BreakerSut::snapshot(&self.0)
+    }
+}
+
+#[test]
+fn explorer_catches_double_probe_admission() {
+    let threads = vec![
+        vec![BreakerOp::Failure],
+        vec![BreakerOp::Admit { cooled: true }],
+        vec![BreakerOp::Admit { cooled: true }],
+    ];
+    let report = explore_breaker(1, 1, &threads, &|| DoubleProbeBreaker(mk_breaker(1, 1)));
+    let d = report.divergence.expect("the injected bug must be found");
+    // Minimal counterexample, pinned: trip open, admit the probe, then the
+    // second admit must be denied — the buggy SUT lets it through.
+    assert_eq!(
+        d.schedule.iter().map(|&(_, op)| op).collect::<Vec<_>>(),
+        vec![
+            BreakerOp::Failure,
+            BreakerOp::Admit { cooled: true },
+            BreakerOp::Admit { cooled: true },
+        ]
+    );
+    assert_eq!(d.step, 2);
+    assert_eq!(d.expected, BreakerObs::Admit { admitted: false, state: BreakerState::HalfOpen });
+    assert_eq!(d.actual, BreakerObs::Admit { admitted: true, state: BreakerState::HalfOpen });
 }
 
 // ---------------------------------------------------------------------------

@@ -12,8 +12,9 @@
 
 use cola::config::ServeConfig;
 use cola::serve::{
-    FinishReason, InferenceService, MockBackend, ModelRouter, RouteError, ServicePool,
-    StreamEvent, SubmitError, SubmitOptions,
+    BreakerState, EngineBackend, FaultKind, FaultPlan, FaultSchedule, FinishReason,
+    InferenceService, MockBackend, ModelRouter, RouteError, ServicePool, StreamEvent,
+    SubmitError, SubmitOptions,
 };
 use std::time::Duration;
 
@@ -29,6 +30,14 @@ fn cfg(workers: usize, queue_depth: usize) -> ServeConfig {
 
 fn pool(cfg: ServeConfig, mock: MockBackend) -> ServicePool {
     ServicePool::start_with(cfg, mock.factory()).unwrap()
+}
+
+/// A pool whose every worker backend is wrapped in the scripted fault plan.
+fn fault_pool(cfg: ServeConfig, mock: MockBackend, plan: FaultPlan) -> ServicePool {
+    ServicePool::start_with(cfg, move |w| {
+        Ok(Box::new(plan.wrap(mock.clone(), w)) as Box<dyn EngineBackend>)
+    })
+    .unwrap()
 }
 
 fn opts(max_new: usize) -> SubmitOptions {
@@ -295,23 +304,175 @@ fn zero_token_budget_completes_empty() {
 }
 
 #[test]
-fn injected_engine_failure_fails_the_batch_and_recovers() {
+fn injected_decode_failure_redispatches_transparently() {
     // bs=1 so decode-call counting is exact: prefill → token 1, decode
-    // calls 1,2 → tokens 2,3, decode call 3 → injected failure.
-    let mock = MockBackend::new(1, 4, 64).fail_after(3);
-    let router =
-        ModelRouter::from_pools(vec![("m".into(), pool(cfg(1, 4), mock.clone()))]).unwrap();
+    // calls 1,2 → tokens 2,3, decode call 3 → injected failure. The batch
+    // fails, the request is salvaged with its 3 streamed tokens folded back
+    // in, requeued at the front, and resumed — the client sees the same
+    // byte-identical 10-token stream a fault-free run produces.
+    let mock = MockBackend::new(1, 4, 64);
+    let plan = FaultPlan::seeded(11).inject(FaultKind::DecodeError, FaultSchedule::Once(3));
+    let router = ModelRouter::from_pools(vec![(
+        "m".into(),
+        fault_pool(cfg(1, 4), mock.clone(), plan),
+    )])
+    .unwrap();
     let c = router.generate("m", vec![30], opts(10)).unwrap();
-    assert_eq!(c.finish_reason, FinishReason::Error);
+    assert_eq!(c.finish_reason, FinishReason::Length, "the fault is invisible to the client");
+    assert_eq!(c.tokens, mock.expected_stream(30, 10), "stream identical to a fault-free run");
+    eventually("redispatch tallied", || router.stats("m").unwrap().requests_redispatched == 1);
+    let s = router.stats("m").unwrap();
+    assert_eq!(s.retries, 1);
+    assert_eq!(s.failed, 0, "no request failed");
+    assert_eq!(s.completed, 1);
+    router.shutdown();
+}
+
+#[test]
+fn exhausted_retry_budget_is_a_typed_error_with_partial_tokens() {
+    // retry_budget=0: the first batch fault fails the request outright,
+    // delivering the tokens streamed so far and the retry count.
+    let mut c1 = cfg(1, 4);
+    c1.retry_budget = 0;
+    let mock = MockBackend::new(1, 4, 64);
+    let plan = FaultPlan::seeded(11).inject(FaultKind::DecodeError, FaultSchedule::Once(3));
+    let router =
+        ModelRouter::from_pools(vec![("m".into(), fault_pool(c1, mock.clone(), plan))]).unwrap();
+    let c = router.generate("m", vec![30], opts(10)).unwrap();
+    assert_eq!(c.finish_reason, FinishReason::Error { retries: 0 });
     assert_eq!(c.tokens, mock.expected_stream(30, 3), "partial tokens are delivered");
     eventually("batch failure tallied", || router.stats("m").unwrap().failed == 1);
 
-    // one-shot trigger cleared: the pool serves normally again
+    // one-shot fault cleared: the pool serves normally again
     let c2 = router.generate("m", vec![60], opts(10)).unwrap();
     assert_eq!(c2.finish_reason, FinishReason::Length);
     assert_eq!(c2.tokens, mock.expected_stream(60, 10));
     eventually("recovery completion tallied", || router.stats("m").unwrap().completed == 1);
     router.shutdown();
+}
+
+#[test]
+fn worker_panic_restarts_the_worker_and_the_stream_survives() {
+    // The injected panic fires on decode call 4 of *each* backend instance,
+    // so the respawned worker panics again on its own 4th call: the request
+    // rides two salvage→redispatch cycles (prefill + 3 decodes = 4 tokens
+    // per cycle, then 2 on the last) and still completes byte-identically
+    // within the default retry budget of 2.
+    let mock = MockBackend::new(1, 4, 64);
+    let plan = FaultPlan::seeded(5).inject(FaultKind::WorkerPanic, FaultSchedule::Once(4));
+    let router = ModelRouter::from_pools(vec![(
+        "m".into(),
+        fault_pool(cfg(1, 4), mock.clone(), plan),
+    )])
+    .unwrap();
+    let c = router.generate("m", vec![30], opts(10)).unwrap();
+    assert_eq!(c.finish_reason, FinishReason::Length);
+    assert_eq!(c.tokens, mock.expected_stream(30, 10), "stream identical to a fault-free run");
+    eventually("restarts tallied", || router.stats("m").unwrap().worker_restarts == 2);
+    let s = router.stats("m").unwrap();
+    assert_eq!(s.worker_panics, 2, "both panics were caught");
+    assert_eq!(s.requests_redispatched, 2);
+    assert_eq!(s.failed, 0);
+    router.shutdown();
+}
+
+#[test]
+fn repeated_faults_open_the_breaker_and_a_probe_recovers_it() {
+    // open_after=1: the first batch fault trips the breaker straight to
+    // Open. Router submits then fail fast with CircuitOpen until the
+    // cooldown admits a half-open probe, whose success recovers the pool.
+    let mut c1 = cfg(1, 8);
+    c1.retry_budget = 0;
+    c1.breaker_open_after = 1;
+    c1.breaker_recover_after = 1;
+    c1.breaker_cooldown_ms = 150;
+    let mock = MockBackend::new(1, 4, 64);
+    let plan = FaultPlan::seeded(3).inject(FaultKind::DecodeError, FaultSchedule::Once(2));
+    let router =
+        ModelRouter::from_pools(vec![("m".into(), fault_pool(c1, mock.clone(), plan))]).unwrap();
+
+    let c = router.generate("m", vec![30], opts(6)).unwrap();
+    assert!(matches!(c.finish_reason, FinishReason::Error { .. }));
+    eventually("breaker opened", || {
+        router.stats("m").unwrap().breaker_state == BreakerState::Open
+    });
+    match router.submit("m", vec![40], opts(2)) {
+        Err(RouteError::CircuitOpen(m)) => {
+            assert_eq!(m, "m");
+            assert_eq!(
+                RouteError::CircuitOpen(m).to_string(),
+                "circuit breaker open for model `m`"
+            );
+        }
+        other => panic!("expected CircuitOpen, got {:?}", other.map(|_| ())),
+    }
+
+    // After the cooldown a probe is admitted; its success closes the loop.
+    std::thread::sleep(Duration::from_millis(180));
+    let probe = router.generate("m", vec![50], opts(3)).unwrap();
+    assert_eq!(probe.finish_reason, FinishReason::Length);
+    assert_eq!(probe.tokens, mock.expected_stream(50, 3));
+    eventually("breaker recovered", || {
+        router.stats("m").unwrap().breaker_state == BreakerState::Healthy
+    });
+    let s = router.stats("m").unwrap();
+    assert!(s.breaker_opens >= 1, "opens: {}", s.breaker_opens);
+    assert!(s.breaker_recoveries >= 1, "recoveries: {}", s.breaker_recoveries);
+    router.shutdown();
+}
+
+#[test]
+fn expired_deadline_is_shed_at_pop_without_burning_a_prefill() {
+    // A request whose deadline already passed when it reaches the head of
+    // the queue is shed before any backend work happens.
+    let router =
+        ModelRouter::from_pools(vec![("m".into(), pool(cfg(1, 4), MockBackend::new(1, 4, 64)))])
+            .unwrap();
+    let o = SubmitOptions { deadline: Some(Duration::ZERO), ..opts(10) };
+    let c = router.generate("m", vec![5], o).unwrap();
+    assert_eq!(c.finish_reason, FinishReason::DeadlineExpired);
+    assert!(c.tokens.is_empty());
+    eventually("expiry shed tallied", || router.stats("m").unwrap().shed_expired == 1);
+    let s = router.stats("m").unwrap();
+    assert_eq!(s.prefill_calls, 0, "the dead request never reached the backend");
+    router.shutdown();
+}
+
+#[test]
+fn infeasible_deadline_is_shed_by_the_ewma_estimator() {
+    // Request A seeds the prefill/decode EWMAs (~5 ms per decode step).
+    // Request B then asks for 1000 tokens inside 200 ms — infeasible by
+    // orders of magnitude — and is shed at pop time with Shed, before any
+    // prefill. Its 200 ms deadline is comfortably unexpired at pop, so this
+    // exercises the estimator, not the expiry path.
+    let mock = MockBackend::new(1, 4, 64).step_delay(Duration::from_millis(5));
+    let router =
+        ModelRouter::from_pools(vec![("m".into(), pool(cfg(1, 8), mock))]).unwrap();
+    let a = router.generate("m", vec![5], opts(4)).unwrap();
+    assert_eq!(a.finish_reason, FinishReason::Length);
+
+    let o = SubmitOptions { deadline: Some(Duration::from_millis(200)), ..opts(1000) };
+    let b = router.generate("m", vec![6], o).unwrap();
+    assert_eq!(b.finish_reason, FinishReason::Shed);
+    assert!(b.tokens.is_empty());
+    eventually("infeasible shed tallied", || router.stats("m").unwrap().shed_infeasible == 1);
+    assert_eq!(router.stats("m").unwrap().shed_expired, 0, "shed by the estimator, not expiry");
+    router.shutdown();
+}
+
+#[test]
+fn admission_only_pool_refuses_submit_wait_with_typed_error() {
+    let p = pool(cfg(0, 2), MockBackend::new(1, 2, 4));
+    let err = p.submit_wait(vec![1], opts(2)).unwrap_err();
+    assert_eq!(
+        err.downcast_ref::<SubmitError>(),
+        Some(&SubmitError::AdmissionOnly),
+        "submit_wait on workers=0 must fail with the typed variant, got: {err:#}"
+    );
+    assert!(err.to_string().contains("admission-only"), "{err}");
+    // non-blocking submit still queues (backpressure testing stays possible)
+    assert!(p.submit(vec![1], opts(2)).is_ok());
+    p.shutdown();
 }
 
 #[test]

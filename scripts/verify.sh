@@ -39,19 +39,41 @@ if [ "${SKIP_SMOKE:-0}" != "1" ]; then
     # itself asserts byte-identical streams, the >=50% prefill-elision
     # floor (ISSUE 5, measured in lossless f32 mode), and the fixed-memory
     # codec sweep (ISSUE 8: f16/rank-r hit rates at a byte budget that
-    # thrashes f32). BENCH_serve.json records tokens/s + prefill counters +
-    # cache hit rate + bytes/entry per codec so the serving perf trajectory
-    # is tracked across PRs.
-    echo "== serve smoke: cargo run --release -- serve --mock =="
-    cargo run --release -- serve --mock --requests 48 --distinct 4 \
+    # thrashes f32). --chaos adds the fault-tolerance soak (ISSUE 10):
+    # scripted decode/prefill errors, latency spikes, and a worker panic
+    # must lose zero requests, keep streams byte-identical across salvage +
+    # redispatch, respawn the panicked worker, and walk the circuit breaker
+    # through open -> denied -> half-open probe -> healthy. BENCH_serve.json
+    # records tokens/s + prefill counters + cache hit rate + bytes/entry per
+    # codec + the chaos_* outcomes so the serving trajectory is tracked
+    # across PRs.
+    echo "== serve smoke: cargo run --release -- serve --mock --chaos =="
+    cargo run --release -- serve --mock --chaos --requests 48 --distinct 4 \
         --bench-json ../BENCH_serve.json
     # Every sweep must actually have run: codec sizes + fixed-memory hit
     # rates (ISSUE 8), partial-prefix reuse and the join-TTFT occupancy
-    # sweep (ISSUE 9).
+    # sweep (ISSUE 9), and the chaos soak's outcome fields (ISSUE 10).
     for key in bytes_per_entry hit_rate_fixed_mem join_ttft_by_occupancy \
-        partial_prefix_hit_rate; do
+        partial_prefix_hit_rate chaos_requests chaos_lost chaos_redispatched \
+        chaos_worker_restarts chaos_breaker_opens chaos_breaker_recoveries; do
         if ! grep -q "\"$key\"" ../BENCH_serve.json; then
             echo "BENCH_serve.json missing '$key' — a smoke sweep did not run" >&2
+            exit 1
+        fi
+    done
+    # Fault-tolerance gates: the binary asserts these before writing the
+    # report; re-check the recorded numbers so a stale or hand-edited file
+    # cannot hide a regression. Zero lost requests, at least one supervised
+    # worker restart, at least one transparent redispatch, and a full
+    # breaker open -> recovery walk.
+    for gate in "chaos_lost:==0" "chaos_worker_restarts:>=1" \
+        "chaos_redispatched:>=1" "chaos_breaker_opens:>=1" \
+        "chaos_breaker_recoveries:>=1"; do
+        key="${gate%%:*}"; op="${gate##*:}"
+        val=$(sed -n "s/.*\"$key\":\([0-9.eE+-]*\).*/\1/p" ../BENCH_serve.json)
+        if [ -z "$val" ] \
+            || ! awk -v v="$val" "BEGIN { exit !(v $op) }"; then
+            echo "chaos gate failed: $key=${val:-missing} (want $op)" >&2
             exit 1
         fi
     done
